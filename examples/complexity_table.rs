@@ -1,0 +1,99 @@
+//! Table-1 reproduction: theory formulas vs measured cost accounting for
+//! the three methods, plus a finite-processor PRAM sweep showing *where*
+//! the parallel-complexity advantage of delayed MLMC kicks in.
+//!
+//! ```sh
+//! cargo run --release --example complexity_table -- --steps 64
+//! ```
+
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::experiments;
+use dmlmc::mlmc::LevelAllocation;
+use dmlmc::parallel::{pram::LevelJob, CostModel, PramMachine};
+use dmlmc::util::cli::{Command, Opt};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("complexity_table", "Table-1 theory vs measured")
+        .opt(Opt::with_default("steps", "steps per measured run", "64"))
+        .opt(Opt::with_default("n-effective", "effective batch N", "128"))
+        .opt(Opt::value("backend", "xla|native (default: native)"));
+    let (_, args) = match cmd.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+    };
+
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.train.steps = args.parse_usize("steps")?.unwrap();
+    cfg.train.eval_every = cfg.train.steps;
+    cfg.mlmc.n_effective = args.parse_usize("n-effective")?.unwrap();
+    cfg.runtime.backend = match args.get("backend") {
+        Some(b) => Backend::parse(b).expect("backend must be xla|native"),
+        None => Backend::Native,
+    };
+
+    println!(
+        "=== Table 1: theory vs measured over T = {} steps (N = {}, lmax = {}) ===\n",
+        cfg.train.steps, cfg.mlmc.n_effective, cfg.problem.lmax
+    );
+    let (theory, measured) = experiments::table1(&cfg)?;
+    println!("{}", experiments::render_table1(&theory, &measured));
+
+    println!(
+        "average per-step parallel depth: naive/mlmc = {} (2^c·lmax), dmlmc measured = {:.2}, schedule-predicted = {:.2}, theory Σ2^((c-d)l) = {:.2}",
+        2f64.powi(cfg.problem.lmax as i32),
+        measured[2].avg_depth,
+        experiments::predicted_avg_depth(&cfg, 1 << 14),
+        dmlmc::mlmc::theory::geom_sum(cfg.mlmc.c - cfg.mlmc.d, cfg.problem.lmax),
+    );
+
+    // ----- finite-P PRAM sweep: step makespans -----------------------
+    println!("\n=== PRAM makespan per SGD step (work-time scheduling, Brent bound) ===");
+    let model = CostModel::new(cfg.mlmc.c);
+    let alloc = LevelAllocation::paper(
+        cfg.problem.lmax,
+        cfg.mlmc.n_effective,
+        cfg.mlmc.b,
+        cfg.mlmc.c,
+    );
+    let mlmc_jobs: Vec<LevelJob> = (0..=cfg.problem.lmax)
+        .map(|l| LevelJob { level: l, n_samples: alloc.n(l) })
+        .collect();
+    let naive_jobs = [LevelJob {
+        level: cfg.problem.lmax,
+        n_samples: cfg.mlmc.n_effective,
+    }];
+    // DMLMC's *average* step: each level weighted by its refresh rate.
+    println!(
+        "{:>10} {:>14} {:>14} {:>18}",
+        "P", "naive", "mlmc", "dmlmc (avg step)"
+    );
+    for p in [1usize, 4, 16, 64, 256, 1024, 1 << 14] {
+        let m = PramMachine::new(p, model);
+        let naive = m.step_makespan(&naive_jobs);
+        let mlmc = m.step_makespan(&mlmc_jobs);
+        // average DMLMC step makespan over one full period 2^{d lmax}
+        let sched = dmlmc::coordinator::DelayedSchedule::new(cfg.problem.lmax, cfg.mlmc.d);
+        let horizon = sched.period(cfg.problem.lmax) * 2;
+        let mut total = 0.0;
+        for t in 0..horizon {
+            let jobs: Vec<LevelJob> = sched
+                .levels_due(t)
+                .into_iter()
+                .map(|l| LevelJob { level: l, n_samples: alloc.n(l) })
+                .collect();
+            total += m.step_makespan(&jobs);
+        }
+        let dmlmc_avg = total / horizon as f64;
+        println!("{p:>10} {naive:>14.0} {mlmc:>14.0} {dmlmc_avg:>18.1}");
+    }
+    println!(
+        "\nreading: with few processors all methods are work-bound (MLMC ≈ DMLMC \
+         win on work); past the saturation point naive/MLMC hit the 2^(c·lmax) \
+         depth floor while delayed MLMC keeps scaling — the paper's headline."
+    );
+    Ok(())
+}

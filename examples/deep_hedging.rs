@@ -1,0 +1,158 @@
+//! End-to-end driver (DESIGN.md §3, Figure 2): train the deep-hedging
+//! model with all three methods — naive SGD, standard MLMC, delayed MLMC —
+//! over multiple seeds, through the full three-layer stack (rust
+//! coordinator -> PJRT -> AOT-compiled JAX/Pallas HLO), and report the
+//! learning curves against both complexity axes plus the headline
+//! comparison the paper makes.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example deep_hedging
+//! # smaller/faster:
+//! cargo run --release --example deep_hedging -- --steps 100 --seeds 3
+//! ```
+//!
+//! Writes per-run CSVs and aggregated curves under `out/deep_hedging/`
+//! and prints the summary recorded in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::Method;
+use dmlmc::experiments;
+use dmlmc::metrics::writer::write_csv;
+use dmlmc::util::cli::{Command, Opt};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("deep_hedging", "Figure-2 end-to-end driver")
+        .opt(Opt::with_default("steps", "SGD steps per run", "300"))
+        .opt(Opt::with_default("seeds", "seeds per method", "10"))
+        .opt(Opt::with_default("n-effective", "effective batch N", "256"))
+        .opt(Opt::with_default("lr", "learning rate", "0.05"))
+        .opt(Opt::with_default("clip", "gradient-norm clip (0 = off)", "10"))
+        .opt(Opt::with_default("out-dir", "output dir", "out/deep_hedging"))
+        .opt(Opt::value("backend", "xla|native (default: auto)"));
+    let (_, args) = match cmd.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+    };
+
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.train.steps = args.parse_usize("steps")?.unwrap();
+    cfg.train.n_seeds = args.parse_usize("seeds")?.unwrap();
+    cfg.train.lr = args.parse_f64("lr")?.unwrap();
+    cfg.train.clip_norm = args.parse_f64("clip")?.unwrap();
+    cfg.train.eval_every = (cfg.train.steps / 15).max(1);
+    cfg.mlmc.n_effective = args.parse_usize("n-effective")?.unwrap();
+    cfg.runtime.out_dir = PathBuf::from(args.get_or("out-dir", "out/deep_hedging"));
+    cfg.runtime.backend = match args.get("backend") {
+        Some(b) => Backend::parse(b).expect("backend must be xla|native"),
+        None if cfg.runtime.artifacts_dir.join("manifest.json").exists() => Backend::Xla,
+        None => {
+            eprintln!("artifacts not built; using native backend");
+            Backend::Native
+        }
+    };
+
+    eprintln!(
+        "deep_hedging: {} steps x {} seeds x 3 methods, N = {}, backend = {}",
+        cfg.train.steps,
+        cfg.train.n_seeds,
+        cfg.mlmc.n_effective,
+        cfg.runtime.backend.name()
+    );
+
+    let t0 = std::time::Instant::now();
+    let results = experiments::figure2(&cfg, false)?;
+    std::fs::create_dir_all(&cfg.runtime.out_dir)?;
+
+    for (method, curves, agg) in &results {
+        for curve in curves {
+            write_csv(
+                &cfg.runtime
+                    .out_dir
+                    .join(format!("curve_{}_seed{}.csv", method.name(), curve.seed)),
+                curve,
+            )?;
+        }
+        std::fs::write(
+            cfg.runtime.out_dir.join(format!("figure2_{}.csv", method.name())),
+            agg.to_csv(),
+        )?;
+    }
+
+    // ----- Figure 2 style report ------------------------------------
+    println!("\n=== Figure 2 (left): loss vs STANDARD complexity ===");
+    print_summary(&results, |agg, i| agg.std_cost[i]);
+    println!("\n=== Figure 2 (right): loss vs PARALLEL complexity ===");
+    print_summary(&results, |agg, i| agg.par_cost[i]);
+
+    // Headline: parallel cost to reach a common loss target.
+    let target = results
+        .iter()
+        .map(|(_, _, agg)| *agg.loss_mean.last().unwrap())
+        .fold(f64::MIN, f64::max)
+        * 1.02; // the worst method's final loss (±2%)
+    println!("\n=== parallel cost to reach loss <= {target:.4} ===");
+    for (method, curves, _) in &results {
+        let costs: Vec<f64> = curves
+            .iter()
+            .filter_map(|c| c.par_cost_to_reach(target))
+            .collect();
+        if costs.is_empty() {
+            println!("  {:<8} (target not reached)", method.name());
+        } else {
+            let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+            println!(
+                "  {:<8} {:>12.0} depth units  ({}/{} runs reached)",
+                method.name(),
+                mean,
+                costs.len(),
+                curves.len()
+            );
+        }
+    }
+    let mlmc_final = results
+        .iter()
+        .find(|(m, _, _)| *m == Method::Mlmc)
+        .map(|(_, _, a)| *a.par_cost.last().unwrap())
+        .unwrap();
+    let dmlmc_final = results
+        .iter()
+        .find(|(m, _, _)| *m == Method::Dmlmc)
+        .map(|(_, _, a)| *a.par_cost.last().unwrap())
+        .unwrap();
+    println!(
+        "\nDMLMC parallel-complexity advantage over MLMC at equal steps: {:.1}x",
+        mlmc_final / dmlmc_final
+    );
+    eprintln!("total wall time: {:.1?}", t0.elapsed());
+    eprintln!("wrote CSVs to {}", cfg.runtime.out_dir.display());
+    Ok(())
+}
+
+fn print_summary(
+    results: &[(Method, Vec<dmlmc::metrics::LearningCurve>, dmlmc::metrics::aggregate::AggregatedCurve)],
+    cost: impl Fn(&dmlmc::metrics::aggregate::AggregatedCurve, usize) -> f64,
+) {
+    println!(
+        "{:<8} {:>8} {:>14} {:>12} {:>10}",
+        "method", "step", "cost", "loss mean", "loss std"
+    );
+    for (method, _, agg) in results {
+        let n = agg.steps.len();
+        for i in [0, n / 2, n - 1] {
+            println!(
+                "{:<8} {:>8} {:>14.0} {:>12.5} {:>10.5}",
+                method.name(),
+                agg.steps[i],
+                cost(agg, i),
+                agg.loss_mean[i],
+                agg.loss_std[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,234 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + manifest.json.
+
+Runs exactly once (``make artifacts``); the Rust runtime is self-contained
+afterwards. Python never executes on the training hot path.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (for problem defaults: lmax = 6, n_l = 4 * 2^l):
+
+    grad_l{0..6}.hlo.txt      (params, dw[B_l, n_l]) -> (dloss, grad)
+    grad_naive.hlo.txt        (params, dw[B, n_6])   -> (loss, grad)
+    loss_eval.hlo.txt         (params, dw[B_e, n_6]) -> (loss,)
+    grad_norms_l{0..6}.hlo.txt  per-sample ||grad||^2   (Figure 1 left)
+    smoothness_l{0..6}.hlo.txt  pathwise smoothness     (Figure 1 right)
+    path_eval_l{0..6}.hlo.txt   fine/coarse terminal S  (engine cross-check)
+    init_params.bin           raw little-endian f32 He init (seed 0)
+    manifest.json             shapes/dtypes/levels for every entry point —
+                              the single source of truth the Rust loader
+                              validates against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .problem import (
+    DEFAULT_ARCH,
+    DEFAULT_PROBLEM,
+    DIAG_CHUNK,
+    EVAL_CHUNK,
+    GRAD_CHUNK,
+    HedgingProblem,
+    MlpArch,
+)
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _io_meta(specs) -> list[dict]:
+    return [{"shape": list(s.shape), "dtype": "f32"} for s in specs]
+
+
+@dataclasses.dataclass
+class Entry:
+    name: str
+    kind: str
+    fn: object
+    in_specs: list
+    out_meta: list[dict]
+    level: int | None = None
+    batch: int | None = None
+    n_steps: int | None = None
+
+
+def build_entries(problem: HedgingProblem, arch: MlpArch) -> list[Entry]:
+    p = arch.n_params
+    n_max = problem.n_steps(problem.lmax)
+    entries: list[Entry] = []
+
+    for lvl in range(problem.lmax + 1):
+        n = problem.n_steps(lvl)
+        b = GRAD_CHUNK[min(lvl, max(GRAD_CHUNK))]
+        entries.append(
+            Entry(
+                name=f"grad_l{lvl}",
+                kind="grad_coupled",
+                fn=model.make_grad_coupled(problem, arch, lvl),
+                in_specs=[_spec(p), _spec(b, n)],
+                out_meta=[
+                    {"shape": [], "dtype": "f32"},
+                    {"shape": [p], "dtype": "f32"},
+                ],
+                level=lvl,
+                batch=b,
+                n_steps=n,
+            )
+        )
+
+    b_naive = GRAD_CHUNK[max(GRAD_CHUNK)]
+    entries.append(
+        Entry(
+            name="grad_naive",
+            kind="grad_naive",
+            fn=model.make_grad_naive(problem, arch),
+            in_specs=[_spec(p), _spec(b_naive, n_max)],
+            out_meta=[
+                {"shape": [], "dtype": "f32"},
+                {"shape": [p], "dtype": "f32"},
+            ],
+            level=problem.lmax,
+            batch=b_naive,
+            n_steps=n_max,
+        )
+    )
+    entries.append(
+        Entry(
+            name="loss_eval",
+            kind="loss_eval",
+            fn=model.make_loss_eval(problem, arch),
+            in_specs=[_spec(p), _spec(EVAL_CHUNK, n_max)],
+            out_meta=[{"shape": [], "dtype": "f32"}],
+            level=problem.lmax,
+            batch=EVAL_CHUNK,
+            n_steps=n_max,
+        )
+    )
+
+    for lvl in range(problem.lmax + 1):
+        n = problem.n_steps(lvl)
+        entries.append(
+            Entry(
+                name=f"grad_norms_l{lvl}",
+                kind="grad_norms",
+                fn=model.make_grad_norms(problem, arch, lvl),
+                in_specs=[_spec(p), _spec(DIAG_CHUNK, n)],
+                out_meta=[{"shape": [DIAG_CHUNK], "dtype": "f32"}],
+                level=lvl,
+                batch=DIAG_CHUNK,
+                n_steps=n,
+            )
+        )
+        entries.append(
+            Entry(
+                name=f"smoothness_l{lvl}",
+                kind="smoothness",
+                fn=model.make_smoothness(problem, arch, lvl),
+                in_specs=[_spec(p), _spec(p), _spec(DIAG_CHUNK, n)],
+                out_meta=[{"shape": [DIAG_CHUNK], "dtype": "f32"}],
+                level=lvl,
+                batch=DIAG_CHUNK,
+                n_steps=n,
+            )
+        )
+        entries.append(
+            Entry(
+                name=f"path_eval_l{lvl}",
+                kind="path_eval",
+                fn=model.make_path_eval(problem, lvl),
+                in_specs=[_spec(DIAG_CHUNK, n)],
+                out_meta=[
+                    {"shape": [DIAG_CHUNK], "dtype": "f32"},
+                    {"shape": [DIAG_CHUNK], "dtype": "f32"},
+                ],
+                level=lvl,
+                batch=DIAG_CHUNK,
+                n_steps=n,
+            )
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact dir")
+    ap.add_argument("--drift", default=None, choices=["additive", "geometric"])
+    ap.add_argument("--lmax", type=int, default=None)
+    args = ap.parse_args()
+
+    problem = DEFAULT_PROBLEM
+    if args.drift is not None:
+        problem = dataclasses.replace(problem, drift=args.drift)
+    if args.lmax is not None:
+        problem = dataclasses.replace(problem, lmax=args.lmax)
+    arch = DEFAULT_ARCH
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    entries = build_entries(problem, arch)
+    manifest_entries = []
+    for e in entries:
+        lowered = jax.jit(e.fn).lower(*e.in_specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{e.name}.hlo.txt"
+        path.write_text(text)
+        manifest_entries.append(
+            {
+                "name": e.name,
+                "kind": e.kind,
+                "path": path.name,
+                "level": e.level,
+                "batch": e.batch,
+                "n_steps": e.n_steps,
+                "inputs": _io_meta(e.in_specs),
+                "outputs": e.out_meta,
+            }
+        )
+        print(f"  lowered {e.name:>18s}  ({len(text)} chars)")
+
+    init = np.asarray(model.init_params(0, arch), dtype=np.float32)
+    (out_dir / "init_params.bin").write_bytes(init.tobytes())
+
+    manifest = {
+        "format_version": 1,
+        "problem": dataclasses.asdict(problem),
+        "arch": {"n_in": arch.n_in, "hidden": arch.hidden},
+        "n_params": arch.n_params,
+        "param_layout": [
+            {"name": n, "shape": list(s)} for n, s in arch.sizes
+        ],
+        "init_params": "init_params.bin",
+        "entries": manifest_entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(entries)} HLO artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

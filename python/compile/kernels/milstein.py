@@ -1,0 +1,102 @@
+"""Pallas coupled-Milstein path-simulation kernel.
+
+The sequential hot loop of the workload: given Brownian increments
+``dW[B, n]`` on one grid, produce the asset path ``S[B, n+1]`` under the
+Milstein scheme (strong order 1 — the standard MLMC solver, Giles 2008).
+
+The MLMC *coupling* is expressed by :func:`coupled_milstein_paths`, which
+simulates the fine grid from ``dW`` and the coarse grid from the pairwise-
+summed increments of the *same* ``dW`` — both via this kernel, so the two
+levels share one Brownian path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over batch tiles of
+``BATCH_TILE`` paths; per tile the whole path (``BATCH_TILE x (n+1)``
+floats, <=129 KiB at n=256/tile=128) lives in VMEM for the duration of the
+time loop, which is the part a GPU version would keep in registers/shared
+memory per threadblock. The time loop is a ``fori_loop`` inside the kernel:
+sequential in time (that *is* the paper's parallel-complexity bottleneck,
+O(2^{c l}) depth per level), parallel across paths.
+
+In deep hedging the path S does not depend on the trainable parameters, so
+this kernel needs no VJP — the model calls it under ``stop_gradient``
+semantics (it only ever receives the non-differentiable ``dw`` argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..problem import HedgingProblem
+
+BATCH_TILE = 128
+INTERPRET = True
+
+
+def _milstein_kernel(dw_ref, s_ref, *, mu, sigma, s0, dt, n_steps, geometric):
+    """One batch tile: sequential Milstein time loop, whole path in VMEM."""
+    s_ref[:, 0] = jnp.full((dw_ref.shape[0],), s0, dtype=s_ref.dtype)
+
+    def body(t, _):
+        s = s_ref[:, t]
+        dw = dw_ref[:, t]
+        drift = mu * s if geometric else jnp.full_like(s, mu)
+        s_next = (
+            s
+            + drift * dt
+            + sigma * s * dw
+            + 0.5 * sigma * sigma * s * (dw * dw - dt)
+        )
+        s_ref[:, t + 1] = s_next
+        return 0
+
+    jax.lax.fori_loop(0, n_steps, body, 0)
+
+
+def milstein_paths(dw: jax.Array, problem: HedgingProblem, n_steps: int) -> jax.Array:
+    """Simulate paths with the Pallas kernel: f32[B, n] -> f32[B, n+1]."""
+    if dw.ndim != 2 or dw.shape[1] != n_steps:
+        raise ValueError(f"dw must be [B, {n_steps}], got {dw.shape}")
+    batch = dw.shape[0]
+    padded = (batch + BATCH_TILE - 1) // BATCH_TILE * BATCH_TILE
+    dw_p = jnp.pad(dw, ((0, padded - batch), (0, 0))) if padded != batch else dw
+    n_tiles = padded // BATCH_TILE
+    kernel = functools.partial(
+        _milstein_kernel,
+        mu=problem.mu,
+        sigma=problem.sigma,
+        s0=problem.s0,
+        dt=problem.maturity / n_steps,
+        n_steps=n_steps,
+        geometric=problem.drift == "geometric",
+    )
+    s = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((BATCH_TILE, n_steps), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BATCH_TILE, n_steps + 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, n_steps + 1), dw.dtype),
+        interpret=INTERPRET,
+    )(dw_p)
+    return s[:batch]
+
+
+def coupled_milstein_paths(
+    dw_fine: jax.Array, problem: HedgingProblem, level: int
+) -> tuple[jax.Array, jax.Array | None]:
+    """Fine and coarse paths from one Brownian path (the MLMC coupling).
+
+    Returns ``(s_fine[B, n_f+1], s_coarse[B, n_f/2+1] | None)``; the coarse
+    path is ``None`` at level 0 (``F_{-1} := 0`` in the paper).
+    """
+    n_fine = problem.n_steps(level)
+    s_fine = milstein_paths(dw_fine, problem, n_fine)
+    if level == 0:
+        return s_fine, None
+    b, n = dw_fine.shape
+    dw_coarse = dw_fine.reshape(b, n // 2, 2).sum(axis=-1)
+    s_coarse = milstein_paths(dw_coarse, problem, n_fine // 2)
+    return s_fine, s_coarse

@@ -1,0 +1,210 @@
+"""Pallas fused hedging-MLP kernel (forward + hand-written backward).
+
+This is the FLOPs hot spot of the workload: the strategy network
+``H_theta(t, S)`` is evaluated at every (path, time-step) pair, i.e. over
+``batch * n_steps`` feature rows per gradient sample. The kernel fuses the
+whole 2 -> H -> H -> 1 chain (dense + SiLU, dense + SiLU, dense + sigmoid)
+per row tile, so activations never round-trip to HBM between layers.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is over row tiles of
+``ROW_TILE`` rows; per tile the working set is
+
+    x tile        ROW_TILE x 2
+    w2            H x H          (the only MXU-shaped matmul, 32x32)
+    activations   2 x ROW_TILE x H
+
+which for ROW_TILE=128, H=32 is ~50 KiB of VMEM — comfortably double-
+bufferable. The backward kernel recomputes nothing: it receives the saved
+pre-activations and accumulates the weight gradients across the grid
+(sequential-grid revisiting semantics).
+
+Pallas primitives are not auto-differentiable, so ``hedge_mlp`` is wrapped
+in ``jax.custom_vjp`` whose backward is itself a Pallas kernel. Kernels run
+with ``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls); the
+interpret lowering inlines the kernel body into the HLO the Rust runtime
+compiles, so there is no Python on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+
+INTERPRET = True  # CPU PJRT target; see module docstring.
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _silu(x):
+    return x * _sigmoid(x)
+
+
+def _dsilu(x):
+    """d/dx silu(x) = sig(x) * (1 + x * (1 - sig(x)))."""
+    s = _sigmoid(x)
+    return s * (1.0 + x * (1.0 - s))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                out_ref, z1_ref, z2_ref):
+    """One row tile: fused dense+SiLU -> dense+SiLU -> dense+sigmoid.
+
+    Saves the hidden pre-activations z1, z2 for the backward kernel.
+    """
+    x = x_ref[...]
+    z1 = x @ w1_ref[...] + b1_ref[...][None, :]
+    h1 = _silu(z1)
+    z2 = h1 @ w2_ref[...] + b2_ref[...][None, :]
+    h2 = _silu(z2)
+    z3 = h2 @ w3_ref[...] + b3_ref[...][None, :]
+    out_ref[...] = _sigmoid(z3)
+    z1_ref[...] = z1
+    z2_ref[...] = z2
+
+
+def _pad_rows(x: jax.Array, tile: int) -> tuple[jax.Array, int]:
+    rows = x.shape[0]
+    padded = (rows + tile - 1) // tile * tile
+    if padded != rows:
+        x = jnp.pad(x, ((0, padded - rows), (0, 0)))
+    return x, rows
+
+
+def _mlp_forward_raw(x, w1, b1, w2, b2, w3, b3):
+    """Runs the forward kernel; returns (out[rows], z1, z2, x_padded)."""
+    n_in, hidden = w1.shape
+    x_p, rows = _pad_rows(x, ROW_TILE)
+    n_tiles = x_p.shape[0] // ROW_TILE
+    row_spec = lambda width: pl.BlockSpec((ROW_TILE, width), lambda i: (i, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    out, z1, z2 = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            row_spec(n_in),
+            full(w1), full(b1), full(w2), full(b2), full(w3), full(b3),
+        ],
+        out_specs=[row_spec(1), row_spec(hidden), row_spec(hidden)],
+        out_shape=[
+            jax.ShapeDtypeStruct((x_p.shape[0], 1), x.dtype),
+            jax.ShapeDtypeStruct((x_p.shape[0], hidden), x.dtype),
+            jax.ShapeDtypeStruct((x_p.shape[0], hidden), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x_p, w1, b1, w2, b2, w3, b3)
+    return out[:rows, 0], z1, z2, x_p
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(g_ref, x_ref, z1_ref, z2_ref, w1_ref, w2_ref, w3_ref,
+                     b3_ref,
+                     dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref, dw3_ref,
+                     db3_ref):
+    """One row tile of the hand-written backward pass (see module docs)."""
+    g = g_ref[...]
+    x = x_ref[...]
+    z1 = z1_ref[...]
+    z2 = z2_ref[...]
+    h1 = _silu(z1)
+    h2 = _silu(z2)
+    z3 = h2 @ w3_ref[...] + b3_ref[...][None, :]
+    y = _sigmoid(z3)
+
+    dz3 = g * y * (1.0 - y)
+    dh2 = dz3 @ w3_ref[...].T
+    dz2 = dh2 * _dsilu(z2)
+    dh1 = dz2 @ w2_ref[...].T
+    dz1 = dh1 * _dsilu(z1)
+    dx_ref[...] = dz1 @ w1_ref[...].T
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        db1_ref[...] = jnp.zeros_like(db1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+        db2_ref[...] = jnp.zeros_like(db2_ref)
+        dw3_ref[...] = jnp.zeros_like(dw3_ref)
+        db3_ref[...] = jnp.zeros_like(db3_ref)
+
+    dw1_ref[...] += x.T @ dz1
+    db1_ref[...] += jnp.sum(dz1, axis=0)
+    dw2_ref[...] += h1.T @ dz2
+    db2_ref[...] += jnp.sum(dz2, axis=0)
+    dw3_ref[...] += h2.T @ dz3
+    db3_ref[...] += jnp.sum(dz3, axis=0)
+
+
+def _mlp_backward_raw(g, x_p, z1, z2, w1, w2, w3, b3, rows):
+    n_in, hidden = w1.shape
+    n_tiles = x_p.shape[0] // ROW_TILE
+    g_p = jnp.zeros((x_p.shape[0], 1), x_p.dtype).at[:rows, 0].set(g)
+    row_spec = lambda width: pl.BlockSpec((ROW_TILE, width), lambda i: (i, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    dx, dw1, db1, dw2, db2, dw3, db3 = pl.pallas_call(
+        _bwd_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            row_spec(1), row_spec(n_in), row_spec(hidden), row_spec(hidden),
+            full(w1), full(w2), full(w3), full(b3),
+        ],
+        out_specs=[
+            row_spec(n_in),
+            full(w1), full(jnp.zeros(hidden)), full(w2),
+            full(jnp.zeros(hidden)), full(w3), full(jnp.zeros(1)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x_p.shape, x_p.dtype),
+            jax.ShapeDtypeStruct(w1.shape, w1.dtype),
+            jax.ShapeDtypeStruct((hidden,), w1.dtype),
+            jax.ShapeDtypeStruct(w2.shape, w1.dtype),
+            jax.ShapeDtypeStruct((hidden,), w1.dtype),
+            jax.ShapeDtypeStruct(w3.shape, w1.dtype),
+            jax.ShapeDtypeStruct((1,), w1.dtype),
+        ],
+        interpret=INTERPRET,
+    )(g_p, x_p, z1, z2, w1, w2, w3, b3)
+    return dx[:rows], dw1, db1, dw2, db2, dw3, db3
+
+
+# ---------------------------------------------------------------------------
+# public entry point with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def hedge_mlp(x, w1, b1, w2, b2, w3, b3):
+    """Fused hedging MLP: f32[rows, 2] feature rows -> f32[rows] holdings."""
+    out, _, _, _ = _mlp_forward_raw(x, w1, b1, w2, b2, w3, b3)
+    return out
+
+
+def _hedge_mlp_fwd(x, w1, b1, w2, b2, w3, b3):
+    out, z1, z2, x_p = _mlp_forward_raw(x, w1, b1, w2, b2, w3, b3)
+    return out, (x_p, z1, z2, w1, w2, w3, b3, x.shape[0])
+
+
+def _hedge_mlp_bwd(res, g):
+    x_p, z1, z2, w1, w2, w3, b3, rows = res
+    dx, dw1, db1, dw2, db2, dw3, db3 = _mlp_backward_raw(
+        g, x_p, z1, z2, w1, w2, w3, b3, rows
+    )
+    return dx, dw1, db1, dw2, db2, dw3, db3
+
+
+hedge_mlp.defvjp(_hedge_mlp_fwd, _hedge_mlp_bwd)

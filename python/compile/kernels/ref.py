@@ -1,0 +1,166 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the objective.
+
+Everything here is straight-line ``jax.numpy`` with no Pallas, no custom
+VJPs and no cleverness — the correctness ground truth that pytest (and
+hypothesis) compares the kernels against, and that the diagnostics
+artifacts (Figure 1) are lowered from.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..problem import HedgingProblem, MlpArch
+
+
+# ---------------------------------------------------------------------------
+# Milstein path simulation
+# ---------------------------------------------------------------------------
+
+
+def milstein_path_ref(
+    dw: jax.Array, problem: HedgingProblem, n_steps: int
+) -> jax.Array:
+    """Simulate S on the grid with ``n_steps`` steps from increments ``dw``.
+
+    ``dw``: f32[batch, n_steps] Brownian increments for this grid.
+    Returns f32[batch, n_steps + 1] including S_0.
+
+    Milstein scheme for dS = a(S) dt + b(S) dB with b(S) = sigma * S:
+        S+ = S + a(S) dt + sigma S dW + 1/2 sigma^2 S (dW^2 - dt)
+    with a(S) = mu (additive drift, the paper's Appendix-C SDE) or
+    a(S) = mu * S (geometric).
+    """
+    if dw.shape[-1] != n_steps:
+        raise ValueError(f"dw has {dw.shape[-1]} steps, expected {n_steps}")
+    dt = problem.maturity / n_steps
+    mu, sigma = problem.mu, problem.sigma
+    geometric = problem.drift == "geometric"
+
+    def step(s, dw_t):
+        drift = mu * s if geometric else mu
+        s_next = (
+            s
+            + drift * dt
+            + sigma * s * dw_t
+            + 0.5 * sigma * sigma * s * (dw_t * dw_t - dt)
+        )
+        return s_next, s_next
+
+    s0 = jnp.full(dw.shape[:-1], problem.s0, dtype=dw.dtype)
+    _, path = jax.lax.scan(step, s0, jnp.moveaxis(dw, -1, 0))
+    return jnp.concatenate([s0[None, ...], path], axis=0).swapaxes(0, 1)
+
+
+def coarsen_increments(dw_fine: jax.Array) -> jax.Array:
+    """Pairwise-sum fine increments onto the next-coarser grid.
+
+    This is the MLMC coupling: both levels see the *same* Brownian path.
+    f32[batch, 2n] -> f32[batch, n].
+    """
+    b, n = dw_fine.shape
+    if n % 2 != 0:
+        raise ValueError(f"fine grid must have even #steps, got {n}")
+    return dw_fine.reshape(b, n // 2, 2).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Hedging MLP
+# ---------------------------------------------------------------------------
+
+
+def unflatten_params(flat: jax.Array, arch: MlpArch) -> dict[str, jax.Array]:
+    """Split the flat f32[n_params] vector into named weight arrays."""
+    out: dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in arch.sizes:
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    if off != flat.shape[0]:
+        raise ValueError(f"param vector has {flat.shape[0]} entries, need {off}")
+    return out
+
+
+def flatten_params(params: dict[str, jax.Array], arch: MlpArch) -> jax.Array:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in arch.sizes])
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def mlp_ref(params: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Hedging strategy H_theta over feature rows x: f32[rows, 2] -> f32[rows]."""
+    h1 = silu(x @ params["w1"] + params["b1"])
+    h2 = silu(h1 @ params["w2"] + params["b2"])
+    out = jax.nn.sigmoid(h2 @ params["w3"] + params["b3"])
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Deep-hedging objective
+# ---------------------------------------------------------------------------
+
+
+def hedging_residual_ref(
+    flat_params: jax.Array,
+    dw: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+    n_steps: int,
+) -> jax.Array:
+    """Per-sample hedging residual  payoff - sum_n H(t_n, S_n) dS_n - p0.
+
+    Returns f32[batch].
+    """
+    params = unflatten_params(flat_params, arch)
+    s = milstein_path_ref(dw, problem, n_steps)  # [B, n+1]
+    batch = s.shape[0]
+    t_grid = (
+        jnp.arange(n_steps, dtype=s.dtype) * (problem.maturity / n_steps)
+    )  # t_0 .. t_{n-1}
+    feats = jnp.stack(
+        [jnp.broadcast_to(t_grid, (batch, n_steps)), s[:, :-1]], axis=-1
+    ).reshape(batch * n_steps, 2)
+    h = mlp_ref(params, feats).reshape(batch, n_steps)
+    gains = jnp.sum(h * (s[:, 1:] - s[:, :-1]), axis=-1)
+    payoff = jnp.maximum(s[:, -1] - problem.strike, 0.0)
+    return payoff - gains - params["p0"][0]
+
+
+def hedging_loss_ref(
+    flat_params: jax.Array,
+    dw: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+    n_steps: int,
+) -> jax.Array:
+    """Mean squared hedging residual at one discretisation level."""
+    r = hedging_residual_ref(flat_params, dw, problem, arch, n_steps)
+    return jnp.mean(r * r)
+
+
+def coupled_loss_ref(
+    flat_params: jax.Array,
+    dw_fine: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+    level: int,
+) -> jax.Array:
+    """Mean coupled objective Delta_l F = F_l - F_{l-1} (F_{-1} := 0).
+
+    ``dw_fine`` lives on the level-``level`` grid; the coarse half uses the
+    pairwise-summed increments of the *same* Brownian path.
+    """
+    n_fine = problem.n_steps(level)
+    fine = hedging_loss_ref(flat_params, dw_fine, problem, arch, n_fine)
+    if level == 0:
+        return fine
+    coarse = hedging_loss_ref(
+        flat_params, coarsen_increments(dw_fine), problem, arch, n_fine // 2
+    )
+    return fine - coarse

@@ -1,0 +1,206 @@
+"""L2 — the deep-hedging compute graph in JAX, calling the L1 kernels.
+
+Paper objective (Appendix C, Buehler et al. 2019 eq. 3.3):
+
+    min_{theta, p0}  E | max(S_1 - K, 0) - sum_n H_theta(t_n, S_n) dS_n - p0 |^2
+
+All functions here take the trainable state as ONE flat ``f32[n_params]``
+vector (weights + biases + p0, layout in ``problem.MlpArch.sizes``) so the
+Rust runtime only ever moves a single parameter buffer.
+
+Entry points lowered by ``aot.py`` (all pure, jit-able, fixed shapes):
+
+    grad_coupled(level)   value-and-grad of the mean coupled objective
+                          Delta_l F = F_l - F_{l-1} — the MLMC/DMLMC unit
+                          of work at level l.
+    grad_naive            value-and-grad of F_{lmax} — the naive baseline.
+    loss_eval             F_{lmax} on a held-out batch — learning curves.
+    grad_norms(level)     per-sample ||grad Delta_l F_hat||^2 (Figure 1 left).
+    smoothness(level)     pathwise ||g(x2,xi)-g(x1,xi)||/||x2-x1|| (Fig 1 right).
+    path_eval(level)      fine+coarse terminal values (engine cross-checks).
+
+The hot path (grad_coupled / grad_naive / loss_eval) runs through the
+Pallas kernels; the per-sample diagnostics (vmap-of-grad, off the hot
+path, Figure 1 only) use the pure-jnp reference graph — numerically
+identical (tested) and robust under vmap-of-custom_vjp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.milstein import coupled_milstein_paths, milstein_paths
+from .kernels.mlp import hedge_mlp
+from .problem import DEFAULT_ARCH, HedgingProblem, MlpArch
+
+
+# ---------------------------------------------------------------------------
+# objective on one grid (Pallas path)
+# ---------------------------------------------------------------------------
+
+
+def _residual_from_path(
+    flat_params: jax.Array,
+    s: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+) -> jax.Array:
+    """Hedging residual given a simulated path s[B, n+1]. Differentiable in
+    ``flat_params`` only — the path is exogenous (no grad flows into S)."""
+    p = ref.unflatten_params(flat_params, arch)
+    batch, n_plus_1 = s.shape
+    n = n_plus_1 - 1
+    s = jax.lax.stop_gradient(s)
+    t_grid = jnp.arange(n, dtype=s.dtype) * (problem.maturity / n)
+    feats = jnp.stack(
+        [jnp.broadcast_to(t_grid, (batch, n)), s[:, :-1]], axis=-1
+    ).reshape(batch * n, 2)
+    h = hedge_mlp(
+        feats, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"]
+    ).reshape(batch, n)
+    gains = jnp.sum(h * (s[:, 1:] - s[:, :-1]), axis=-1)
+    payoff = jnp.maximum(s[:, -1] - problem.strike, 0.0)
+    return payoff - gains - p["p0"][0]
+
+
+def coupled_loss(
+    flat_params: jax.Array,
+    dw_fine: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+    level: int,
+) -> jax.Array:
+    """Mean coupled objective Delta_l F (Pallas kernels on the hot path)."""
+    s_fine, s_coarse = coupled_milstein_paths(dw_fine, problem, level)
+    r_f = _residual_from_path(flat_params, s_fine, problem, arch)
+    loss = jnp.mean(r_f * r_f)
+    if s_coarse is not None:
+        r_c = _residual_from_path(flat_params, s_coarse, problem, arch)
+        loss = loss - jnp.mean(r_c * r_c)
+    return loss
+
+
+def naive_loss(
+    flat_params: jax.Array,
+    dw: jax.Array,
+    problem: HedgingProblem,
+    arch: MlpArch,
+) -> jax.Array:
+    """Mean objective on the grid implied by ``dw.shape[1]`` (naive unit)."""
+    s = milstein_paths(dw, problem, dw.shape[1])
+    r = _residual_from_path(flat_params, s, problem, arch)
+    return jnp.mean(r * r)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_grad_coupled(problem: HedgingProblem, arch: MlpArch, level: int):
+    """(params, dw[B, n_l]) -> (loss_delta, grad[n_params])."""
+
+    def fn(params, dw):
+        loss, grad = jax.value_and_grad(coupled_loss)(
+            params, dw, problem, arch, level
+        )
+        return loss, grad
+
+    return fn
+
+
+def make_grad_naive(problem: HedgingProblem, arch: MlpArch):
+    """(params, dw[B, n_lmax]) -> (loss, grad[n_params])."""
+
+    def fn(params, dw):
+        loss, grad = jax.value_and_grad(naive_loss)(params, dw, problem, arch)
+        return loss, grad
+
+    return fn
+
+
+def make_loss_eval(problem: HedgingProblem, arch: MlpArch):
+    """(params, dw[B, n_lmax]) -> loss (held-out learning-curve metric)."""
+
+    def fn(params, dw):
+        return (naive_loss(params, dw, problem, arch),)
+
+    return fn
+
+
+def make_grad_norms(problem: HedgingProblem, arch: MlpArch, level: int):
+    """(params, dw[B, n_l]) -> per-sample ||grad Delta_l F_hat(x, xi_i)||^2.
+
+    Figure 1 (left): the per-sample squared gradient norm upper-bounds the
+    level variance. Uses the reference graph (off the hot path).
+    """
+
+    def per_sample(params, dw_row):
+        return ref.coupled_loss_ref(params, dw_row[None, :], problem, arch, level)
+
+    def fn(params, dw):
+        grads = jax.vmap(jax.grad(per_sample), in_axes=(None, 0))(params, dw)
+        return (jnp.sum(grads * grads, axis=-1),)
+
+    return fn
+
+
+def make_smoothness(problem: HedgingProblem, arch: MlpArch, level: int):
+    """(params1, params2, dw[B, n_l]) -> per-sample pathwise smoothness.
+
+    Figure 1 (right):  ||g(x2, xi) - g(x1, xi)|| / ||x2 - x1||  per sample,
+    the L1-norm proxy for the level-l Lipschitz constant 2^{-dl} L.
+    """
+
+    def per_sample(params, dw_row):
+        return ref.coupled_loss_ref(params, dw_row[None, :], problem, arch, level)
+
+    def fn(params1, params2, dw):
+        g1 = jax.vmap(jax.grad(per_sample), in_axes=(None, 0))(params1, dw)
+        g2 = jax.vmap(jax.grad(per_sample), in_axes=(None, 0))(params2, dw)
+        num = jnp.sqrt(jnp.sum((g2 - g1) ** 2, axis=-1))
+        den = jnp.sqrt(jnp.sum((params2 - params1) ** 2))
+        return (num / jnp.maximum(den, 1e-12),)
+
+    return fn
+
+
+def make_path_eval(problem: HedgingProblem, level: int):
+    """(dw[B, n_l]) -> (fine terminal S, coarse terminal S).
+
+    Cross-check artifact: the Rust native engine must reproduce these
+    exactly (same scheme, same increments).
+    """
+
+    def fn(dw):
+        s_fine, s_coarse = coupled_milstein_paths(dw, problem, level)
+        if s_coarse is None:
+            s_coarse = s_fine
+        return s_fine[:, -1], s_coarse[:, -1]
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# parameter initialisation (Rust re-implements the same layout and reads the
+# init vector from the manifest side-file, so both sides start identically)
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int, arch: MlpArch = DEFAULT_ARCH) -> jax.Array:
+    """He-style init, deterministic in ``seed``; biases and p0 start at 0."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in arch.sizes:
+        key, sub = jax.random.split(key)
+        if name.startswith("w"):
+            fan_in = shape[0]
+            parts.append(
+                jax.random.normal(sub, shape, jnp.float32).reshape(-1)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+    return jnp.concatenate(parts)

@@ -1,0 +1,96 @@
+"""Shared problem definition for the deep-hedging reproduction.
+
+Single source of truth for the hyperparameters of the paper's Appendix-C
+experiment (Ishikawa 2023). Both the JAX model (L2), the Pallas kernels
+(L1) and the AOT manifest consume this; the Rust side reads the same
+values back from ``artifacts/manifest.json``.
+
+Paper values: c = 1, d = 1, b = 1.8, lmax = 6, mu = 1, sigma = 1, K = 3.
+``s0`` is not given in the paper; we use the at-the-money convention
+``s0 = K`` (documented in DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+DriftKind = Literal["additive", "geometric"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgingProblem:
+    """Deep-hedging problem instance (paper Appendix C)."""
+
+    mu: float = 1.0
+    sigma: float = 1.0
+    strike: float = 3.0
+    s0: float = 3.0
+    maturity: float = 1.0
+    #: number of time steps at level 0; level ``l`` uses ``n0 * 2**l``.
+    n0: int = 4
+    lmax: int = 6
+    #: ``additive`` is the paper's literal SDE  dS = mu dt + sigma S dB;
+    #: ``geometric`` is dS = mu S dt + sigma S dB (Black-Scholes validatable).
+    drift: DriftKind = "additive"
+
+    def n_steps(self, level: int) -> int:
+        """Number of Milstein steps on the level-``level`` grid."""
+        if level < 0:
+            raise ValueError(f"level must be >= 0, got {level}")
+        return self.n0 * (2**level)
+
+    def dt(self, level: int) -> float:
+        return self.maturity / self.n_steps(level)
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpArch:
+    """Hedging-strategy network H_theta(t, s): 2 -> hidden -> hidden -> 1.
+
+    SiLU activations on hidden layers, sigmoid on the output so the holding
+    is in [0, 1] (paper Appendix C).
+    """
+
+    n_in: int = 2
+    hidden: int = 32
+
+    @property
+    def sizes(self) -> list[tuple[str, tuple[int, ...]]]:
+        h = self.hidden
+        return [
+            ("w1", (self.n_in, h)),
+            ("b1", (h,)),
+            ("w2", (h, h)),
+            ("b2", (h,)),
+            ("w3", (h, 1)),
+            ("b3", (1,)),
+            ("p0", (1,)),
+        ]
+
+    @property
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.sizes:
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+
+DEFAULT_PROBLEM = HedgingProblem()
+DEFAULT_ARCH = MlpArch()
+
+#: Per-level gradient-chunk batch sizes baked into the AOT artifacts.
+#: The Rust runtime accumulates as many chunks as the N_l allocation needs,
+#: so these only fix the granularity (and keep B*n a multiple of the MLP
+#: row tile so the Pallas grid needs no padding on the hot path).
+#: Sized so each execution is compute- rather than dispatch-bound: PJRT
+#: CPU dispatch costs ~270us/execution (EXPERIMENTS.md §Perf), so low
+#: levels use larger batches (B*n = 512 rows uniformly for l <= 4).
+GRAD_CHUNK = {0: 128, 1: 64, 2: 32, 3: 16, 4: 8, 5: 8, 6: 8}
+#: Batch for the held-out loss evaluation at the finest level.
+EVAL_CHUNK = 256
+#: Batch for per-sample diagnostics (Figure 1 artifacts).
+DIAG_CHUNK = 32

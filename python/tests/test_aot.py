@@ -1,0 +1,93 @@
+"""AOT pipeline: manifest integrity and HLO-text artifact properties."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.problem import DEFAULT_ARCH, DEFAULT_PROBLEM
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+class TestManifest:
+    def test_problem_matches_defaults(self, manifest):
+        assert manifest["problem"]["lmax"] == DEFAULT_PROBLEM.lmax
+        assert manifest["problem"]["strike"] == DEFAULT_PROBLEM.strike
+        assert manifest["n_params"] == DEFAULT_ARCH.n_params
+
+    def test_every_entry_file_exists(self, manifest):
+        for e in manifest["entries"]:
+            assert (ART / e["path"]).exists(), e["name"]
+
+    def test_grad_entries_cover_all_levels(self, manifest):
+        grads = [e for e in manifest["entries"] if e["kind"] == "grad_coupled"]
+        assert sorted(e["level"] for e in grads) == list(
+            range(DEFAULT_PROBLEM.lmax + 1)
+        )
+
+    def test_entry_shapes_consistent(self, manifest):
+        p = manifest["n_params"]
+        for e in manifest["entries"]:
+            if e["kind"] in ("grad_coupled", "grad_naive"):
+                assert e["inputs"][0]["shape"] == [p]
+                assert e["inputs"][1]["shape"] == [e["batch"], e["n_steps"]]
+                assert e["outputs"][1]["shape"] == [p]
+            if e["kind"] == "grad_coupled":
+                assert e["n_steps"] == DEFAULT_PROBLEM.n_steps(e["level"])
+
+    def test_param_layout_totals_n_params(self, manifest):
+        total = sum(int(np.prod(x["shape"])) for x in manifest["param_layout"])
+        assert total == manifest["n_params"]
+
+    def test_unique_names(self, manifest):
+        names = [e["name"] for e in manifest["entries"]]
+        assert len(names) == len(set(names))
+
+
+class TestArtifacts:
+    def test_hlo_text_has_entry_computation(self, manifest):
+        for e in manifest["entries"][:4]:
+            text = (ART / e["path"]).read_text()
+            assert "ENTRY" in text, e["name"]
+            assert "HloModule" in text
+
+    def test_init_params_binary(self, manifest):
+        raw = (ART / manifest["init_params"]).read_bytes()
+        got = np.frombuffer(raw, dtype=np.float32)
+        want = np.asarray(model.init_params(0, DEFAULT_ARCH))
+        np.testing.assert_array_equal(got, want)
+
+    def test_no_custom_calls_in_hot_path(self, manifest):
+        """interpret=True must have inlined the Pallas kernels: a Mosaic
+        custom-call in the HLO would be unloadable by the CPU PJRT client."""
+        for e in manifest["entries"]:
+            if e["kind"] in ("grad_coupled", "grad_naive", "loss_eval"):
+                text = (ART / e["path"]).read_text()
+                assert "custom-call" not in text.lower(), e["name"]
+
+
+class TestEntryBuilder:
+    def test_build_entries_counts(self):
+        entries = aot.build_entries(DEFAULT_PROBLEM, DEFAULT_ARCH)
+        lmax = DEFAULT_PROBLEM.lmax
+        # grads per level + naive + loss_eval + 3 diagnostics per level
+        assert len(entries) == (lmax + 1) + 2 + 3 * (lmax + 1)
+
+    def test_names_match_levels(self):
+        entries = aot.build_entries(DEFAULT_PROBLEM, DEFAULT_ARCH)
+        byname = {e.name: e for e in entries}
+        assert byname["grad_l3"].level == 3
+        assert byname["grad_l3"].n_steps == DEFAULT_PROBLEM.n_steps(3)

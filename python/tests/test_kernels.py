@@ -1,0 +1,206 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept by hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.milstein import coupled_milstein_paths, milstein_paths
+from compile.kernels.mlp import ROW_TILE, hedge_mlp
+from compile.problem import DEFAULT_ARCH, DEFAULT_PROBLEM, HedgingProblem
+
+ARCH = DEFAULT_ARCH
+PROB = DEFAULT_PROBLEM
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _params(seed: int) -> dict:
+    flat = jax.random.normal(
+        jax.random.PRNGKey(seed), (ARCH.n_params,), jnp.float32
+    ) * 0.3
+    return ref.unflatten_params(flat, ARCH), flat
+
+
+# ---------------------------------------------------------------------------
+# hedge_mlp forward
+# ---------------------------------------------------------------------------
+
+
+class TestMlpForward:
+    @hypothesis.given(
+        rows=st.integers(1, 3 * ROW_TILE + 7), seed=st.integers(0, 10)
+    )
+    def test_matches_ref_any_row_count(self, rows, seed):
+        p, _ = _params(seed)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 99), (rows, 2))
+        got = hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+        want = ref.mlp_ref(p, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_output_in_unit_interval(self):
+        p, _ = _params(3)
+        x = jax.random.normal(jax.random.PRNGKey(0), (256, 2)) * 10.0
+        h = hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+        assert jnp.all(h >= 0.0) and jnp.all(h <= 1.0)
+
+    def test_exact_tile_multiple(self):
+        p, _ = _params(1)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2 * ROW_TILE, 2))
+        got = hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+        np.testing.assert_allclose(got, ref.mlp_ref(p, x), rtol=1e-5, atol=1e-6)
+
+    def test_single_row(self):
+        p, _ = _params(2)
+        x = jnp.array([[0.5, 3.0]], jnp.float32)
+        got = hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+        np.testing.assert_allclose(got, ref.mlp_ref(p, x), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hedge_mlp backward (custom VJP kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestMlpBackward:
+    def _grads(self, fn, flat, x):
+        return jax.grad(fn)(flat, x)
+
+    @hypothesis.given(rows=st.sampled_from([1, 7, 128, 200, 300]), seed=st.integers(0, 5))
+    def test_param_grads_match_autodiff_of_ref(self, rows, seed):
+        _, flat = _params(seed)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 7), (rows, 2))
+
+        def loss_k(fl, x):
+            p = ref.unflatten_params(fl, ARCH)
+            h = hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"])
+            return jnp.sum(jnp.sin(h) * jnp.cos(jnp.arange(rows) * 0.1))
+
+        def loss_r(fl, x):
+            p = ref.unflatten_params(fl, ARCH)
+            return jnp.sum(jnp.sin(ref.mlp_ref(p, x)) * jnp.cos(jnp.arange(rows) * 0.1))
+
+        gk = self._grads(loss_k, flat, x)
+        gr = self._grads(loss_r, flat, x)
+        np.testing.assert_allclose(gk, gr, rtol=5e-4, atol=1e-5)
+
+    def test_input_grads_match(self):
+        p, flat = _params(0)
+        x = jax.random.normal(jax.random.PRNGKey(11), (150, 2))
+
+        gk = jax.grad(
+            lambda x: jnp.sum(
+                hedge_mlp(x, p["w1"], p["b1"], p["w2"], p["b2"], p["w3"], p["b3"]) ** 2
+            )
+        )(x)
+        gr = jax.grad(lambda x: jnp.sum(ref.mlp_ref(p, x) ** 2))(x)
+        np.testing.assert_allclose(gk, gr, rtol=5e-4, atol=1e-6)
+
+    def test_grad_accumulation_across_tiles(self):
+        """Weight grads must sum over *all* grid tiles, not just the last."""
+        p, flat = _params(4)
+        x = jax.random.normal(jax.random.PRNGKey(3), (4 * ROW_TILE, 2))
+
+        def loss(fl):
+            pp = ref.unflatten_params(fl, ARCH)
+            return jnp.sum(
+                hedge_mlp(x, pp["w1"], pp["b1"], pp["w2"], pp["b2"], pp["w3"], pp["b3"])
+            )
+
+        def loss_half(fl):
+            pp = ref.unflatten_params(fl, ARCH)
+            return jnp.sum(
+                hedge_mlp(
+                    x[: 2 * ROW_TILE],
+                    pp["w1"], pp["b1"], pp["w2"], pp["b2"], pp["w3"], pp["b3"],
+                )
+            )
+
+        g_full = jax.grad(loss)(flat)
+        g_half = jax.grad(loss_half)(flat)
+        # The full gradient must differ from any single-slice gradient.
+        assert float(jnp.linalg.norm(g_full - g_half)) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# milstein kernel
+# ---------------------------------------------------------------------------
+
+
+def _dw(seed: int, batch: int, n: int, dt: float) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), (batch, n)) * np.sqrt(dt)
+
+
+class TestMilstein:
+    @hypothesis.given(
+        batch=st.sampled_from([1, 5, 64, 128, 130]),
+        level=st.integers(0, 4),
+        seed=st.integers(0, 5),
+    )
+    def test_matches_ref(self, batch, level, seed):
+        n = PROB.n_steps(level)
+        dw = _dw(seed, batch, n, PROB.dt(level))
+        got = milstein_paths(dw, PROB, n)
+        want = ref.milstein_path_ref(dw, PROB, n)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_geometric_drift_matches_ref(self):
+        import dataclasses
+
+        prob = dataclasses.replace(PROB, drift="geometric")
+        dw = _dw(0, 32, 16, prob.maturity / 16)
+        got = milstein_paths(dw, prob, 16)
+        want = ref.milstein_path_ref(dw, prob, 16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_initial_value(self):
+        dw = _dw(1, 8, 4, PROB.dt(0))
+        s = milstein_paths(dw, PROB, 4)
+        np.testing.assert_allclose(s[:, 0], PROB.s0)
+
+    def test_zero_noise_matches_deterministic_recurrence(self):
+        """With dw = 0 Milstein reduces to
+        S+ = S + mu dt - 1/2 sigma^2 S dt  (the dW^2 - dt correction keeps
+        its -dt part at zero noise) — check against the scalar recurrence."""
+        n = 32
+        dw = jnp.zeros((4, n), jnp.float32)
+        s = milstein_paths(dw, PROB, n)
+        dt = PROB.maturity / n
+        want = [PROB.s0]
+        for _ in range(n):
+            prev = want[-1]
+            want.append(prev + PROB.mu * dt - 0.5 * PROB.sigma**2 * prev * dt)
+        np.testing.assert_allclose(s[0], np.array(want), rtol=1e-5)
+
+    def test_coupling_strong_convergence(self):
+        """|S_fine(T) - S_coarse(T)| must shrink as the level increases —
+        the foundation of Assumption 2 (variance decay)."""
+        errs = []
+        for level in range(1, 6):
+            n = PROB.n_steps(level)
+            dw = _dw(42, 512, n, PROB.dt(level))
+            s_f, s_c = coupled_milstein_paths(dw, PROB, level)
+            errs.append(float(jnp.mean((s_f[:, -1] - s_c[:, -1]) ** 2)))
+        for a, b in zip(errs, errs[1:]):
+            assert b < a, f"coupling error not decreasing: {errs}"
+        # Milstein is strong order 1 => MSE decay ~ 2^{-2l}; allow slack.
+        assert errs[-1] < errs[0] / 16
+
+    def test_coarsen_preserves_total_increment(self):
+        dw = _dw(7, 16, 32, 0.01)
+        dc = ref.coarsen_increments(dw)
+        np.testing.assert_allclose(
+            dc.sum(axis=1), dw.sum(axis=1), rtol=1e-5, atol=1e-6
+        )
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            milstein_paths(jnp.zeros((4, 8)), PROB, 16)
+        with pytest.raises(ValueError):
+            ref.coarsen_increments(jnp.zeros((4, 7)))

@@ -1,0 +1,173 @@
+"""L2 model correctness: objective, gradients, coupling decay, init."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.problem import DEFAULT_ARCH, DEFAULT_PROBLEM
+
+ARCH = DEFAULT_ARCH
+PROB = DEFAULT_PROBLEM
+
+
+def _dw(seed, batch, level):
+    n = PROB.n_steps(level)
+    return jax.random.normal(jax.random.PRNGKey(seed), (batch, n)) * np.sqrt(
+        PROB.dt(level)
+    )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0, ARCH)
+
+
+class TestObjective:
+    def test_pallas_loss_matches_ref(self, params):
+        for level in [0, 1, 3]:
+            dw = _dw(level, 16, level)
+            got = model.coupled_loss(params, dw, PROB, ARCH, level)
+            want = ref.coupled_loss_ref(params, dw, PROB, ARCH, level)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_naive_loss_matches_ref_finest(self, params):
+        dw = _dw(9, 8, PROB.lmax)
+        got = model.naive_loss(params, dw, PROB, ARCH)
+        want = ref.hedging_loss_ref(
+            params, dw, PROB, ARCH, PROB.n_steps(PROB.lmax)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+    def test_telescoping_identity(self, params):
+        """F_hat_lmax(x, xi) == sum_l Delta_l F_hat(x, xi) on the same path.
+
+        The MLMC decomposition must telescope exactly when every level sees
+        the same Brownian path (coarsened consistently).
+        """
+        lmax = 3
+        prob = dataclasses.replace(PROB, lmax=lmax)
+        dw_fine = _dw(11, 32, lmax)
+        total = ref.hedging_loss_ref(
+            params, dw_fine, prob, ARCH, prob.n_steps(lmax)
+        )
+        acc = 0.0
+        dw = dw_fine
+        for level in range(lmax, -1, -1):
+            acc += ref.coupled_loss_ref(params, dw, prob, ARCH, level)
+            if level > 0:
+                dw = ref.coarsen_increments(dw)
+        np.testing.assert_allclose(acc, total, rtol=1e-4, atol=1e-6)
+
+    def test_loss_nonnegative_at_level0(self, params):
+        dw = _dw(1, 64, 0)
+        loss = ref.coupled_loss_ref(params, dw, PROB, ARCH, 0)
+        assert float(loss) >= 0.0
+
+
+class TestGradients:
+    def test_grad_matches_finite_differences(self, params):
+        level = 1
+        dw = _dw(2, 8, level)
+        fn = model.make_grad_coupled(PROB, ARCH, level)
+        loss, grad = fn(params, dw)
+        rng = np.random.default_rng(0)
+        idx = rng.choice(ARCH.n_params, size=12, replace=False)
+        eps = 1e-3
+        for i in idx:
+            e = jnp.zeros_like(params).at[i].set(eps)
+            lp = ref.coupled_loss_ref(params + e, dw, PROB, ARCH, level)
+            lm = ref.coupled_loss_ref(params - e, dw, PROB, ARCH, level)
+            fd = (lp - lm) / (2 * eps)
+            assert abs(float(grad[i]) - float(fd)) < 5e-3 * max(
+                1.0, abs(float(fd))
+            ), f"param {i}: grad {grad[i]} vs fd {fd}"
+
+    def test_grad_pallas_matches_grad_ref(self, params):
+        for level in [0, 2]:
+            dw = _dw(level + 5, 8, level)
+            g_pallas = jax.grad(model.coupled_loss)(params, dw, PROB, ARCH, level)
+            g_ref = jax.grad(ref.coupled_loss_ref)(params, dw, PROB, ARCH, level)
+            np.testing.assert_allclose(g_pallas, g_ref, rtol=1e-3, atol=1e-6)
+
+    def test_p0_gradient_is_mean_residual(self, params):
+        """dL/dp0 = -2 E[residual] in closed form — sanity anchor."""
+        dw = _dw(3, 32, 0)
+        g = jax.grad(ref.coupled_loss_ref)(params, dw, PROB, ARCH, 0)
+        r = ref.hedging_residual_ref(params, dw, PROB, ARCH, PROB.n_steps(0))
+        np.testing.assert_allclose(
+            g[-1], -2.0 * jnp.mean(r), rtol=1e-4, atol=1e-6
+        )
+
+
+class TestAssumptionDecay:
+    """Empirical sanity that Assumptions 1-3 hold on this problem —
+    the premise of the whole paper (checked at full scale in Figure 1)."""
+
+    def test_variance_decays_with_level(self, params):
+        fn = lambda lvl: model.make_grad_norms(PROB, ARCH, lvl)
+        norms = []
+        for level in [0, 2, 4]:
+            dw = _dw(21, 32, level)
+            (vals,) = fn(level)(params, dw)
+            norms.append(float(jnp.mean(vals)))
+        assert norms[2] < norms[1] < norms[0], norms
+
+    def test_smoothness_decays_with_level(self, params):
+        p2 = params + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(5), params.shape
+        )
+        vals = []
+        for level in [0, 2, 4]:
+            dw = _dw(22, 32, level)
+            (v,) = model.make_smoothness(PROB, ARCH, level)(params, p2, dw)
+            vals.append(float(jnp.mean(v)))
+        assert vals[2] < vals[0], vals
+
+
+class TestInit:
+    def test_deterministic(self):
+        a = model.init_params(7, ARCH)
+        b = model.init_params(7, ARCH)
+        np.testing.assert_array_equal(a, b)
+
+    def test_shape_and_zero_biases(self):
+        p = model.init_params(0, ARCH)
+        assert p.shape == (ARCH.n_params,)
+        d = ref.unflatten_params(p, ARCH)
+        np.testing.assert_array_equal(d["b1"], 0.0)
+        np.testing.assert_array_equal(d["p0"], 0.0)
+
+    def test_flatten_roundtrip(self):
+        p = model.init_params(1, ARCH)
+        d = ref.unflatten_params(p, ARCH)
+        np.testing.assert_array_equal(ref.flatten_params(d, ARCH), p)
+
+
+class TestSmoothnessFunction:
+    def test_identical_params_give_zero(self, params):
+        dw = _dw(4, 32, 1)
+        (v,) = model.make_smoothness(PROB, ARCH, 1)(params, params, dw)
+        # num = 0, den clamped at 1e-12 -> exactly 0
+        np.testing.assert_allclose(v, 0.0, atol=1e-6)
+
+
+class TestPathEval:
+    def test_level0_coarse_equals_fine(self, params):
+        dw = _dw(6, 32, 0)
+        f, c = model.make_path_eval(PROB, 0)(dw)
+        np.testing.assert_array_equal(f, c)
+
+    def test_matches_ref_terminal(self, params):
+        dw = _dw(8, 32, 2)
+        f, c = model.make_path_eval(PROB, 2)(dw)
+        sf = ref.milstein_path_ref(dw, PROB, PROB.n_steps(2))
+        sc = ref.milstein_path_ref(
+            ref.coarsen_increments(dw), PROB, PROB.n_steps(1)
+        )
+        np.testing.assert_allclose(f, sf[:, -1], rtol=1e-5)
+        np.testing.assert_allclose(c, sc[:, -1], rtol=1e-5)

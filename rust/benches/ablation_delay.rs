@@ -1,0 +1,88 @@
+//! Ablation bench: sensitivity of delayed MLMC to the **delay exponent
+//! `d`** — the design choice DESIGN.md §3 calls out. Sweeps `d` over the
+//! three regimes of the paper's footnote 6 (`c < d`, `c = d`, `c > d`)
+//! and reports final loss vs parallel cost, plus the *measured bias* the
+//! delay introduces (Lemma 5's quantity): distance of the delayed
+//! estimator from a fresh full-MLMC gradient at the same parameters,
+//! against the Monte Carlo noise floor.
+//!
+//! `cargo bench --bench ablation_delay`
+
+use dmlmc::bench::{black_box, Harness};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::experiments;
+use dmlmc::mlmc::estimator::grad_norm;
+
+fn l2_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn main() {
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.runtime.backend = Backend::Native;
+    cfg.train.steps = 48;
+    cfg.train.eval_every = 48;
+    cfg.mlmc.n_effective = 128;
+    cfg.train.dmlmc_warmup = 0; // pure-schedule ablation
+
+    println!("\n=== ABLATION: delay exponent d (c = {}) ===", cfg.mlmc.c);
+    let ds = [0.0, 0.5, 1.0, 1.5, 2.0];
+    let rows = experiments::sweep_delay(&cfg, &ds).expect("sweep");
+    println!(
+        "{:<6} {:>12} {:>14} {:>14} {:>12} {:>10}",
+        "d", "final loss", "std cost", "par cost", "avg depth", "regime"
+    );
+    for (d, r) in &rows {
+        let regime = if *d < cfg.mlmc.c {
+            "c > d"
+        } else if (*d - cfg.mlmc.c).abs() < 1e-9 {
+            "c = d"
+        } else {
+            "c < d"
+        };
+        println!(
+            "{d:<6} {:>12.5} {:>14.0} {:>14.0} {:>12.2} {:>10}",
+            r.final_loss, r.std_cost, r.par_cost, r.avg_depth, regime
+        );
+    }
+
+    // Bias probe (Lemma 5, measured): after 17 steps, compare the cached
+    // delayed estimator with a fresh full-MLMC gradient at the same
+    // parameters; report next to the MC noise floor (distance between two
+    // independent fresh estimates at the same parameters).
+    println!("\n=== delayed-estimator bias vs MC noise floor (17 steps in) ===");
+    println!("{:<6} {:>18} {:>18} {:>10}", "d", "||delayed-fresh||", "noise floor", "ratio");
+    for d in [0.5, 1.0, 2.0] {
+        let mut c = cfg.clone();
+        c.mlmc.d = d;
+        let mut tr = Trainer::from_config(&c, Method::Dmlmc, 0).unwrap();
+        for t in 0..17u64 {
+            tr.step(t).unwrap();
+        }
+        let (_, delayed) = tr.assembled_gradient();
+        let (_, fresh_a) = tr.fresh_mlmc_gradient(900).unwrap();
+        let (_, fresh_b) = tr.fresh_mlmc_gradient(901).unwrap();
+        let bias = l2_diff(&delayed, &fresh_a) / grad_norm(&fresh_a).max(1e-12);
+        let floor = l2_diff(&fresh_a, &fresh_b) / grad_norm(&fresh_a).max(1e-12);
+        println!("{d:<6} {bias:>18.4} {floor:>18.4} {:>10.2}", bias / floor.max(1e-12));
+    }
+    println!("(ratio ~1 means the delay bias is hidden inside Monte Carlo noise)");
+
+    // Wall-clock: average step latency per d.
+    let h = Harness::quick();
+    for d in [0.5, 1.0, 2.0] {
+        let mut c = cfg.clone();
+        c.mlmc.d = d;
+        let mut tr = Trainer::from_config(&c, Method::Dmlmc, 0).unwrap();
+        let mut t = 0u64;
+        h.run(&format!("ablation/step_d{d}"), || {
+            black_box(tr.step(t).unwrap());
+            t += 1;
+        });
+    }
+}

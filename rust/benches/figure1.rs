@@ -1,0 +1,57 @@
+//! Bench target for **Figure 1**: regenerates the assumption-decay series
+//! (variance proxy + pathwise smoothness per level, mean ± std along a
+//! trajectory) and the fitted exponents b̂, d̂, and times the per-level
+//! diagnostic kernels.
+//!
+//! `cargo bench --bench figure1`
+
+use dmlmc::bench::{black_box, Harness};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::engine::mlp::init_params;
+use dmlmc::experiments;
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::runtime::{GradBackend, NativeBackend};
+
+fn main() {
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.runtime.backend = Backend::Native;
+    cfg.train.steps = 12;
+    cfg.mlmc.n_effective = 64;
+
+    // The figure itself.
+    let fig = experiments::figure1(&cfg, 4, true).expect("figure1");
+    println!("\n=== FIGURE 1 (decay of variance proxy and smoothness) ===");
+    println!(
+        "{:<6} {:>16} {:>12} {:>16} {:>12}",
+        "level", "E||gDl||^2", "(std)", "smoothness", "(std)"
+    );
+    for l in 0..fig.grad_norms.per_level.len() {
+        let (gm, gs) = fig.grad_norms.per_level[l];
+        let (sm, ss) = fig.smoothness.per_level[l];
+        println!("{l:<6} {gm:>16.6e} {gs:>12.2e} {sm:>16.6e} {ss:>12.2e}");
+    }
+    println!(
+        "fitted: b_hat = {:.3} (paper ~1.8-2), d_hat = {:.3} (paper ~1)\n",
+        fig.b_hat, fig.d_hat
+    );
+
+    // Per-level diagnostic timing (the figure's cost driver).
+    let backend = NativeBackend::new(cfg.problem);
+    let params = init_params(0);
+    let src = BrownianSource::new(1);
+    let h = Harness::quick();
+    for level in [0usize, 3, 6] {
+        let dw = src.increments(
+            Purpose::Diagnostic,
+            0,
+            level as u32,
+            0,
+            backend.diag_chunk(),
+            cfg.problem.n_steps(level),
+            cfg.problem.dt(level),
+        );
+        h.run(&format!("figure1/grad_norms_l{level}"), || {
+            black_box(backend.grad_norms_chunk(level, &params, &dw).unwrap());
+        });
+    }
+}

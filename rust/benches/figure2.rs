@@ -1,0 +1,82 @@
+//! Bench target for **Figure 2**: regenerates the 3-method learning-curve
+//! comparison (loss vs standard and parallel complexity, mean ± std over
+//! seeds) on a small budget, and asserts/prints the ordering the paper
+//! claims: DMLMC ≫ MLMC ≈ naive in parallel complexity, DMLMC ≲ MLMC ≪
+//! naive in standard complexity.
+//!
+//! `cargo bench --bench figure2`
+
+use dmlmc::bench::{black_box, Harness};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::experiments;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.runtime.backend = Backend::Native;
+    cfg.train.steps = 60;
+    cfg.train.eval_every = 10;
+    cfg.train.n_seeds = 3;
+    cfg.mlmc.n_effective = 128;
+    cfg.train.dmlmc_warmup = 0; // bench the pure schedule, not stability aids
+
+    let results = experiments::figure2(&cfg, true).expect("figure2");
+    for axis in ["standard", "parallel"] {
+        println!("\n=== FIGURE 2 ({axis} complexity as x-axis) ===");
+        println!(
+            "{:<8} {:>10} {:>16} {:>12} {:>10}",
+            "method", "step", "cum. cost", "loss mean", "loss std"
+        );
+        for (method, _, agg) in &results {
+            let n = agg.steps.len();
+            for i in [0, n / 2, n - 1] {
+                let cost = if axis == "standard" {
+                    agg.std_cost[i]
+                } else {
+                    agg.par_cost[i]
+                };
+                println!(
+                    "{:<8} {:>10} {:>16.0} {:>12.5} {:>10.5}",
+                    method.name(),
+                    agg.steps[i],
+                    cost,
+                    agg.loss_mean[i],
+                    agg.loss_std[i]
+                );
+            }
+        }
+    }
+    let total = |m: Method, par: bool| {
+        results
+            .iter()
+            .find(|(mm, _, _)| *mm == m)
+            .map(|(_, _, a)| {
+                if par {
+                    *a.par_cost.last().unwrap()
+                } else {
+                    *a.std_cost.last().unwrap()
+                }
+            })
+            .unwrap()
+    };
+    println!(
+        "\nparallel-cost ratio  mlmc/dmlmc = {:.1}x   naive/dmlmc = {:.1}x",
+        total(Method::Mlmc, true) / total(Method::Dmlmc, true),
+        total(Method::Naive, true) / total(Method::Dmlmc, true)
+    );
+    println!(
+        "standard-cost ratio  naive/mlmc = {:.1}x   mlmc/dmlmc = {:.2}x\n",
+        total(Method::Naive, false) / total(Method::Mlmc, false),
+        total(Method::Mlmc, false) / total(Method::Dmlmc, false)
+    );
+
+    // Wall-clock of one full DMLMC learning-curve run (the figure's unit).
+    let h = Harness::quick();
+    let mut small = cfg.clone();
+    small.train.steps = 16;
+    small.train.n_seeds = 1;
+    h.run("figure2/dmlmc_run16", || {
+        let mut tr = Trainer::from_config(&small, Method::Dmlmc, 0).unwrap();
+        black_box(tr.run().unwrap());
+    });
+}

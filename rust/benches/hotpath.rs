@@ -1,0 +1,105 @@
+//! Hot-path micro-benchmarks (§Perf): the building blocks a training step
+//! is made of, on both backends, so regressions are attributable.
+//!
+//! * per-level coupled gradient chunk — native engine vs compiled HLO
+//! * Brownian batch generation (RNG substrate)
+//! * estimator assembly + optimizer update (pure L3 overhead)
+//! * end-to-end DMLMC step latency distribution across a period
+//!
+//! `cargo bench --bench hotpath`
+
+use dmlmc::bench::{black_box, Harness};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::engine::mlp::init_params;
+use dmlmc::mlmc::estimator::ChunkAccumulator;
+use dmlmc::optim::{Optimizer, Sgd};
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::runtime::{GradBackend, NativeBackend, XlaRuntime};
+
+fn main() {
+    let cfg = ExperimentConfig::default_paper();
+    let problem = cfg.problem;
+    let params = init_params(0);
+    let src = BrownianSource::new(5);
+    let h = Harness::quick();
+
+    // ---- RNG substrate ------------------------------------------------
+    h.run("rng/brownian_64x256", || {
+        black_box(src.increments(Purpose::Grad, 0, 6, 0, 64, 256, problem.dt(6)));
+    });
+
+    // ---- native engine per level --------------------------------------
+    let native = NativeBackend::new(problem);
+    for level in [0usize, 3, 6] {
+        let batch = native.grad_chunk(level);
+        let dw = src.increments(
+            Purpose::Grad, 0, level as u32, 0, batch,
+            problem.n_steps(level), problem.dt(level),
+        );
+        h.run(&format!("native/grad_l{level}"), || {
+            black_box(native.grad_coupled_chunk(level, &params, &dw).unwrap());
+        });
+    }
+
+    // ---- XLA runtime per level (if artifacts exist) --------------------
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let rt = XlaRuntime::load(artifacts).expect("artifacts");
+        rt.warmup().expect("warmup");
+        for level in [0usize, 3, 6] {
+            let batch = rt.grad_chunk(level);
+            let dw = src.increments(
+                Purpose::Grad, 0, level as u32, 0, batch,
+                problem.n_steps(level), problem.dt(level),
+            );
+            h.run(&format!("xla/grad_l{level}"), || {
+                black_box(rt.grad_coupled_chunk(level, &params, &dw).unwrap());
+            });
+        }
+        let dw_eval = src.increments(
+            Purpose::Eval, 0, 6, 0, rt.eval_chunk(),
+            problem.n_steps(6), problem.dt(6),
+        );
+        h.run("xla/loss_eval_256x256", || {
+            black_box(rt.loss_eval_chunk(&params, &dw_eval).unwrap());
+        });
+    } else {
+        eprintln!("artifacts not built; skipping xla/* benches");
+    }
+
+    // ---- pure L3 overhead ----------------------------------------------
+    let grads: Vec<Vec<f32>> = (0..7)
+        .map(|l| (0..params.len()).map(|i| ((i + l) % 13) as f32 * 1e-3).collect())
+        .collect();
+    h.run("l3/assemble_7_levels", || {
+        let mut acc = ChunkAccumulator::new(params.len());
+        for g in &grads {
+            acc.add(0.1, g);
+        }
+        black_box(acc.finish());
+    });
+    let mut p = params.clone();
+    let mut opt = Sgd::new(0.01);
+    h.run("l3/sgd_update_1186", || {
+        opt.step(&mut p, &grads[0]);
+        black_box(&p);
+    });
+
+    // ---- end-to-end step latency over one schedule period ---------------
+    let mut cfg_step = cfg.clone();
+    cfg_step.runtime.backend = Backend::Native;
+    cfg_step.mlmc.n_effective = 128;
+    let mut tr = Trainer::from_config(&cfg_step, Method::Dmlmc, 0).unwrap();
+    let mut t = 0u64;
+    h.run("e2e/dmlmc_step_native", || {
+        black_box(tr.step(t).unwrap());
+        t += 1;
+    });
+    let mut tr2 = Trainer::from_config(&cfg_step, Method::Mlmc, 0).unwrap();
+    let mut t2 = 0u64;
+    h.run("e2e/mlmc_step_native", || {
+        black_box(tr2.step(t2).unwrap());
+        t2 += 1;
+    });
+}

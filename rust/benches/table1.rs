@@ -1,0 +1,48 @@
+//! Bench target for **Table 1**: regenerates the theory-vs-measured
+//! complexity table end to end and times each method's full training run
+//! on the same budget, so rows are directly comparable run-to-run.
+//!
+//! `cargo bench --bench table1`
+
+use dmlmc::bench::{black_box, Harness};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::experiments;
+
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_paper();
+    cfg.runtime.backend = Backend::Native;
+    cfg.train.steps = 32;
+    cfg.train.eval_every = 32;
+    cfg.mlmc.n_effective = 128;
+    cfg.train.dmlmc_warmup = 0; // bench the pure schedule, not stability aids
+    cfg
+}
+
+fn main() {
+    let cfg = cfg();
+
+    // The table itself (the regeneration artifact).
+    let (theory, measured) = experiments::table1(&cfg).expect("table1");
+    println!("\n=== TABLE 1 (theory vs measured, T = {}, N = {}) ===", cfg.train.steps, cfg.mlmc.n_effective);
+    println!("{}", experiments::render_table1(&theory, &measured));
+    println!(
+        "dmlmc avg per-step depth: measured {:.2} | schedule {:.2} | theory Σ2^((c-d)l) = {:.2}\n",
+        measured[2].avg_depth,
+        experiments::predicted_avg_depth(&cfg, 1 << 14),
+        dmlmc::mlmc::theory::geom_sum(cfg.mlmc.c - cfg.mlmc.d, cfg.problem.lmax),
+    );
+
+    // Wall-clock per full training run, per method.
+    let h = Harness::quick();
+    for method in Method::all() {
+        let mut run_cfg = cfg.clone();
+        run_cfg.train.steps = 8;
+        h.run(&format!("table1/train8_{}", method.name()), || {
+            let mut tr = Trainer::from_config(&run_cfg, method, 0).unwrap();
+            for t in 0..run_cfg.train.steps as u64 {
+                black_box(tr.step(t).unwrap());
+            }
+        });
+    }
+}

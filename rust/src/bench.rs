@@ -1,0 +1,156 @@
+//! Micro-benchmark harness (criterion substitute, offline build).
+//!
+//! `cargo bench` targets are declared with `harness = false` and drive
+//! this module: warmup, timed iterations, and robust summary statistics
+//! (median / mean / p10 / p90 over per-iteration wall times), printed in a
+//! stable machine-grepable format:
+//!
+//! `BENCH <name> iters=<n> median=<t> mean=<t> p10=<t> p90=<t>`
+
+use std::time::{Duration, Instant};
+
+/// One benchmark runner with fixed warmup/measure budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct Harness {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl Summary {
+    pub fn report(&self) -> String {
+        format!(
+            "BENCH {} iters={} median={:?} mean={:?} p10={:?} p90={:?}",
+            self.name, self.iters, self.median, self.mean, self.p10, self.p90
+        )
+    }
+}
+
+impl Harness {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Harness {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(800),
+            min_iters: 3,
+            max_iters: 1000,
+        }
+    }
+
+    /// Benchmark `f`, which must consume its result via [`black_box`].
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Summary {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let pct = |p: f64| samples[((iters - 1) as f64 * p) as usize];
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let s = Summary {
+            name: name.to_string(),
+            iters,
+            median: pct(0.5),
+            mean,
+            p10: pct(0.1),
+            p90: pct(0.9),
+        };
+        println!("{}", s.report());
+        s
+    }
+}
+
+/// Prevent the optimizer from eliding a computation (criterion-style).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_harness() -> Harness {
+        Harness {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            min_iters: 3,
+            max_iters: 100,
+        }
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let mut acc = 0u64;
+        let s = fast_harness().run("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.report().contains("BENCH noop"));
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn distinguishes_cheap_from_expensive() {
+        let h = fast_harness();
+        let cheap = h.run("cheap", || {
+            black_box(1 + 1);
+        });
+        let expensive = h.run("expensive", || {
+            let mut v: f64 = 0.0;
+            for i in 0..20_000 {
+                v += black_box(i as f64).sqrt();
+            }
+            black_box(v);
+        });
+        assert!(expensive.median > cheap.median);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let h = Harness {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_secs(10),
+            min_iters: 1,
+            max_iters: 7,
+        };
+        let s = h.run("capped", || {
+            black_box(2 * 2);
+        });
+        assert_eq!(s.iters, 7);
+    }
+}

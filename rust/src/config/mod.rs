@@ -1,0 +1,365 @@
+//! Experiment configuration: defaults = the paper's Appendix-C settings,
+//! overridable from TOML files (`configs/*.toml`) and CLI flags.
+
+use std::path::{Path, PathBuf};
+
+use crate::hedging::{Drift, Problem};
+use crate::util::toml::{TomlDoc, TomlError};
+
+/// Which gradient backend executes the level jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled HLO artifacts via PJRT (the production path).
+    Xla,
+    /// The pure-rust verification engine (no artifacts needed).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "xla" => Some(Backend::Xla),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Xla => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// MLMC estimator hyperparameters (paper §2–3).
+#[derive(Debug, Clone, Copy)]
+pub struct MlmcConfig {
+    /// Variance-decay exponent (Assumption 2). Paper: b = 1.8.
+    pub b: f64,
+    /// Cost-growth exponent (Assumption 1). Paper: c = 1.
+    pub c: f64,
+    /// Delay exponent of Algorithm 1 (refresh level l every 2^{dl} steps).
+    /// Paper: d = 1.
+    pub d: f64,
+    /// Effective batch size N.
+    pub n_effective: usize,
+}
+
+impl Default for MlmcConfig {
+    fn default() -> Self {
+        MlmcConfig {
+            b: 1.8,
+            c: 1.0,
+            d: 1.0,
+            n_effective: 1024,
+        }
+    }
+}
+
+/// Training-loop settings.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub optimizer: String,
+    /// Evaluate the held-out loss every this many steps.
+    pub eval_every: usize,
+    /// Number of eval chunks averaged per evaluation.
+    pub eval_chunks: usize,
+    /// Seeds for repeated runs (Figure 2 uses 10).
+    pub n_seeds: usize,
+    /// Gradient-norm clip (0 = off). Stabilises the delayed estimator's
+    /// early phase, where stale high-level components meet large initial
+    /// gradients (Theorem 1's step-size bound is conservative for the
+    /// same reason).
+    pub clip_norm: f64,
+    /// DMLMC warmup: for the first `dmlmc_warmup` steps every level is
+    /// refreshed (standard MLMC), then the delayed schedule takes over.
+    /// Removes the early-phase positive-feedback between fast parameter
+    /// motion and stale high-level components; costs are accounted
+    /// honestly (warmup steps pay full MLMC depth).
+    pub dmlmc_warmup: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 400,
+            lr: 0.05,
+            optimizer: "sgd".to_string(),
+            eval_every: 10,
+            eval_chunks: 1,
+            n_seeds: 10,
+            clip_norm: 0.0,
+            dmlmc_warmup: 8,
+        }
+    }
+}
+
+/// Runtime / IO settings.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub backend: Backend,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            backend: Backend::Xla,
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("out"),
+        }
+    }
+}
+
+/// Everything an experiment needs.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub problem: Problem,
+    pub mlmc: MlmcConfig,
+    pub train: TrainConfig,
+    pub runtime: RuntimeConfig,
+}
+
+impl ExperimentConfig {
+    /// The paper's Appendix-C experiment at full scale.
+    pub fn default_paper() -> Self {
+        ExperimentConfig::default()
+    }
+
+    /// Small preset for smoke tests / CI (few steps, few seeds).
+    pub fn smoke() -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.steps = 20;
+        cfg.train.eval_every = 5;
+        cfg.train.n_seeds = 2;
+        cfg.mlmc.n_effective = 64;
+        cfg.runtime.backend = Backend::Native;
+        cfg.train.dmlmc_warmup = 0; // tests exercise the pure schedule
+        cfg
+    }
+
+    /// Load from a TOML file, starting from defaults.
+    pub fn from_toml_file(path: &Path) -> Result<Self, TomlError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| TomlError(format!("{}: {e}", path.display())))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text, starting from defaults. Unknown keys are
+    /// rejected (catches typos in experiment configs).
+    pub fn from_toml(text: &str) -> Result<Self, TomlError> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, _) in &doc.entries {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(TomlError(format!("unknown config key `{key}`")));
+            }
+        }
+
+        let getf = |k: &str| doc.get(k).and_then(|v| v.as_f64());
+        let getu = |k: &str| doc.get(k).and_then(|v| v.as_usize());
+        let gets = |k: &str| doc.get(k).and_then(|v| v.as_str());
+
+        // [problem]
+        if let Some(v) = getf("problem.mu") {
+            cfg.problem.mu = v;
+        }
+        if let Some(v) = getf("problem.sigma") {
+            cfg.problem.sigma = v;
+        }
+        if let Some(v) = getf("problem.strike") {
+            cfg.problem.strike = v;
+        }
+        if let Some(v) = getf("problem.s0") {
+            cfg.problem.s0 = v;
+        }
+        if let Some(v) = getf("problem.maturity") {
+            cfg.problem.maturity = v;
+        }
+        if let Some(v) = getu("problem.n0") {
+            cfg.problem.n0 = v;
+        }
+        if let Some(v) = getu("problem.lmax") {
+            cfg.problem.lmax = v;
+        }
+        if let Some(s) = gets("problem.drift") {
+            cfg.problem.drift = Drift::parse(s)
+                .ok_or_else(|| TomlError(format!("unknown drift `{s}`")))?;
+        }
+
+        // [mlmc]
+        if let Some(v) = getf("mlmc.b") {
+            cfg.mlmc.b = v;
+        }
+        if let Some(v) = getf("mlmc.c") {
+            cfg.mlmc.c = v;
+        }
+        if let Some(v) = getf("mlmc.d") {
+            cfg.mlmc.d = v;
+        }
+        if let Some(v) = getu("mlmc.n_effective") {
+            cfg.mlmc.n_effective = v;
+        }
+
+        // [train]
+        if let Some(v) = getu("train.steps") {
+            cfg.train.steps = v;
+        }
+        if let Some(v) = getf("train.lr") {
+            cfg.train.lr = v;
+        }
+        if let Some(s) = gets("train.optimizer") {
+            cfg.train.optimizer = s.to_string();
+        }
+        if let Some(v) = getu("train.eval_every") {
+            cfg.train.eval_every = v;
+        }
+        if let Some(v) = getu("train.eval_chunks") {
+            cfg.train.eval_chunks = v;
+        }
+        if let Some(v) = getu("train.n_seeds") {
+            cfg.train.n_seeds = v;
+        }
+        if let Some(v) = getf("train.clip_norm") {
+            cfg.train.clip_norm = v;
+        }
+        if let Some(v) = getu("train.dmlmc_warmup") {
+            cfg.train.dmlmc_warmup = v;
+        }
+
+        // [runtime]
+        if let Some(s) = gets("runtime.backend") {
+            cfg.runtime.backend = Backend::parse(s)
+                .ok_or_else(|| TomlError(format!("unknown backend `{s}`")))?;
+        }
+        if let Some(s) = gets("runtime.artifacts_dir") {
+            cfg.runtime.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = gets("runtime.out_dir") {
+            cfg.runtime.out_dir = PathBuf::from(s);
+        }
+
+        cfg.validate().map_err(TomlError)?;
+        Ok(cfg)
+    }
+
+    /// Sanity constraints (paper requirements and practical limits).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mlmc.b <= self.mlmc.c {
+            return Err(format!(
+                "Assumption 2 requires b > c (got b = {}, c = {})",
+                self.mlmc.b, self.mlmc.c
+            ));
+        }
+        if self.train.lr <= 0.0 {
+            return Err("learning rate must be positive".into());
+        }
+        if self.train.steps == 0 || self.train.eval_every == 0 {
+            return Err("steps and eval_every must be positive".into());
+        }
+        if self.problem.n0 == 0 || self.problem.n0 % 2 != 0 {
+            return Err("n0 must be a positive even number".into());
+        }
+        if self.mlmc.n_effective == 0 {
+            return Err("n_effective must be positive".into());
+        }
+        if self.train.clip_norm < 0.0 {
+            return Err("clip_norm must be non-negative (0 disables)".into());
+        }
+        Ok(())
+    }
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "problem.mu",
+    "problem.sigma",
+    "problem.strike",
+    "problem.s0",
+    "problem.maturity",
+    "problem.n0",
+    "problem.lmax",
+    "problem.drift",
+    "mlmc.b",
+    "mlmc.c",
+    "mlmc.d",
+    "mlmc.n_effective",
+    "train.steps",
+    "train.lr",
+    "train.optimizer",
+    "train.eval_every",
+    "train.eval_chunks",
+    "train.n_seeds",
+    "train.clip_norm",
+    "train.dmlmc_warmup",
+    "runtime.backend",
+    "runtime.artifacts_dir",
+    "runtime.out_dir",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let cfg = ExperimentConfig::default_paper();
+        assert_eq!(cfg.mlmc.b, 1.8);
+        assert_eq!(cfg.mlmc.c, 1.0);
+        assert_eq!(cfg.mlmc.d, 1.0);
+        assert_eq!(cfg.problem.lmax, 6);
+        assert_eq!(cfg.problem.strike, 3.0);
+        assert_eq!(cfg.train.n_seeds, 10);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+[mlmc]
+d = 1.5
+n_effective = 256
+
+[train]
+steps = 50
+lr = 0.01
+
+[runtime]
+backend = "native"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mlmc.d, 1.5);
+        assert_eq!(cfg.mlmc.n_effective, 256);
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.runtime.backend, Backend::Native);
+        // untouched defaults survive
+        assert_eq!(cfg.mlmc.b, 1.8);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = ExperimentConfig::from_toml("[train]\nstepz = 10").unwrap_err();
+        assert!(e.0.contains("stepz"));
+    }
+
+    #[test]
+    fn validation_rules() {
+        assert!(ExperimentConfig::from_toml("[mlmc]\nb = 0.5").is_err()); // b <= c
+        assert!(ExperimentConfig::from_toml("[train]\nlr = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[train]\nsteps = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[problem]\nn0 = 3").is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("xla"), Some(Backend::Xla));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("tpu"), None);
+        assert_eq!(Backend::Xla.name(), "xla");
+    }
+}

@@ -1,0 +1,163 @@
+//! Per-level gradient-component cache — the "recycling" half of
+//! Algorithm 1.
+//!
+//! Stores the most recent `∇Δ_l F̂_MLMC(x_{τ_l}, ξ_{τ_l,l})` per level and
+//! assembles the delayed estimator `∇F̂_DMLMC = Σ_l ∇Δ_l F̂^{(τ_l)}` on
+//! demand. Tracks refresh steps so staleness is auditable.
+
+/// One cached level component.
+#[derive(Debug, Clone)]
+struct Slot {
+    loss_delta: f64,
+    grad: Vec<f32>,
+    /// Step at which this component was computed (τ_l).
+    refreshed_at: u64,
+}
+
+/// Cache of the `lmax + 1` level components.
+#[derive(Debug, Clone)]
+pub struct GradientCache {
+    dim: usize,
+    slots: Vec<Option<Slot>>,
+}
+
+impl GradientCache {
+    pub fn new(lmax: usize, dim: usize) -> Self {
+        GradientCache {
+            dim,
+            slots: vec![None; lmax + 1],
+        }
+    }
+
+    pub fn lmax(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    /// Install a freshly computed component for `level`.
+    pub fn update(&mut self, level: usize, step: u64, loss_delta: f64, grad: Vec<f32>) {
+        assert_eq!(grad.len(), self.dim, "gradient dim mismatch");
+        if let Some(prev) = &self.slots[level] {
+            assert!(
+                step >= prev.refreshed_at,
+                "refresh steps must be monotone per level"
+            );
+        }
+        self.slots[level] = Some(Slot {
+            loss_delta,
+            grad,
+            refreshed_at: step,
+        });
+    }
+
+    /// Is every level populated (true after the first step, which
+    /// refreshes everything since `t = 0 ≡ 0` mod every period)?
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    /// Steps since level `level` was refreshed, as of `now`.
+    pub fn staleness(&self, level: usize, now: u64) -> Option<u64> {
+        self.slots[level].as_ref().map(|s| now - s.refreshed_at)
+    }
+
+    /// Refresh step of `level` (τ_l), if populated.
+    pub fn refreshed_at(&self, level: usize) -> Option<u64> {
+        self.slots[level].as_ref().map(|s| s.refreshed_at)
+    }
+
+    /// Assemble the delayed MLMC estimator from the cached components:
+    /// `(Σ_l Δloss_l, Σ_l ∇Δ_l)`. Panics if any level is missing (the
+    /// trainer refreshes all levels at `t = 0` before ever assembling).
+    pub fn assemble(&self) -> (f64, Vec<f32>) {
+        assert!(self.is_complete(), "cache has unpopulated levels");
+        let mut grad = vec![0.0f32; self.dim];
+        let mut loss = 0.0;
+        for slot in self.slots.iter().flatten() {
+            loss += slot.loss_delta;
+            for (g, &s) in grad.iter_mut().zip(&slot.grad) {
+                *g += s;
+            }
+        }
+        (loss, grad)
+    }
+
+    /// Max staleness across levels (diagnostics / metrics).
+    pub fn max_staleness(&self, now: u64) -> u64 {
+        (0..=self.lmax())
+            .filter_map(|l| self.staleness(l, now))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(lmax: usize, dim: usize) -> GradientCache {
+        let mut c = GradientCache::new(lmax, dim);
+        for l in 0..=lmax {
+            c.update(l, 0, 1.0, vec![l as f32; dim]);
+        }
+        c
+    }
+
+    #[test]
+    fn assemble_sums_components() {
+        let c = filled(2, 3);
+        let (loss, grad) = c.assemble();
+        assert_eq!(loss, 3.0);
+        assert_eq!(grad, vec![3.0, 3.0, 3.0]); // 0 + 1 + 2
+    }
+
+    #[test]
+    fn staleness_tracks_refresh() {
+        let mut c = filled(2, 1);
+        c.update(1, 4, 0.0, vec![0.0]);
+        assert_eq!(c.staleness(0, 6), Some(6));
+        assert_eq!(c.staleness(1, 6), Some(2));
+        assert_eq!(c.max_staleness(6), 6);
+        assert_eq!(c.refreshed_at(1), Some(4));
+    }
+
+    #[test]
+    fn incomplete_cache_reports() {
+        let mut c = GradientCache::new(3, 2);
+        assert!(!c.is_complete());
+        assert_eq!(c.staleness(0, 5), None);
+        for l in 0..=3 {
+            c.update(l, 0, 0.0, vec![0.0, 0.0]);
+        }
+        assert!(c.is_complete());
+    }
+
+    #[test]
+    #[should_panic(expected = "unpopulated")]
+    fn assemble_incomplete_panics() {
+        GradientCache::new(1, 1).assemble();
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_refresh_panics() {
+        let mut c = filled(1, 1);
+        c.update(0, 5, 0.0, vec![0.0]);
+        c.update(0, 3, 0.0, vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn wrong_dim_panics() {
+        let mut c = GradientCache::new(1, 2);
+        c.update(0, 0, 0.0, vec![0.0]);
+    }
+
+    #[test]
+    fn update_replaces_component() {
+        let mut c = filled(1, 2);
+        c.update(0, 7, -2.0, vec![10.0, 10.0]);
+        let (loss, grad) = c.assemble();
+        assert_eq!(loss, -1.0); // -2 + 1
+        assert_eq!(grad, vec![11.0, 11.0]);
+    }
+}

@@ -1,0 +1,61 @@
+//! The three optimization methods compared in the paper (Table 1, Fig 2).
+
+/// Gradient-estimation strategy for the SGD loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// `∇F̂_naive`: average of N finest-grid samples per step.
+    Naive,
+    /// `∇F̂_MLMC`: all level components refreshed every step (paper §2).
+    Mlmc,
+    /// `∇F̂_DMLMC`: level `l` refreshed every `⌊2^{dl}⌋` steps, cached
+    /// otherwise (paper §3, Algorithm 1 — the contribution).
+    Dmlmc,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "naive" => Some(Method::Naive),
+            "mlmc" => Some(Method::Mlmc),
+            "dmlmc" | "delayed" => Some(Method::Dmlmc),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Naive => "naive",
+            Method::Mlmc => "mlmc",
+            Method::Dmlmc => "dmlmc",
+        }
+    }
+
+    pub fn all() -> [Method; 3] {
+        [Method::Naive, Method::Mlmc, Method::Dmlmc]
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("delayed"), Some(Method::Dmlmc));
+        assert_eq!(Method::parse("sgd"), None);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(format!("{}", Method::Dmlmc), "dmlmc");
+    }
+}

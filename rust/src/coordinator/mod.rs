@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's contribution (Algorithm 1).
+//!
+//! SGD where the level-`l` coupled gradient component is *refreshed* only
+//! every `⌊2^{dl}⌋` steps ([`scheduler::DelayedSchedule`]) and otherwise
+//! reused from [`cache::GradientCache`]; refreshes for the due levels are
+//! independent jobs ([`dispatcher`]) whose parallel cost is accounted as
+//! the max depth over the concurrently running levels
+//! ([`crate::parallel::cost`]). [`trainer::Trainer`] ties it together and
+//! also implements the two baselines (naive SGD, standard MLMC SGD).
+
+pub mod cache;
+pub mod dispatcher;
+pub mod method;
+pub mod scheduler;
+pub mod trainer;
+
+pub use cache::GradientCache;
+pub use dispatcher::{run_jobs, run_jobs_threaded, LevelJobSpec, LevelResult};
+pub use method::Method;
+pub use scheduler::DelayedSchedule;
+pub use trainer::Trainer;

@@ -1,0 +1,143 @@
+//! The delayed-refresh schedule of Algorithm 1.
+//!
+//! Level `l` is refreshed at step `t` iff `t ≡ 0 (mod ⌊2^{dl}⌋)`; between
+//! refreshes the cached component from `τ_l(t) = t - (t mod ⌊2^{dl}⌋)` is
+//! reused. `d` is the delay exponent (paper: `d = 1`, matched to the
+//! smoothness decay of Assumption 3). `d = 0` degenerates to standard
+//! MLMC (every level refreshed every step).
+
+/// Refresh schedule for levels `0..=lmax`.
+#[derive(Debug, Clone)]
+pub struct DelayedSchedule {
+    periods: Vec<u64>,
+    pub d: f64,
+}
+
+impl DelayedSchedule {
+    pub fn new(lmax: usize, d: f64) -> Self {
+        assert!(d >= 0.0, "delay exponent must be non-negative");
+        let periods = (0..=lmax)
+            .map(|l| (2f64.powf(d * l as f64).floor() as u64).max(1))
+            .collect();
+        DelayedSchedule { periods, d }
+    }
+
+    /// Standard MLMC: refresh everything every step.
+    pub fn every_step(lmax: usize) -> Self {
+        DelayedSchedule::new(lmax, 0.0)
+    }
+
+    pub fn lmax(&self) -> usize {
+        self.periods.len() - 1
+    }
+
+    /// `⌊2^{dl}⌋` (clamped to >= 1).
+    pub fn period(&self, level: usize) -> u64 {
+        self.periods[level]
+    }
+
+    /// Does step `t` refresh level `level`?
+    pub fn is_due(&self, t: u64, level: usize) -> bool {
+        t % self.period(level) == 0
+    }
+
+    /// The most recent refresh step `τ_l(t) <= t`.
+    pub fn tau(&self, t: u64, level: usize) -> u64 {
+        t - t % self.period(level)
+    }
+
+    /// All levels due at step `t` (level 0 is always due).
+    pub fn levels_due(&self, t: u64) -> Vec<usize> {
+        (0..=self.lmax()).filter(|&l| self.is_due(t, l)).collect()
+    }
+
+    /// Average number of refreshes of level `l` per step over a horizon —
+    /// the `2^{-dl}` factor in the paper's average parallel complexity.
+    pub fn refresh_rate(&self, level: usize) -> f64 {
+        1.0 / self.period(level) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_periods_d1() {
+        let s = DelayedSchedule::new(6, 1.0);
+        for l in 0..=6 {
+            assert_eq!(s.period(l), 1u64 << l);
+        }
+    }
+
+    #[test]
+    fn fractional_d_floors() {
+        let s = DelayedSchedule::new(4, 0.5);
+        // floor(2^{0.5 l}) = 1, 1, 2, 2, 4
+        assert_eq!(
+            (0..=4).map(|l| s.period(l)).collect::<Vec<_>>(),
+            vec![1, 1, 2, 2, 4]
+        );
+    }
+
+    #[test]
+    fn d_zero_is_standard_mlmc() {
+        let s = DelayedSchedule::every_step(6);
+        for t in 0..100 {
+            assert_eq!(s.levels_due(t).len(), 7);
+        }
+    }
+
+    #[test]
+    fn level0_always_due() {
+        let s = DelayedSchedule::new(6, 1.3);
+        for t in 0..1000 {
+            assert!(s.is_due(t, 0));
+        }
+    }
+
+    #[test]
+    fn tau_properties() {
+        let s = DelayedSchedule::new(6, 1.0);
+        for t in 0..500u64 {
+            for l in 0..=6 {
+                let tau = s.tau(t, l);
+                let p = s.period(l);
+                assert!(tau <= t);
+                assert!(t - tau < p, "staleness must be < period");
+                assert_eq!(tau % p, 0, "tau must be a refresh step");
+                // Paper's bound: t - floor(2^{dl}) <= tau <= t
+                assert!(t.saturating_sub(p) <= tau);
+            }
+        }
+    }
+
+    #[test]
+    fn due_iff_tau_equals_t() {
+        let s = DelayedSchedule::new(5, 1.0);
+        for t in 0..200u64 {
+            for l in 0..=5 {
+                assert_eq!(s.is_due(t, l), s.tau(t, l) == t);
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_rate_matches_period() {
+        let s = DelayedSchedule::new(6, 1.0);
+        assert_eq!(s.refresh_rate(0), 1.0);
+        assert_eq!(s.refresh_rate(6), 1.0 / 64.0);
+    }
+
+    #[test]
+    fn average_due_count_matches_theory() {
+        // Over a long horizon, the average number of due levels per step
+        // is sum_l 2^{-dl}.
+        let s = DelayedSchedule::new(6, 1.0);
+        let horizon = 1u64 << 12;
+        let total: usize = (0..horizon).map(|t| s.levels_due(t).len()).sum();
+        let avg = total as f64 / horizon as f64;
+        let theory: f64 = (0..=6).map(|l| 0.5f64.powi(l)).sum();
+        assert!((avg - theory).abs() < 0.01, "avg {avg} vs theory {theory}");
+    }
+}

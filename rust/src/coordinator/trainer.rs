@@ -1,0 +1,486 @@
+//! The SGD training loop for all three methods (Algorithm 1 + baselines).
+//!
+//! Per step:
+//! 1. determine the due level jobs (method-dependent),
+//! 2. dispatch them (fresh Brownian streams addressed by step/level/chunk),
+//! 3. update the gradient cache (DMLMC) or assemble directly,
+//! 4. account standard/parallel cost (work = sum, depth = max),
+//! 5. optimizer update,
+//! 6. on the eval cadence, measure the held-out loss F_lmax on a FIXED
+//!    evaluation set (same across steps, methods and seeds — the
+//!    learning-curve y-axis of Figure 2).
+
+use anyhow::{anyhow, Result};
+
+use super::cache::GradientCache;
+use super::dispatcher::{run_jobs, LevelJobSpec, LevelResult};
+use super::method::Method;
+use super::scheduler::DelayedSchedule;
+use crate::config::{Backend, ExperimentConfig};
+use crate::engine;
+use crate::metrics::{CurvePoint, LearningCurve};
+use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
+use crate::mlmc::LevelAllocation;
+use crate::optim::{self, Optimizer};
+use crate::parallel::{CostModel, StepCost};
+use crate::rng::{brownian::Purpose, BrownianSource};
+use crate::runtime::{GradBackend, NativeBackend, XlaRuntime};
+
+/// One training run: a method, a seed, a backend, a config.
+pub struct Trainer {
+    pub cfg: ExperimentConfig,
+    pub method: Method,
+    pub seed: u64,
+    backend: Box<dyn GradBackend>,
+    schedule: DelayedSchedule,
+    cache: GradientCache,
+    /// Chunks (not samples) to run per level refresh.
+    chunks_per_level: Vec<usize>,
+    /// Chunks per naive refresh.
+    naive_chunks: usize,
+    optimizer: Box<dyn Optimizer>,
+    src: BrownianSource,
+    cost_model: CostModel,
+    pub params: Vec<f32>,
+    cumulative: StepCost,
+    steps_done: u64,
+}
+
+impl Trainer {
+    /// Build with an explicit backend (dependency injection for tests).
+    pub fn new(
+        cfg: &ExperimentConfig,
+        method: Method,
+        seed: u64,
+        backend: Box<dyn GradBackend>,
+    ) -> Result<Trainer> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let problem = *backend.problem();
+        let lmax = problem.lmax;
+
+        // Per-level sample allocation, rounded up to backend chunk sizes.
+        let alloc = LevelAllocation::paper(lmax, cfg.mlmc.n_effective, cfg.mlmc.b, cfg.mlmc.c);
+        let chunk_sizes: Vec<usize> = (0..=lmax).map(|l| backend.grad_chunk(l)).collect();
+        let rounded = alloc.round_to_chunks(&chunk_sizes);
+        let chunks_per_level: Vec<usize> = (0..=lmax)
+            .map(|l| rounded.n(l) / chunk_sizes[l])
+            .collect();
+        let naive_chunks =
+            cfg.mlmc.n_effective.div_ceil(backend.naive_chunk()).max(1);
+
+        let schedule = match method {
+            Method::Dmlmc => DelayedSchedule::new(lmax, cfg.mlmc.d),
+            _ => DelayedSchedule::every_step(lmax),
+        };
+        let optimizer = optim::by_name(&cfg.train.optimizer, cfg.train.lr)
+            .ok_or_else(|| anyhow!("unknown optimizer `{}`", cfg.train.optimizer))?;
+        let params = engine::mlp::init_params(seed);
+        let n_params = backend.n_params();
+        anyhow::ensure!(
+            params.len() == n_params,
+            "backend n_params {n_params} != engine {}",
+            params.len()
+        );
+
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            method,
+            seed,
+            cache: GradientCache::new(lmax, n_params),
+            chunks_per_level,
+            naive_chunks,
+            schedule,
+            optimizer,
+            src: BrownianSource::new(seed),
+            cost_model: CostModel::new(cfg.mlmc.c),
+            backend,
+            params,
+            cumulative: StepCost::default(),
+            steps_done: 0,
+        })
+    }
+
+    /// Build the backend from the config (`xla` loads artifacts,
+    /// `native` runs the pure-rust engine).
+    pub fn from_config(cfg: &ExperimentConfig, method: Method, seed: u64) -> Result<Trainer> {
+        let backend: Box<dyn GradBackend> = match cfg.runtime.backend {
+            Backend::Native => Box::new(NativeBackend::new(cfg.problem)),
+            Backend::Xla => {
+                let rt = XlaRuntime::load(&cfg.runtime.artifacts_dir)?;
+                anyhow::ensure!(
+                    rt.manifest().problem == cfg.problem,
+                    "artifacts were lowered for a different problem than the \
+                     config requests; re-run `make artifacts`"
+                );
+                rt.warmup()?;
+                Box::new(rt)
+            }
+        };
+        Trainer::new(cfg, method, seed, backend)
+    }
+
+    /// The level jobs step `t` must run.
+    pub fn jobs_for_step(&self, t: u64) -> Vec<LevelJobSpec> {
+        let all_levels = |tr: &Trainer| -> Vec<LevelJobSpec> {
+            (0..=tr.backend.problem().lmax)
+                .map(|level| LevelJobSpec {
+                    level,
+                    n_chunks: tr.chunks_per_level[level],
+                })
+                .collect()
+        };
+        match self.method {
+            Method::Naive => vec![],
+            Method::Mlmc => all_levels(self),
+            // Warmup: full refresh for the first few steps (see
+            // TrainConfig::dmlmc_warmup), then Algorithm 1's schedule.
+            Method::Dmlmc if t < self.cfg.train.dmlmc_warmup as u64 => all_levels(self),
+            Method::Dmlmc => self
+                .schedule
+                .levels_due(t)
+                .into_iter()
+                .map(|level| LevelJobSpec {
+                    level,
+                    n_chunks: self.chunks_per_level[level],
+                })
+                .collect(),
+        }
+    }
+
+    /// Run one SGD step; returns (step cost, gradient norm).
+    pub fn step(&mut self, t: u64) -> Result<(StepCost, f64)> {
+        let (loss_est, grad, cost) = match self.method {
+            Method::Naive => self.naive_gradient(t)?,
+            Method::Mlmc | Method::Dmlmc => {
+                let jobs = self.jobs_for_step(t);
+                let results = run_jobs(&*self.backend, &self.src, t, &self.params, &jobs)?;
+                let cost_jobs: Vec<(usize, usize)> =
+                    results.iter().map(|r| (r.level, r.n_samples)).collect();
+                let cost = StepCost::from_jobs(&self.cost_model, &cost_jobs);
+                self.install(t, results);
+                let (loss, grad) = self.cache.assemble();
+                (loss, grad, cost)
+            }
+        };
+        let gnorm = grad_norm(&grad);
+        let grad = self.clip(grad, gnorm);
+        self.optimizer.step(&mut self.params, &grad);
+        self.cumulative.add(cost);
+        self.steps_done = t + 1;
+        let _ = loss_est; // estimator value (telescoped); eval uses held-out loss
+        Ok((cost, gnorm))
+    }
+
+    /// Global-norm gradient clipping (no-op when `clip_norm == 0`).
+    fn clip(&self, mut grad: Vec<f32>, norm: f64) -> Vec<f32> {
+        let clip = self.cfg.train.clip_norm;
+        if clip > 0.0 && norm > clip {
+            let scale = (clip / norm) as f32;
+            for g in &mut grad {
+                *g *= scale;
+            }
+        }
+        grad
+    }
+
+    fn install(&mut self, t: u64, results: Vec<LevelResult>) {
+        for r in results {
+            self.cache.update(r.level, t, r.loss_delta, r.grad);
+        }
+    }
+
+    fn naive_gradient(&self, t: u64) -> Result<(f64, Vec<f32>, StepCost)> {
+        let lmax = self.backend.problem().lmax;
+        let batch = self.backend.naive_chunk();
+        let n_steps = self.backend.problem().n_steps(lmax);
+        let dt = self.backend.problem().dt(lmax);
+        let mut acc = ChunkAccumulator::new(self.backend.n_params());
+        for chunk in 0..self.naive_chunks {
+            let dw = self.src.increments(
+                Purpose::Grad,
+                t,
+                lmax as u32,
+                chunk as u32,
+                batch,
+                n_steps,
+                dt,
+            );
+            let (loss, grad) = self.backend.grad_naive_chunk(&self.params, &dw)?;
+            acc.add(loss, &grad);
+        }
+        let (loss, grad) = acc.finish();
+        let n_samples = self.naive_chunks * batch;
+        let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
+        Ok((loss, grad, cost))
+    }
+
+    /// Held-out loss on the FIXED evaluation set (chunk-averaged).
+    pub fn eval_loss(&self) -> Result<f64> {
+        let lmax = self.backend.problem().lmax;
+        let batch = self.backend.eval_chunk();
+        let n_steps = self.backend.problem().n_steps(lmax);
+        let dt = self.backend.problem().dt(lmax);
+        let mut total = 0.0;
+        for chunk in 0..self.cfg.train.eval_chunks.max(1) {
+            // Purpose::Eval + step 0: the same batch at every evaluation.
+            let dw = self.src.increments(
+                Purpose::Eval,
+                0,
+                lmax as u32,
+                chunk as u32,
+                batch,
+                n_steps,
+                dt,
+            );
+            total += self.backend.loss_eval_chunk(&self.params, &dw)?;
+        }
+        Ok(total / self.cfg.train.eval_chunks.max(1) as f64)
+    }
+
+    /// Full training run, recording the learning curve.
+    pub fn run(&mut self) -> Result<LearningCurve> {
+        let mut curve = LearningCurve::new(self.method.name(), self.seed);
+        let loss0 = self.eval_loss()?;
+        curve.push(CurvePoint {
+            step: 0,
+            loss: loss0,
+            std_cost: 0.0,
+            par_cost: 0.0,
+            grad_norm: 0.0,
+        });
+        for t in 0..self.cfg.train.steps as u64 {
+            let (_, gnorm) = self.step(t)?;
+            let next = t + 1;
+            if next % self.cfg.train.eval_every as u64 == 0
+                || next == self.cfg.train.steps as u64
+            {
+                let loss = self.eval_loss()?;
+                curve.push(CurvePoint {
+                    step: next as usize,
+                    loss,
+                    std_cost: self.cumulative.work,
+                    par_cost: self.cumulative.depth,
+                    grad_norm: gnorm,
+                });
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Cumulative cost so far.
+    pub fn cumulative_cost(&self) -> StepCost {
+        self.cumulative
+    }
+
+    /// Read-only access to the backend (diagnostics drivers).
+    pub fn backend(&self) -> &dyn GradBackend {
+        &*self.backend
+    }
+
+    /// Per-level chunk counts (N_l rounded to chunks) — introspection for
+    /// the complexity table and tests.
+    pub fn chunks_per_level(&self) -> &[usize] {
+        &self.chunks_per_level
+    }
+
+    /// The estimator the *next* step would use from the current cache
+    /// (Algorithm 1's `∇F̂_DMLMC` with components at their `τ_l`).
+    /// Only meaningful after at least one step; panics for `Naive`.
+    pub fn assembled_gradient(&self) -> (f64, Vec<f32>) {
+        assert!(
+            self.method != Method::Naive,
+            "naive SGD keeps no gradient cache"
+        );
+        self.cache.assemble()
+    }
+
+    /// Compute a *fresh* full-MLMC gradient at the current parameters
+    /// (all levels resampled with the given stream seed) — the unbiased
+    /// reference the delayed estimator is compared against in the
+    /// ablation bench.
+    pub fn fresh_mlmc_gradient(&self, stream_seed: u64) -> Result<(f64, Vec<f32>)> {
+        let lmax = self.backend.problem().lmax;
+        let jobs: Vec<LevelJobSpec> = (0..=lmax)
+            .map(|level| LevelJobSpec {
+                level,
+                n_chunks: self.chunks_per_level[level],
+            })
+            .collect();
+        let src = BrownianSource::new(stream_seed);
+        let results = run_jobs(&*self.backend, &src, u64::MAX - 1, &self.params, &jobs)?;
+        let mut grad = vec![0.0f32; self.backend.n_params()];
+        let mut loss = 0.0;
+        for r in results {
+            loss += r.loss_delta;
+            for (a, &g) in grad.iter_mut().zip(&r.grad) {
+                *a += g;
+            }
+        }
+        Ok((loss, grad))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn smoke_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.train.steps = 8;
+        cfg.train.eval_every = 4;
+        cfg.mlmc.n_effective = 64;
+        cfg
+    }
+
+    fn trainer(method: Method) -> Trainer {
+        Trainer::from_config(&smoke_cfg(), method, 0).unwrap()
+    }
+
+    #[test]
+    fn dmlmc_jobs_follow_schedule_after_warmup() {
+        let mut cfg = smoke_cfg();
+        cfg.train.dmlmc_warmup = 0;
+        let tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        let lmax = tr.cfg.problem.lmax;
+        // t = 0: every level due.
+        assert_eq!(tr.jobs_for_step(0).len(), lmax + 1);
+        // t = 1: only level 0.
+        let j1 = tr.jobs_for_step(1);
+        assert_eq!(j1.len(), 1);
+        assert_eq!(j1[0].level, 0);
+        // t = 2: levels 0 and 1.
+        let j2: Vec<usize> = tr.jobs_for_step(2).iter().map(|j| j.level).collect();
+        assert_eq!(j2, vec![0, 1]);
+    }
+
+    #[test]
+    fn dmlmc_warmup_refreshes_everything() {
+        let mut cfg = smoke_cfg();
+        cfg.train.dmlmc_warmup = 4;
+        let tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        let lmax = tr.cfg.problem.lmax;
+        for t in 0..4 {
+            assert_eq!(tr.jobs_for_step(t).len(), lmax + 1, "warmup step {t}");
+        }
+        // first post-warmup step follows the schedule again
+        assert!(tr.jobs_for_step(5).len() < lmax + 1);
+    }
+
+    #[test]
+    fn mlmc_refreshes_all_levels_every_step() {
+        let tr = trainer(Method::Mlmc);
+        for t in 0..5 {
+            assert_eq!(tr.jobs_for_step(t).len(), tr.cfg.problem.lmax + 1);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut cfg = smoke_cfg();
+        cfg.train.steps = 30;
+        cfg.train.eval_every = 30;
+        cfg.train.lr = 0.1;
+        let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        let curve = tr.run().unwrap();
+        let first = curve.points.first().unwrap().loss;
+        let last = curve.points.last().unwrap().loss;
+        assert!(
+            last < first,
+            "loss should decrease: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn dmlmc_parallel_cost_below_mlmc() {
+        let mut a = trainer(Method::Mlmc);
+        let mut b = trainer(Method::Dmlmc);
+        for t in 0..8 {
+            a.step(t).unwrap();
+            b.step(t).unwrap();
+        }
+        let ca = a.cumulative_cost();
+        let cb = b.cumulative_cost();
+        assert!(
+            cb.depth < ca.depth,
+            "dmlmc depth {} !< mlmc depth {}",
+            cb.depth,
+            ca.depth
+        );
+        // standard complexity of dmlmc is also <= mlmc (skipped levels)
+        assert!(cb.work <= ca.work);
+    }
+
+    #[test]
+    fn naive_parallel_cost_equals_mlmc_depth_per_step() {
+        let mut a = trainer(Method::Naive);
+        let mut b = trainer(Method::Mlmc);
+        let (ca, _) = a.step(0).unwrap();
+        let (cb, _) = b.step(0).unwrap();
+        assert_eq!(ca.depth, cb.depth); // both 2^{c lmax}
+        assert!(ca.work > cb.work); // naive does N samples at lmax
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut tr = Trainer::from_config(&smoke_cfg(), Method::Dmlmc, seed).unwrap();
+            tr.run().unwrap()
+        };
+        let a = run(3);
+        let b = run(3);
+        let c = run(4);
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.loss, pb.loss);
+        }
+        assert!(a
+            .points
+            .iter()
+            .zip(&c.points)
+            .any(|(pa, pc)| pa.loss != pc.loss));
+    }
+
+    #[test]
+    fn curve_grid_is_method_independent() {
+        // Figure-2 aggregation relies on a common eval grid.
+        let a = trainer(Method::Naive);
+        let b = trainer(Method::Dmlmc);
+        assert_eq!(a.cfg.train.eval_every, b.cfg.train.eval_every);
+        let mut ta = trainer(Method::Mlmc);
+        let curve = ta.run().unwrap();
+        let steps: Vec<usize> = curve.points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn grad_clipping_bounds_update_norm() {
+        let mut cfg = smoke_cfg();
+        cfg.train.clip_norm = 0.01; // absurdly tight: every step clips
+        cfg.train.lr = 0.1;
+        let mut tr = Trainer::from_config(&cfg, Method::Mlmc, 0).unwrap();
+        let before = tr.params.clone();
+        tr.step(0).unwrap();
+        let delta: f64 = tr
+            .params
+            .iter()
+            .zip(&before)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        // ||update|| <= lr * clip (plus f32 slack)
+        assert!(delta <= 0.1 * 0.01 * 1.01, "update norm {delta}");
+    }
+
+    #[test]
+    fn allocation_covers_effective_batch() {
+        let tr = trainer(Method::Mlmc);
+        let total: usize = tr
+            .chunks_per_level()
+            .iter()
+            .enumerate()
+            .map(|(l, &ch)| ch * tr.backend().grad_chunk(l))
+            .sum();
+        assert!(total >= tr.cfg.mlmc.n_effective);
+    }
+}

@@ -1,0 +1,141 @@
+//! Milstein SDE integrator — Rust mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/milstein.py`) and its jnp oracle.
+//!
+//! Scheme for `dS = a(S) dt + sigma S dB` (strong order 1):
+//!
+//! `S+ = S + a(S) dt + sigma S dW + 1/2 sigma^2 S (dW^2 - dt)`
+//!
+//! computed in f32 with the same operation order as the kernel so the
+//! cross-check tests can use tight tolerances.
+
+use crate::hedging::{Drift, Problem};
+
+/// Simulate `batch` paths over `n_steps` from row-major increments
+/// `dw[batch, n_steps]`; returns row-major `s[batch, n_steps + 1]`
+/// (including `S_0`).
+pub fn simulate_paths(
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> Vec<f32> {
+    assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
+    let dt = (problem.maturity / n_steps as f64) as f32;
+    let mu = problem.mu as f32;
+    let sigma = problem.sigma as f32;
+    let half_s2 = 0.5 * sigma * sigma;
+    let geometric = problem.drift == Drift::Geometric;
+    let mut out = vec![0.0f32; batch * (n_steps + 1)];
+    for b in 0..batch {
+        let row_dw = &dw[b * n_steps..(b + 1) * n_steps];
+        let row_s = &mut out[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
+        let mut s = problem.s0 as f32;
+        row_s[0] = s;
+        for (t, &dwt) in row_dw.iter().enumerate() {
+            let drift = if geometric { mu * s } else { mu };
+            s = s + drift * dt + sigma * s * dwt + half_s2 * s * (dwt * dwt - dt);
+            row_s[t + 1] = s;
+        }
+    }
+    out
+}
+
+/// Terminal values only (convenience for diagnostics/cross-checks).
+pub fn terminal_values(
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> Vec<f32> {
+    let s = simulate_paths(dw, batch, n_steps, problem);
+    (0..batch).map(|b| s[b * (n_steps + 1) + n_steps]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{brownian::Purpose, BrownianSource};
+
+    fn problem() -> Problem {
+        Problem::default()
+    }
+
+    #[test]
+    fn initial_value_and_shape() {
+        let p = problem();
+        let dw = vec![0.1f32; 3 * 4];
+        let s = simulate_paths(&dw, 3, 4, &p);
+        assert_eq!(s.len(), 3 * 5);
+        for b in 0..3 {
+            assert_eq!(s[b * 5], p.s0 as f32);
+        }
+    }
+
+    #[test]
+    fn zero_noise_recurrence() {
+        // dW = 0: S+ = S + mu dt - 1/2 sigma^2 S dt (additive drift).
+        let p = problem();
+        let n = 8;
+        let dw = vec![0.0f32; n];
+        let s = simulate_paths(&dw, 1, n, &p);
+        let dt = (p.maturity / n as f64) as f32;
+        let mut want = p.s0 as f32;
+        for t in 0..n {
+            want = want + p.mu as f32 * dt
+                - 0.5 * (p.sigma as f32).powi(2) * want * dt;
+            assert!((s[t + 1] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn geometric_zero_noise() {
+        let p = Problem {
+            drift: Drift::Geometric,
+            ..problem()
+        };
+        let n = 4;
+        let s = simulate_paths(&vec![0.0; n], 1, n, &p);
+        let dt = (p.maturity / n as f64) as f32;
+        let mut want = p.s0 as f32;
+        for t in 0..n {
+            want = want + p.mu as f32 * want * dt
+                - 0.5 * (p.sigma as f32).powi(2) * want * dt;
+            assert!((s[t + 1] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn strong_convergence_of_coupling() {
+        // MSE between fine and coarse terminal values must shrink ~4x per
+        // level for a strong-order-1 scheme (Assumption 2 with b ~ 2).
+        let p = problem();
+        let src = BrownianSource::new(99);
+        let batch = 2000;
+        let mut errs = Vec::new();
+        for level in 1..=5usize {
+            let n = p.n_steps(level);
+            let dw = src.increments(
+                Purpose::Diagnostic, 0, level as u32, 0, batch, n, p.dt(level),
+            );
+            let fine = terminal_values(&dw, batch, n, &p);
+            let dwc = BrownianSource::coarsen(&dw, batch, n);
+            let coarse = terminal_values(&dwc, batch, n / 2, &p);
+            let mse = fine
+                .iter()
+                .zip(&coarse)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / batch as f64;
+            errs.push(mse);
+        }
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0] * 0.6, "errors not decaying: {errs:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        simulate_paths(&[0.0; 7], 2, 4, &problem());
+    }
+}

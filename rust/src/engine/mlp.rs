@@ -1,0 +1,346 @@
+//! The hedging-strategy MLP (2 -> 32 -> 32 -> 1, SiLU/SiLU/sigmoid) with a
+//! hand-written backward pass — Rust mirror of the L1 Pallas kernels in
+//! `python/compile/kernels/mlp.py`.
+//!
+//! The trainable state is ONE flat `f32` vector with the same layout as
+//! the python side (`problem.MlpArch.sizes`):
+//!
+//! `[ w1(2x32) | b1(32) | w2(32x32) | b2(32) | w3(32x1) | b3(1) | p0(1) ]`
+//!
+//! so parameter buffers can be passed to either backend unchanged.
+
+pub const N_IN: usize = 2;
+pub const HIDDEN: usize = 32;
+
+pub const OFF_W1: usize = 0;
+pub const OFF_B1: usize = OFF_W1 + N_IN * HIDDEN;
+pub const OFF_W2: usize = OFF_B1 + HIDDEN;
+pub const OFF_B2: usize = OFF_W2 + HIDDEN * HIDDEN;
+pub const OFF_W3: usize = OFF_B2 + HIDDEN;
+pub const OFF_B3: usize = OFF_W3 + HIDDEN;
+pub const OFF_P0: usize = OFF_B3 + 1;
+pub const N_PARAMS: usize = OFF_P0 + 1;
+
+/// Typed view over the flat parameter vector.
+#[derive(Debug, Clone, Copy)]
+pub struct MlpParams<'a> {
+    flat: &'a [f32],
+}
+
+impl<'a> MlpParams<'a> {
+    pub fn new(flat: &'a [f32]) -> Self {
+        assert_eq!(flat.len(), N_PARAMS, "param vector must be {N_PARAMS} long");
+        MlpParams { flat }
+    }
+
+    /// `w1[i][j]`, i in 0..N_IN, j in 0..HIDDEN (row-major, like jnp).
+    #[inline]
+    pub fn w1(&self, i: usize, j: usize) -> f32 {
+        self.flat[OFF_W1 + i * HIDDEN + j]
+    }
+
+    #[inline]
+    pub fn b1(&self, j: usize) -> f32 {
+        self.flat[OFF_B1 + j]
+    }
+
+    #[inline]
+    pub fn w2(&self, i: usize, j: usize) -> f32 {
+        self.flat[OFF_W2 + i * HIDDEN + j]
+    }
+
+    #[inline]
+    pub fn b2(&self, j: usize) -> f32 {
+        self.flat[OFF_B2 + j]
+    }
+
+    #[inline]
+    pub fn w3(&self, i: usize) -> f32 {
+        self.flat[OFF_W3 + i]
+    }
+
+    #[inline]
+    pub fn b3(&self) -> f32 {
+        self.flat[OFF_B3]
+    }
+
+    #[inline]
+    pub fn p0(&self) -> f32 {
+        self.flat[OFF_P0]
+    }
+
+    /// Contiguous row `w1[i][0..HIDDEN]` (SIMD-friendly accessor).
+    #[inline]
+    pub fn w1_row(&self, i: usize) -> &[f32] {
+        &self.flat[OFF_W1 + i * HIDDEN..OFF_W1 + (i + 1) * HIDDEN]
+    }
+
+    /// Contiguous row `w2[j][0..HIDDEN]` (SIMD-friendly accessor).
+    #[inline]
+    pub fn w2_row(&self, j: usize) -> &[f32] {
+        &self.flat[OFF_W2 + j * HIDDEN..OFF_W2 + (j + 1) * HIDDEN]
+    }
+
+    /// Contiguous `w3[0..HIDDEN]`.
+    #[inline]
+    pub fn w3_col(&self) -> &[f32] {
+        &self.flat[OFF_W3..OFF_W3 + HIDDEN]
+    }
+
+    /// Contiguous `b1`/`b2` rows.
+    #[inline]
+    pub fn b1_row(&self) -> &[f32] {
+        &self.flat[OFF_B1..OFF_B1 + HIDDEN]
+    }
+
+    #[inline]
+    pub fn b2_row(&self) -> &[f32] {
+        &self.flat[OFF_B2..OFF_B2 + HIDDEN]
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d/dx silu(x) = sig(x) (1 + x (1 - sig(x))).
+#[inline]
+fn dsilu(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Saved forward state for one row (pre-activations), fed to `backward_row`.
+#[derive(Debug, Clone)]
+pub struct RowTape {
+    pub x: [f32; N_IN],
+    pub z1: [f32; HIDDEN],
+    pub z2: [f32; HIDDEN],
+    pub z3: f32,
+}
+
+/// Forward one feature row, returning the holding H in [0,1] + the tape.
+///
+/// Loop structure is deliberately SIMD-friendly: every inner loop walks a
+/// *contiguous* weight row with a broadcast scalar, so LLVM auto-
+/// vectorizes the 32-wide fused multiply-adds (measured ~1.5x over the
+/// naive k-outer/j-inner order — EXPERIMENTS.md §Perf).
+#[inline]
+pub fn forward_row(p: &MlpParams, x: [f32; N_IN]) -> (f32, RowTape) {
+    let mut z1 = [0.0f32; HIDDEN];
+    let (w1_0, w1_1, b1) = (p.w1_row(0), p.w1_row(1), p.b1_row());
+    for j in 0..HIDDEN {
+        // N_IN = 2: unrolled dot product over contiguous rows.
+        z1[j] = x[0] * w1_0[j] + x[1] * w1_1[j] + b1[j];
+    }
+    let mut h1 = [0.0f32; HIDDEN];
+    for j in 0..HIDDEN {
+        h1[j] = silu(z1[j]);
+    }
+    // z2 = b2 + h1 @ w2: accumulate one broadcast h1[j] times the
+    // contiguous row w2[j][*] at a time.
+    let mut z2 = [0.0f32; HIDDEN];
+    z2.copy_from_slice(p.b2_row());
+    for j in 0..HIDDEN {
+        let h1j = h1[j];
+        let row = p.w2_row(j);
+        for k in 0..HIDDEN {
+            z2[k] += h1j * row[k];
+        }
+    }
+    let mut z3 = p.b3();
+    let w3 = p.w3_col();
+    for k in 0..HIDDEN {
+        z3 += silu(z2[k]) * w3[k];
+    }
+    (sigmoid(z3), RowTape { x, z1, z2, z3 })
+}
+
+/// Forward only (no tape) — used by inference-style consumers.
+#[inline]
+pub fn holding(p: &MlpParams, t: f32, s: f32) -> f32 {
+    forward_row(p, [t, s]).0
+}
+
+/// Backpropagate upstream `g = dL/dH` through one row, accumulating the
+/// parameter gradient into `grad` (flat layout, same as params).
+///
+/// Each sigmoid is evaluated once per activation and reused for both the
+/// SiLU value and its derivative (`exp` dominates this kernel —
+/// EXPERIMENTS.md §Perf), and all inner loops walk contiguous rows.
+pub fn backward_row(p: &MlpParams, tape: &RowTape, g: f32, grad: &mut [f32]) {
+    debug_assert_eq!(grad.len(), N_PARAMS);
+    let y = sigmoid(tape.z3);
+    let dz3 = g * y * (1.0 - y);
+
+    // layer 3: h2 = silu(z2), dz2 = w3 * dz3 * dsilu(z2), sharing sigmoid.
+    let w3 = p.w3_col();
+    let mut dz2 = [0.0f32; HIDDEN];
+    for k in 0..HIDDEN {
+        let z = tape.z2[k];
+        let s = sigmoid(z);
+        let h2 = z * s; // silu(z2)
+        let ds = s * (1.0 + z * (1.0 - s)); // dsilu(z2)
+        grad[OFF_W3 + k] += h2 * dz3;
+        dz2[k] = w3[k] * dz3 * ds;
+    }
+    grad[OFF_B3] += dz3;
+
+    // layer 2: h1 once (sigmoid shared with the layer-1 pass below).
+    let mut h1 = [0.0f32; HIDDEN];
+    let mut sig1 = [0.0f32; HIDDEN];
+    for j in 0..HIDDEN {
+        let s = sigmoid(tape.z1[j]);
+        sig1[j] = s;
+        h1[j] = tape.z1[j] * s;
+    }
+    let mut dh1 = [0.0f32; HIDDEN];
+    for j in 0..HIDDEN {
+        let mut acc = 0.0f32;
+        let h1j = h1[j];
+        let w2 = p.w2_row(j);
+        let grow = &mut grad[OFF_W2 + j * HIDDEN..OFF_W2 + (j + 1) * HIDDEN];
+        for k in 0..HIDDEN {
+            grow[k] += h1j * dz2[k];
+            acc += w2[k] * dz2[k];
+        }
+        dh1[j] = acc;
+    }
+    for k in 0..HIDDEN {
+        grad[OFF_B2 + k] += dz2[k];
+    }
+
+    // layer 1 (sigmoid reused from sig1).
+    for j in 0..HIDDEN {
+        let (z, s) = (tape.z1[j], sig1[j]);
+        let dz1 = dh1[j] * s * (1.0 + z * (1.0 - s));
+        grad[OFF_W1 + j] += tape.x[0] * dz1; // w1[0][j]
+        grad[OFF_W1 + HIDDEN + j] += tape.x[1] * dz1; // w1[1][j]
+        grad[OFF_B1 + j] += dz1;
+    }
+}
+
+/// He-style initialisation identical to `python/compile/model.py` in
+/// *layout* (weights ~ N(0, 2/fan_in), biases and p0 zero) but using the
+/// native Philox stream. For bit-identical starts across backends, load
+/// `artifacts/init_params.bin` instead.
+pub fn init_params(seed: u64) -> Vec<f32> {
+    use crate::rng::NormalStream;
+    let mut out = vec![0.0f32; N_PARAMS];
+    let stream = NormalStream::new(seed, 0xDEAD_BEEF);
+    let mut noise = vec![0.0f32; N_IN * HIDDEN + HIDDEN * HIDDEN + HIDDEN];
+    stream.fill(&mut noise);
+    let mut k = 0;
+    let scale1 = (2.0f32 / N_IN as f32).sqrt();
+    for v in &mut out[OFF_W1..OFF_W1 + N_IN * HIDDEN] {
+        *v = noise[k] * scale1;
+        k += 1;
+    }
+    let scale2 = (2.0f32 / HIDDEN as f32).sqrt();
+    for v in &mut out[OFF_W2..OFF_W2 + HIDDEN * HIDDEN] {
+        *v = noise[k] * scale2;
+        k += 1;
+    }
+    for v in &mut out[OFF_W3..OFF_W3 + HIDDEN] {
+        *v = noise[k] * scale2;
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(seed: u64) -> Vec<f32> {
+        init_params(seed)
+    }
+
+    #[test]
+    fn layout_totals() {
+        assert_eq!(N_PARAMS, 2 * 32 + 32 + 32 * 32 + 32 + 32 + 1 + 1);
+        assert_eq!(N_PARAMS, 1186);
+    }
+
+    #[test]
+    fn forward_in_unit_interval() {
+        let p = params(0);
+        let view = MlpParams::new(&p);
+        for i in 0..50 {
+            let h = holding(&view, i as f32 * 0.02, 1.0 + i as f32 * 0.1);
+            assert!((0.0..=1.0).contains(&h), "h = {h}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut p = params(3);
+        let x = [0.4f32, 2.7];
+        // d(sin(H))/dparam via tape, vs central differences.
+        let f = |pv: &[f32]| -> f64 {
+            let (h, _) = forward_row(&MlpParams::new(pv), x);
+            (h as f64).sin()
+        };
+        let (h, tape) = forward_row(&MlpParams::new(&p), x);
+        let g_up = (h as f64).cos() as f32; // d sin(H)/dH
+        let mut grad = vec![0.0f32; N_PARAMS];
+        backward_row(&MlpParams::new(&p), &tape, g_up, &mut grad);
+
+        let eps = 1e-3f32;
+        // Spot-check a spread of parameter indices from every block.
+        for &i in &[0usize, 5, OFF_B1 + 3, OFF_W2 + 40, OFF_B2 + 7, OFF_W3 + 10, OFF_B3] {
+            let orig = p[i];
+            p[i] = orig + eps;
+            let fp = f(&p);
+            p[i] = orig - eps;
+            let fm = f(&p);
+            p[i] = orig;
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (grad[i] - fd).abs() < 2e-3 * fd.abs().max(1.0),
+                "param {i}: analytic {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn p0_not_touched_by_mlp_backward() {
+        let p = params(1);
+        let (_, tape) = forward_row(&MlpParams::new(&p), [0.1, 3.0]);
+        let mut grad = vec![0.0f32; N_PARAMS];
+        backward_row(&MlpParams::new(&p), &tape, 1.0, &mut grad);
+        assert_eq!(grad[OFF_P0], 0.0);
+    }
+
+    #[test]
+    fn grad_accumulates_across_rows() {
+        let p = params(2);
+        let view = MlpParams::new(&p);
+        let mut g1 = vec![0.0f32; N_PARAMS];
+        let (_, t1) = forward_row(&view, [0.0, 3.0]);
+        backward_row(&view, &t1, 1.0, &mut g1);
+        let mut g2 = g1.clone();
+        let (_, t2) = forward_row(&view, [0.5, 2.0]);
+        backward_row(&view, &t2, 1.0, &mut g2);
+        // after the 2nd row, gradient must change (accumulate).
+        assert!(g1.iter().zip(&g2).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn init_is_deterministic_with_zero_biases() {
+        let a = params(7);
+        let b = params(7);
+        assert_eq!(a, b);
+        assert_ne!(a, params(8));
+        assert_eq!(a[OFF_B1], 0.0);
+        assert_eq!(a[OFF_P0], 0.0);
+        assert!(a[OFF_W1] != 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Pure-Rust verification engine: the same model as the AOT artifacts
+//! (Milstein paths -> hedging MLP -> squared hedging error, and its
+//! gradient), hand-written with no JAX/XLA in the loop.
+//!
+//! Roles:
+//! * **cross-validation** — integration tests feed identical increments to
+//!   this engine and to the compiled HLO and require matching loss/grad
+//!   (`rust/tests/integration_engine_vs_hlo.rs`);
+//! * **native backend** — `--backend native` runs the whole training stack
+//!   without artifacts (CI without Python, portability);
+//! * **benchmarks** — a baseline the runtime's hot path is compared to.
+
+pub mod milstein;
+pub mod mlp;
+pub mod objective;
+
+pub use milstein::simulate_paths;
+pub use mlp::{MlpParams, HIDDEN, N_IN, N_PARAMS};
+pub use objective::{coupled_value_and_grad, loss_only, value_and_grad};

@@ -1,0 +1,100 @@
+//! Black–Scholes closed form — the analytic validation substrate.
+//!
+//! Under the `geometric` drift (true GBM) and continuous hedging, the
+//! learned option price `p0` must converge to the Black–Scholes value
+//! *regardless of the drift mu* (complete market / perfect replication).
+//! The `validate` subcommand and the end-to-end tests use this as an
+//! external anchor that the whole stack — kernels, AOT, runtime,
+//! coordinator — optimizes the right objective.
+
+/// Standard normal CDF via `erf`.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 rational approximation
+/// (|error| < 1.5e-7 — far below our Monte Carlo noise floor).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Black–Scholes price of a European call with zero interest rate.
+///
+/// `bs_call_price(s0, k, sigma, t)` = `s0 N(d1) - k N(d2)`.
+pub fn bs_call_price(s0: f64, strike: f64, sigma: f64, maturity: f64) -> f64 {
+    if maturity <= 0.0 || sigma <= 0.0 {
+        return (s0 - strike).max(0.0);
+    }
+    let vol = sigma * maturity.sqrt();
+    let d1 = ((s0 / strike).ln() + 0.5 * sigma * sigma * maturity) / vol;
+    let d2 = d1 - vol;
+    s0 * norm_cdf(d1) - strike * norm_cdf(d2)
+}
+
+/// Black–Scholes delta (the exact hedging strategy H(t, s) for GBM) —
+/// used to sanity-check what the MLP should be learning.
+pub fn bs_call_delta(s: f64, strike: f64, sigma: f64, tau: f64) -> f64 {
+    if tau <= 0.0 {
+        return if s > strike { 1.0 } else { 0.0 };
+    }
+    let vol = sigma * tau.sqrt();
+    let d1 = ((s / strike).ln() + 0.5 * sigma * sigma * tau) / vol;
+    norm_cdf(d1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tolerances: A&S 7.1.26 guarantees |error| <= 1.5e-7 only.
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1.5e-7);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1.5e-7);
+        assert!((erf(-1.0) + 0.842_700_79).abs() < 1.5e-7);
+        assert!((erf(3.0) - 0.999_977_91).abs() < 1.5e-7);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        for x in [0.3, 1.1, 2.7] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1.5e-7);
+        }
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1.5e-7);
+    }
+
+    #[test]
+    fn bs_atm_price_paper_params() {
+        // s0 = K = 3, sigma = 1, T = 1: ATM call with 100% vol.
+        // Known closed-form: p = s0 (N(sigma/2) - N(-sigma/2)) = 3*(2N(0.5)-1).
+        let p = bs_call_price(3.0, 3.0, 1.0, 1.0);
+        let want = 3.0 * (2.0 * norm_cdf(0.5) - 1.0);
+        assert!((p - want).abs() < 1e-9, "{p} vs {want}");
+        assert!((p - 1.149).abs() < 1e-3); // numeric anchor
+    }
+
+    #[test]
+    fn price_bounds_and_monotonicity() {
+        // price in [max(s0-k,0), s0]; increasing in sigma and maturity.
+        let p = bs_call_price(3.0, 3.0, 0.5, 1.0);
+        assert!(p > 0.0 && p < 3.0);
+        assert!(bs_call_price(3.0, 3.0, 0.8, 1.0) > p);
+        assert!(bs_call_price(3.0, 3.0, 0.5, 2.0) > p);
+        assert!(bs_call_price(4.0, 3.0, 1e-9, 1e-9) - 1.0 < 1e-6);
+    }
+
+    #[test]
+    fn delta_limits() {
+        assert!(bs_call_delta(10.0, 3.0, 1.0, 0.01) > 0.99); // deep ITM
+        assert!(bs_call_delta(0.5, 3.0, 1.0, 0.01) < 0.01); // deep OTM
+        let atm = bs_call_delta(3.0, 3.0, 1.0, 1.0);
+        assert!(atm > 0.5 && atm < 0.8, "{atm}");
+    }
+}

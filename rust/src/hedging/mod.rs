@@ -1,0 +1,10 @@
+//! The deep-hedging problem definition (paper Appendix C) and its
+//! analytic validation substrate (Black–Scholes closed form).
+
+pub mod blackscholes;
+pub mod payoff;
+pub mod problem;
+
+pub use blackscholes::bs_call_price;
+pub use payoff::call_payoff;
+pub use problem::{Drift, Problem};

@@ -1,0 +1,42 @@
+//! Option payoffs.
+
+/// European call payoff `max(S_T - K, 0)` (the instrument hedged in the
+/// paper's experiment).
+#[inline]
+pub fn call_payoff(s_t: f32, strike: f32) -> f32 {
+    (s_t - strike).max(0.0)
+}
+
+/// European put payoff `max(K - S_T, 0)` — used by tests for put-call
+/// parity style checks and by the extension examples.
+#[inline]
+pub fn put_payoff(s_t: f32, strike: f32) -> f32 {
+    (strike - s_t).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn call_kinks_at_strike() {
+        assert_eq!(call_payoff(2.0, 3.0), 0.0);
+        assert_eq!(call_payoff(3.0, 3.0), 0.0);
+        assert_eq!(call_payoff(4.5, 3.0), 1.5);
+    }
+
+    #[test]
+    fn put_is_mirror() {
+        assert_eq!(put_payoff(2.0, 3.0), 1.0);
+        assert_eq!(put_payoff(4.0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn put_call_parity_of_payoffs() {
+        // call - put = S - K pointwise.
+        for s in [0.0f32, 1.7, 3.0, 8.25] {
+            let lhs = call_payoff(s, 3.0) - put_payoff(s, 3.0);
+            assert!((lhs - (s - 3.0)).abs() < 1e-6);
+        }
+    }
+}

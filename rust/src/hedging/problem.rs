@@ -1,0 +1,143 @@
+//! Deep-hedging problem instance — the Rust mirror of
+//! `python/compile/problem.py::HedgingProblem`.
+//!
+//! Paper Appendix C values: mu = 1, sigma = 1, K = 3, lmax = 6; `s0` is
+//! not given in the paper, we use the at-the-money convention `s0 = K`.
+//! The same struct is populated from `artifacts/manifest.json` by the
+//! runtime so the Rust side can never drift from what was lowered.
+
+use crate::util::json::{Json, JsonError};
+
+/// SDE drift form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Drift {
+    /// `dS = mu dt + sigma S dB` — the paper's Appendix-C SDE as written.
+    Additive,
+    /// `dS = mu S dt + sigma S dB` — true GBM; lets the learned `p0` be
+    /// validated against the Black–Scholes closed form.
+    Geometric,
+}
+
+impl Drift {
+    pub fn parse(s: &str) -> Option<Drift> {
+        match s {
+            "additive" => Some(Drift::Additive),
+            "geometric" => Some(Drift::Geometric),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Drift::Additive => "additive",
+            Drift::Geometric => "geometric",
+        }
+    }
+}
+
+/// Deep-hedging problem instance (paper Appendix C).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Problem {
+    pub mu: f64,
+    pub sigma: f64,
+    pub strike: f64,
+    pub s0: f64,
+    pub maturity: f64,
+    /// Steps at level 0; level `l` uses `n0 * 2^l`.
+    pub n0: usize,
+    pub lmax: usize,
+    pub drift: Drift,
+}
+
+impl Default for Problem {
+    fn default() -> Self {
+        Problem {
+            mu: 1.0,
+            sigma: 1.0,
+            strike: 3.0,
+            s0: 3.0,
+            maturity: 1.0,
+            n0: 4,
+            lmax: 6,
+            drift: Drift::Additive,
+        }
+    }
+}
+
+impl Problem {
+    /// Number of Milstein steps on the level-`level` grid.
+    pub fn n_steps(&self, level: usize) -> usize {
+        self.n0 << level
+    }
+
+    pub fn dt(&self, level: usize) -> f64 {
+        self.maturity / self.n_steps(level) as f64
+    }
+
+    /// Parse from the `problem` object of `artifacts/manifest.json`.
+    pub fn from_manifest(j: &Json) -> Result<Problem, JsonError> {
+        let f = |k: &str| -> Result<f64, JsonError> {
+            j.field(k)?
+                .as_f64()
+                .ok_or_else(|| JsonError(format!("problem.{k}: not a number")))
+        };
+        let drift_s = j
+            .field("drift")?
+            .as_str()
+            .ok_or_else(|| JsonError("problem.drift: not a string".into()))?;
+        Ok(Problem {
+            mu: f("mu")?,
+            sigma: f("sigma")?,
+            strike: f("strike")?,
+            s0: f("s0")?,
+            maturity: f("maturity")?,
+            n0: f("n0")? as usize,
+            lmax: f("lmax")? as usize,
+            drift: Drift::parse(drift_s)
+                .ok_or_else(|| JsonError(format!("unknown drift `{drift_s}`")))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn level_grids_double() {
+        let p = Problem::default();
+        assert_eq!(p.n_steps(0), 4);
+        assert_eq!(p.n_steps(6), 256);
+        assert!((p.dt(1) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let j = Json::parse(
+            r#"{"mu":1.0,"sigma":1.0,"strike":3.0,"s0":3.0,"maturity":1.0,
+                "n0":4,"lmax":6,"drift":"additive"}"#,
+        )
+        .unwrap();
+        let p = Problem::from_manifest(&j).unwrap();
+        assert_eq!(p, Problem::default());
+    }
+
+    #[test]
+    fn from_manifest_rejects_bad_drift() {
+        let j = Json::parse(
+            r#"{"mu":1,"sigma":1,"strike":3,"s0":3,"maturity":1,
+                "n0":4,"lmax":6,"drift":"weird"}"#,
+        )
+        .unwrap();
+        assert!(Problem::from_manifest(&j).is_err());
+    }
+
+    #[test]
+    fn drift_parse_roundtrip() {
+        for d in [Drift::Additive, Drift::Geometric] {
+            assert_eq!(Drift::parse(d.name()), Some(d));
+        }
+        assert_eq!(Drift::parse("x"), None);
+    }
+}

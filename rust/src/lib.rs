@@ -1,0 +1,54 @@
+//! # dmlmc — Delayed Multilevel Monte Carlo for SGD
+//!
+//! A production-oriented reproduction of *“On the Parallel Complexity of
+//! Multilevel Monte Carlo in Stochastic Gradient Descent”* (Kei Ishikawa,
+//! 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — fused Milstein path kernel and hedging
+//!   MLP forward/backward kernels (`python/compile/kernels/`), lowered
+//!   with `interpret=True` so the CPU PJRT runtime executes plain HLO.
+//! * **L2 (JAX, build time)** — the deep-hedging objective and its
+//!   per-level coupled gradients, AOT-lowered to HLO *text* artifacts by
+//!   `python/compile/aot.py` (`make artifacts`).
+//! * **L3 (rust, run time — this crate)** — the paper's contribution:
+//!   the delayed-MLMC SGD coordinator ([`coordinator`]), which refreshes
+//!   the level-ℓ gradient component only every `⌊2^{dℓ}⌋` steps and reuses
+//!   the cached component otherwise (Algorithm 1), plus every substrate it
+//!   needs: the PJRT runtime ([`runtime`]), a pure-rust verification
+//!   engine ([`engine`]), MLMC allocation/diagnostics ([`mlmc`]),
+//!   counter-based RNG ([`rng`]), optimizers ([`optim`]), the PRAM cost
+//!   model ([`parallel`]), metrics ([`metrics`]) and configuration
+//!   ([`config`]).
+//!
+//! Python never runs on the training hot path: after `make artifacts` the
+//! `repro` binary (and all examples/benches) are self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dmlmc::config::ExperimentConfig;
+//! use dmlmc::coordinator::{Method, Trainer};
+//!
+//! let cfg = ExperimentConfig::default_paper();
+//! let mut trainer = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+//! let curve = trainer.run().unwrap();
+//! println!("final loss {:.4}", curve.points.last().unwrap().loss);
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod hedging;
+pub mod metrics;
+pub mod mlmc;
+pub mod optim;
+pub mod parallel;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{Method, Trainer};

@@ -1,0 +1,274 @@
+//! `repro` — the leader binary: training runs, figure/table reproduction,
+//! validation and sweeps. See `repro --help`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, Result};
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::experiments;
+use dmlmc::metrics::writer::{write_csv, write_jsonl};
+use dmlmc::util::cli::{Args, Command, Opt};
+
+fn root_command() -> Command {
+    let common = |c: Command| {
+        c.opt(Opt::value("config", "TOML config (configs/*.toml)"))
+            .opt(Opt::value("backend", "xla|native (overrides config)"))
+            .opt(Opt::value("steps", "override train.steps"))
+            .opt(Opt::value("n-effective", "override mlmc.n_effective"))
+            .opt(Opt::value("seeds", "override train.n_seeds"))
+            .opt(Opt::value("lr", "override train.lr"))
+            .opt(Opt::value("d", "override mlmc.d (delay exponent)"))
+            .opt(Opt::value("out-dir", "output directory"))
+            .opt(Opt::switch("quiet", "suppress progress output"))
+    };
+    Command::new("repro", "Delayed MLMC for SGD — paper reproduction driver")
+        .subcommand(common(
+            Command::new("train", "run one training job")
+                .opt(Opt::with_default("method", "naive|mlmc|dmlmc", "dmlmc"))
+                .opt(Opt::with_default("seed", "run seed", "0")),
+        ))
+        .subcommand(common(Command::new(
+            "figure2",
+            "reproduce Figure 2 (3 methods x seeds, learning curves)",
+        )))
+        .subcommand(common(
+            Command::new("assumptions", "reproduce Figure 1 (decay diagnostics)")
+                .opt(Opt::with_default("snapshots", "trajectory snapshots", "6")),
+        ))
+        .subcommand(common(Command::new(
+            "table1",
+            "reproduce Table 1 (theory vs measured complexity)",
+        )))
+        .subcommand(common(Command::new(
+            "validate",
+            "train under geometric drift; compare p0 vs Black-Scholes",
+        )))
+        .subcommand(common(
+            Command::new("sweep", "delay-exponent ablation")
+                .opt(Opt::with_default("values", "comma-separated d values", "0.5,1.0,1.5,2.0")),
+        ))
+        .subcommand(Command::new("info", "print artifact/manifest summary").opt(
+            Opt::with_default("artifacts", "artifact directory", "artifacts"),
+        ))
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(Path::new(path))
+            .map_err(|e| anyhow!("{e}"))?,
+        None => ExperimentConfig::default_paper(),
+    };
+    if let Some(b) = args.get("backend") {
+        cfg.runtime.backend =
+            Backend::parse(b).ok_or_else(|| anyhow!("unknown backend `{b}`"))?;
+    }
+    if let Some(v) = args.parse_usize("steps")? {
+        cfg.train.steps = v;
+    }
+    if let Some(v) = args.parse_usize("n-effective")? {
+        cfg.mlmc.n_effective = v;
+    }
+    if let Some(v) = args.parse_usize("seeds")? {
+        cfg.train.n_seeds = v;
+    }
+    if let Some(v) = args.parse_f64("lr")? {
+        cfg.train.lr = v;
+    }
+    if let Some(v) = args.parse_f64("d")? {
+        cfg.mlmc.d = v;
+    }
+    if let Some(v) = args.get("out-dir") {
+        cfg.runtime.out_dir = PathBuf::from(v);
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let method = Method::parse(args.get_or("method", "dmlmc"))
+        .ok_or_else(|| anyhow!("unknown method"))?;
+    let seed = args.parse_usize("seed")?.unwrap_or(0) as u64;
+    let quiet = args.flag("quiet");
+
+    eprintln!(
+        "train: method={method} seed={seed} backend={} steps={} N={}",
+        cfg.runtime.backend.name(),
+        cfg.train.steps,
+        cfg.mlmc.n_effective
+    );
+    let mut tr = Trainer::from_config(&cfg, method, seed)?;
+    let curve = tr.run()?;
+    if !quiet {
+        for p in &curve.points {
+            println!(
+                "step {:>6}  loss {:>10.5}  std_cost {:>12.0}  par_cost {:>10.0}",
+                p.step, p.loss, p.std_cost, p.par_cost
+            );
+        }
+    }
+    let out = cfg.runtime.out_dir.join(format!(
+        "curve_{}_seed{}.csv",
+        method.name(),
+        seed
+    ));
+    write_csv(&out, &curve)?;
+    write_jsonl(&cfg.runtime.out_dir.join("runs.jsonl"), &curve)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_figure2(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let quiet = args.flag("quiet");
+    let results = experiments::figure2(&cfg, quiet)?;
+    std::fs::create_dir_all(&cfg.runtime.out_dir)?;
+    for (method, curves, agg) in &results {
+        for curve in curves {
+            let path = cfg.runtime.out_dir.join(format!(
+                "curve_{}_seed{}.csv",
+                method.name(),
+                curve.seed
+            ));
+            write_csv(&path, curve)?;
+        }
+        let agg_path = cfg
+            .runtime
+            .out_dir
+            .join(format!("figure2_{}.csv", method.name()));
+        std::fs::write(&agg_path, agg.to_csv())?;
+        eprintln!("wrote {}", agg_path.display());
+    }
+    // Headline summary: cost to reach the worst method's best loss.
+    println!("\nFigure 2 summary (final loss, total std cost, total par cost):");
+    for (method, _, agg) in &results {
+        println!(
+            "  {:<8} loss {:>9.5} ± {:>8.5}   std {:>12.0}   par {:>10.0}",
+            method.name(),
+            agg.loss_mean.last().unwrap(),
+            agg.loss_std.last().unwrap(),
+            agg.std_cost.last().unwrap(),
+            agg.par_cost.last().unwrap()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_assumptions(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let snapshots = args.parse_usize("snapshots")?.unwrap_or(6);
+    let fig = experiments::figure1(&cfg, snapshots, args.flag("quiet"))?;
+    println!("Figure 1 — assumption decay (levels 0..={}):", cfg.problem.lmax);
+    println!("{:<6} {:>16} {:>16} {:>16} {:>16}", "level", "E||gDl||^2", "(std)", "smoothness", "(std)");
+    for l in 0..fig.grad_norms.per_level.len() {
+        let (gm, gs) = fig.grad_norms.per_level[l];
+        let (sm, ss) = fig.smoothness.per_level[l];
+        println!("{l:<6} {gm:>16.6e} {gs:>16.2e} {sm:>16.6e} {ss:>16.2e}");
+    }
+    println!("\nfitted decay exponents: b_hat = {:.3} (paper ~1.8-2), d_hat = {:.3} (paper ~1)", fig.b_hat, fig.d_hat);
+
+    std::fs::create_dir_all(&cfg.runtime.out_dir)?;
+    let mut csv = String::from("level,grad_norm_mean,grad_norm_std,smooth_mean,smooth_std\n");
+    for l in 0..fig.grad_norms.per_level.len() {
+        let (gm, gs) = fig.grad_norms.per_level[l];
+        let (sm, ss) = fig.smoothness.per_level[l];
+        csv.push_str(&format!("{l},{gm},{gs},{sm},{ss}\n"));
+    }
+    let path = cfg.runtime.out_dir.join("figure1.csv");
+    std::fs::write(&path, csv)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (theory, measured) = experiments::table1(&cfg)?;
+    println!("{}", experiments::render_table1(&theory, &measured));
+    println!(
+        "predicted avg per-step depth (schedule sim): {:.2}",
+        experiments::predicted_avg_depth(&cfg, 1 << 12)
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (p0, bs) = experiments::validate_bs(&cfg)?;
+    println!("learned p0        = {p0:.4}");
+    println!("Black-Scholes     = {bs:.4}");
+    println!("relative error    = {:.2}%", 100.0 * (p0 - bs).abs() / bs);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds: Vec<f64> = args
+        .get_or("values", "0.5,1.0,1.5,2.0")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("bad d `{s}`")))
+        .collect::<Result<_>>()?;
+    let rows = experiments::sweep_delay(&cfg, &ds)?;
+    println!("{:<6} {:>12} {:>14} {:>14} {:>12}", "d", "final loss", "std cost", "par cost", "avg depth");
+    for (d, r) in rows {
+        println!(
+            "{d:<6} {:>12.5} {:>14.0} {:>14.0} {:>12.2}",
+            r.final_loss, r.std_cost, r.par_cost, r.avg_depth
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    use dmlmc::runtime::Manifest;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("problem: {:?}", m.problem);
+    println!("n_params: {}", m.n_params);
+    println!("entries ({}):", m.entries.len());
+    for e in &m.entries {
+        println!(
+            "  {:<18} kind={:<12?} level={:<4} batch={:<4} n_steps={}",
+            e.name,
+            e.kind,
+            e.level.map(|l| l.to_string()).unwrap_or_else(|| "-".into()),
+            e.batch,
+            e.n_steps
+        );
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = root_command();
+    let (sub, args) = match cmd.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match sub.as_str() {
+        "train" => cmd_train(&args),
+        "figure2" => cmd_figure2(&args),
+        "assumptions" => cmd_assumptions(&args),
+        "table1" => cmd_table1(&args),
+        "validate" => cmd_validate(&args),
+        "sweep" => cmd_sweep(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!("{}", root_command().help());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

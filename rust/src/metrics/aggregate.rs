@@ -1,0 +1,140 @@
+//! Cross-seed aggregation: the mean ± std bands of Figure 2.
+//!
+//! All runs of one method share the same evaluation schedule (same steps,
+//! same deterministic cost accounting), so aggregation is pointwise over
+//! the common grid; a mismatch is a bug and is reported as an error.
+
+use super::recorder::LearningCurve;
+use super::welford::Welford;
+
+/// Aggregated curve: per evaluation point, mean and std of the loss over
+/// seeds, with the (shared) cost axes.
+#[derive(Debug, Clone, Default)]
+pub struct AggregatedCurve {
+    pub method: String,
+    pub n_runs: usize,
+    pub steps: Vec<usize>,
+    pub std_cost: Vec<f64>,
+    pub par_cost: Vec<f64>,
+    pub loss_mean: Vec<f64>,
+    pub loss_std: Vec<f64>,
+}
+
+/// Aggregate same-method curves over seeds.
+pub fn aggregate_curves(curves: &[LearningCurve]) -> Result<AggregatedCurve, String> {
+    let first = curves.first().ok_or("no curves to aggregate")?;
+    let n_pts = first.points.len();
+    for c in curves {
+        if c.method != first.method {
+            return Err(format!(
+                "mixed methods: `{}` vs `{}`",
+                c.method, first.method
+            ));
+        }
+        if c.points.len() != n_pts {
+            return Err(format!(
+                "curve length mismatch: {} vs {n_pts} (seed {})",
+                c.points.len(),
+                c.seed
+            ));
+        }
+        for (a, b) in c.points.iter().zip(&first.points) {
+            if a.step != b.step {
+                return Err(format!(
+                    "evaluation grids differ at step {} vs {}",
+                    a.step, b.step
+                ));
+            }
+        }
+    }
+    let mut agg = AggregatedCurve {
+        method: first.method.clone(),
+        n_runs: curves.len(),
+        ..Default::default()
+    };
+    for i in 0..n_pts {
+        let mut w = Welford::new();
+        let mut std_cost = Welford::new();
+        let mut par_cost = Welford::new();
+        for c in curves {
+            w.push(c.points[i].loss);
+            std_cost.push(c.points[i].std_cost);
+            par_cost.push(c.points[i].par_cost);
+        }
+        agg.steps.push(first.points[i].step);
+        // Costs may differ slightly across seeds for DMLMC only via eval
+        // cadence (they don't in practice); record the mean.
+        agg.std_cost.push(std_cost.mean());
+        agg.par_cost.push(par_cost.mean());
+        agg.loss_mean.push(w.mean());
+        agg.loss_std.push(w.std());
+    }
+    Ok(agg)
+}
+
+impl AggregatedCurve {
+    /// Render as the CSV consumed by the plotting/reporting scripts.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,std_cost,par_cost,loss_mean,loss_std\n");
+        for i in 0..self.steps.len() {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                self.steps[i],
+                self.std_cost[i],
+                self.par_cost[i],
+                self.loss_mean[i],
+                self.loss_std[i]
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::CurvePoint;
+
+    fn mk(method: &str, seed: u64, losses: &[f64]) -> LearningCurve {
+        let mut c = LearningCurve::new(method, seed);
+        for (i, &l) in losses.iter().enumerate() {
+            c.push(CurvePoint {
+                step: i,
+                loss: l,
+                std_cost: i as f64,
+                par_cost: i as f64 * 0.5,
+                grad_norm: 0.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn mean_and_std_pointwise() {
+        let a = mk("m", 0, &[2.0, 1.0]);
+        let b = mk("m", 1, &[4.0, 3.0]);
+        let agg = aggregate_curves(&[a, b]).unwrap();
+        assert_eq!(agg.n_runs, 2);
+        assert_eq!(agg.loss_mean, vec![3.0, 2.0]);
+        assert_eq!(agg.loss_std, vec![1.0, 1.0]);
+        assert_eq!(agg.steps, vec![0, 1]);
+    }
+
+    #[test]
+    fn rejects_mismatched_curves() {
+        let a = mk("m", 0, &[1.0, 2.0]);
+        let b = mk("m", 1, &[1.0]);
+        assert!(aggregate_curves(&[a.clone(), b]).is_err());
+        let c = mk("other", 1, &[1.0, 2.0]);
+        assert!(aggregate_curves(&[a, c]).is_err());
+        assert!(aggregate_curves(&[]).is_err());
+    }
+
+    #[test]
+    fn csv_render_has_header_and_rows() {
+        let agg = aggregate_curves(&[mk("m", 0, &[1.0, 0.5])]).unwrap();
+        let csv = agg.to_csv();
+        assert!(csv.starts_with("step,"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! Metrics: streaming statistics, learning-curve recording, CSV/JSONL
+//! output, and cross-seed aggregation (the mean ± std bands of Figure 2).
+
+pub mod aggregate;
+pub mod recorder;
+pub mod welford;
+pub mod writer;
+
+pub use aggregate::aggregate_curves;
+pub use recorder::{CurvePoint, LearningCurve};
+pub use welford::Welford;
+pub use writer::{write_csv, write_jsonl};

@@ -1,0 +1,125 @@
+//! Learning-curve recording: one point per evaluation, carrying all three
+//! x-axes the paper plots against (iteration, cumulative standard
+//! complexity, cumulative parallel complexity).
+
+/// One evaluation point on a learning curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub step: usize,
+    /// Held-out loss F_lmax (the y-axis of Figure 2).
+    pub loss: f64,
+    /// Cumulative standard complexity (work units) up to this step.
+    pub std_cost: f64,
+    /// Cumulative parallel complexity (depth units) up to this step.
+    pub par_cost: f64,
+    /// Norm of the gradient estimate used at this step.
+    pub grad_norm: f64,
+}
+
+/// A full training trajectory for one (method, seed) run.
+#[derive(Debug, Clone, Default)]
+pub struct LearningCurve {
+    pub method: String,
+    pub seed: u64,
+    pub points: Vec<CurvePoint>,
+}
+
+impl LearningCurve {
+    pub fn new(method: &str, seed: u64) -> Self {
+        LearningCurve {
+            method: method.to_string(),
+            seed,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        debug_assert!(
+            self.points.last().map_or(true, |last| {
+                p.step >= last.step
+                    && p.std_cost >= last.std_cost
+                    && p.par_cost >= last.par_cost
+            }),
+            "curve must be monotone in step and costs"
+        );
+        self.points.push(p);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    /// First point whose loss is at or below `target`, by parallel cost —
+    /// the "cost to reach accuracy" metric used in EXPERIMENTS.md.
+    pub fn par_cost_to_reach(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.loss <= target)
+            .map(|p| p.par_cost)
+    }
+
+    /// Same, by standard cost.
+    pub fn std_cost_to_reach(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.loss <= target)
+            .map(|p| p.std_cost)
+    }
+
+    /// Minimum loss seen anywhere on the curve.
+    pub fn best_loss(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> LearningCurve {
+        let mut c = LearningCurve::new("dmlmc", 0);
+        for (i, loss) in [4.0, 2.0, 1.0, 1.2, 0.5].iter().enumerate() {
+            c.push(CurvePoint {
+                step: i * 10,
+                loss: *loss,
+                std_cost: (i as f64 + 1.0) * 100.0,
+                par_cost: (i as f64 + 1.0) * 10.0,
+                grad_norm: 1.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn final_and_best_loss() {
+        let c = curve();
+        assert_eq!(c.final_loss(), Some(0.5));
+        assert_eq!(c.best_loss(), Some(0.5));
+        assert_eq!(LearningCurve::new("x", 0).final_loss(), None);
+    }
+
+    #[test]
+    fn cost_to_reach_finds_first_crossing() {
+        let c = curve();
+        assert_eq!(c.par_cost_to_reach(1.0), Some(30.0));
+        assert_eq!(c.std_cost_to_reach(1.0), Some(300.0));
+        assert_eq!(c.par_cost_to_reach(0.01), None);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_push_panics_in_debug() {
+        let mut c = curve();
+        c.push(CurvePoint {
+            step: 0,
+            loss: 1.0,
+            std_cost: 0.0,
+            par_cost: 0.0,
+            grad_norm: 0.0,
+        });
+    }
+}

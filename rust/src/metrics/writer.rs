@@ -1,0 +1,169 @@
+//! CSV / JSONL output for learning curves and experiment results.
+//!
+//! Output layout (under `--out-dir`):
+//!   `curve_<method>_seed<k>.csv`   one row per evaluation point
+//!   `runs.jsonl`                   one JSON object per completed run
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::recorder::LearningCurve;
+use crate::util::json::{obj, Json};
+
+/// Write one curve as CSV (header + one row per point).
+pub fn write_csv(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "step,loss,std_cost,par_cost,grad_norm")?;
+    for p in &curve.points {
+        writeln!(
+            w,
+            "{},{},{},{},{}",
+            p.step, p.loss, p.std_cost, p.par_cost, p.grad_norm
+        )?;
+    }
+    w.flush()
+}
+
+/// Append one run-summary JSON object to a JSONL file.
+pub fn write_jsonl(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut w = OpenOptions::new().create(true).append(true).open(path)?;
+    let summary = obj(vec![
+        ("method", Json::Str(curve.method.clone())),
+        ("seed", Json::Num(curve.seed as f64)),
+        ("points", Json::Num(curve.points.len() as f64)),
+        (
+            "final_loss",
+            curve.final_loss().map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "best_loss",
+            curve.best_loss().map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "total_std_cost",
+            curve
+                .points
+                .last()
+                .map(|p| Json::Num(p.std_cost))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "total_par_cost",
+            curve
+                .points
+                .last()
+                .map(|p| Json::Num(p.par_cost))
+                .unwrap_or(Json::Null),
+        ),
+    ]);
+    writeln!(w, "{summary}")
+}
+
+/// Read a CSV produced by [`write_csv`] back into a curve (used by the
+/// aggregation tooling and round-trip tests).
+pub fn read_csv(path: &Path) -> std::io::Result<LearningCurve> {
+    let text = fs::read_to_string(path)?;
+    let mut curve = LearningCurve::default();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 5 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad csv row {i}: `{line}`"),
+            ));
+        }
+        let f = |s: &str| -> std::io::Result<f64> {
+            s.parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad number `{s}` in row {i}"),
+                )
+            })
+        };
+        curve.points.push(super::recorder::CurvePoint {
+            step: f(cols[0])? as usize,
+            loss: f(cols[1])?,
+            std_cost: f(cols[2])?,
+            par_cost: f(cols[3])?,
+            grad_norm: f(cols[4])?,
+        });
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::recorder::CurvePoint;
+
+    fn tempdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dmlmc_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn curve() -> LearningCurve {
+        let mut c = LearningCurve::new("mlmc", 3);
+        c.push(CurvePoint {
+            step: 0,
+            loss: 2.5,
+            std_cost: 10.0,
+            par_cost: 1.0,
+            grad_norm: 0.7,
+        });
+        c.push(CurvePoint {
+            step: 5,
+            loss: 1.25,
+            std_cost: 60.0,
+            par_cost: 6.0,
+            grad_norm: 0.2,
+        });
+        c
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = tempdir().join("curve.csv");
+        let c = curve();
+        write_csv(&path, &c).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.points, c.points);
+    }
+
+    #[test]
+    fn jsonl_appends_valid_json() {
+        let path = tempdir().join("runs.jsonl");
+        let _ = fs::remove_file(&path);
+        write_jsonl(&path, &curve()).unwrap();
+        write_jsonl(&path, &curve()).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("method").unwrap().as_str(), Some("mlmc"));
+            assert_eq!(j.get("final_loss").unwrap().as_f64(), Some(1.25));
+        }
+    }
+
+    #[test]
+    fn read_rejects_malformed() {
+        let path = tempdir().join("bad.csv");
+        fs::write(&path, "step,loss,std_cost,par_cost,grad_norm\n1,2\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+}

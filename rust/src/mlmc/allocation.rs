@@ -1,0 +1,148 @@
+//! Optimal per-level sample allocation (paper §2 and Appendix A.2).
+//!
+//! Minimising the estimator variance `sum_l V_l / N_l` under the cost
+//! budget `sum_l C_l N_l = C_total` with `V_l = M 2^{-bl}`,
+//! `C_l = C 2^{cl}` yields `N_l ∝ sqrt(V_l / C_l) = 2^{-(b+c)l/2}`; the
+//! paper normalises against an *effective batch size* `N`:
+//!
+//! `N_l = ceil( 2^{-(b+c)l/2} / sum_k 2^{-(b+c)k/2} * N )`.
+
+/// Per-level sample counts for an MLMC estimator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LevelAllocation {
+    /// `N_l` for `l = 0..=lmax`.
+    pub n_per_level: Vec<usize>,
+}
+
+impl LevelAllocation {
+    /// The paper's allocation for effective batch size `n`, variance decay
+    /// `b` and cost growth `c` (requires `b > c` for the `O(1/N)` rate).
+    pub fn paper(lmax: usize, n: usize, b: f64, c: f64) -> Self {
+        assert!(n > 0, "effective batch size must be positive");
+        let weights: Vec<f64> = (0..=lmax)
+            .map(|l| 2f64.powf(-(b + c) * l as f64 / 2.0))
+            .collect();
+        let z: f64 = weights.iter().sum();
+        let n_per_level = weights
+            .iter()
+            .map(|w| ((w / z) * n as f64).ceil().max(1.0) as usize)
+            .collect();
+        LevelAllocation { n_per_level }
+    }
+
+    /// Uniform allocation (naive-style; used by ablations).
+    pub fn uniform(lmax: usize, n_each: usize) -> Self {
+        LevelAllocation {
+            n_per_level: vec![n_each.max(1); lmax + 1],
+        }
+    }
+
+    pub fn lmax(&self) -> usize {
+        self.n_per_level.len() - 1
+    }
+
+    pub fn n(&self, level: usize) -> usize {
+        self.n_per_level[level]
+    }
+
+    /// Total standard cost in work units, `sum_l N_l 2^{c l}`.
+    pub fn standard_cost(&self, c: f64) -> f64 {
+        self.n_per_level
+            .iter()
+            .enumerate()
+            .map(|(l, &nl)| nl as f64 * 2f64.powf(c * l as f64))
+            .sum()
+    }
+
+    /// Estimator variance bound `sum_l M 2^{-bl} / N_l` (up to `M`).
+    pub fn variance_bound(&self, b: f64) -> f64 {
+        self.n_per_level
+            .iter()
+            .enumerate()
+            .map(|(l, &nl)| 2f64.powf(-b * l as f64) / nl as f64)
+            .sum()
+    }
+
+    /// Round every level count *up* to a multiple of the backend's chunk
+    /// size (artifacts are lowered with fixed chunk batches).
+    pub fn round_to_chunks(&self, chunk_sizes: &[usize]) -> LevelAllocation {
+        assert_eq!(chunk_sizes.len(), self.n_per_level.len());
+        LevelAllocation {
+            n_per_level: self
+                .n_per_level
+                .iter()
+                .zip(chunk_sizes)
+                .map(|(&nl, &ch)| nl.div_ceil(ch) * ch)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_allocation_is_geometric() {
+        // With b + c = 2.8, N_l should decay roughly 2^{-1.4} per level.
+        let a = LevelAllocation::paper(6, 1024, 1.8, 1.0);
+        assert_eq!(a.lmax(), 6);
+        for l in 0..6 {
+            let ratio = a.n(l) as f64 / a.n(l + 1) as f64;
+            assert!(
+                ratio >= 1.0,
+                "allocation must be non-increasing: {:?}",
+                a.n_per_level
+            );
+        }
+        // Level 0 dominates: gets more than half the nominal budget share.
+        assert!(a.n(0) > a.n(6) * 8);
+    }
+
+    #[test]
+    fn every_level_gets_at_least_one() {
+        let a = LevelAllocation::paper(6, 4, 1.8, 1.0);
+        assert!(a.n_per_level.iter().all(|&n| n >= 1));
+    }
+
+    #[test]
+    fn totals_close_to_n() {
+        let n = 1 << 12;
+        let a = LevelAllocation::paper(6, n, 1.8, 1.0);
+        let total: usize = a.n_per_level.iter().sum();
+        // ceil() rounding inflates by at most lmax+1.
+        assert!(total >= n && total <= n + 7, "total {total}");
+    }
+
+    #[test]
+    fn standard_cost_is_o_of_n_when_b_gt_c() {
+        // Doubling N should roughly double the cost (O(N) complexity).
+        let a1 = LevelAllocation::paper(6, 1 << 10, 1.8, 1.0);
+        let a2 = LevelAllocation::paper(6, 1 << 11, 1.8, 1.0);
+        let r = a2.standard_cost(1.0) / a1.standard_cost(1.0);
+        assert!((r - 2.0).abs() < 0.3, "cost ratio {r}");
+    }
+
+    #[test]
+    fn variance_bound_scales_inverse_n() {
+        let a1 = LevelAllocation::paper(6, 1 << 10, 1.8, 1.0);
+        let a2 = LevelAllocation::paper(6, 1 << 12, 1.8, 1.0);
+        let r = a1.variance_bound(1.8) / a2.variance_bound(1.8);
+        assert!((r - 4.0).abs() < 0.8, "variance ratio {r}");
+    }
+
+    #[test]
+    fn chunk_rounding_rounds_up() {
+        let a = LevelAllocation {
+            n_per_level: vec![100, 10, 3],
+        };
+        let r = a.round_to_chunks(&[64, 8, 8]);
+        assert_eq!(r.n_per_level, vec![128, 16, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_budget_panics() {
+        LevelAllocation::paper(3, 0, 1.8, 1.0);
+    }
+}

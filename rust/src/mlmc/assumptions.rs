@@ -1,0 +1,137 @@
+//! Empirical verification of the paper's Assumptions 1–3 (Figure 1).
+//!
+//! Given per-level series of `E||grad Delta_l F_hat||^2` (variance proxy,
+//! Assumption 2) or pathwise smoothness (Assumption 3), fit the decay
+//! exponent by least-squares on `log2`: if `y_l ≈ A 2^{-r l}` then
+//! `log2 y_l` is affine in `l` with slope `-r`.
+
+/// Mean/std series over levels, as plotted in Figure 1.
+#[derive(Debug, Clone, Default)]
+pub struct DecaySeries {
+    /// One entry per level `l = 0..=lmax`: (mean, std) over snapshots.
+    pub per_level: Vec<(f64, f64)>,
+}
+
+impl DecaySeries {
+    /// Aggregate raw per-snapshot samples: `samples[l]` holds the values
+    /// observed at level `l` across optimization snapshots.
+    pub fn from_samples(samples: &[Vec<f64>]) -> DecaySeries {
+        let per_level = samples
+            .iter()
+            .map(|vals| {
+                let n = vals.len().max(1) as f64;
+                let mean = vals.iter().sum::<f64>() / n;
+                let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+                (mean, var.sqrt())
+            })
+            .collect();
+        DecaySeries { per_level }
+    }
+
+    /// Fitted decay exponent `r` (positive = decaying), via least squares
+    /// of `log2(mean_l)` against `l`, skipping level 0 (the paper's decay
+    /// assumptions only constrain the slope across coupled levels l >= 1).
+    pub fn fitted_rate(&self) -> f64 {
+        let pts: Vec<(f64, f64)> = self
+            .per_level
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, (m, _))| *m > 0.0)
+            .map(|(l, (m, _))| (l as f64, m.log2()))
+            .collect();
+        -fit_slope(&pts)
+    }
+}
+
+/// Least-squares slope of `y` against `x`.
+pub fn fit_slope(pts: &[(f64, f64)]) -> f64 {
+    let n = pts.len() as f64;
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return 0.0;
+    }
+    (n * sxy - sx * sy) / denom
+}
+
+/// Fit `y_l ≈ A 2^{-r l}` on `(level, value)` pairs; returns `r`.
+pub fn fit_decay_rate(level_values: &[(usize, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = level_values
+        .iter()
+        .filter(|(_, v)| *v > 0.0)
+        .map(|(l, v)| (*l as f64, v.log2()))
+        .collect();
+    -fit_slope(&pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_slope_exact_line() {
+        let pts: Vec<(f64, f64)> =
+            (0..10).map(|i| (i as f64, 3.0 - 2.0 * i as f64)).collect();
+        assert!((fit_slope(&pts) + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovers_exact_decay() {
+        // y_l = 5 * 2^{-1.8 l}
+        let vals: Vec<(usize, f64)> = (0..=6)
+            .map(|l| (l, 5.0 * 2f64.powf(-1.8 * l as f64)))
+            .collect();
+        let r = fit_decay_rate(&vals);
+        assert!((r - 1.8).abs() < 1e-9, "r = {r}");
+    }
+
+    #[test]
+    fn recovers_noisy_decay() {
+        // multiplicative noise should not move the slope much.
+        let vals: Vec<(usize, f64)> = (0..=6)
+            .map(|l| {
+                let noise = 1.0 + 0.1 * ((l * 2654435761) % 7) as f64 / 7.0;
+                (l, 3.0 * 2f64.powf(-2.0 * l as f64) * noise)
+            })
+            .collect();
+        let r = fit_decay_rate(&vals);
+        assert!((r - 2.0).abs() < 0.15, "r = {r}");
+    }
+
+    #[test]
+    fn series_aggregation() {
+        let s = DecaySeries::from_samples(&[
+            vec![4.0, 4.0],
+            vec![1.0, 3.0],
+            vec![1.0],
+        ]);
+        assert_eq!(s.per_level[0], (4.0, 0.0));
+        assert_eq!(s.per_level[1].0, 2.0);
+        assert!(s.per_level[1].1 > 0.9);
+    }
+
+    #[test]
+    fn fitted_rate_skips_level0() {
+        // level 0 wildly off the line must not corrupt the fit.
+        let mut samples = vec![vec![1000.0]];
+        for l in 1..=6 {
+            samples.push(vec![8.0 * 2f64.powf(-1.5 * l as f64)]);
+        }
+        let r = DecaySeries::from_samples(&samples).fitted_rate();
+        assert!((r - 1.5).abs() < 1e-9, "r = {r}");
+    }
+
+    #[test]
+    fn degenerate_inputs_dont_panic() {
+        assert_eq!(fit_decay_rate(&[]), 0.0);
+        assert_eq!(fit_decay_rate(&[(0, 1.0)]), 0.0);
+        assert_eq!(fit_slope(&[(1.0, 1.0), (1.0, 2.0)]), 0.0);
+    }
+}

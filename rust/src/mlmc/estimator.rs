@@ -1,0 +1,145 @@
+//! Assembly of MLMC gradient estimates from per-level components.
+//!
+//! A level component `grad Delta_l F_MLMC` is itself an average over
+//! `N_l / chunk` backend executions (artifacts are lowered with a fixed
+//! chunk batch); [`ChunkAccumulator`] maintains that running mean without
+//! intermediate allocation, and [`MlmcEstimator`] sums the level means
+//! into the final estimator `sum_l grad Delta_l` (paper §2).
+
+/// Running mean of equally-weighted gradient chunks.
+#[derive(Debug, Clone)]
+pub struct ChunkAccumulator {
+    sum: Vec<f32>,
+    loss_sum: f64,
+    count: usize,
+}
+
+impl ChunkAccumulator {
+    pub fn new(dim: usize) -> Self {
+        ChunkAccumulator {
+            sum: vec![0.0; dim],
+            loss_sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Add one chunk's mean gradient (and its loss value).
+    pub fn add(&mut self, loss: f64, grad: &[f32]) {
+        assert_eq!(grad.len(), self.sum.len(), "gradient dim mismatch");
+        for (a, &g) in self.sum.iter_mut().zip(grad) {
+            *a += g;
+        }
+        self.loss_sum += loss;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Mean over added chunks: `(mean loss, mean gradient)`.
+    pub fn finish(self) -> (f64, Vec<f32>) {
+        assert!(self.count > 0, "no chunks accumulated");
+        let inv = 1.0 / self.count as f64;
+        let mut grad = self.sum;
+        for g in &mut grad {
+            *g = (*g as f64 * inv) as f32;
+        }
+        (self.loss_sum * inv, grad)
+    }
+}
+
+/// Sums per-level component gradients into the MLMC estimator.
+#[derive(Debug, Clone)]
+pub struct MlmcEstimator {
+    grad: Vec<f32>,
+    loss: f64,
+    levels_added: usize,
+}
+
+impl MlmcEstimator {
+    pub fn new(dim: usize) -> Self {
+        MlmcEstimator {
+            grad: vec![0.0; dim],
+            loss: 0.0,
+            levels_added: 0,
+        }
+    }
+
+    /// Add the level-`l` component `grad Delta_l F` (already chunk-averaged).
+    pub fn add_level(&mut self, loss_delta: f64, grad_delta: &[f32]) {
+        assert_eq!(grad_delta.len(), self.grad.len(), "gradient dim mismatch");
+        for (a, &g) in self.grad.iter_mut().zip(grad_delta) {
+            *a += g;
+        }
+        self.loss += loss_delta;
+        self.levels_added += 1;
+    }
+
+    pub fn levels_added(&self) -> usize {
+        self.levels_added
+    }
+
+    /// The assembled estimator: telescoped loss and gradient.
+    pub fn finish(self) -> (f64, Vec<f32>) {
+        (self.loss, self.grad)
+    }
+}
+
+/// Euclidean norm of a gradient (diagnostics / recorder).
+pub fn grad_norm(grad: &[f32]) -> f64 {
+    grad.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_mean_is_exact() {
+        let mut acc = ChunkAccumulator::new(3);
+        acc.add(1.0, &[1.0, 0.0, 2.0]);
+        acc.add(3.0, &[3.0, 4.0, 0.0]);
+        let (loss, grad) = acc.finish();
+        assert_eq!(loss, 2.0);
+        assert_eq!(grad, vec![2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn estimator_telescopes_levels() {
+        let mut est = MlmcEstimator::new(2);
+        est.add_level(0.5, &[1.0, -1.0]);
+        est.add_level(-0.125, &[0.25, 0.5]);
+        let (loss, grad) = est.finish();
+        assert_eq!(loss, 0.375);
+        assert_eq!(grad, vec![1.25, -0.5]);
+        }
+
+    #[test]
+    fn single_chunk_identity() {
+        let mut acc = ChunkAccumulator::new(2);
+        acc.add(7.0, &[1.5, -2.5]);
+        let (loss, grad) = acc.finish();
+        assert_eq!(loss, 7.0);
+        assert_eq!(grad, vec![1.5, -2.5]);
+    }
+
+    #[test]
+    fn grad_norm_euclidean() {
+        assert!((grad_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(grad_norm(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        let mut acc = ChunkAccumulator::new(2);
+        acc.add(0.0, &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no chunks")]
+    fn empty_accumulator_panics() {
+        ChunkAccumulator::new(1).finish();
+    }
+}

@@ -1,0 +1,13 @@
+//! MLMC machinery: optimal per-level sample allocation (paper Appendix A),
+//! the Table-1 theory formulas, and the empirical estimators behind the
+//! Figure-1 assumption checks.
+
+pub mod allocation;
+pub mod assumptions;
+pub mod estimator;
+pub mod theory;
+
+pub use allocation::LevelAllocation;
+pub use assumptions::{fit_decay_rate, DecaySeries};
+pub use estimator::MlmcEstimator;
+pub use theory::TheoryRow;

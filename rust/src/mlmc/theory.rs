@@ -1,0 +1,198 @@
+//! Table 1 of the paper as executable formulas: convergence-rate,
+//! standard-complexity and parallel-complexity leading terms for the three
+//! methods, plus the closed-form constants of Theorem 1.
+//!
+//! These are used by `examples/complexity_table.rs` and
+//! `rust/benches/table1.rs` to print the theory column next to the
+//! measured column.
+
+/// The three optimization methods compared throughout the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    Naive,
+    Mlmc,
+    Dmlmc,
+}
+
+impl MethodKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodKind::Naive => "Naive SGD",
+            MethodKind::Mlmc => "MLMC + SGD",
+            MethodKind::Dmlmc => "Delayed MLMC + SGD (ours)",
+        }
+    }
+}
+
+/// One row of Table 1, instantiated for concrete `(T, N, M, lmax, b, c, d)`.
+#[derive(Debug, Clone)]
+pub struct TheoryRow {
+    pub method: MethodKind,
+    /// Leading convergence-rate term (without constants):
+    /// naive/MLMC `1/T + (M/N)(·)`, delayed `logT/T · lmax + (M/N) lmax`.
+    pub convergence: f64,
+    /// Total standard complexity over T iterations, in work units.
+    pub complexity: f64,
+    /// Total parallel complexity over T iterations, in depth units.
+    pub parallel: f64,
+}
+
+/// Parameters of the comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct TheoryParams {
+    pub t: f64,
+    pub n: f64,
+    pub m: f64,
+    pub lmax: usize,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+/// `sum_{l=0}^{lmax} 2^{a l}` (the recurring geometric sums of the paper).
+pub fn geom_sum(a: f64, lmax: usize) -> f64 {
+    (0..=lmax).map(|l| 2f64.powf(a * l as f64)).sum()
+}
+
+impl TheoryRow {
+    pub fn compute(method: MethodKind, p: &TheoryParams) -> TheoryRow {
+        let l = p.lmax as f64;
+        let two_cl = 2f64.powf(p.c * l);
+        match method {
+            MethodKind::Naive => TheoryRow {
+                method,
+                convergence: 1.0 / p.t + (p.m / p.n) * (l + 1.0),
+                complexity: p.n * p.t * two_cl,
+                parallel: p.t * two_cl,
+            },
+            MethodKind::Mlmc => TheoryRow {
+                method,
+                convergence: 1.0 / p.t + p.m / p.n,
+                complexity: p.n * p.t,
+                parallel: p.t * two_cl,
+            },
+            MethodKind::Dmlmc => TheoryRow {
+                method,
+                convergence: (p.t.ln() / p.t + p.m / p.n) * (l + 1.0),
+                complexity: p.n * p.t,
+                parallel: p.t * geom_sum(p.c - p.d, p.lmax),
+            },
+        }
+    }
+
+    /// All three rows.
+    pub fn table(p: &TheoryParams) -> Vec<TheoryRow> {
+        [MethodKind::Naive, MethodKind::Mlmc, MethodKind::Dmlmc]
+            .into_iter()
+            .map(|m| TheoryRow::compute(m, p))
+            .collect()
+    }
+}
+
+/// `M'` of Theorem 1: the MLMC gradient-variance bound
+/// `M/N (sum 2^{-(b+c)l/2})(sum 2^{-(b-c)l/2})`.
+pub fn m_prime(m: f64, n: f64, b: f64, c: f64, lmax: usize) -> f64 {
+    (m / n) * geom_sum(-(b + c) / 2.0, lmax) * geom_sum(-(b - c) / 2.0, lmax)
+}
+
+/// Theorem 1's step-size ceiling:
+/// `alpha_0 <= min(1/(8L), beta/L)` with
+/// `beta = 1 / (12 (lmax+1) (sum_l 2^{-dl}) log(2T+1))`.
+pub fn theorem1_step_size(l_smooth: f64, d: f64, lmax: usize, t: usize) -> f64 {
+    let geo_inf = 1.0 / (1.0 - 2f64.powf(-d)); // sum_{l=0}^inf 2^{-dl}
+    let beta = 1.0
+        / (12.0 * (lmax as f64 + 1.0) * geo_inf * (2.0 * t as f64 + 1.0).ln());
+    (1.0 / (8.0 * l_smooth)).min(beta / l_smooth)
+}
+
+/// Theorem 1's bound on the average squared gradient norm after T steps.
+pub fn theorem1_bound(
+    f0_minus_finf: f64,
+    alpha0: f64,
+    t: usize,
+    m_prime: f64,
+    lmax: usize,
+) -> f64 {
+    8.0 * f0_minus_finf / (alpha0 * t as f64)
+        + (24.0 * lmax as f64 + 24.5) * m_prime
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TheoryParams {
+        TheoryParams {
+            t: 1000.0,
+            n: 1024.0,
+            m: 1.0,
+            lmax: 6,
+            b: 1.8,
+            c: 1.0,
+            d: 1.0,
+        }
+    }
+
+    #[test]
+    fn geom_sum_closed_form() {
+        assert!((geom_sum(0.0, 6) - 7.0).abs() < 1e-12);
+        assert!((geom_sum(1.0, 2) - 7.0).abs() < 1e-12); // 1+2+4
+        assert!((geom_sum(-1.0, 2) - 1.75).abs() < 1e-12); // 1+1/2+1/4
+    }
+
+    #[test]
+    fn table1_ordering_standard_complexity() {
+        // naive >> mlmc == dmlmc in standard complexity.
+        let rows = TheoryRow::table(&params());
+        assert!(rows[0].complexity > 10.0 * rows[1].complexity);
+        assert_eq!(rows[1].complexity, rows[2].complexity);
+    }
+
+    #[test]
+    fn table1_ordering_parallel_complexity() {
+        // naive == mlmc >> dmlmc in parallel complexity (c = d = 1 gives
+        // the lmax+1 vs 2^lmax gap).
+        let rows = TheoryRow::table(&params());
+        assert_eq!(rows[0].parallel, rows[1].parallel);
+        let speedup = rows[1].parallel / rows[2].parallel;
+        // 2^6 / 7 ≈ 9.1
+        assert!(speedup > 8.0 && speedup < 10.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn dmlmc_parallel_regimes() {
+        // c < d: O(1) per step; c > d: still exponential in lmax.
+        let mut p = params();
+        p.d = 2.0;
+        let fast = TheoryRow::compute(MethodKind::Dmlmc, &p).parallel / p.t;
+        p.d = 0.5;
+        let slow = TheoryRow::compute(MethodKind::Dmlmc, &p).parallel / p.t;
+        assert!(fast < 2.1, "c<d per-step cost should be O(1): {fast}");
+        assert!(slow > 10.0, "c>d per-step cost grows: {slow}");
+    }
+
+    #[test]
+    fn m_prime_shrinks_with_n() {
+        let a = m_prime(1.0, 1024.0, 1.8, 1.0, 6);
+        let b = m_prime(1.0, 4096.0, 1.8, 1.0, 6);
+        assert!((a / b - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem1_step_size_decreases_with_t() {
+        let a = theorem1_step_size(10.0, 1.0, 6, 100);
+        let b = theorem1_step_size(10.0, 1.0, 6, 10_000);
+        assert!(b < a);
+        assert!(a <= 1.0 / 80.0 + 1e-12);
+    }
+
+    #[test]
+    fn theorem1_bound_decays_then_floors() {
+        let mp = m_prime(1.0, 1024.0, 1.8, 1.0, 6);
+        let early = theorem1_bound(1.0, 1e-3, 100, mp, 6);
+        let late = theorem1_bound(1.0, 1e-3, 100_000, mp, 6);
+        assert!(late < early);
+        // floor = (24 lmax + 24.5) M'
+        assert!(late >= (24.0 * 6.0 + 24.5) * mp);
+    }
+}

@@ -1,0 +1,219 @@
+//! First-order optimizers over the flat parameter vector.
+//!
+//! The paper's analysis is for constant-step SGD (Theorem 1); SGD with
+//! momentum and Adam are provided for the extension experiments and
+//! ablations. All optimizers mutate the parameter vector in place and are
+//! deterministic.
+
+/// Common interface: one update from a gradient.
+pub trait Optimizer {
+    /// Apply one step, mutating `params` given `grad`.
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+
+    /// Current learning rate (after any schedule).
+    fn lr(&self) -> f64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD: `x <- x - alpha g` (Algorithm 1's update).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Self {
+        assert!(lr > 0.0, "learning rate must be positive");
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len(), "param/grad dim mismatch");
+        let lr = self.lr as f32;
+        for (p, &g) in params.iter_mut().zip(grad) {
+            *p -= lr * g;
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// SGD with classical (heavy-ball) momentum.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    pub lr: f64,
+    pub beta: f64,
+    velocity: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(lr: f64, beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
+        Momentum {
+            lr,
+            beta,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len(), "param/grad dim mismatch");
+        if self.velocity.is_empty() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        let (lr, beta) = (self.lr as f32, self.beta as f32);
+        for ((p, v), &g) in params.iter_mut().zip(&mut self.velocity).zip(grad) {
+            *v = beta * *v + g;
+            *p -= lr * *v;
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// Adam (Kingma & Ba 2015) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len(), "param/grad dim mismatch");
+        if self.m.is_empty() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+        }
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1).powi(self.t as i32);
+        let bc2 = 1.0 - (self.beta2).powi(self.t as i32);
+        let lr = self.lr;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] as f64 / bc1;
+            let vhat = self.v[i] as f64 / bc2;
+            params[i] -= (lr * mhat / (vhat.sqrt() + self.eps)) as f32;
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Build an optimizer by name (config/CLI plumbing).
+pub fn by_name(name: &str, lr: f64) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Some(Box::new(Sgd::new(lr))),
+        "momentum" => Some(Box::new(Momentum::new(lr, 0.9))),
+        "adam" => Some(Box::new(Adam::new(lr))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic bowl f(x) = 0.5 ||x||^2, grad = x.
+    fn converges(opt: &mut dyn Optimizer, steps: usize) -> f64 {
+        let mut x = vec![1.0f32, -2.0, 0.5];
+        for _ in 0..steps {
+            let g = x.clone();
+            opt.step(&mut x, &g);
+        }
+        x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn sgd_step_formula() {
+        let mut x = vec![1.0f32, 2.0];
+        Sgd::new(0.5).step(&mut x, &[0.2, -0.4]);
+        assert_eq!(x, vec![0.9, 2.2]);
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        assert!(converges(&mut Sgd::new(0.1), 200) < 1e-6);
+        assert!(converges(&mut Momentum::new(0.05, 0.9), 400) < 1e-6);
+        assert!(converges(&mut Adam::new(0.05), 800) < 1e-3);
+    }
+
+    #[test]
+    fn momentum_accelerates_vs_sgd() {
+        let slow = converges(&mut Sgd::new(0.01), 100);
+        let fast = converges(&mut Momentum::new(0.01, 0.9), 100);
+        assert!(fast < slow, "momentum {fast} vs sgd {slow}");
+    }
+
+    #[test]
+    fn adam_invariant_to_grad_scale() {
+        // Adam's first step is ~lr * sign(g), independent of |g|.
+        let mut a = Adam::new(0.1);
+        let mut b = Adam::new(0.1);
+        let mut xa = vec![0.0f32];
+        let mut xb = vec![0.0f32];
+        a.step(&mut xa, &[1e-3]);
+        b.step(&mut xb, &[1e3]);
+        assert!((xa[0] - xb[0]).abs() < 1e-4, "{} vs {}", xa[0], xb[0]);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(by_name("sgd", 0.1).is_some());
+        assert!(by_name("momentum", 0.1).is_some());
+        assert!(by_name("adam", 0.1).is_some());
+        assert!(by_name("lbfgs", 0.1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        Sgd::new(0.1).step(&mut [0.0, 1.0], &[1.0]);
+    }
+}

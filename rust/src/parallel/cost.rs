@@ -1,0 +1,118 @@
+//! Work/depth cost model (paper Assumption 1).
+//!
+//! One level-`l` gradient sample costs `2^{c l}` work units and — being a
+//! sequential simulation — also `2^{c l}` *depth* (parallel complexity).
+//! Samples within a level and different levels are mutually independent,
+//! so on an unbounded machine a step's parallel complexity is the **max**
+//! depth over the level jobs it runs, while its standard complexity is the
+//! **sum** of work over all samples (Table 1's accounting).
+
+/// Cost model parameterised by the cost-growth exponent `c`.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub c: f64,
+}
+
+impl CostModel {
+    pub fn new(c: f64) -> Self {
+        CostModel { c }
+    }
+
+    /// Work (= depth) units of ONE level-`l` coupled gradient sample.
+    pub fn sample_cost(&self, level: usize) -> f64 {
+        2f64.powf(self.c * level as f64)
+    }
+
+    /// Standard complexity of refreshing level `l` with `n_l` samples.
+    pub fn level_work(&self, level: usize, n_l: usize) -> f64 {
+        n_l as f64 * self.sample_cost(level)
+    }
+}
+
+/// Accumulated cost of one SGD step.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepCost {
+    /// Total work units (standard complexity).
+    pub work: f64,
+    /// Critical-path depth units (parallel complexity).
+    pub depth: f64,
+}
+
+impl StepCost {
+    /// Cost of a step that refreshes `jobs = [(level, n_samples)]`
+    /// concurrently: work adds up, depth is the max over jobs.
+    pub fn from_jobs(model: &CostModel, jobs: &[(usize, usize)]) -> StepCost {
+        let mut work = 0.0;
+        let mut depth: f64 = 0.0;
+        for &(level, n) in jobs {
+            work += model.level_work(level, n);
+            depth = depth.max(model.sample_cost(level));
+        }
+        StepCost { work, depth }
+    }
+
+    pub fn add(&mut self, other: StepCost) {
+        self.work += other.work;
+        self.depth += other.depth;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_cost_exponential() {
+        let m = CostModel::new(1.0);
+        assert_eq!(m.sample_cost(0), 1.0);
+        assert_eq!(m.sample_cost(6), 64.0);
+        let m2 = CostModel::new(2.0);
+        assert_eq!(m2.sample_cost(3), 64.0);
+    }
+
+    #[test]
+    fn step_cost_sum_vs_max() {
+        let m = CostModel::new(1.0);
+        let cost = StepCost::from_jobs(&m, &[(0, 100), (3, 10), (6, 1)]);
+        assert_eq!(cost.work, 100.0 + 80.0 + 64.0);
+        assert_eq!(cost.depth, 64.0); // max depth: the level-6 job
+    }
+
+    #[test]
+    fn empty_step_is_free() {
+        let m = CostModel::new(1.0);
+        let cost = StepCost::from_jobs(&m, &[]);
+        assert_eq!(cost, StepCost::default());
+    }
+
+    #[test]
+    fn accumulate() {
+        let mut total = StepCost::default();
+        total.add(StepCost { work: 2.0, depth: 1.0 });
+        total.add(StepCost { work: 3.0, depth: 4.0 });
+        assert_eq!(total.work, 5.0);
+        assert_eq!(total.depth, 5.0); // depths add ACROSS steps (sequential)
+    }
+
+    #[test]
+    fn naive_vs_dmlmc_average_depth() {
+        // Average per-step depth of the delayed schedule (refresh level l
+        // every 2^l steps, c = d = 1) over a long horizon approaches
+        // sum_l 2^{(c-d)l} * ... — concretely, far below naive's 2^lmax.
+        let m = CostModel::new(1.0);
+        let lmax = 6usize;
+        let t_total = 1 << 10;
+        let mut dmlmc_depth = 0.0;
+        for t in 0..t_total {
+            let jobs: Vec<(usize, usize)> = (0..=lmax)
+                .filter(|&l| t % (1usize << l) == 0)
+                .map(|l| (l, 1))
+                .collect();
+            dmlmc_depth += StepCost::from_jobs(&m, &jobs).depth;
+        }
+        let naive_depth = t_total as f64 * m.sample_cost(lmax);
+        let speedup = naive_depth / dmlmc_depth;
+        // theory: 64 / (sum over refreshed maxima) ~ 64 / ~3 ≈ 21; allow wide band
+        assert!(speedup > 10.0, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,8 @@
+//! PRAM-style cost accounting — the "massively parallel computer" of the
+//! paper, as a model rather than actual hardware (DESIGN.md §2).
+
+pub mod cost;
+pub mod pram;
+
+pub use cost::{CostModel, StepCost};
+pub use pram::PramMachine;

@@ -1,0 +1,142 @@
+//! Finite-processor PRAM simulation (work-time scheduling).
+//!
+//! The paper's parallel complexity assumes an unbounded machine; Brent's
+//! theorem gives the finite-`P` execution time
+//! `T_P <= work / P + depth`. This module simulates greedy list
+//! scheduling of level jobs onto `P` processors so the crossover behaviour
+//! (how many processors before DMLMC's advantage saturates) can be swept —
+//! used by `examples/complexity_table.rs` and the ablation bench.
+
+use super::cost::CostModel;
+
+/// A unit of schedulable work: one level refresh (N_l parallel samples,
+/// each of depth `2^{c l}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelJob {
+    pub level: usize,
+    pub n_samples: usize,
+}
+
+/// Greedy work-time scheduler over `P` identical processors.
+#[derive(Debug, Clone, Copy)]
+pub struct PramMachine {
+    pub processors: usize,
+    pub model: CostModel,
+}
+
+impl PramMachine {
+    pub fn new(processors: usize, model: CostModel) -> Self {
+        assert!(processors > 0, "need at least one processor");
+        PramMachine { processors, model }
+    }
+
+    /// Makespan of one SGD step that runs `jobs` concurrently.
+    ///
+    /// Each sample is an indivisible sequential task of length
+    /// `2^{c l}`; samples are independent. Greedy longest-processing-time
+    /// scheduling is within 4/3 of optimal; exactness is irrelevant here —
+    /// we need the *scaling*, which LPT preserves.
+    pub fn step_makespan(&self, jobs: &[LevelJob]) -> f64 {
+        // Expand into task lengths, longest first.
+        let mut tasks: Vec<f64> = Vec::new();
+        for j in jobs {
+            let len = self.model.sample_cost(j.level);
+            tasks.extend(std::iter::repeat(len).take(j.n_samples));
+        }
+        tasks.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut loads = vec![0.0f64; self.processors];
+        for t in tasks {
+            // assign to least-loaded processor
+            let (idx, _) = loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            loads[idx] += t;
+        }
+        loads.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Brent's-theorem lower bound for the same step.
+    pub fn brent_bound(&self, jobs: &[LevelJob]) -> f64 {
+        let work: f64 = jobs
+            .iter()
+            .map(|j| self.model.level_work(j.level, j.n_samples))
+            .sum();
+        let depth = jobs
+            .iter()
+            .map(|j| self.model.sample_cost(j.level))
+            .fold(0.0, f64::max);
+        (work / self.processors as f64).max(depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(p: usize) -> PramMachine {
+        PramMachine::new(p, CostModel::new(1.0))
+    }
+
+    #[test]
+    fn single_processor_is_total_work() {
+        let m = machine(1);
+        let jobs = [LevelJob { level: 2, n_samples: 3 }];
+        assert_eq!(m.step_makespan(&jobs), 12.0);
+    }
+
+    #[test]
+    fn unbounded_processors_hit_depth() {
+        let m = machine(10_000);
+        let jobs = [
+            LevelJob { level: 6, n_samples: 2 },
+            LevelJob { level: 0, n_samples: 500 },
+        ];
+        assert_eq!(m.step_makespan(&jobs), 64.0);
+    }
+
+    #[test]
+    fn makespan_within_brent_bounds() {
+        let m = machine(7);
+        let jobs = [
+            LevelJob { level: 0, n_samples: 40 },
+            LevelJob { level: 2, n_samples: 11 },
+            LevelJob { level: 5, n_samples: 2 },
+        ];
+        let ms = m.step_makespan(&jobs);
+        let lb = m.brent_bound(&jobs);
+        assert!(ms >= lb - 1e-9, "makespan {ms} < lower bound {lb}");
+        assert!(ms <= 2.0 * lb, "makespan {ms} not within 2x of bound {lb}");
+    }
+
+    #[test]
+    fn more_processors_never_slower() {
+        let jobs = [
+            LevelJob { level: 1, n_samples: 9 },
+            LevelJob { level: 3, n_samples: 4 },
+        ];
+        let mut prev = f64::INFINITY;
+        for p in [1, 2, 4, 8, 16, 64] {
+            let ms = machine(p).step_makespan(&jobs);
+            assert!(ms <= prev + 1e-9, "P={p}: {ms} > {prev}");
+            prev = ms;
+        }
+    }
+
+    #[test]
+    fn saturation_at_depth() {
+        // Beyond enough processors the makespan can't fall below the
+        // longest single task — the parallel-complexity floor the paper's
+        // delayed estimator attacks.
+        let jobs = [LevelJob { level: 4, n_samples: 10 }];
+        let depth = 16.0;
+        assert_eq!(machine(100_000).step_makespan(&jobs), depth);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_processors_panics() {
+        PramMachine::new(0, CostModel::new(1.0));
+    }
+}

@@ -1,0 +1,166 @@
+//! Brownian-increment batches with MLMC stream addressing and coupling.
+//!
+//! The MLMC estimator needs, per `(SGD step, level, chunk)`, a fresh batch
+//! of increments `dW[batch, n_steps]` with `dW ~ N(0, dt)`, where the
+//! *fine* and *coarse* grids of one coupled sample share a Brownian path.
+//! Sharing is by construction: the coarse increments are the pairwise sums
+//! of the fine ones (done inside the lowered HLO / the native engine), so
+//! this module only ever produces fine-grid increments.
+//!
+//! Stream addressing (`stream = hash(step, level, chunk, purpose)`) keeps
+//! every batch independent yet fully reproducible, matching footnote 7 of
+//! the paper: refresh samples are independent across time and levels.
+
+use super::normal::NormalStream;
+
+/// Purpose tag mixed into the stream id, so e.g. evaluation batches can
+/// never collide with gradient batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Purpose {
+    Grad,
+    Eval,
+    Diagnostic,
+}
+
+impl Purpose {
+    fn tag(self) -> u64 {
+        match self {
+            Purpose::Grad => 0x01,
+            Purpose::Eval => 0x02,
+            Purpose::Diagnostic => 0x03,
+        }
+    }
+}
+
+/// Factory for Brownian increment batches, keyed by a run seed.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownianSource {
+    seed: u64,
+}
+
+impl BrownianSource {
+    pub fn new(seed: u64) -> Self {
+        BrownianSource { seed }
+    }
+
+    /// Stable stream id for `(purpose, step, level, chunk)`.
+    ///
+    /// SplitMix64-style mixing keeps distinct coordinates statistically
+    /// independent even though they are structured (small integers).
+    fn stream_id(purpose: Purpose, step: u64, level: u32, chunk: u32) -> u64 {
+        let mut x = purpose.tag()
+            ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ ((level as u64) << 48)
+            ^ ((chunk as u64) << 32);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        x
+    }
+
+    /// Row-major `dW[batch, n_steps]` with `dW ~ N(0, dt)` on the fine
+    /// grid of the addressed batch.
+    pub fn increments(
+        &self,
+        purpose: Purpose,
+        step: u64,
+        level: u32,
+        chunk: u32,
+        batch: usize,
+        n_steps: usize,
+        dt: f64,
+    ) -> Vec<f32> {
+        let stream = Self::stream_id(purpose, step, level, chunk);
+        let ns = NormalStream::new(self.seed, stream);
+        let mut out = vec![0.0f32; batch * n_steps];
+        ns.fill(&mut out);
+        let scale = (dt as f32).sqrt();
+        for v in &mut out {
+            *v *= scale;
+        }
+        out
+    }
+
+    /// Pairwise-sum fine increments onto the next-coarser grid
+    /// (row-major `[batch, n]` -> `[batch, n/2]`) — the MLMC coupling,
+    /// mirrored from `python/compile/kernels/ref.py::coarsen_increments`.
+    pub fn coarsen(dw_fine: &[f32], batch: usize, n_fine: usize) -> Vec<f32> {
+        assert_eq!(dw_fine.len(), batch * n_fine, "shape mismatch");
+        assert!(n_fine % 2 == 0, "fine grid must have even #steps");
+        let n_coarse = n_fine / 2;
+        let mut out = vec![0.0f32; batch * n_coarse];
+        for b in 0..batch {
+            let row = &dw_fine[b * n_fine..(b + 1) * n_fine];
+            let dst = &mut out[b * n_coarse..(b + 1) * n_coarse];
+            for (k, d) in dst.iter_mut().enumerate() {
+                *d = row[2 * k] + row[2 * k + 1];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_across_instances() {
+        let a = BrownianSource::new(5).increments(Purpose::Grad, 10, 2, 0, 4, 8, 0.125);
+        let b = BrownianSource::new(5).increments(Purpose::Grad, 10, 2, 0, 4, 8, 0.125);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distinct_addresses_give_distinct_batches() {
+        let src = BrownianSource::new(5);
+        let base = src.increments(Purpose::Grad, 10, 2, 0, 4, 8, 0.125);
+        for other in [
+            src.increments(Purpose::Grad, 11, 2, 0, 4, 8, 0.125),
+            src.increments(Purpose::Grad, 10, 3, 0, 4, 8, 0.125),
+            src.increments(Purpose::Grad, 10, 2, 1, 4, 8, 0.125),
+            src.increments(Purpose::Eval, 10, 2, 0, 4, 8, 0.125),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    #[test]
+    fn variance_scales_with_dt() {
+        let src = BrownianSource::new(0);
+        let dt = 0.01;
+        let v = src.increments(Purpose::Grad, 0, 0, 0, 1000, 64, dt);
+        let var =
+            v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!((var - dt).abs() < dt * 0.05, "var {var} vs dt {dt}");
+    }
+
+    #[test]
+    fn coarsen_sums_pairs_and_preserves_total() {
+        let dw = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let c = BrownianSource::coarsen(&dw, 2, 4);
+        assert_eq!(c, vec![3.0, 7.0, 30.0, 70.0]);
+        // per-row totals preserved
+        assert_eq!(c[0] + c[1], dw[..4].iter().sum::<f32>());
+    }
+
+    #[test]
+    fn coarsened_variance_doubles() {
+        // Var(dW_coarse) = 2 dt — Brownian increments add in variance.
+        let src = BrownianSource::new(3);
+        let dt = 0.05;
+        let fine = src.increments(Purpose::Grad, 1, 1, 0, 2000, 16, dt);
+        let coarse = BrownianSource::coarsen(&fine, 2000, 16);
+        let var = coarse.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / coarse.len() as f64;
+        assert!((var - 2.0 * dt).abs() < 2.0 * dt * 0.05, "var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn coarsen_rejects_odd_grid() {
+        BrownianSource::coarsen(&[1.0, 2.0, 3.0], 1, 3);
+    }
+}

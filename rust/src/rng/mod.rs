@@ -1,0 +1,18 @@
+//! Counter-based random number generation for reproducible, splittable
+//! Monte Carlo streams.
+//!
+//! The coordinator needs independent Brownian-increment batches per
+//! `(SGD step, level, chunk)` that are (a) reproducible across runs and
+//! backends, (b) order-independent — a level refreshed concurrently must
+//! see the same numbers as one refreshed sequentially. A counter-based
+//! generator (Philox4x32-10, Salmon et al. 2011 — the same family JAX's
+//! `threefry`/`rbg` PRNGs come from) gives exactly that: the stream is a
+//! pure function of `(key, counter)`.
+
+pub mod brownian;
+pub mod normal;
+pub mod philox;
+
+pub use brownian::BrownianSource;
+pub use normal::NormalStream;
+pub use philox::Philox4x32;

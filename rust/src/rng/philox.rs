@@ -1,0 +1,123 @@
+//! Philox4x32-10 counter-based PRNG (Salmon et al., SC'11).
+//!
+//! A pure function `(key: 2×u32, counter: 4×u32) -> 4×u32` passing
+//! BigCrush; 10 rounds of multiply-hi/lo mixing. Chosen over a stateful
+//! generator because MLMC needs *splittable* streams addressed by
+//! `(step, level, chunk, lane)` — see [`crate::rng`].
+
+const PHILOX_M0: u32 = 0xD251_1F53;
+const PHILOX_M1: u32 = 0xCD9E_8D57;
+const PHILOX_W0: u32 = 0x9E37_79B9;
+const PHILOX_W1: u32 = 0xBB67_AE85;
+const ROUNDS: usize = 10;
+
+/// Stateless Philox4x32-10 block function with a fixed key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Philox4x32 {
+    key: [u32; 2],
+}
+
+impl Philox4x32 {
+    /// Build a generator from a 64-bit seed (split into the 2×u32 key).
+    pub fn new(seed: u64) -> Self {
+        Philox4x32 {
+            key: [seed as u32, (seed >> 32) as u32],
+        }
+    }
+
+    /// One Philox block: encrypt a 128-bit counter into 4 random u32s.
+    #[inline]
+    pub fn block(&self, counter: [u32; 4]) -> [u32; 4] {
+        let mut ctr = counter;
+        let mut key = self.key;
+        for _ in 0..ROUNDS {
+            ctr = round(ctr, key);
+            key[0] = key[0].wrapping_add(PHILOX_W0);
+            key[1] = key[1].wrapping_add(PHILOX_W1);
+        }
+        ctr
+    }
+
+    /// Convenience: counter assembled from two u64 coordinates.
+    #[inline]
+    pub fn block_at(&self, hi: u64, lo: u64) -> [u32; 4] {
+        self.block([
+            lo as u32,
+            (lo >> 32) as u32,
+            hi as u32,
+            (hi >> 32) as u32,
+        ])
+    }
+}
+
+#[inline]
+fn round(ctr: [u32; 4], key: [u32; 2]) -> [u32; 4] {
+    let p0 = (PHILOX_M0 as u64).wrapping_mul(ctr[0] as u64);
+    let p1 = (PHILOX_M1 as u64).wrapping_mul(ctr[2] as u64);
+    let hi0 = (p0 >> 32) as u32;
+    let lo0 = p0 as u32;
+    let hi1 = (p1 >> 32) as u32;
+    let lo1 = p1 as u32;
+    [hi1 ^ ctr[1] ^ key[0], lo1, hi0 ^ ctr[3] ^ key[1], lo0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_zero_key_zero_ctr() {
+        // Reference value from the Random123 distribution (philox4x32-10,
+        // key = {0,0}, ctr = {0,0,0,0}).
+        let g = Philox4x32::new(0);
+        assert_eq!(
+            g.block([0, 0, 0, 0]),
+            [0x6627_e8d5, 0xe169_c58d, 0xbc57_ac4c, 0x9b00_dbd8]
+        );
+    }
+
+    #[test]
+    fn known_answer_ff_pattern() {
+        // Cross-checked against an independent (python, bignum) Philox
+        // implementation: all-ones key and counter.
+        let g = Philox4x32 {
+            key: [0xffff_ffff, 0xffff_ffff],
+        };
+        assert_eq!(
+            g.block([0xffff_ffff; 4]),
+            [0x408f_276d, 0x41c8_3b0e, 0xa20b_c7c6, 0x6d54_51fd]
+        );
+    }
+
+    #[test]
+    fn deterministic_and_key_sensitive() {
+        let a = Philox4x32::new(42).block_at(1, 2);
+        let b = Philox4x32::new(42).block_at(1, 2);
+        let c = Philox4x32::new(43).block_at(1, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn counter_sensitivity() {
+        let g = Philox4x32::new(7);
+        assert_ne!(g.block_at(0, 0), g.block_at(0, 1));
+        assert_ne!(g.block_at(0, 1), g.block_at(1, 0));
+    }
+
+    #[test]
+    fn output_is_well_distributed() {
+        // Cheap uniformity check: mean of 4096 u32 lanes ~ 2^31.
+        let g = Philox4x32::new(123);
+        let mut sum = 0u64;
+        let n = 1024;
+        for i in 0..n {
+            for v in g.block_at(0, i) {
+                sum += v as u64;
+            }
+        }
+        let mean = sum as f64 / (4 * n) as f64;
+        let expected = (u32::MAX as f64) / 2.0;
+        assert!((mean - expected).abs() < expected * 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,284 @@
+//! [`GradBackend`] — the coordinator's view of "something that can compute
+//! level gradients". Two implementations:
+//!
+//! * [`XlaRuntime`](super::XlaRuntime) — AOT HLO artifacts on PJRT (the
+//!   production path, Python-free at run time);
+//! * [`NativeBackend`] — the pure-rust [`crate::engine`] (verification,
+//!   CI without artifacts, and the threaded-dispatch demonstrations).
+//!
+//! All `*_chunk` methods operate on ONE chunk whose batch size the backend
+//! dictates (`grad_chunk(level)` etc.); the coordinator accumulates chunks
+//! to reach the `N_l` allocation.
+
+use anyhow::Result;
+
+use crate::engine;
+use crate::hedging::Problem;
+
+/// Gradient/loss execution interface (one chunk at a time).
+pub trait GradBackend {
+    fn n_params(&self) -> usize;
+
+    fn problem(&self) -> &Problem;
+
+    /// Chunk batch for `grad_coupled` at `level`.
+    fn grad_chunk(&self, level: usize) -> usize;
+
+    /// Chunk batch for the naive (finest-grid) gradient.
+    fn naive_chunk(&self) -> usize;
+
+    /// Chunk batch for held-out loss evaluation.
+    fn eval_chunk(&self) -> usize;
+
+    /// Chunk batch for the per-sample diagnostics (Figure 1).
+    fn diag_chunk(&self) -> usize;
+
+    /// One chunk of the coupled objective `Delta_l F` value-and-grad.
+    /// `dw` is row-major `[grad_chunk(level), n_steps(level)]` fine-grid
+    /// increments. Returns `(loss_delta, grad[n_params])`.
+    fn grad_coupled_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<(f64, Vec<f32>)>;
+
+    /// One chunk of the naive finest-grid value-and-grad.
+    fn grad_naive_chunk(&self, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)>;
+
+    /// One chunk of the held-out loss at the finest grid.
+    fn loss_eval_chunk(&self, params: &[f32], dw: &[f32]) -> Result<f64>;
+
+    /// Per-sample `||grad Delta_l F_hat||^2` (Figure 1 left).
+    fn grad_norms_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Per-sample pathwise smoothness between two parameter vectors
+    /// (Figure 1 right).
+    fn smoothness_chunk(
+        &self,
+        level: usize,
+        params1: &[f32],
+        params2: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Chunk-size policy shared with `python/compile/problem.py::GRAD_CHUNK`.
+/// Sized so each PJRT execution is compute- rather than dispatch-bound
+/// (B*n = 512 rows uniformly for levels <= 4; see EXPERIMENTS.md §Perf).
+pub fn default_grad_chunk(level: usize) -> usize {
+    match level {
+        0 => 128,
+        1 => 64,
+        2 => 32,
+        3 => 16,
+        _ => 8,
+    }
+}
+
+/// Pure-rust backend over [`crate::engine`].
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    problem: Problem,
+}
+
+impl NativeBackend {
+    pub fn new(problem: Problem) -> Self {
+        NativeBackend { problem }
+    }
+}
+
+impl GradBackend for NativeBackend {
+    fn n_params(&self) -> usize {
+        engine::N_PARAMS
+    }
+
+    fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    fn grad_chunk(&self, level: usize) -> usize {
+        default_grad_chunk(level)
+    }
+
+    fn naive_chunk(&self) -> usize {
+        8
+    }
+
+    fn eval_chunk(&self) -> usize {
+        256
+    }
+
+    fn diag_chunk(&self) -> usize {
+        32
+    }
+
+    fn grad_coupled_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<(f64, Vec<f32>)> {
+        let batch = self.grad_chunk(level);
+        Ok(engine::coupled_value_and_grad(
+            params,
+            dw,
+            batch,
+            level,
+            &self.problem,
+        ))
+    }
+
+    fn grad_naive_chunk(&self, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let n = self.problem.n_steps(self.problem.lmax);
+        Ok(engine::value_and_grad(
+            params,
+            dw,
+            self.naive_chunk(),
+            n,
+            &self.problem,
+        ))
+    }
+
+    fn loss_eval_chunk(&self, params: &[f32], dw: &[f32]) -> Result<f64> {
+        let n = self.problem.n_steps(self.problem.lmax);
+        Ok(engine::loss_only(
+            params,
+            dw,
+            self.eval_chunk(),
+            n,
+            &self.problem,
+        ))
+    }
+
+    fn grad_norms_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = self.problem.n_steps(level);
+        let batch = self.diag_chunk();
+        anyhow::ensure!(dw.len() == batch * n, "diag dw shape mismatch");
+        let mut out = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let row = &dw[b * n..(b + 1) * n];
+            let (_, g) =
+                engine::coupled_value_and_grad(params, row, 1, level, &self.problem);
+            out.push(g.iter().map(|&x| x * x).sum::<f32>());
+        }
+        Ok(out)
+    }
+
+    fn smoothness_chunk(
+        &self,
+        level: usize,
+        params1: &[f32],
+        params2: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = self.problem.n_steps(level);
+        let batch = self.diag_chunk();
+        anyhow::ensure!(dw.len() == batch * n, "diag dw shape mismatch");
+        let dx = params1
+            .iter()
+            .zip(params2)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            .max(1e-12);
+        let mut out = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let row = &dw[b * n..(b + 1) * n];
+            let (_, g1) =
+                engine::coupled_value_and_grad(params1, row, 1, level, &self.problem);
+            let (_, g2) =
+                engine::coupled_value_and_grad(params2, row, 1, level, &self.problem);
+            let dg = g1
+                .iter()
+                .zip(&g2)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            out.push((dg / dx) as f32);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mlp::init_params;
+    use crate::rng::{brownian::Purpose, BrownianSource};
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(Problem::default())
+    }
+
+    fn dw_for(b: &NativeBackend, level: usize, batch: usize) -> Vec<f32> {
+        let n = b.problem().n_steps(level);
+        BrownianSource::new(0).increments(
+            Purpose::Grad,
+            0,
+            level as u32,
+            0,
+            batch,
+            n,
+            b.problem().dt(level),
+        )
+    }
+
+    #[test]
+    fn grad_chunk_policy_matches_python() {
+        let b = backend();
+        assert_eq!(b.grad_chunk(0), 128);
+        assert_eq!(b.grad_chunk(1), 64);
+        assert_eq!(b.grad_chunk(2), 32);
+        assert_eq!(b.grad_chunk(3), 16);
+        for l in 4..=6 {
+            assert_eq!(b.grad_chunk(l), 8);
+        }
+    }
+
+    #[test]
+    fn grad_coupled_has_right_dim() {
+        let b = backend();
+        let params = init_params(0);
+        let dw = dw_for(&b, 1, b.grad_chunk(1));
+        let (loss, grad) = b.grad_coupled_chunk(1, &params, &dw).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(grad.len(), b.n_params());
+        assert!(grad.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn grad_norms_positive_and_sized() {
+        let b = backend();
+        let params = init_params(0);
+        let dw = dw_for(&b, 2, b.diag_chunk());
+        let norms = b.grad_norms_chunk(2, &params, &dw).unwrap();
+        assert_eq!(norms.len(), b.diag_chunk());
+        assert!(norms.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn smoothness_zero_for_identical_params() {
+        let b = backend();
+        let params = init_params(0);
+        let dw = dw_for(&b, 1, b.diag_chunk());
+        let vals = b.smoothness_chunk(1, &params, &params, &dw).unwrap();
+        assert!(vals.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,59 @@
+//! Literal/buffer plumbing between flat `f32` slices and the PJRT API.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        bail!("literal data has {} elems, dims {:?} need {expect}", data.len(), dims);
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Extract a scalar f32 from a (rank-0) literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_1d() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = xla::Literal::scalar(7.5f32);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 7.5);
+    }
+}

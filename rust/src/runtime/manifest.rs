@@ -1,0 +1,329 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime. Parsed strictly: a malformed or
+//! out-of-date manifest should fail loudly at startup, not at step 514.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::hedging::Problem;
+use crate::util::json::Json;
+
+/// What a lowered entry point computes (mirrors `aot.py` kinds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    /// `(params, dw[B, n_l]) -> (dloss, grad)` — MLMC unit of work.
+    GradCoupled,
+    /// `(params, dw[B, n_max]) -> (loss, grad)` — naive baseline.
+    GradNaive,
+    /// `(params, dw[B, n_max]) -> (loss,)` — held-out evaluation.
+    LossEval,
+    /// `(params, dw) -> (norms[B],)` — Figure 1 left.
+    GradNorms,
+    /// `(params1, params2, dw) -> (vals[B],)` — Figure 1 right.
+    Smoothness,
+    /// `(dw) -> (fine_T[B], coarse_T[B])` — engine cross-check.
+    PathEval,
+}
+
+impl EntryKind {
+    pub fn parse(s: &str) -> Option<EntryKind> {
+        Some(match s {
+            "grad_coupled" => EntryKind::GradCoupled,
+            "grad_naive" => EntryKind::GradNaive,
+            "loss_eval" => EntryKind::LossEval,
+            "grad_norms" => EntryKind::GradNorms,
+            "smoothness" => EntryKind::Smoothness,
+            "path_eval" => EntryKind::PathEval,
+            _ => return None,
+        })
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub kind: EntryKind,
+    /// HLO text file, relative to the artifact dir.
+    pub path: PathBuf,
+    pub level: Option<usize>,
+    /// Chunk batch the artifact was lowered with.
+    pub batch: usize,
+    pub n_steps: usize,
+    /// Input shapes (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (all f32).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub problem: Problem,
+    pub n_params: usize,
+    pub entries: Vec<EntryMeta>,
+    pub init_params_file: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let version = j
+            .field("format_version")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_i64()
+            .unwrap_or(-1);
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+
+        let problem = Problem::from_manifest(j.field("problem").map_err(|e| anyhow!("{e}"))?)
+            .map_err(|e| anyhow!("manifest problem: {e}"))?;
+        let n_params = j
+            .field("n_params")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("n_params must be an integer"))?;
+        let init_params_file = dir.join(
+            j.field("init_params")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("init_params must be a string"))?,
+        );
+
+        let mut entries = Vec::new();
+        for ej in j
+            .field("entries")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("entries must be an array"))?
+        {
+            entries.push(parse_entry(ej)?);
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            problem,
+            n_params,
+            entries,
+            init_params_file,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural consistency beyond per-field parsing.
+    pub fn validate(&self) -> Result<()> {
+        for l in 0..=self.problem.lmax {
+            self.grad_entry(l).with_context(|| {
+                format!("manifest is missing grad_coupled for level {l}")
+            })?;
+        }
+        self.entry_of_kind(EntryKind::GradNaive)?;
+        self.entry_of_kind(EntryKind::LossEval)?;
+        for e in &self.entries {
+            match e.kind {
+                EntryKind::GradCoupled | EntryKind::GradNaive => {
+                    if e.inputs.len() != 2
+                        || e.inputs[0] != vec![self.n_params]
+                        || e.inputs[1] != vec![e.batch, e.n_steps]
+                        || e.outputs.len() != 2
+                        || e.outputs[1] != vec![self.n_params]
+                    {
+                        bail!("entry `{}` has inconsistent shapes", e.name);
+                    }
+                }
+                EntryKind::LossEval => {
+                    if e.outputs.len() != 1 || !e.outputs[0].is_empty() {
+                        bail!("entry `{}` must output one scalar", e.name);
+                    }
+                }
+                _ => {}
+            }
+            if let Some(level) = e.level {
+                if matches!(e.kind, EntryKind::GradCoupled)
+                    && e.n_steps != self.problem.n_steps(level)
+                {
+                    bail!(
+                        "entry `{}`: n_steps {} != problem grid {}",
+                        e.name,
+                        e.n_steps,
+                        self.problem.n_steps(level)
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no entry `{name}` in manifest"))
+    }
+
+    pub fn entry_of_kind(&self, kind: EntryKind) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind)
+            .ok_or_else(|| anyhow!("no entry of kind {kind:?} in manifest"))
+    }
+
+    /// The `grad_coupled` entry for a level.
+    pub fn grad_entry(&self, level: usize) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == EntryKind::GradCoupled && e.level == Some(level))
+            .ok_or_else(|| anyhow!("no grad_coupled entry for level {level}"))
+    }
+
+    pub fn diag_entry(&self, kind: EntryKind, level: usize) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.level == Some(level))
+            .ok_or_else(|| anyhow!("no {kind:?} entry for level {level}"))
+    }
+
+    /// Initial parameter vector lowered by `aot.py` (bit-identical to the
+    /// python `init_params(0)`).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let raw = std::fs::read(&self.init_params_file).with_context(|| {
+            format!("reading {}", self.init_params_file.display())
+        })?;
+        if raw.len() != self.n_params * 4 {
+            bail!(
+                "init_params has {} bytes, expected {}",
+                raw.len(),
+                self.n_params * 4
+            );
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+fn parse_entry(j: &Json) -> Result<EntryMeta> {
+    let name = j
+        .field("name")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_str()
+        .ok_or_else(|| anyhow!("entry name must be a string"))?
+        .to_string();
+    let kind_s = j
+        .field("kind")
+        .map_err(|e| anyhow!("entry `{name}`: {e}"))?
+        .as_str()
+        .ok_or_else(|| anyhow!("entry `{name}`: kind must be a string"))?;
+    let kind = EntryKind::parse(kind_s)
+        .ok_or_else(|| anyhow!("entry `{name}`: unknown kind `{kind_s}`"))?;
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+        j.field(key)
+            .map_err(|e| anyhow!("entry `{name}`: {e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("entry `{name}`: {key} must be an array"))?
+            .iter()
+            .map(|io| {
+                Ok(io
+                    .field("shape")
+                    .map_err(|e| anyhow!("entry `{name}`: {e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("entry `{name}`: shape must be array"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect())
+            })
+            .collect()
+    };
+    Ok(EntryMeta {
+        kind,
+        path: PathBuf::from(
+            j.field("path")
+                .map_err(|e| anyhow!("entry `{name}`: {e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("entry `{name}`: path must be a string"))?,
+        ),
+        level: j.get("level").and_then(|v| v.as_usize()),
+        batch: j
+            .get("batch")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("entry `{name}`: missing batch"))?,
+        n_steps: j
+            .get("n_steps")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("entry `{name}`: missing n_steps"))?,
+        inputs: shapes("inputs")?,
+        outputs: shapes("outputs")?,
+        name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_params, 1186);
+        assert_eq!(m.problem.lmax, 6);
+        assert!(m.entries.len() >= 9);
+        let g3 = m.grad_entry(3).unwrap();
+        assert_eq!(g3.n_steps, 32);
+        let init = m.load_init_params().unwrap();
+        assert_eq!(init.len(), 1186);
+        // biases at the tail are zero-initialised
+        assert_eq!(init[1185], 0.0);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent/prefix")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join(format!("dmlmc_m_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format_version": 99, "problem": {}, "n_params": 1,
+                "init_params": "x.bin", "entries": []}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("format_version"));
+    }
+
+    #[test]
+    fn entry_kind_parse_total() {
+        for s in [
+            "grad_coupled",
+            "grad_naive",
+            "loss_eval",
+            "grad_norms",
+            "smoothness",
+            "path_eval",
+        ] {
+            assert!(EntryKind::parse(s).is_some(), "{s}");
+        }
+        assert!(EntryKind::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text + `manifest.json`) and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate; everything above
+//! it (the coordinator) talks through [`GradBackend`], which the pure-rust
+//! [`crate::engine`] also implements — so the whole stack can run with or
+//! without artifacts.
+
+pub mod backend;
+pub mod buffers;
+pub mod manifest;
+pub mod xla_rt;
+
+pub use backend::{GradBackend, NativeBackend};
+pub use manifest::{EntryKind, EntryMeta, Manifest};
+pub use xla_rt::XlaRuntime;

@@ -1,0 +1,250 @@
+//! The XLA/PJRT backend: compiles the HLO-text artifacts once and serves
+//! gradient/loss executions from the compiled cache.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: text -> `HloModuleProto`
+//! (the parser reassigns 64-bit ids) -> `XlaComputation` -> `compile` on
+//! the CPU `PjRtClient` -> `execute` with `Literal` args; outputs arrive
+//! as a 1-tuple (the AOT path lowers with `return_tuple=True`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::GradBackend;
+use super::buffers::{literal_f32, to_scalar_f32, to_vec_f32};
+use super::manifest::{EntryKind, Manifest};
+use crate::hedging::Problem;
+
+/// PJRT runtime over one artifact directory.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lazily compiled executables, keyed by entry name.
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and bring up the CPU PJRT client. Compilation of
+    /// individual entries is lazy (first use) unless [`warmup`] is called.
+    pub fn load(artifacts_dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile the training-hot-path entries (per-level grads,
+    /// naive grad, loss eval) so the first SGD step pays no compile cost.
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    EntryKind::GradCoupled | EntryKind::GradNaive | EntryKind::LossEval
+                )
+            })
+            .map(|e| e.name.clone())
+            .collect();
+        for name in names {
+            self.ensure_compiled(&name)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.manifest.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with f32 literals built from flat slices shaped by
+    /// the manifest; returns the tuple elements as literals.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "entry `{name}` takes {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs.iter().zip(&entry.inputs) {
+            lits.push(
+                literal_f32(data, dims)
+                    .with_context(|| format!("building input for `{name}`"))?,
+            );
+        }
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching `{name}` output: {e:?}"))?;
+        // AOT lowers with return_tuple=True: single tuple of outputs.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling `{name}` output: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "entry `{name}` declared {} outputs, produced {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    fn value_and_grad(&self, name: &str, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let parts = self.execute(name, &[params, dw])?;
+        let loss = to_scalar_f32(&parts[0])? as f64;
+        let grad = to_vec_f32(&parts[1])?;
+        Ok((loss, grad))
+    }
+}
+
+impl GradBackend for XlaRuntime {
+    fn n_params(&self) -> usize {
+        self.manifest.n_params
+    }
+
+    fn problem(&self) -> &Problem {
+        &self.manifest.problem
+    }
+
+    fn grad_chunk(&self, level: usize) -> usize {
+        self.manifest
+            .grad_entry(level)
+            .map(|e| e.batch)
+            .expect("validated manifest has all levels")
+    }
+
+    fn naive_chunk(&self) -> usize {
+        self.manifest
+            .entry_of_kind(EntryKind::GradNaive)
+            .map(|e| e.batch)
+            .expect("validated manifest has grad_naive")
+    }
+
+    fn eval_chunk(&self) -> usize {
+        self.manifest
+            .entry_of_kind(EntryKind::LossEval)
+            .map(|e| e.batch)
+            .expect("validated manifest has loss_eval")
+    }
+
+    fn diag_chunk(&self) -> usize {
+        self.manifest
+            .entry_of_kind(EntryKind::GradNorms)
+            .map(|e| e.batch)
+            .unwrap_or(32)
+    }
+
+    fn grad_coupled_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<(f64, Vec<f32>)> {
+        let name = self.manifest.grad_entry(level)?.name.clone();
+        self.value_and_grad(&name, params, dw)
+    }
+
+    fn grad_naive_chunk(&self, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)> {
+        let name = self
+            .manifest
+            .entry_of_kind(EntryKind::GradNaive)?
+            .name
+            .clone();
+        self.value_and_grad(&name, params, dw)
+    }
+
+    fn loss_eval_chunk(&self, params: &[f32], dw: &[f32]) -> Result<f64> {
+        let name = self
+            .manifest
+            .entry_of_kind(EntryKind::LossEval)?
+            .name
+            .clone();
+        let parts = self.execute(&name, &[params, dw])?;
+        Ok(to_scalar_f32(&parts[0])? as f64)
+    }
+
+    fn grad_norms_chunk(
+        &self,
+        level: usize,
+        params: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = self
+            .manifest
+            .diag_entry(EntryKind::GradNorms, level)?
+            .name
+            .clone();
+        let parts = self.execute(&name, &[params, dw])?;
+        to_vec_f32(&parts[0])
+    }
+
+    fn smoothness_chunk(
+        &self,
+        level: usize,
+        params1: &[f32],
+        params2: &[f32],
+        dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = self
+            .manifest
+            .diag_entry(EntryKind::Smoothness, level)?
+            .name
+            .clone();
+        let parts = self.execute(&name, &[params1, params2, dw])?;
+        to_vec_f32(&parts[0])
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+impl XlaRuntime {
+    /// Fine/coarse terminal path values (engine cross-checks).
+    pub fn path_eval(&self, level: usize, dw: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let name = self
+            .manifest
+            .diag_entry(EntryKind::PathEval, level)?
+            .name
+            .clone();
+        let parts = self.execute(&name, &[dw])?;
+        Ok((to_vec_f32(&parts[0])?, to_vec_f32(&parts[1])?))
+    }
+}

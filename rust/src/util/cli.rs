@@ -1,0 +1,284 @@
+//! Declarative command-line parser (clap substitute, offline build).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required arguments and auto-generated `--help` text — the
+//! subset the `repro` binary and the examples need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// One `--name <value>` option (or boolean switch).
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub switch: bool,
+}
+
+impl Opt {
+    pub fn value(name: &'static str, help: &'static str) -> Self {
+        Opt { name, help, default: None, required: false, switch: false }
+    }
+
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        Opt { name, help, default: None, required: true, switch: false }
+    }
+
+    pub fn with_default(
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        Opt { name, help, default: Some(default), required: false, switch: false }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Opt { name, help, default: None, required: false, switch: true }
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| CliError(format!("--{name}: not a number: `{v}`")))
+            })
+            .transpose()
+    }
+
+    pub fn parse_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| CliError(format!("--{name}: not an integer: `{v}`")))
+            })
+            .transpose()
+    }
+}
+
+/// A command: name + options (+ optional subcommands).
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+    pub subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new(), subcommands: Vec::new() }
+    }
+
+    pub fn opt(mut self, o: Opt) -> Self {
+        self.opts.push(o);
+        self
+    }
+
+    pub fn subcommand(mut self, c: Command) -> Self {
+        self.subcommands.push(c);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            out.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        out.push('\n');
+        if !self.subcommands.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for sc in &self.subcommands {
+                out.push_str(&format!("  {:<14} {}\n", sc.name, sc.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut line = format!("  --{}", o.name);
+                if !o.switch {
+                    line.push_str(" <v>");
+                }
+                let mut help = o.help.to_string();
+                if let Some(d) = o.default {
+                    help.push_str(&format!(" [default: {d}]"));
+                }
+                if o.required {
+                    help.push_str(" [required]");
+                }
+                out.push_str(&format!("{line:<26} {help}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse a raw arg vector (without argv[0]). Returns the matched
+    /// subcommand name (or this command's name) and its [`Args`].
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Args), CliError> {
+        if let Some(first) = argv.first() {
+            if first == "--help" || first == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(sc) = self.subcommands.iter().find(|c| c.name == *first) {
+                let (_, args) = sc.parse(&argv[1..])?;
+                return Ok((sc.name.to_string(), args));
+            }
+            if !self.subcommands.is_empty() && !first.starts_with("--") {
+                return Err(CliError(format!(
+                    "unknown subcommand `{first}`\n\n{}",
+                    self.help()
+                )));
+            }
+        }
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option `--{name}`")))?;
+                if opt.switch {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.switches.push(name.to_string());
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    CliError(format!("--{name} needs a value"))
+                                })?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && args.get(o.name).is_none() {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok((self.name.to_string(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("repro", "driver")
+            .subcommand(
+                Command::new("train", "run training")
+                    .opt(Opt::with_default("method", "naive|mlmc|dmlmc", "dmlmc"))
+                    .opt(Opt::value("steps", "T"))
+                    .opt(Opt::switch("quiet", "no output"))
+                    .opt(Opt::required("config", "config path")),
+            )
+            .subcommand(Command::new("table1", "emit table 1"))
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_with_options() {
+        let (name, args) = cmd()
+            .parse(&argv(&["train", "--config", "c.toml", "--steps=50", "--quiet"]))
+            .unwrap();
+        assert_eq!(name, "train");
+        assert_eq!(args.get("config"), Some("c.toml"));
+        assert_eq!(args.parse_usize("steps").unwrap(), Some(50));
+        assert!(args.flag("quiet"));
+        assert_eq!(args.get("method"), Some("dmlmc")); // default
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&argv(&["train"])).unwrap_err();
+        assert!(e.0.contains("config"));
+    }
+
+    #[test]
+    fn unknown_flag_and_subcommand_error() {
+        assert!(cmd().parse(&argv(&["train", "--config", "c", "--nope", "1"])).is_err());
+        assert!(cmd().parse(&argv(&["wat"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_subcommands() {
+        let e = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.0.contains("table1"));
+        assert!(e.0.contains("train"));
+    }
+
+    #[test]
+    fn bad_number_reports_flag() {
+        let (_, args) = cmd()
+            .parse(&argv(&["train", "--config", "c", "--steps", "abc"]))
+            .unwrap();
+        assert!(args.parse_usize("steps").is_err());
+    }
+}

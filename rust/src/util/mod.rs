@@ -1,0 +1,6 @@
+//! Small in-repo substrates for ecosystem crates that are unavailable in
+//! this offline build environment (see Cargo.toml note and DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod toml;

@@ -1,0 +1,284 @@
+//! Minimal TOML-subset parser (toml-crate substitute, offline build).
+//!
+//! Supports what `configs/*.toml` needs: `[section]` / `[a.b]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays,
+//! plus `#` comments. Keys are flattened to dotted paths
+//! (`section.key`), which is how [`crate::config`] consumes them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar / array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError(pub String);
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml: {}", self.0)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: dotted-path key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(lineno, &m))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key `{path}`")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    /// All keys under a dotted prefix (e.g. `"train"` -> `train.*`).
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        let pat = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&pat))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> TomlError {
+    TomlError(format!("line {}: {msg}", lineno + 1))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in basic string".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|part| parse_value(part.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+title = "paper"
+
+[mlmc]
+b = 1.8
+c = 1.0
+n_effective = 1_024
+levels = [0, 1, 2]
+
+[train]
+method = "dmlmc"   # inline comment
+lr = 1e-2
+adaptive = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(doc.get("title").unwrap().as_str(), Some("paper"));
+        assert_eq!(doc.get("mlmc.b").unwrap().as_f64(), Some(1.8));
+        assert_eq!(doc.get("mlmc.n_effective").unwrap().as_i64(), Some(1024));
+        assert_eq!(doc.get("train.method").unwrap().as_str(), Some("dmlmc"));
+        assert_eq!(doc.get("train.lr").unwrap().as_f64(), Some(0.01));
+        assert_eq!(doc.get("train.adaptive").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        match doc.get("mlmc.levels").unwrap() {
+            TomlValue::Arr(a) => {
+                assert_eq!(a.len(), 3);
+                assert_eq!(a[2].as_i64(), Some(2));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn section_keys_lists_prefix() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        let keys = doc.section_keys("train");
+        assert!(keys.contains(&"train.method"));
+        assert!(!keys.contains(&"mlmc.b"));
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let doc = TomlDoc::parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("= 3").is_err());
+        assert!(TomlDoc::parse("k = zzz").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("b").unwrap(), &TomlValue::Float(3.0));
+    }
+}

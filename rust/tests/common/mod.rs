@@ -1,0 +1,24 @@
+//! Shared helpers for the integration tests.
+
+use std::path::PathBuf;
+
+/// Artifact directory, if `make artifacts` has been run.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Skip (with a loud message) when artifacts are missing, instead of
+/// failing — `cargo test` must be runnable before `make artifacts` too.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        match common::artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}

@@ -1,0 +1,169 @@
+//! THE cross-layer correctness signal: the pure-rust engine and the
+//! AOT-compiled JAX/Pallas artifacts must agree on identical inputs —
+//! paths, losses and gradients — to f32 tolerance.
+//!
+//! Any mismatch means one of the two model implementations (or the AOT
+//! plumbing) is wrong.
+
+mod common;
+
+use dmlmc::engine;
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::runtime::{GradBackend, XlaRuntime};
+
+const REL_TOL: f64 = 2e-3;
+const ABS_TOL: f64 = 2e-4;
+
+fn close(a: f64, b: f64, what: &str) {
+    let tol = ABS_TOL + REL_TOL * a.abs().max(b.abs());
+    assert!((a - b).abs() <= tol, "{what}: engine {a} vs hlo {b}");
+}
+
+/// Relative L2 error `||a - b|| / ||b||` — the right metric for coupled
+/// gradients, whose per-element values are differences of similar numbers
+/// (catastrophic cancellation makes per-element relative error noisy in
+/// f32 even when both implementations are correct).
+fn rel_l2_err(a: &[f32], b: &[f32]) -> f64 {
+    let diff: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+    diff / norm.max(1e-12)
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let (x, y) = (x as f64, y as f64);
+            (x - y).abs() / (1e-4 + x.abs().max(y.abs()))
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn milstein_paths_match() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).unwrap();
+    let prob = rt.manifest().problem;
+    for level in [0usize, 2, 5] {
+        let n = prob.n_steps(level);
+        let batch = rt.diag_chunk();
+        let dw = BrownianSource::new(11).increments(
+            Purpose::Diagnostic, 0, level as u32, 0, batch, n, prob.dt(level),
+        );
+        let (hlo_fine, hlo_coarse) = rt.path_eval(level, &dw).unwrap();
+        let eng_fine = engine::milstein::terminal_values(&dw, batch, n, &prob);
+        assert!(
+            max_rel_err(&eng_fine, &hlo_fine) < 1e-4,
+            "fine terminal mismatch at level {level}"
+        );
+        if level > 0 {
+            let dwc = BrownianSource::coarsen(&dw, batch, n);
+            let eng_coarse =
+                engine::milstein::terminal_values(&dwc, batch, n / 2, &prob);
+            assert!(
+                max_rel_err(&eng_coarse, &hlo_coarse) < 1e-4,
+                "coarse terminal mismatch at level {level}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coupled_loss_and_grad_match_every_level() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).unwrap();
+    let prob = rt.manifest().problem;
+    let params = rt.manifest().load_init_params().unwrap();
+    for level in 0..=prob.lmax {
+        let batch = rt.grad_chunk(level);
+        let n = prob.n_steps(level);
+        let dw = BrownianSource::new(5).increments(
+            Purpose::Grad, 1, level as u32, 0, batch, n, prob.dt(level),
+        );
+        let (hlo_loss, hlo_grad) =
+            rt.grad_coupled_chunk(level, &params, &dw).unwrap();
+        let (eng_loss, eng_grad) =
+            engine::coupled_value_and_grad(&params, &dw, batch, level, &prob);
+        close(eng_loss, hlo_loss, &format!("loss at level {level}"));
+        let err = rel_l2_err(&eng_grad, &hlo_grad);
+        assert!(
+            err < 5e-3,
+            "grad mismatch at level {level}: rel L2 err {err}"
+        );
+    }
+}
+
+#[test]
+fn naive_grad_matches() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).unwrap();
+    let prob = rt.manifest().problem;
+    let params = rt.manifest().load_init_params().unwrap();
+    let batch = rt.naive_chunk();
+    let n = prob.n_steps(prob.lmax);
+    let dw = BrownianSource::new(6).increments(
+        Purpose::Grad, 0, prob.lmax as u32, 0, batch, n, prob.dt(prob.lmax),
+    );
+    let (hlo_loss, hlo_grad) = rt.grad_naive_chunk(&params, &dw).unwrap();
+    let (eng_loss, eng_grad) =
+        engine::value_and_grad(&params, &dw, batch, n, &prob);
+    close(eng_loss, hlo_loss, "naive loss");
+    let err = rel_l2_err(&eng_grad, &hlo_grad);
+    assert!(err < 5e-3, "naive grad mismatch: rel L2 err {err}");
+}
+
+#[test]
+fn eval_loss_matches() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).unwrap();
+    let prob = rt.manifest().problem;
+    let params = rt.manifest().load_init_params().unwrap();
+    let batch = rt.eval_chunk();
+    let n = prob.n_steps(prob.lmax);
+    let dw = BrownianSource::new(8).increments(
+        Purpose::Eval, 0, prob.lmax as u32, 0, batch, n, prob.dt(prob.lmax),
+    );
+    let hlo = rt.loss_eval_chunk(&params, &dw).unwrap();
+    let eng = engine::loss_only(&params, &dw, batch, n, &prob);
+    close(eng, hlo, "eval loss");
+}
+
+#[test]
+fn grads_match_after_training_drift() {
+    // Agreement must hold away from the init point too: nudge params
+    // along a few native SGD steps, then compare again.
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).unwrap();
+    let prob = rt.manifest().problem;
+    let mut params = rt.manifest().load_init_params().unwrap();
+    let src = BrownianSource::new(13);
+    for t in 0..5u64 {
+        let dw = src.increments(
+            Purpose::Grad, t, 1, 0, rt.grad_chunk(1), prob.n_steps(1), prob.dt(1),
+        );
+        let (_, g) = engine::coupled_value_and_grad(
+            &params, &dw, rt.grad_chunk(1), 1, &prob,
+        );
+        for (p, &gv) in params.iter_mut().zip(&g) {
+            *p -= 0.05 * gv;
+        }
+    }
+    let level = 3;
+    let dw = src.increments(
+        Purpose::Grad, 99, level as u32, 0, rt.grad_chunk(level),
+        prob.n_steps(level), prob.dt(level),
+    );
+    let (hlo_loss, hlo_grad) =
+        rt.grad_coupled_chunk(level, &params, &dw).unwrap();
+    let (eng_loss, eng_grad) = engine::coupled_value_and_grad(
+        &params, &dw, rt.grad_chunk(level), level, &prob,
+    );
+    close(eng_loss, hlo_loss, "drifted loss");
+    let err = rel_l2_err(&eng_grad, &hlo_grad);
+    assert!(err < 5e-3, "drifted grad mismatch: rel L2 err {err}");
+}

@@ -1,0 +1,140 @@
+//! End-to-end training integration over both backends: the coordinator,
+//! scheduler, cache, dispatcher, optimizer, metrics and (for xla) the
+//! PJRT runtime all composed, on small budgets.
+
+mod common;
+
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::experiments;
+
+fn small_cfg(backend: Backend) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.runtime.backend = backend;
+    cfg.runtime.artifacts_dir =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.train.steps = 12;
+    cfg.train.eval_every = 4;
+    cfg.mlmc.n_effective = 64;
+    cfg
+}
+
+#[test]
+fn native_all_methods_train_and_costs_are_ordered() {
+    let cfg = small_cfg(Backend::Native);
+    let mut depths = Vec::new();
+    let mut works = Vec::new();
+    for method in Method::all() {
+        let mut tr = Trainer::from_config(&cfg, method, 0).unwrap();
+        let curve = tr.run().unwrap();
+        assert_eq!(curve.points.last().unwrap().step, 12);
+        assert!(curve.final_loss().unwrap().is_finite());
+        let c = tr.cumulative_cost();
+        depths.push(c.depth);
+        works.push(c.work);
+    }
+    // Table-1 ordering: naive depth == mlmc depth > dmlmc depth;
+    // naive work > mlmc work >= dmlmc work.
+    assert_eq!(depths[0], depths[1], "naive vs mlmc depth");
+    assert!(depths[2] < depths[1], "dmlmc must cut parallel cost");
+    assert!(works[0] > works[1], "naive work must dominate");
+    assert!(works[2] <= works[1], "dmlmc work <= mlmc work");
+}
+
+#[test]
+fn xla_backend_trains_and_loss_decreases() {
+    let _dir = require_artifacts!();
+    let mut cfg = small_cfg(Backend::Xla);
+    cfg.train.steps = 10;
+    cfg.train.eval_every = 10;
+    cfg.train.lr = 0.08;
+    let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+    let curve = tr.run().unwrap();
+    let first = curve.points.first().unwrap().loss;
+    let last = curve.points.last().unwrap().loss;
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+}
+
+#[test]
+fn xla_and_native_trajectories_agree() {
+    // Same seed, same streams, same model => the two backends must
+    // produce near-identical learning curves (f32 tolerance over steps).
+    let _dir = require_artifacts!();
+    let mut cfg_n = small_cfg(Backend::Native);
+    cfg_n.train.steps = 6;
+    let mut cfg_x = cfg_n.clone();
+    cfg_x.runtime.backend = Backend::Xla;
+
+    let curve_n = Trainer::from_config(&cfg_n, Method::Mlmc, 1)
+        .unwrap()
+        .run()
+        .unwrap();
+    let curve_x = Trainer::from_config(&cfg_x, Method::Mlmc, 1)
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(curve_n.points.len(), curve_x.points.len());
+    for (a, b) in curve_n.points.iter().zip(&curve_x.points) {
+        let tol = 1e-3 + 5e-3 * a.loss.abs();
+        assert!(
+            (a.loss - b.loss).abs() < tol,
+            "step {}: native {} vs xla {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.std_cost, b.std_cost, "cost accounting must be identical");
+        assert_eq!(a.par_cost, b.par_cost);
+    }
+}
+
+#[test]
+fn figure2_native_smoke_produces_ordered_parallel_costs() {
+    let mut cfg = small_cfg(Backend::Native);
+    cfg.train.n_seeds = 2;
+    let results = experiments::figure2(&cfg, true).unwrap();
+    let get = |m: Method| {
+        results
+            .iter()
+            .find(|(mm, _, _)| *mm == m)
+            .map(|(_, _, agg)| *agg.par_cost.last().unwrap())
+            .unwrap()
+    };
+    assert!(get(Method::Dmlmc) < get(Method::Mlmc));
+    assert_eq!(get(Method::Mlmc), get(Method::Naive));
+}
+
+#[test]
+fn validate_bs_converges_roughly() {
+    // Martingale GBM (mu = 0): the optimal p0 is exactly the BS price
+    // regardless of hedge quality (see experiments::validate_bs docs).
+    let mut cfg = small_cfg(Backend::Native);
+    cfg.train.steps = 300;
+    cfg.train.eval_every = 300;
+    cfg.train.lr = 0.1;
+    cfg.mlmc.n_effective = 128;
+    let (p0, bs) = experiments::validate_bs(&cfg).unwrap();
+    assert!(bs > 1.0 && bs < 1.3, "BS anchor sanity: {bs}");
+    assert!(
+        (p0 - bs).abs() / bs < 0.15,
+        "learned p0 {p0} too far from Black-Scholes {bs}"
+    );
+}
+
+#[test]
+fn figure1_native_fits_positive_decay_rates() {
+    let mut cfg = small_cfg(Backend::Native);
+    cfg.train.steps = 6;
+    cfg.problem.lmax = 4; // keep runtime small; slopes only need 5 levels
+    let fig = experiments::figure1(&cfg, 3, true).unwrap();
+    assert!(
+        fig.b_hat > 0.5,
+        "variance decay rate should be clearly positive: {}",
+        fig.b_hat
+    );
+    assert!(
+        fig.d_hat > 0.3,
+        "smoothness decay rate should be positive: {}",
+        fig.d_hat
+    );
+}

@@ -1,0 +1,232 @@
+//! Property-based tests (via the in-repo `testkit`) on the coordinator
+//! and MLMC invariants: the schedule, the cache, the allocation, the cost
+//! model and the RNG addressing — randomized over their parameter spaces.
+
+mod common;
+
+use dmlmc::coordinator::{DelayedSchedule, GradientCache};
+use dmlmc::mlmc::allocation::LevelAllocation;
+use dmlmc::parallel::{CostModel, StepCost};
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::testkit::{check, Config, Gen};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xD31A }
+}
+
+#[test]
+fn prop_schedule_tau_is_latest_refresh() {
+    check("tau is the latest refresh <= t", cfg(300), |g: &mut Gen| {
+        let lmax = g.usize(0, 8);
+        let d = g.f64(0.0, 2.5);
+        let s = DelayedSchedule::new(lmax, d);
+        let t = g.u64() % 10_000;
+        for l in 0..=lmax {
+            let tau = s.tau(t, l);
+            let p = s.period(l);
+            if tau > t {
+                return Err(format!("tau {tau} > t {t}"));
+            }
+            if tau % p != 0 {
+                return Err(format!("tau {tau} not on period {p}"));
+            }
+            if t - tau >= p {
+                return Err(format!("staleness {} >= period {p}", t - tau));
+            }
+            // tau must itself be a due step
+            if !s.is_due(tau, l) {
+                return Err(format!("tau {tau} not due at level {l}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_periods_monotone_in_level() {
+    check("periods non-decreasing in level", cfg(200), |g: &mut Gen| {
+        let lmax = g.usize(1, 10);
+        let d = g.f64(0.0, 2.0);
+        let s = DelayedSchedule::new(lmax, d);
+        for l in 1..=lmax {
+            if s.period(l) < s.period(l - 1) {
+                return Err(format!(
+                    "period({l}) = {} < period({}) = {}",
+                    s.period(l),
+                    l - 1,
+                    s.period(l - 1)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_covers_and_decays() {
+    check("allocation sane for random (b, c, N)", cfg(300), |g: &mut Gen| {
+        let lmax = g.usize(1, 8);
+        let c = g.f64(0.2, 1.5);
+        let b = c + g.f64(0.1, 1.5); // enforce b > c
+        let n = g.usize(1, 1 << 14);
+        let a = LevelAllocation::paper(lmax, n, b, c);
+        if a.n_per_level.iter().any(|&x| x == 0) {
+            return Err("zero-sample level".into());
+        }
+        for l in 1..=lmax {
+            if a.n(l) > a.n(l - 1) {
+                return Err(format!("N_l increasing at {l}: {:?}", a.n_per_level));
+            }
+        }
+        let total: usize = a.n_per_level.iter().sum();
+        if total < n {
+            return Err(format!("total {total} < N {n}"));
+        }
+        if total > n + lmax + 1 {
+            return Err(format!("over-allocated: {total} vs {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_rounding_never_reduces() {
+    check("chunk rounding rounds up to multiples", cfg(300), |g: &mut Gen| {
+        let lmax = g.usize(0, 7);
+        let a = LevelAllocation {
+            n_per_level: (0..=lmax).map(|_| g.usize(1, 500)).collect(),
+        };
+        let chunks: Vec<usize> = (0..=lmax).map(|_| g.usize(1, 64)).collect();
+        let r = a.round_to_chunks(&chunks);
+        for l in 0..=lmax {
+            if r.n(l) < a.n(l) {
+                return Err(format!("rounded down at {l}"));
+            }
+            if r.n(l) % chunks[l] != 0 {
+                return Err(format!("not a chunk multiple at {l}"));
+            }
+            if r.n(l) - a.n(l) >= chunks[l] {
+                return Err(format!("overshoot at {l}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_step_cost_work_geq_depth_scaling() {
+    check("work >= depth; both positive for jobs", cfg(300), |g: &mut Gen| {
+        let model = CostModel::new(g.f64(0.1, 2.0));
+        let n_jobs = g.usize(1, 8);
+        let jobs: Vec<(usize, usize)> = (0..n_jobs)
+            .map(|_| (g.usize(0, 8), g.usize(1, 100)))
+            .collect();
+        let cost = StepCost::from_jobs(&model, &jobs);
+        if cost.work < cost.depth {
+            return Err(format!("work {} < depth {}", cost.work, cost.depth));
+        }
+        // depth equals the max single-sample cost among jobs
+        let want_depth = jobs
+            .iter()
+            .map(|&(l, _)| model.sample_cost(l))
+            .fold(0.0f64, f64::max);
+        if (cost.depth - want_depth).abs() > 1e-12 {
+            return Err("depth != max level cost".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_assemble_is_sum_of_latest() {
+    check("cache assembles the latest components", cfg(200), |g: &mut Gen| {
+        let lmax = g.usize(0, 6);
+        let dim = g.usize(1, 16);
+        let mut cache = GradientCache::new(lmax, dim);
+        let mut latest: Vec<(f64, Vec<f32>)> = Vec::new();
+        for l in 0..=lmax {
+            let mut last = (0.0f64, vec![0.0f32; dim]);
+            let updates = g.usize(1, 3);
+            let mut step = 0u64;
+            for _ in 0..updates {
+                let loss = g.f64(-2.0, 2.0);
+                let grad: Vec<f32> =
+                    (0..dim).map(|_| g.f64(-1.0, 1.0) as f32).collect();
+                cache.update(l, step, loss, grad.clone());
+                last = (loss, grad);
+                step += g.u64() % 5 + 1;
+            }
+            latest.push(last);
+        }
+        let (loss, grad) = cache.assemble();
+        let want_loss: f64 = latest.iter().map(|(l, _)| l).sum();
+        if (loss - want_loss).abs() > 1e-9 {
+            return Err(format!("loss {loss} != {want_loss}"));
+        }
+        for i in 0..dim {
+            let want: f32 = latest.iter().map(|(_, g)| g[i]).sum();
+            if (grad[i] - want).abs() > 1e-5 {
+                return Err(format!("grad[{i}] {} != {want}", grad[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_brownian_addressing_is_injective_in_practice() {
+    check("distinct addresses -> distinct batches", cfg(100), |g: &mut Gen| {
+        let src = BrownianSource::new(g.u64());
+        let step = g.u64() % 1000;
+        let level = g.usize(0, 6) as u32;
+        let chunk = g.usize(0, 7) as u32;
+        let a = src.increments(Purpose::Grad, step, level, chunk, 2, 4, 0.25);
+        // perturb exactly one coordinate
+        let b = match g.usize(0, 2) {
+            0 => src.increments(Purpose::Grad, step + 1, level, chunk, 2, 4, 0.25),
+            1 => src.increments(Purpose::Grad, step, level + 1, chunk, 2, 4, 0.25),
+            _ => src.increments(Purpose::Grad, step, level, chunk + 1, 2, 4, 0.25),
+        };
+        if a == b {
+            return Err("collision between distinct addresses".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coarsen_preserves_row_sums() {
+    check("coarsening preserves total increment", cfg(200), |g: &mut Gen| {
+        let batch = g.usize(1, 8);
+        let n = 2 * g.usize(1, 32);
+        let src = BrownianSource::new(g.u64());
+        let dw = src.increments(Purpose::Grad, 0, 0, 0, batch, n, 0.1);
+        let c = BrownianSource::coarsen(&dw, batch, n);
+        for b in 0..batch {
+            let fine: f32 = dw[b * n..(b + 1) * n].iter().sum();
+            let coarse: f32 = c[b * n / 2..(b + 1) * n / 2].iter().sum();
+            if (fine - coarse).abs() > 1e-4 {
+                return Err(format!("row {b}: {fine} vs {coarse}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dmlmc_avg_due_levels_matches_theory() {
+    check("avg #due levels ~ sum 2^{-dl}", cfg(30), |g: &mut Gen| {
+        let lmax = g.usize(2, 7);
+        let d_exp = *g.choose(&[0.5f64, 1.0, 1.5, 2.0]);
+        let s = DelayedSchedule::new(lmax, d_exp);
+        let horizon = 1u64 << 13;
+        let total: usize = (0..horizon).map(|t| s.levels_due(t).len()).sum();
+        let avg = total as f64 / horizon as f64;
+        let theory: f64 =
+            (0..=lmax).map(|l| 1.0 / s.period(l) as f64).sum();
+        if (avg - theory).abs() > 0.05 {
+            return Err(format!("avg {avg} vs theory {theory}"));
+        }
+        Ok(())
+    });
+}
