@@ -1,0 +1,36 @@
+# Build driver for the two-language stack.
+#
+#   make artifacts   one-time AOT lowering (JAX -> HLO text + manifest)
+#   make build       release build of the rust crate (native engine works
+#                    without artifacts; PJRT needs `--features xla`)
+#   make test        tier-1 suite (`cargo test -q`); XLA integration tests
+#                    self-skip while artifacts are missing
+#
+# Python never runs on the training hot path — after `make artifacts` the
+# `repro` binary and all examples/benches are self-contained.
+
+ARTIFACTS_DIR := rust/artifacts
+
+.PHONY: artifacts build test fmt clippy bench clean
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy --all-targets -- -D warnings
+
+bench:
+	cd rust && cargo bench --bench hotpath
+
+clean:
+	rm -rf $(ARTIFACTS_DIR)
+	-cd rust && cargo clean

@@ -65,7 +65,10 @@ fn main() -> anyhow::Result<()> {
         println!("{l:<6} {m:>14.6e} {s:>12.2e}");
     }
     println!("\nfitted decay exponents:");
-    println!("  b_hat = {:.3}   (paper reads ~1.8-2 from its Figure 1; Assumption 2 needs b > c = 1)", fig.b_hat);
+    println!(
+        "  b_hat = {:.3}   (paper reads ~1.8-2 from its Figure 1; Assumption 2 needs b > c = 1)",
+        fig.b_hat
+    );
     println!("  d_hat = {:.3}   (paper reads ~1; sets the delay schedule 2^(d l))", fig.d_hat);
 
     std::fs::create_dir_all(&out_dir)?;

@@ -43,7 +43,8 @@ fn main() -> anyhow::Result<()> {
     println!("{}", experiments::render_table1(&theory, &measured));
 
     println!(
-        "average per-step parallel depth: naive/mlmc = {} (2^c·lmax), dmlmc measured = {:.2}, schedule-predicted = {:.2}, theory Σ2^((c-d)l) = {:.2}",
+        "average per-step parallel depth: naive/mlmc = {} (2^c·lmax), dmlmc measured = \
+         {:.2}, schedule-predicted = {:.2}, theory Σ2^((c-d)l) = {:.2}",
         2f64.powi(cfg.problem.lmax as i32),
         measured[2].avg_depth,
         experiments::predicted_avg_depth(&cfg, 1 << 14),

@@ -134,8 +134,11 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+type MethodResult =
+    (Method, Vec<dmlmc::metrics::LearningCurve>, dmlmc::metrics::aggregate::AggregatedCurve);
+
 fn print_summary(
-    results: &[(Method, Vec<dmlmc::metrics::LearningCurve>, dmlmc::metrics::aggregate::AggregatedCurve)],
+    results: &[MethodResult],
     cost: impl Fn(&dmlmc::metrics::aggregate::AggregatedCurve, usize) -> f64,
 ) {
     println!(

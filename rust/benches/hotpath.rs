@@ -42,9 +42,10 @@ fn main() {
         });
     }
 
-    // ---- XLA runtime per level (if artifacts exist) --------------------
+    // ---- XLA runtime per level (if artifacts exist and this build has
+    // the real PJRT runtime rather than the stub) ------------------------
     let artifacts = std::path::Path::new("artifacts");
-    if artifacts.join("manifest.json").exists() {
+    if cfg!(feature = "xla") && artifacts.join("manifest.json").exists() {
         let rt = XlaRuntime::load(artifacts).expect("artifacts");
         rt.warmup().expect("warmup");
         for level in [0usize, 3, 6] {
@@ -65,7 +66,9 @@ fn main() {
             black_box(rt.loss_eval_chunk(&params, &dw_eval).unwrap());
         });
     } else {
-        eprintln!("artifacts not built; skipping xla/* benches");
+        eprintln!(
+            "artifacts not built or no `xla` feature; skipping xla/* benches"
+        );
     }
 
     // ---- pure L3 overhead ----------------------------------------------

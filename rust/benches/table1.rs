@@ -24,7 +24,10 @@ fn main() {
 
     // The table itself (the regeneration artifact).
     let (theory, measured) = experiments::table1(&cfg).expect("table1");
-    println!("\n=== TABLE 1 (theory vs measured, T = {}, N = {}) ===", cfg.train.steps, cfg.mlmc.n_effective);
+    println!(
+        "\n=== TABLE 1 (theory vs measured, T = {}, N = {}) ===",
+        cfg.train.steps, cfg.mlmc.n_effective
+    );
     println!("{}", experiments::render_table1(&theory, &measured));
     println!(
         "dmlmc avg per-step depth: measured {:.2} | schedule {:.2} | theory Σ2^((c-d)l) = {:.2}\n",

@@ -4,6 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::hedging::{Drift, Problem};
+use crate::scenarios::{self, DEFAULT_SCENARIO};
 use crate::util::toml::{TomlDoc, TomlError};
 
 /// Which gradient backend executes the level jobs.
@@ -116,12 +117,28 @@ impl Default for RuntimeConfig {
 }
 
 /// Everything an experiment needs.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub problem: Problem,
     pub mlmc: MlmcConfig,
     pub train: TrainConfig,
     pub runtime: RuntimeConfig,
+    /// Scenario registry key (`scenario.name` in TOML, `--scenario` on
+    /// the CLI). The default `"bs-call"` is the seed behavior; anything
+    /// else requires the native backend.
+    pub scenario: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            problem: Problem::default(),
+            mlmc: MlmcConfig::default(),
+            train: TrainConfig::default(),
+            runtime: RuntimeConfig::default(),
+            scenario: DEFAULT_SCENARIO.to_string(),
+        }
+    }
 }
 
 impl ExperimentConfig {
@@ -231,6 +248,11 @@ impl ExperimentConfig {
             cfg.train.dmlmc_warmup = v;
         }
 
+        // [scenario]
+        if let Some(s) = gets("scenario.name") {
+            cfg.scenario = s.to_string();
+        }
+
         // [runtime]
         if let Some(s) = gets("runtime.backend") {
             cfg.runtime.backend = Backend::parse(s)
@@ -243,12 +265,31 @@ impl ExperimentConfig {
             cfg.runtime.out_dir = PathBuf::from(s);
         }
 
-        cfg.validate().map_err(TomlError)?;
+        // Only the override-independent constraints here: the CLI may
+        // still change the backend, so the scenario/backend pairing is
+        // deferred to the post-override `validate()`.
+        cfg.validate_core().map_err(TomlError)?;
         Ok(cfg)
     }
 
-    /// Sanity constraints (paper requirements and practical limits).
+    /// Full validation (run after every override source has been
+    /// applied): the core constraints plus the scenario/backend pairing.
     pub fn validate(&self) -> Result<(), String> {
+        self.validate_core()?;
+        if self.scenario != DEFAULT_SCENARIO && self.runtime.backend == Backend::Xla {
+            return Err(format!(
+                "scenario `{}` requires `runtime.backend = \"native\"` \
+                 (the XLA artifacts are lowered for the default \
+                 `{DEFAULT_SCENARIO}` scenario only)",
+                self.scenario
+            ));
+        }
+        Ok(())
+    }
+
+    /// Sanity constraints (paper requirements and practical limits) that
+    /// hold regardless of later CLI overrides.
+    fn validate_core(&self) -> Result<(), String> {
         if self.mlmc.b <= self.mlmc.c {
             return Err(format!(
                 "Assumption 2 requires b > c (got b = {}, c = {})",
@@ -270,6 +311,8 @@ impl ExperimentConfig {
         if self.train.clip_norm < 0.0 {
             return Err("clip_norm must be non-negative (0 disables)".into());
         }
+        scenarios::build_scenario_or_err(&self.scenario, &self.problem)
+            .map_err(|e| e.to_string())?;
         Ok(())
     }
 }
@@ -295,6 +338,7 @@ const KNOWN_KEYS: &[&str] = &[
     "train.n_seeds",
     "train.clip_norm",
     "train.dmlmc_warmup",
+    "scenario.name",
     "runtime.backend",
     "runtime.artifacts_dir",
     "runtime.out_dir",
@@ -353,6 +397,40 @@ backend = "native"
         assert!(ExperimentConfig::from_toml("[train]\nlr = -1.0").is_err());
         assert!(ExperimentConfig::from_toml("[train]\nsteps = 0").is_err());
         assert!(ExperimentConfig::from_toml("[problem]\nn0 = 3").is_err());
+    }
+
+    #[test]
+    fn scenario_defaults_and_toml_override() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.scenario, DEFAULT_SCENARIO);
+        assert!(cfg.validate().is_ok());
+
+        let cfg = ExperimentConfig::from_toml(
+            "[scenario]\nname = \"ou-asian\"\n\n[runtime]\nbackend = \"native\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario, "ou-asian");
+    }
+
+    #[test]
+    fn scenario_validation_rules() {
+        // unknown key rejected with the registry listed
+        let e = ExperimentConfig::from_toml(
+            "[scenario]\nname = \"heston-call\"\n\n[runtime]\nbackend = \"native\"",
+        )
+        .unwrap_err();
+        assert!(e.0.contains("heston-call"), "{}", e.0);
+        assert!(e.0.contains("bs-call"), "{}", e.0);
+        // A backend-silent TOML with a non-default scenario parses (the
+        // CLI may still override the backend) but the full validate()
+        // rejects the unresolved xla pairing.
+        let cfg = ExperimentConfig::from_toml("[scenario]\nname = \"cir-digital\"")
+            .unwrap();
+        let e = cfg.validate().unwrap_err();
+        assert!(e.contains("native"), "{e}");
+        let mut fixed = cfg;
+        fixed.runtime.backend = Backend::Native;
+        assert!(fixed.validate().is_ok());
     }
 
     #[test]

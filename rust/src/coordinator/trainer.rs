@@ -101,11 +101,21 @@ impl Trainer {
     }
 
     /// Build the backend from the config (`xla` loads artifacts,
-    /// `native` runs the pure-rust engine).
+    /// `native` runs the pure-rust engine under the configured scenario).
     pub fn from_config(cfg: &ExperimentConfig, method: Method, seed: u64) -> Result<Trainer> {
         let backend: Box<dyn GradBackend> = match cfg.runtime.backend {
-            Backend::Native => Box::new(NativeBackend::new(cfg.problem)),
+            Backend::Native => {
+                let scenario =
+                    crate::scenarios::build_scenario_or_err(&cfg.scenario, &cfg.problem)?;
+                Box::new(NativeBackend::with_scenario(cfg.problem, scenario))
+            }
             Backend::Xla => {
+                anyhow::ensure!(
+                    cfg.scenario == crate::scenarios::DEFAULT_SCENARIO,
+                    "scenario `{}` needs --backend native: the artifacts \
+                     are lowered for the default scenario only",
+                    cfg.scenario
+                );
                 let rt = XlaRuntime::load(&cfg.runtime.artifacts_dir)?;
                 anyhow::ensure!(
                     rt.manifest().problem == cfg.problem,
@@ -470,6 +480,31 @@ mod tests {
             .sqrt();
         // ||update|| <= lr * clip (plus f32 slack)
         assert!(delta <= 0.1 * 0.01 * 1.01, "update norm {delta}");
+    }
+
+    #[test]
+    fn non_default_scenario_trains_on_native_backend() {
+        let mut cfg = smoke_cfg();
+        cfg.scenario = "ou-asian".to_string();
+        let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        let curve = tr.run().unwrap();
+        assert!(curve.points.iter().all(|p| p.loss.is_finite()));
+        // scenario actually changes the objective
+        let mut dflt = Trainer::from_config(&smoke_cfg(), Method::Dmlmc, 0).unwrap();
+        let base = dflt.run().unwrap();
+        assert_ne!(
+            curve.points.last().unwrap().loss,
+            base.points.last().unwrap().loss
+        );
+    }
+
+    #[test]
+    fn non_default_scenario_rejected_on_xla_backend() {
+        let mut cfg = smoke_cfg();
+        cfg.scenario = "cir-call".to_string();
+        cfg.runtime.backend = Backend::Xla;
+        let err = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("native"));
     }
 
     #[test]

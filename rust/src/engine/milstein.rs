@@ -1,43 +1,64 @@
 //! Milstein SDE integrator — Rust mirror of the L1 Pallas kernel
 //! (`python/compile/kernels/milstein.py`) and its jnp oracle.
 //!
-//! Scheme for `dS = a(S) dt + sigma S dB` (strong order 1):
+//! Scheme for `dS = a(S) dt + b(S) dB` (strong order 1):
 //!
-//! `S+ = S + a(S) dt + sigma S dW + 1/2 sigma^2 S (dW^2 - dt)`
+//! `S+ = S + a(S) dt + b(S) dW + 1/2 b(S) b'(S) (dW^2 - dt)`
 //!
 //! computed in f32 with the same operation order as the kernel so the
-//! cross-check tests can use tight tolerances.
+//! cross-check tests can use tight tolerances. The coefficients come from
+//! an [`Sde`]; the [`simulate_paths`] entry point wraps the problem's own
+//! Black–Scholes dynamics and is bit-identical to the pre-scenario
+//! engine (the SDE returns the seed's exact f32 coefficient groupings).
 
-use crate::hedging::{Drift, Problem};
+use crate::hedging::Problem;
+use crate::scenarios::sde::BlackScholes;
+use crate::scenarios::Sde;
 
-/// Simulate `batch` paths over `n_steps` from row-major increments
-/// `dw[batch, n_steps]`; returns row-major `s[batch, n_steps + 1]`
-/// (including `S_0`).
+/// Simulate `batch` paths of `sde` over `n_steps` from row-major
+/// increments `dw[batch, n_steps]`; returns row-major
+/// `s[batch, n_steps + 1]` (including `S_0`).
+///
+/// Generic (`S: Sde + ?Sized`) so concrete-SDE callers like
+/// [`simulate_paths`] monomorphize and keep the seed engine's inlined
+/// inner loop, while `&dyn Sde` callers (the scenario objective) still
+/// dispatch dynamically.
+pub fn simulate_paths_sde<S: Sde + ?Sized>(
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    sde: &S,
+    maturity: f64,
+) -> Vec<f32> {
+    assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
+    let dt = (maturity / n_steps as f64) as f32;
+    let mut out = vec![0.0f32; batch * (n_steps + 1)];
+    for b in 0..batch {
+        let row_dw = &dw[b * n_steps..(b + 1) * n_steps];
+        let row_s = &mut out[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
+        let mut s = sde.s0();
+        row_s[0] = s;
+        for (t, &dwt) in row_dw.iter().enumerate() {
+            let drift = sde.drift(s);
+            let diff = sde.diffusion(s);
+            let corr = sde.milstein_term(s);
+            s = sde.clamp(s + drift * dt + diff * dwt + corr * (dwt * dwt - dt));
+            row_s[t + 1] = s;
+        }
+    }
+    out
+}
+
+/// Simulate the problem's own Black–Scholes dynamics (the default
+/// scenario) — the seed engine's entry point, preserved bitwise.
 pub fn simulate_paths(
     dw: &[f32],
     batch: usize,
     n_steps: usize,
     problem: &Problem,
 ) -> Vec<f32> {
-    assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
-    let dt = (problem.maturity / n_steps as f64) as f32;
-    let mu = problem.mu as f32;
-    let sigma = problem.sigma as f32;
-    let half_s2 = 0.5 * sigma * sigma;
-    let geometric = problem.drift == Drift::Geometric;
-    let mut out = vec![0.0f32; batch * (n_steps + 1)];
-    for b in 0..batch {
-        let row_dw = &dw[b * n_steps..(b + 1) * n_steps];
-        let row_s = &mut out[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
-        let mut s = problem.s0 as f32;
-        row_s[0] = s;
-        for (t, &dwt) in row_dw.iter().enumerate() {
-            let drift = if geometric { mu * s } else { mu };
-            s = s + drift * dt + sigma * s * dwt + half_s2 * s * (dwt * dwt - dt);
-            row_s[t + 1] = s;
-        }
-    }
-    out
+    let sde = BlackScholes::from_problem(problem);
+    simulate_paths_sde(dw, batch, n_steps, &sde, problem.maturity)
 }
 
 /// Terminal values only (convenience for diagnostics/cross-checks).
@@ -54,10 +75,61 @@ pub fn terminal_values(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hedging::Drift;
     use crate::rng::{brownian::Purpose, BrownianSource};
 
     fn problem() -> Problem {
         Problem::default()
+    }
+
+    #[test]
+    fn generic_sde_dispatch_matches_seed_loop_bitwise() {
+        // The trait-dispatched integrator must reproduce the seed
+        // engine's inlined Black–Scholes recurrence EXACTLY (f32 products
+        // regrouped differently would drift in the last bit).
+        for drift in [Drift::Additive, Drift::Geometric] {
+            let p = Problem { drift, ..problem() };
+            let batch = 16;
+            let n = 32;
+            let dw = BrownianSource::new(7).increments(
+                Purpose::Diagnostic, 0, 0, 0, batch, n, p.maturity / n as f64,
+            );
+            let got = simulate_paths(&dw, batch, n, &p);
+
+            // seed recurrence, written out inline
+            let dt = (p.maturity / n as f64) as f32;
+            let mu = p.mu as f32;
+            let sigma = p.sigma as f32;
+            let half_s2 = 0.5 * sigma * sigma;
+            let geometric = drift == Drift::Geometric;
+            let mut want = vec![0.0f32; batch * (n + 1)];
+            for b in 0..batch {
+                let row_dw = &dw[b * n..(b + 1) * n];
+                let mut s = p.s0 as f32;
+                want[b * (n + 1)] = s;
+                for (t, &dwt) in row_dw.iter().enumerate() {
+                    let a = if geometric { mu * s } else { mu };
+                    s = s + a * dt + sigma * s * dwt
+                        + half_s2 * s * (dwt * dwt - dt);
+                    want[b * (n + 1) + t + 1] = s;
+                }
+            }
+            assert_eq!(got, want, "drift {drift:?} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn cir_paths_stay_non_negative() {
+        use crate::scenarios::sde::CoxIngersollRoss;
+        // Stress the truncation: tiny s0 relative to the noise.
+        let sde = CoxIngersollRoss::new(1.5, 0.05, 1.0, 0.05);
+        let batch = 64;
+        let n = 64;
+        let dw = BrownianSource::new(11).increments(
+            Purpose::Diagnostic, 0, 0, 0, batch, n, 1.0 / n as f64,
+        );
+        let s = simulate_paths_sde(&dw, batch, n, &sde, 1.0);
+        assert!(s.iter().all(|&v| v >= 0.0 && v.is_finite()));
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //!   without artifacts (CI without Python, portability);
 //! * **benchmarks** — a baseline the runtime's hot path is compared to.
 
+//! The integrator and objective are generic over a
+//! [`crate::scenarios::Scenario`] (SDE dynamics x path payoff); the plain
+//! entry points run the problem's default Black–Scholes-call scenario
+//! bit-identically to the seed engine.
+
 pub mod milstein;
 pub mod mlp;
 pub mod objective;
 
-pub use milstein::simulate_paths;
+pub use milstein::{simulate_paths, simulate_paths_sde};
 pub use mlp::{MlpParams, HIDDEN, N_IN, N_PARAMS};
-pub use objective::{coupled_value_and_grad, loss_only, value_and_grad};
+pub use objective::{
+    coupled_value_and_grad, coupled_value_and_grad_scenario, loss_only,
+    loss_only_scenario, value_and_grad, value_and_grad_scenario,
+};

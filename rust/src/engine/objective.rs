@@ -1,23 +1,35 @@
 //! Deep-hedging objective and its gradient — the native mirror of the L2
-//! JAX model (`python/compile/model.py`).
+//! JAX model (`python/compile/model.py`), generalized over a
+//! [`Scenario`] (SDE dynamics x path payoff).
 //!
 //! Loss on one grid:  `L = mean_i r_i^2` with per-path residual
-//! `r_i = max(S_i(T) - K, 0) - sum_n H(t_n, S_in) (S_i,n+1 - S_in) - p0`.
+//! `r_i = payoff(S_i) - sum_n H(t_n, S_in) (S_i,n+1 - S_in) - p0`
+//! (the default scenario's payoff is `max(S_i(T) - K, 0)`).
 //!
 //! The gradient is assembled by hand:
 //! `dL/dr_i = 2 r_i / B`, `dr_i/dp0 = -1`, `dr_i/dH_in = -dS_in`, and the
 //! MLP rows are backpropagated with [`super::mlp::backward_row`]. The path
 //! `S` is exogenous (independent of the parameters), exactly as in the JAX
-//! model (`stop_gradient` on the path).
+//! model (`stop_gradient` on the path) — which is also why any payoff
+//! slots in: it contributes a residual value, never its own gradient.
+//!
+//! The `*_scenario` entry points take an explicit [`Scenario`]; the plain
+//! entry points run the problem's default scenario and are bit-identical
+//! to the pre-scenario engine.
 
-use super::milstein::simulate_paths;
+use super::milstein::simulate_paths_sde;
 use super::mlp::{backward_row, forward_row, MlpParams, N_PARAMS, OFF_P0};
 use crate::hedging::Problem;
 use crate::rng::BrownianSource;
+use crate::scenarios::payoff::EuropeanCall;
+use crate::scenarios::sde::BlackScholes;
+use crate::scenarios::{Payoff, Scenario, Sde};
 
 /// Loss + gradient of the mean objective on one grid.
 ///
 /// `dw` is row-major `[batch, n_steps]`. Returns `(loss, grad[N_PARAMS])`.
+/// Runs the default scenario through *concrete* SDE/payoff types, so the
+/// inner loop stays monomorphized exactly like the seed engine.
 pub fn value_and_grad(
     params: &[f32],
     dw: &[f32],
@@ -25,14 +37,53 @@ pub fn value_and_grad(
     n_steps: usize,
     problem: &Problem,
 ) -> (f64, Vec<f32>) {
+    let sde = BlackScholes::from_problem(problem);
+    let payoff = EuropeanCall {
+        strike: problem.strike as f32,
+    };
+    value_and_grad_impl(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+/// [`value_and_grad`] under an explicit scenario (dynamic dispatch).
+pub fn value_and_grad_scenario(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    scenario: &Scenario,
+) -> (f64, Vec<f32>) {
+    value_and_grad_impl(
+        params,
+        dw,
+        batch,
+        n_steps,
+        problem,
+        &*scenario.sde,
+        &*scenario.payoff,
+    )
+}
+
+fn value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> (f64, Vec<f32>) {
     let mut grad = vec![0.0f32; N_PARAMS];
-    let loss = accumulate_value_and_grad(params, dw, batch, n_steps, problem, 1.0, &mut grad);
+    let loss = accumulate_value_and_grad(
+        params, dw, batch, n_steps, problem, sde, payoff, 1.0, &mut grad,
+    );
     (loss, grad)
 }
 
 /// Loss + gradient of the mean *coupled* objective
 /// `Delta_l F = F_l - F_{l-1}` from fine-grid increments (level >= 1), or
-/// plain `F_0` at level 0.
+/// plain `F_0` at level 0. Monomorphized default scenario, like
+/// [`value_and_grad`].
 pub fn coupled_value_and_grad(
     params: &[f32],
     dw_fine: &[f32],
@@ -40,20 +91,59 @@ pub fn coupled_value_and_grad(
     level: usize,
     problem: &Problem,
 ) -> (f64, Vec<f32>) {
+    let sde = BlackScholes::from_problem(problem);
+    let payoff = EuropeanCall {
+        strike: problem.strike as f32,
+    };
+    coupled_value_and_grad_impl(params, dw_fine, batch, level, problem, &sde, &payoff)
+}
+
+/// [`coupled_value_and_grad`] under an explicit scenario (dynamic
+/// dispatch).
+pub fn coupled_value_and_grad_scenario(
+    params: &[f32],
+    dw_fine: &[f32],
+    batch: usize,
+    level: usize,
+    problem: &Problem,
+    scenario: &Scenario,
+) -> (f64, Vec<f32>) {
+    coupled_value_and_grad_impl(
+        params,
+        dw_fine,
+        batch,
+        level,
+        problem,
+        &*scenario.sde,
+        &*scenario.payoff,
+    )
+}
+
+fn coupled_value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+    params: &[f32],
+    dw_fine: &[f32],
+    batch: usize,
+    level: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> (f64, Vec<f32>) {
     let n_fine = problem.n_steps(level);
     let mut grad = vec![0.0f32; N_PARAMS];
-    let mut loss =
-        accumulate_value_and_grad(params, dw_fine, batch, n_fine, problem, 1.0, &mut grad);
+    let mut loss = accumulate_value_and_grad(
+        params, dw_fine, batch, n_fine, problem, sde, payoff, 1.0, &mut grad,
+    );
     if level > 0 {
         let dw_coarse = BrownianSource::coarsen(dw_fine, batch, n_fine);
         loss += accumulate_value_and_grad(
-            params, &dw_coarse, batch, n_fine / 2, problem, -1.0, &mut grad,
+            params, &dw_coarse, batch, n_fine / 2, problem, sde, payoff, -1.0, &mut grad,
         );
     }
     (loss, grad)
 }
 
-/// Loss only (no gradient) — evaluation batches.
+/// Loss only (no gradient) — evaluation batches. Monomorphized default
+/// scenario, like [`value_and_grad`].
 pub fn loss_only(
     params: &[f32],
     dw: &[f32],
@@ -61,10 +151,45 @@ pub fn loss_only(
     n_steps: usize,
     problem: &Problem,
 ) -> f64 {
+    let sde = BlackScholes::from_problem(problem);
+    let payoff = EuropeanCall {
+        strike: problem.strike as f32,
+    };
+    loss_only_impl(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+/// [`loss_only`] under an explicit scenario (dynamic dispatch).
+pub fn loss_only_scenario(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    scenario: &Scenario,
+) -> f64 {
+    loss_only_impl(
+        params,
+        dw,
+        batch,
+        n_steps,
+        problem,
+        &*scenario.sde,
+        &*scenario.payoff,
+    )
+}
+
+fn loss_only_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> f64 {
     let p = MlpParams::new(params);
-    let s = simulate_paths(dw, batch, n_steps, problem);
+    let s = simulate_paths_sde(dw, batch, n_steps, sde, problem.maturity);
     let dt_grid = problem.maturity as f32 / n_steps as f32;
-    let strike = problem.strike as f32;
     let mut total = 0.0f64;
     for b in 0..batch {
         let row = &s[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
@@ -73,8 +198,8 @@ pub fn loss_only(
             let h = forward_row(&p, [n as f32 * dt_grid, row[n]]).0;
             gains += h * (row[n + 1] - row[n]);
         }
-        let payoff = (row[n_steps] - strike).max(0.0);
-        let r = payoff - gains - p.p0();
+        let payoff_v = payoff.value(row);
+        let r = payoff_v - gains - p.p0();
         total += (r as f64) * (r as f64);
     }
     total / batch as f64
@@ -83,20 +208,21 @@ pub fn loss_only(
 /// Shared fwd+bwd over one grid, scaling the contribution by `sign`
 /// (+1 fine term, -1 coarse term). Returns `sign * loss` and accumulates
 /// `sign * grad` into `grad`.
-fn accumulate_value_and_grad(
+fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
     params: &[f32],
     dw: &[f32],
     batch: usize,
     n_steps: usize,
     problem: &Problem,
+    sde: &S,
+    payoff: &P,
     sign: f32,
     grad: &mut [f32],
 ) -> f64 {
     assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
     let p = MlpParams::new(params);
-    let s = simulate_paths(dw, batch, n_steps, problem);
+    let s = simulate_paths_sde(dw, batch, n_steps, sde, problem.maturity);
     let dt_grid = problem.maturity as f32 / n_steps as f32;
-    let strike = problem.strike as f32;
     let inv_b = 1.0f32 / batch as f32;
 
     // Tape reuse: one row of tapes per path (n_steps entries).
@@ -113,8 +239,8 @@ fn accumulate_value_and_grad(
             tapes.push(tape);
             gains += h * (row[n + 1] - row[n]);
         }
-        let payoff = (row[n_steps] - strike).max(0.0);
-        let r = payoff - gains - p.p0();
+        let payoff_v = payoff.value(row);
+        let r = payoff_v - gains - p.p0();
         total += (r as f64) * (r as f64);
 
         // Backward: dL/dr = 2 r / B (scaled by sign).
@@ -131,6 +257,7 @@ fn accumulate_value_and_grad(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::milstein::simulate_paths;
     use crate::engine::mlp::init_params;
     use crate::rng::{brownian::Purpose, BrownianSource};
 
@@ -241,6 +368,37 @@ mod tests {
             moments[2] < moments[1] && moments[1] < moments[0],
             "{moments:?}"
         );
+    }
+
+    #[test]
+    fn default_scenario_is_bitwise_identical_to_plain_entry_points() {
+        let (prob, params, dw) = setup(2, 16);
+        let sc = Scenario::from_problem(&prob);
+        let (l1, g1) = coupled_value_and_grad(&params, &dw, 16, 2, &prob);
+        let (l2, g2) =
+            coupled_value_and_grad_scenario(&params, &dw, 16, 2, &prob, &sc);
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+        let n = prob.n_steps(2);
+        assert_eq!(
+            loss_only(&params, &dw, 16, n, &prob),
+            loss_only_scenario(&params, &dw, 16, n, &prob, &sc)
+        );
+    }
+
+    #[test]
+    fn non_default_scenarios_produce_finite_coupled_grads() {
+        let (prob, params, dw) = setup(2, 8);
+        for name in ["ou-asian", "cir-lookback", "gbm-digital", "bs-put"] {
+            let sc = crate::scenarios::build_scenario(name, &prob).unwrap();
+            let (loss, grad) =
+                coupled_value_and_grad_scenario(&params, &dw, 8, 2, &prob, &sc);
+            assert!(loss.is_finite(), "{name}: loss {loss}");
+            assert!(
+                grad.iter().all(|g| g.is_finite()),
+                "{name}: non-finite gradient"
+            );
+        }
     }
 
     #[test]

@@ -4,15 +4,17 @@
 
 use anyhow::Result;
 
-use crate::config::ExperimentConfig;
+use crate::config::{Backend, ExperimentConfig};
 use crate::coordinator::{Method, Trainer};
 use crate::hedging::bs_call_price;
 use crate::metrics::aggregate::AggregatedCurve;
 use crate::metrics::{aggregate_curves, LearningCurve, Welford};
 use crate::mlmc::theory::{TheoryParams, TheoryRow};
-use crate::mlmc::DecaySeries;
+use crate::mlmc::{fit_decay_rate, DecaySeries};
 use crate::parallel::CostModel;
 use crate::rng::{brownian::Purpose, BrownianSource};
+use crate::runtime::{GradBackend, NativeBackend};
+use crate::scenarios::build_scenario_or_err;
 
 // ---------------------------------------------------------------------------
 // Figure 2 — learning curves of the three methods
@@ -233,6 +235,9 @@ pub fn validate_bs(cfg: &ExperimentConfig) -> Result<(f64, f64)> {
     let mut cfg = cfg.clone();
     cfg.problem.drift = crate::hedging::Drift::Geometric;
     cfg.problem.mu = 0.0;
+    // The anchor is the Black–Scholes CALL closed form, so the scenario
+    // must be the default whatever the caller had configured.
+    cfg.scenario = crate::scenarios::DEFAULT_SCENARIO.to_string();
     // The validation problem differs from the one the artifacts were
     // lowered for (drift/mu), so it always runs on the native engine —
     // which the cross-check tests pin to the HLO numerics anyway.
@@ -296,6 +301,133 @@ pub fn predicted_avg_depth(cfg: &ExperimentConfig, horizon: u64) -> f64 {
     total / horizon as f64
 }
 
+// ---------------------------------------------------------------------------
+// Scenario sweep — per-scenario Assumption-2 fit + parallel-cost table
+// ---------------------------------------------------------------------------
+
+/// One row of the scenario sweep: the fitted variance-decay exponent and
+/// the measured MLMC vs delayed-MLMC parallel cost for one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    pub name: String,
+    /// Fitted decay exponent of `E||grad Delta_l F_hat||^2` at the
+    /// initial parameters (Assumption 2's `b`).
+    pub b_hat: f64,
+    /// Whether the fitted decay supports Assumption 2 (`b_hat > c`).
+    pub assumption_ok: bool,
+    /// Total parallel cost of the standard-MLMC run.
+    pub mlmc_par: f64,
+    /// Total parallel cost of the delayed-MLMC run.
+    pub dmlmc_par: f64,
+    /// `mlmc_par / dmlmc_par` — the paper's parallel-complexity advantage.
+    pub par_ratio: f64,
+    /// Final held-out loss of the delayed-MLMC run.
+    pub final_loss: f64,
+}
+
+/// Chunks averaged per (level) when fitting `b_hat` — same reasoning as
+/// [`DIAG_CHUNKS`]: per-sample second moments are heavy-tailed.
+const SWEEP_CHUNKS: u32 = 4;
+
+/// Fit the variance-decay exponent `b` for one scenario backend at the
+/// given parameters (levels `1..=lmax`, the decay-constrained range).
+pub fn fit_b_hat(
+    backend: &NativeBackend,
+    cfg: &ExperimentConfig,
+    params: &[f32],
+) -> Result<f64> {
+    let src = BrownianSource::new(0xB0);
+    let mut level_means = Vec::new();
+    for level in 1..=cfg.problem.lmax {
+        let n = cfg.problem.n_steps(level);
+        let batch = backend.diag_chunk();
+        let mut w = Welford::new();
+        for chunk in 0..SWEEP_CHUNKS {
+            let dw = src.increments(
+                Purpose::Diagnostic,
+                0,
+                level as u32,
+                chunk,
+                batch,
+                n,
+                cfg.problem.dt(level),
+            );
+            for v in backend.grad_norms_chunk(level, params, &dw)? {
+                w.push(v as f64);
+            }
+        }
+        level_means.push((level, w.mean()));
+    }
+    Ok(fit_decay_rate(&level_means))
+}
+
+/// For every named scenario: fit `b_hat` (Assumption 2), then run one
+/// standard-MLMC and one delayed-MLMC training and compare total
+/// parallel cost — demonstrating the paper's parallel-complexity
+/// advantage is scenario-generic. Always runs on the native backend.
+pub fn scenario_sweep(
+    cfg: &ExperimentConfig,
+    names: &[String],
+    quiet: bool,
+) -> Result<Vec<ScenarioRow>> {
+    let mut rows = Vec::new();
+    for name in names {
+        let mut c = cfg.clone();
+        c.scenario = name.clone();
+        c.runtime.backend = Backend::Native;
+        let scenario = build_scenario_or_err(name, &c.problem)?;
+        let backend = NativeBackend::with_scenario(c.problem, scenario);
+        let params = crate::engine::mlp::init_params(0);
+        let b_hat = fit_b_hat(&backend, &c, &params)?;
+
+        let mut mlmc = Trainer::from_config(&c, Method::Mlmc, 0)?;
+        mlmc.run()?;
+        let mut dmlmc = Trainer::from_config(&c, Method::Dmlmc, 0)?;
+        let curve = dmlmc.run()?;
+        let mlmc_par = mlmc.cumulative_cost().depth;
+        let dmlmc_par = dmlmc.cumulative_cost().depth;
+        let row = ScenarioRow {
+            name: name.clone(),
+            b_hat,
+            assumption_ok: b_hat > c.mlmc.c,
+            mlmc_par,
+            dmlmc_par,
+            par_ratio: mlmc_par / dmlmc_par,
+            final_loss: curve.final_loss().unwrap_or(f64::NAN),
+        };
+        if !quiet {
+            eprintln!(
+                "scenario_sweep: {name:<14} b_hat {b_hat:>6.2}  par ratio {:.2}",
+                row.par_ratio
+            );
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Render the sweep as text (CLI + `examples/scenario_sweep.rs`).
+pub fn render_scenario_table(rows: &[ScenarioRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>8} {:>14} {:>14} {:>10} {:>12}\n",
+        "scenario", "b_hat", "A2 ok", "mlmc par", "dmlmc par", "ratio", "final loss"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>8.2} {:>8} {:>14.0} {:>14.0} {:>10.2} {:>12.4}\n",
+            r.name,
+            r.b_hat,
+            if r.assumption_ok { "yes" } else { "NO" },
+            r.mlmc_par,
+            r.dmlmc_par,
+            r.par_ratio,
+            r.final_loss
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +488,41 @@ mod tests {
         // and far below 2^lmax.
         assert!(pred > 1.0);
         assert!(pred < 2f64.powi(c.problem.lmax as i32));
+    }
+
+    #[test]
+    fn scenario_sweep_covers_names_and_shows_parallel_advantage() {
+        let mut c = cfg();
+        c.train.steps = 6;
+        c.train.eval_every = 6;
+        c.mlmc.n_effective = 32;
+        c.train.dmlmc_warmup = 0;
+        let names: Vec<String> =
+            ["bs-call", "ou-asian", "cir-digital"].iter().map(|s| s.to_string()).collect();
+        let rows = scenario_sweep(&c, &names, true).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.b_hat.is_finite(), "{}: b_hat {}", r.name, r.b_hat);
+            assert!(
+                r.dmlmc_par < r.mlmc_par,
+                "{}: dmlmc par {} !< mlmc par {}",
+                r.name,
+                r.dmlmc_par,
+                r.mlmc_par
+            );
+            assert!(r.final_loss.is_finite());
+        }
+        // smooth default scenario must show clear variance decay
+        assert!(rows[0].b_hat > 0.5, "bs-call b_hat {}", rows[0].b_hat);
+        let txt = render_scenario_table(&rows);
+        assert!(txt.contains("ou-asian"));
+        assert!(txt.lines().count() >= 4);
+    }
+
+    #[test]
+    fn scenario_sweep_rejects_unknown_names() {
+        let names = vec!["nope-call".to_string()];
+        assert!(scenario_sweep(&cfg(), &names, true).is_err());
     }
 
     #[test]

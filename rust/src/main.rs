@@ -15,6 +15,11 @@ fn root_command() -> Command {
     let common = |c: Command| {
         c.opt(Opt::value("config", "TOML config (configs/*.toml)"))
             .opt(Opt::value("backend", "xla|native (overrides config)"))
+            .opt(Opt::value(
+                "scenario",
+                "scenario key `<sde>-<payoff>`, e.g. bs-call|ou-asian|cir-digital \
+                 (see `repro scenarios`); non-default keys imply --backend native",
+            ))
             .opt(Opt::value("steps", "override train.steps"))
             .opt(Opt::value("n-effective", "override mlmc.n_effective"))
             .opt(Opt::value("seeds", "override train.n_seeds"))
@@ -49,20 +54,60 @@ fn root_command() -> Command {
             Command::new("sweep", "delay-exponent ablation")
                 .opt(Opt::with_default("values", "comma-separated d values", "0.5,1.0,1.5,2.0")),
         ))
+        .subcommand(common(
+            Command::new(
+                "scenario-sweep",
+                "per-scenario Assumption-2 fit + MLMC vs DMLMC parallel cost",
+            )
+            .opt(Opt::with_default(
+                "scenarios",
+                "comma-separated scenario keys, or `all`",
+                "all",
+            )),
+        ))
+        .subcommand(Command::new(
+            "scenarios",
+            "list the registered scenario keys",
+        ))
         .subcommand(Command::new("info", "print artifact/manifest summary").opt(
             Opt::with_default("artifacts", "artifact directory", "artifacts"),
         ))
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    // Whether the TOML itself pins `runtime.backend` (a config file that
+    // stays silent about the backend is not a pin). Costs a second parse
+    // of a sub-kilobyte file at startup; parse errors are left for
+    // from_toml to report.
+    let mut toml_pins_backend = false;
     let mut cfg = match args.get("config") {
-        Some(path) => ExperimentConfig::from_toml_file(Path::new(path))
-            .map_err(|e| anyhow!("{e}"))?,
+        Some(path) => {
+            let text = std::fs::read_to_string(Path::new(path))
+                .map_err(|e| anyhow!("{path}: {e}"))?;
+            toml_pins_backend = dmlmc::util::toml::TomlDoc::parse(&text)
+                .map(|doc| doc.get("runtime.backend").is_some())
+                .unwrap_or(false);
+            ExperimentConfig::from_toml(&text).map_err(|e| anyhow!("{e}"))?
+        }
         None => ExperimentConfig::default_paper(),
     };
     if let Some(b) = args.get("backend") {
         cfg.runtime.backend =
             Backend::parse(b).ok_or_else(|| anyhow!("unknown backend `{b}`"))?;
+    }
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = s.to_string();
+        // Non-default scenarios only run on the native engine; switch
+        // automatically when no backend was pinned anywhere (neither
+        // --backend nor an explicit `runtime.backend` in the TOML, which
+        // we must not silently override — validation rejects a conflict
+        // loudly instead).
+        if s != dmlmc::scenarios::DEFAULT_SCENARIO
+            && args.get("backend").is_none()
+            && !toml_pins_backend
+        {
+            cfg.runtime.backend = Backend::Native;
+        }
     }
     if let Some(v) = args.parse_usize("steps")? {
         cfg.train.steps = v;
@@ -94,8 +139,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let quiet = args.flag("quiet");
 
     eprintln!(
-        "train: method={method} seed={seed} backend={} steps={} N={}",
+        "train: method={method} seed={seed} backend={} scenario={} steps={} N={}",
         cfg.runtime.backend.name(),
+        cfg.scenario,
         cfg.train.steps,
         cfg.mlmc.n_effective
     );
@@ -161,13 +207,19 @@ fn cmd_assumptions(args: &Args) -> Result<()> {
     let snapshots = args.parse_usize("snapshots")?.unwrap_or(6);
     let fig = experiments::figure1(&cfg, snapshots, args.flag("quiet"))?;
     println!("Figure 1 — assumption decay (levels 0..={}):", cfg.problem.lmax);
-    println!("{:<6} {:>16} {:>16} {:>16} {:>16}", "level", "E||gDl||^2", "(std)", "smoothness", "(std)");
+    println!(
+        "{:<6} {:>16} {:>16} {:>16} {:>16}",
+        "level", "E||gDl||^2", "(std)", "smoothness", "(std)"
+    );
     for l in 0..fig.grad_norms.per_level.len() {
         let (gm, gs) = fig.grad_norms.per_level[l];
         let (sm, ss) = fig.smoothness.per_level[l];
         println!("{l:<6} {gm:>16.6e} {gs:>16.2e} {sm:>16.6e} {ss:>16.2e}");
     }
-    println!("\nfitted decay exponents: b_hat = {:.3} (paper ~1.8-2), d_hat = {:.3} (paper ~1)", fig.b_hat, fig.d_hat);
+    println!(
+        "\nfitted decay exponents: b_hat = {:.3} (paper ~1.8-2), d_hat = {:.3} (paper ~1)",
+        fig.b_hat, fig.d_hat
+    );
 
     std::fs::create_dir_all(&cfg.runtime.out_dir)?;
     let mut csv = String::from("level,grad_norm_mean,grad_norm_std,smooth_mean,smooth_std\n");
@@ -210,13 +262,43 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("bad d `{s}`")))
         .collect::<Result<_>>()?;
     let rows = experiments::sweep_delay(&cfg, &ds)?;
-    println!("{:<6} {:>12} {:>14} {:>14} {:>12}", "d", "final loss", "std cost", "par cost", "avg depth");
+    println!(
+        "{:<6} {:>12} {:>14} {:>14} {:>12}",
+        "d", "final loss", "std cost", "par cost", "avg depth"
+    );
     for (d, r) in rows {
         println!(
             "{d:<6} {:>12.5} {:>14.0} {:>14.0} {:>12.2}",
             r.final_loss, r.std_cost, r.par_cost, r.avg_depth
         );
     }
+    Ok(())
+}
+
+fn cmd_scenarios() -> Result<()> {
+    println!(
+        "registered scenarios (<sde>-<payoff>; default `{}`):",
+        dmlmc::scenarios::DEFAULT_SCENARIO
+    );
+    for name in dmlmc::scenarios::all_scenario_names() {
+        println!("  {name}");
+    }
+    println!(
+        "\nsde keys:    {}\npayoff keys: {}",
+        dmlmc::scenarios::SDE_KEYS.join(", "),
+        dmlmc::scenarios::PAYOFF_KEYS.join(", ")
+    );
+    Ok(())
+}
+
+fn cmd_scenario_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let names: Vec<String> = match args.get_or("scenarios", "all") {
+        "all" => dmlmc::scenarios::all_scenario_names(),
+        list => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let rows = experiments::scenario_sweep(&cfg, &names, args.flag("quiet"))?;
+    println!("{}", experiments::render_scenario_table(&rows));
     Ok(())
 }
 
@@ -258,6 +340,8 @@ fn main() -> ExitCode {
         "table1" => cmd_table1(&args),
         "validate" => cmd_validate(&args),
         "sweep" => cmd_sweep(&args),
+        "scenario-sweep" => cmd_scenario_sweep(&args),
+        "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {
             eprintln!("{}", root_command().help());

@@ -37,22 +37,29 @@ impl PramMachine {
     /// scheduling is within 4/3 of optimal; exactness is irrelevant here —
     /// we need the *scaling*, which LPT preserves.
     pub fn step_makespan(&self, jobs: &[LevelJob]) -> f64 {
-        // Expand into task lengths, longest first.
-        let mut tasks: Vec<f64> = Vec::new();
-        for j in jobs {
-            let len = self.model.sample_cost(j.level);
-            tasks.extend(std::iter::repeat(len).take(j.n_samples));
-        }
-        tasks.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // All samples of one job share the length `2^{c l}`, so LPT never
+        // needs one task per sample (level-0 jobs used to materialize and
+        // sort 500+ identical entries): sort the per-job (length, count)
+        // groups longest-first and assign counts greedily. Equal-length
+        // tasks are interchangeable, so this is bit-identical to the
+        // expanded sort — including the first-min tie-breaking.
+        let mut groups: Vec<(f64, usize)> = jobs
+            .iter()
+            .filter(|j| j.n_samples > 0)
+            .map(|j| (self.model.sample_cost(j.level), j.n_samples))
+            .collect();
+        groups.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         let mut loads = vec![0.0f64; self.processors];
-        for t in tasks {
-            // assign to least-loaded processor
-            let (idx, _) = loads
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            loads[idx] += t;
+        for (len, count) in groups {
+            for _ in 0..count {
+                // assign to least-loaded processor
+                let (idx, _) = loads
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                loads[idx] += len;
+            }
         }
         loads.into_iter().fold(0.0, f64::max)
     }
@@ -138,5 +145,49 @@ mod tests {
     #[should_panic(expected = "at least one")]
     fn zero_processors_panics() {
         PramMachine::new(0, CostModel::new(1.0));
+    }
+
+    /// The pre-optimization LPT: expand one task per sample and sort.
+    fn makespan_expanded_reference(m: &PramMachine, jobs: &[LevelJob]) -> f64 {
+        let mut tasks: Vec<f64> = Vec::new();
+        for j in jobs {
+            let len = m.model.sample_cost(j.level);
+            tasks.extend(std::iter::repeat(len).take(j.n_samples));
+        }
+        tasks.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut loads = vec![0.0f64; m.processors];
+        for t in tasks {
+            let (idx, _) = loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            loads[idx] += t;
+        }
+        loads.into_iter().fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn counting_schedule_matches_expansion_bitwise() {
+        use crate::testkit::{check, Config, Gen};
+        // Random c (irregular float lengths), random duplicate levels and
+        // counts: the grouped schedule must equal the expanded one to the
+        // last bit, including tie-breaking.
+        check("grouped LPT == expanded LPT", Config { cases: 200, seed: 0x9A }, |g: &mut Gen| {
+            let m = PramMachine::new(g.usize(1, 9), CostModel::new(g.f64(0.0, 2.0)));
+            let n_jobs = g.usize(0, 6);
+            let jobs: Vec<LevelJob> = (0..n_jobs)
+                .map(|_| LevelJob {
+                    level: g.usize(0, 6),
+                    n_samples: g.usize(0, 40),
+                })
+                .collect();
+            let fast = m.step_makespan(&jobs);
+            let slow = makespan_expanded_reference(&m, &jobs);
+            if fast.to_bits() != slow.to_bits() {
+                return Err(format!("{fast} != {slow} for {jobs:?}"));
+            }
+            Ok(())
+        });
     }
 }

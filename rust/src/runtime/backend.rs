@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use crate::engine;
 use crate::hedging::Problem;
+use crate::scenarios::Scenario;
 
 /// Gradient/loss execution interface (one chunk at a time).
 pub trait GradBackend {
@@ -83,15 +84,29 @@ pub fn default_grad_chunk(level: usize) -> usize {
     }
 }
 
-/// Pure-rust backend over [`crate::engine`].
+/// Pure-rust backend over [`crate::engine`], running one
+/// [`Scenario`] (the default scenario unless built with
+/// [`NativeBackend::with_scenario`]). This is the only backend that can
+/// run non-default scenarios — the XLA artifacts are lowered for the
+/// default scenario alone.
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
     problem: Problem,
+    scenario: Scenario,
 }
 
 impl NativeBackend {
     pub fn new(problem: Problem) -> Self {
-        NativeBackend { problem }
+        let scenario = Scenario::from_problem(&problem);
+        NativeBackend { problem, scenario }
+    }
+
+    pub fn with_scenario(problem: Problem, scenario: Scenario) -> Self {
+        NativeBackend { problem, scenario }
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
     }
 }
 
@@ -127,34 +142,37 @@ impl GradBackend for NativeBackend {
         dw: &[f32],
     ) -> Result<(f64, Vec<f32>)> {
         let batch = self.grad_chunk(level);
-        Ok(engine::coupled_value_and_grad(
+        Ok(engine::coupled_value_and_grad_scenario(
             params,
             dw,
             batch,
             level,
             &self.problem,
+            &self.scenario,
         ))
     }
 
     fn grad_naive_chunk(&self, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)> {
         let n = self.problem.n_steps(self.problem.lmax);
-        Ok(engine::value_and_grad(
+        Ok(engine::value_and_grad_scenario(
             params,
             dw,
             self.naive_chunk(),
             n,
             &self.problem,
+            &self.scenario,
         ))
     }
 
     fn loss_eval_chunk(&self, params: &[f32], dw: &[f32]) -> Result<f64> {
         let n = self.problem.n_steps(self.problem.lmax);
-        Ok(engine::loss_only(
+        Ok(engine::loss_only_scenario(
             params,
             dw,
             self.eval_chunk(),
             n,
             &self.problem,
+            &self.scenario,
         ))
     }
 
@@ -170,8 +188,14 @@ impl GradBackend for NativeBackend {
         let mut out = Vec::with_capacity(batch);
         for b in 0..batch {
             let row = &dw[b * n..(b + 1) * n];
-            let (_, g) =
-                engine::coupled_value_and_grad(params, row, 1, level, &self.problem);
+            let (_, g) = engine::coupled_value_and_grad_scenario(
+                params,
+                row,
+                1,
+                level,
+                &self.problem,
+                &self.scenario,
+            );
             out.push(g.iter().map(|&x| x * x).sum::<f32>());
         }
         Ok(out)
@@ -197,10 +221,22 @@ impl GradBackend for NativeBackend {
         let mut out = Vec::with_capacity(batch);
         for b in 0..batch {
             let row = &dw[b * n..(b + 1) * n];
-            let (_, g1) =
-                engine::coupled_value_and_grad(params1, row, 1, level, &self.problem);
-            let (_, g2) =
-                engine::coupled_value_and_grad(params2, row, 1, level, &self.problem);
+            let (_, g1) = engine::coupled_value_and_grad_scenario(
+                params1,
+                row,
+                1,
+                level,
+                &self.problem,
+                &self.scenario,
+            );
+            let (_, g2) = engine::coupled_value_and_grad_scenario(
+                params2,
+                row,
+                1,
+                level,
+                &self.problem,
+                &self.scenario,
+            );
             let dg = g1
                 .iter()
                 .zip(&g2)
@@ -280,5 +316,39 @@ mod tests {
         let dw = dw_for(&b, 1, b.diag_chunk());
         let vals = b.smoothness_chunk(1, &params, &params, &dw).unwrap();
         assert!(vals.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn default_backend_runs_the_default_scenario_bitwise() {
+        use crate::scenarios::{build_scenario, DEFAULT_SCENARIO};
+        let problem = Problem::default();
+        let plain = NativeBackend::new(problem);
+        let explicit = NativeBackend::with_scenario(
+            problem,
+            build_scenario(DEFAULT_SCENARIO, &problem).unwrap(),
+        );
+        assert!(plain.scenario().is_default());
+        let params = init_params(0);
+        let dw = dw_for(&plain, 2, plain.grad_chunk(2));
+        let (l1, g1) = plain.grad_coupled_chunk(2, &params, &dw).unwrap();
+        let (l2, g2) = explicit.grad_coupled_chunk(2, &params, &dw).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn non_default_scenario_changes_the_objective() {
+        use crate::scenarios::build_scenario;
+        let problem = Problem::default();
+        let default = NativeBackend::new(problem);
+        let asian = NativeBackend::with_scenario(
+            problem,
+            build_scenario("bs-asian", &problem).unwrap(),
+        );
+        let params = init_params(0);
+        let dw = dw_for(&default, 1, default.grad_chunk(1));
+        let (l1, _) = default.grad_coupled_chunk(1, &params, &dw).unwrap();
+        let (l2, _) = asian.grad_coupled_chunk(1, &params, &dw).unwrap();
+        assert_ne!(l1, l2, "asian payoff should move the coupled loss");
     }
 }

@@ -5,12 +5,25 @@
 //! it (the coordinator) talks through [`GradBackend`], which the pure-rust
 //! [`crate::engine`] also implements — so the whole stack can run with or
 //! without artifacts.
+//!
+//! The `xla` bindings crate is not published on crates.io, so the PJRT
+//! path is behind the `xla` cargo feature (see `rust/Cargo.toml`); the
+//! default build substitutes [`xla_stub`], whose `XlaRuntime::load`
+//! errors with a pointer at `--backend native`. All consumers compile
+//! either way.
 
 pub mod backend;
+#[cfg(feature = "xla")]
 pub mod buffers;
 pub mod manifest;
+#[cfg(feature = "xla")]
 pub mod xla_rt;
+#[cfg(not(feature = "xla"))]
+pub mod xla_stub;
 
 pub use backend::{GradBackend, NativeBackend};
 pub use manifest::{EntryKind, EntryMeta, Manifest};
+#[cfg(feature = "xla")]
 pub use xla_rt::XlaRuntime;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::XlaRuntime;

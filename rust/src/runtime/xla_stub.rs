@@ -1,0 +1,126 @@
+//! Build-gated stand-in for [`XlaRuntime`] when the `xla` cargo feature
+//! is off (the default — the PJRT `xla` bindings crate is not published
+//! on crates.io; see `rust/Cargo.toml`).
+//!
+//! [`XlaRuntime::load`] fails with an actionable message, so every
+//! consumer (trainer, benches, integration tests) compiles unchanged and
+//! degrades to the native backend / a skip. The remaining methods are
+//! statically unreachable: the struct is uninhabited, so no instance can
+//! ever exist to call them on.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::backend::GradBackend;
+use super::manifest::Manifest;
+use crate::hedging::Problem;
+
+/// Uninhabited placeholder for the PJRT runtime.
+pub struct XlaRuntime {
+    never: std::convert::Infallible,
+}
+
+impl XlaRuntime {
+    /// Always errors: the binary was built without the `xla` feature.
+    pub fn load(artifacts_dir: &Path) -> Result<XlaRuntime> {
+        bail!(
+            "cannot load artifacts from `{}`: this build has no PJRT \
+             runtime (compiled without the `xla` cargo feature); use \
+             `--backend native`, or add the xla bindings crate and build \
+             with `--features xla`",
+            artifacts_dir.display()
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn warmup(&self) -> Result<()> {
+        match self.never {}
+    }
+}
+
+impl GradBackend for XlaRuntime {
+    fn n_params(&self) -> usize {
+        match self.never {}
+    }
+
+    fn problem(&self) -> &Problem {
+        match self.never {}
+    }
+
+    fn grad_chunk(&self, _level: usize) -> usize {
+        match self.never {}
+    }
+
+    fn naive_chunk(&self) -> usize {
+        match self.never {}
+    }
+
+    fn eval_chunk(&self) -> usize {
+        match self.never {}
+    }
+
+    fn diag_chunk(&self) -> usize {
+        match self.never {}
+    }
+
+    fn grad_coupled_chunk(
+        &self,
+        _level: usize,
+        _params: &[f32],
+        _dw: &[f32],
+    ) -> Result<(f64, Vec<f32>)> {
+        match self.never {}
+    }
+
+    fn grad_naive_chunk(&self, _params: &[f32], _dw: &[f32]) -> Result<(f64, Vec<f32>)> {
+        match self.never {}
+    }
+
+    fn loss_eval_chunk(&self, _params: &[f32], _dw: &[f32]) -> Result<f64> {
+        match self.never {}
+    }
+
+    fn grad_norms_chunk(
+        &self,
+        _level: usize,
+        _params: &[f32],
+        _dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    fn smoothness_chunk(
+        &self,
+        _level: usize,
+        _params1: &[f32],
+        _params2: &[f32],
+        _dw: &[f32],
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_with_actionable_message() {
+        let err = XlaRuntime::load(Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
+    }
+}

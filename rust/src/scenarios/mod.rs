@@ -1,0 +1,32 @@
+//! Pluggable simulation scenarios: SDE dynamics x path payoffs.
+//!
+//! The paper's delayed-MLMC estimator only needs a sequential simulation
+//! whose level variances decay (Assumption 2) — nothing ties it to the
+//! Appendix-C Black–Scholes call. This module factors the scenario out of
+//! the engine hot path:
+//!
+//! * [`Sde`] — drift/diffusion/diffusion-derivative, i.e. everything the
+//!   Milstein integrator ([`crate::engine::milstein`]) consumes;
+//! * [`Payoff`] — a functional of the whole simulated path, consumed by
+//!   the objective ([`crate::engine::objective`]);
+//! * [`Scenario`] — one (SDE, payoff) pair; [`registry`] builds them from
+//!   string keys like `"ou-asian"` (see `--scenario` on the `repro` CLI
+//!   and the `scenario.name` TOML key).
+//!
+//! The default [`DEFAULT_SCENARIO`] (`"bs-call"`) reproduces the seed
+//! engine bit-for-bit, so every pre-existing engine/dispatcher/trainer
+//! test doubles as a regression anchor for this refactor. Non-default
+//! scenarios run on the native backend only — the AOT/XLA artifacts are
+//! lowered for the default scenario.
+
+pub mod payoff;
+pub mod registry;
+pub mod scenario;
+pub mod sde;
+
+pub use payoff::Payoff;
+pub use registry::{
+    all_scenario_names, build_scenario, build_scenario_or_err, PAYOFF_KEYS, SDE_KEYS,
+};
+pub use scenario::{Scenario, DEFAULT_SCENARIO};
+pub use sde::Sde;

@@ -1,0 +1,164 @@
+//! The [`Payoff`] trait — a functional of the whole simulated path — and
+//! the registered payoffs.
+//!
+//! The objective's residual is `r = payoff(path) - gains - p0`; the path
+//! is exogenous (stop-gradient), so a payoff only ever contributes a
+//! *value*, never a parameter gradient of its own. That is what makes the
+//! engine generalization cheap: any path functional slots in.
+//!
+//! Payoffs receive the full state row `S_0 ..= S_T` (`n_steps + 1`
+//! points). Path-dependent payoffs (Asian, lookback) are evaluated on the
+//! grid they are simulated on, so fine and coarse evaluations of one
+//! coupled sample legitimately differ — exactly the discretization error
+//! MLMC telescopes over.
+
+use crate::hedging::payoff::{call_payoff, put_payoff};
+
+/// A path functional `payoff(S_0 ..= S_T)`.
+pub trait Payoff: std::fmt::Debug + Send + Sync {
+    /// Registry key fragment (e.g. `"call"`, `"asian"`).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate on one state row `path[n_steps + 1]` (includes `S_0`).
+    fn value(&self, path: &[f32]) -> f32;
+}
+
+/// European call `max(S_T - K, 0)` — the paper's instrument. Delegates to
+/// [`call_payoff`] so the default scenario stays bit-identical with the
+/// seed objective.
+#[derive(Debug, Clone, Copy)]
+pub struct EuropeanCall {
+    pub strike: f32,
+}
+
+impl Payoff for EuropeanCall {
+    fn name(&self) -> &'static str {
+        "call"
+    }
+
+    fn value(&self, path: &[f32]) -> f32 {
+        call_payoff(path[path.len() - 1], self.strike)
+    }
+}
+
+/// European put `max(K - S_T, 0)`.
+#[derive(Debug, Clone, Copy)]
+pub struct EuropeanPut {
+    pub strike: f32,
+}
+
+impl Payoff for EuropeanPut {
+    fn name(&self) -> &'static str {
+        "put"
+    }
+
+    fn value(&self, path: &[f32]) -> f32 {
+        put_payoff(path[path.len() - 1], self.strike)
+    }
+}
+
+/// Arithmetic-average Asian call `max(mean(S_1..S_T) - K, 0)`, averaged
+/// over the simulation grid's monitoring points (excluding `S_0`).
+#[derive(Debug, Clone, Copy)]
+pub struct AsianCall {
+    pub strike: f32,
+}
+
+impl Payoff for AsianCall {
+    fn name(&self) -> &'static str {
+        "asian"
+    }
+
+    fn value(&self, path: &[f32]) -> f32 {
+        let n = path.len() - 1;
+        let avg = path[1..].iter().sum::<f32>() / n as f32;
+        call_payoff(avg, self.strike)
+    }
+}
+
+/// Floating-strike lookback call `S_T - min(S_0..S_T)` (non-negative by
+/// construction).
+#[derive(Debug, Clone, Copy)]
+pub struct LookbackCall;
+
+impl Payoff for LookbackCall {
+    fn name(&self) -> &'static str {
+        "lookback"
+    }
+
+    fn value(&self, path: &[f32]) -> f32 {
+        let min = path.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+        path[path.len() - 1] - min
+    }
+}
+
+/// Cash-or-nothing digital call `1{S_T > K}` — discontinuous, so its
+/// level-variance decay exponent `b` is markedly weaker than the smooth
+/// payoffs' (the classic hard case of the MLMC literature); the scenario
+/// sweep surfaces that.
+#[derive(Debug, Clone, Copy)]
+pub struct DigitalCall {
+    pub strike: f32,
+}
+
+impl Payoff for DigitalCall {
+    fn name(&self) -> &'static str {
+        "digital"
+    }
+
+    fn value(&self, path: &[f32]) -> f32 {
+        if path[path.len() - 1] > self.strike {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PATH: [f32; 5] = [3.0, 2.0, 4.0, 1.5, 3.5];
+
+    #[test]
+    fn european_uses_terminal_value_only() {
+        assert_eq!(EuropeanCall { strike: 3.0 }.value(&PATH), 0.5);
+        assert_eq!(EuropeanPut { strike: 3.0 }.value(&PATH), 0.0);
+        assert_eq!(EuropeanPut { strike: 4.0 }.value(&PATH), 0.5);
+    }
+
+    #[test]
+    fn asian_averages_excluding_s0() {
+        // mean(2, 4, 1.5, 3.5) = 2.75
+        assert_eq!(AsianCall { strike: 2.0 }.value(&PATH), 0.75);
+        assert_eq!(AsianCall { strike: 3.0 }.value(&PATH), 0.0);
+    }
+
+    #[test]
+    fn lookback_is_terminal_minus_running_min() {
+        assert_eq!(LookbackCall.value(&PATH), 3.5 - 1.5);
+        // monotone path: min is S_0
+        assert_eq!(LookbackCall.value(&[1.0, 2.0, 3.0]), 2.0);
+        // non-negative even when terminal is the minimum
+        assert_eq!(LookbackCall.value(&[3.0, 2.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn digital_is_an_indicator() {
+        assert_eq!(DigitalCall { strike: 3.0 }.value(&PATH), 1.0);
+        assert_eq!(DigitalCall { strike: 4.0 }.value(&PATH), 0.0);
+        assert_eq!(DigitalCall { strike: 3.5 }.value(&PATH), 0.0); // strict
+    }
+
+    #[test]
+    fn call_matches_seed_inline_formula() {
+        // The seed objective computed `(row[n] - K).max(0.0)` inline; the
+        // trait must reproduce it exactly.
+        for s in [0.0f32, 1.7, 3.0, 8.25] {
+            let path = [3.0, s];
+            let want = (s - 3.0f32).max(0.0);
+            assert_eq!(EuropeanCall { strike: 3.0 }.value(&path), want);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! String-keyed scenario registry: `"<sde>-<payoff>"` keys over the full
+//! cross product of registered dynamics and payoffs.
+//!
+//! | SDE key | dynamics |
+//! |---------|----------|
+//! | `bs`    | Black–Scholes with the problem's drift form (the default) |
+//! | `gbm`   | Black–Scholes forced geometric (true GBM) |
+//! | `ou`    | Ornstein–Uhlenbeck/Vasicek mean reversion |
+//! | `cir`   | Cox–Ingersoll–Ross square-root diffusion |
+//!
+//! | payoff key | functional |
+//! |------------|------------|
+//! | `call`     | `max(S_T - K, 0)` |
+//! | `put`      | `max(K - S_T, 0)` |
+//! | `asian`    | arithmetic-average Asian call |
+//! | `lookback` | floating-strike lookback call |
+//! | `digital`  | cash-or-nothing `1{S_T > K}` |
+//!
+//! Scenario parameters (strike, `s0`, `sigma`, drift form) come from the
+//! [`Problem`], so one TOML `[problem]` section configures every scenario
+//! consistently; kappa/theta for the mean-reverting families are fixed
+//! registry defaults documented on their constructors.
+
+use std::sync::Arc;
+
+use crate::hedging::Problem;
+
+use super::payoff::{
+    AsianCall, DigitalCall, EuropeanCall, EuropeanPut, LookbackCall, Payoff,
+};
+use super::scenario::Scenario;
+use super::sde::{BlackScholes, CoxIngersollRoss, OrnsteinUhlenbeck, Sde};
+
+/// Registered SDE keys (first key is the default family).
+pub const SDE_KEYS: &[&str] = &["bs", "gbm", "ou", "cir"];
+
+/// Registered payoff keys (first key is the default payoff).
+pub const PAYOFF_KEYS: &[&str] = &["call", "put", "asian", "lookback", "digital"];
+
+/// Every registered scenario name — the `SDE_KEYS x PAYOFF_KEYS` cross
+/// product, default first.
+pub fn all_scenario_names() -> Vec<String> {
+    let mut names = Vec::with_capacity(SDE_KEYS.len() * PAYOFF_KEYS.len());
+    for sde in SDE_KEYS {
+        for payoff in PAYOFF_KEYS {
+            names.push(format!("{sde}-{payoff}"));
+        }
+    }
+    names
+}
+
+/// [`build_scenario`], erroring with the registered keys listed — the
+/// one message every consumer (config validation, trainer, sweeps)
+/// shows for an unknown key.
+pub fn build_scenario_or_err(name: &str, problem: &Problem) -> anyhow::Result<Scenario> {
+    build_scenario(name, problem).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario `{name}` (registered: {})",
+            all_scenario_names().join(", ")
+        )
+    })
+}
+
+/// Build the scenario registered under `name` for `problem`; `None` for
+/// unknown keys.
+pub fn build_scenario(name: &str, problem: &Problem) -> Option<Scenario> {
+    let (sde_key, payoff_key) = name.split_once('-')?;
+    let sde: Arc<dyn Sde> = match sde_key {
+        "bs" => Arc::new(BlackScholes::from_problem(problem)),
+        "gbm" => Arc::new(BlackScholes::geometric(problem)),
+        "ou" => Arc::new(OrnsteinUhlenbeck::from_problem(problem)),
+        "cir" => Arc::new(CoxIngersollRoss::from_problem(problem)),
+        _ => return None,
+    };
+    let strike = problem.strike as f32;
+    let payoff: Arc<dyn Payoff> = match payoff_key {
+        "call" => Arc::new(EuropeanCall { strike }),
+        "put" => Arc::new(EuropeanPut { strike }),
+        "asian" => Arc::new(AsianCall { strike }),
+        "lookback" => Arc::new(LookbackCall),
+        "digital" => Arc::new(DigitalCall { strike }),
+        _ => return None,
+    };
+    Some(Scenario {
+        name: name.to_string(),
+        sde,
+        payoff,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::DEFAULT_SCENARIO;
+
+    #[test]
+    fn cross_product_is_registered() {
+        let names = all_scenario_names();
+        assert_eq!(names.len(), SDE_KEYS.len() * PAYOFF_KEYS.len());
+        assert!(names.len() >= 12, "need >= 3 SDEs x >= 4 payoffs");
+        assert_eq!(names[0], DEFAULT_SCENARIO);
+        let p = Problem::default();
+        for name in &names {
+            let sc = build_scenario(name, &p)
+                .unwrap_or_else(|| panic!("`{name}` did not build"));
+            assert_eq!(&sc.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let p = Problem::default();
+        assert!(build_scenario("heston-call", &p).is_none());
+        assert!(build_scenario("bs-barrier", &p).is_none());
+        assert!(build_scenario("bscall", &p).is_none());
+        assert!(build_scenario("", &p).is_none());
+    }
+
+    #[test]
+    fn default_key_matches_from_problem() {
+        let p = Problem::default();
+        let from_registry = build_scenario(DEFAULT_SCENARIO, &p).unwrap();
+        let from_problem = Scenario::from_problem(&p);
+        assert!(from_registry.is_default());
+        // identical dynamics and payoff at sample points
+        for s in [0.5f32, 3.0, 7.25] {
+            assert_eq!(from_registry.sde.drift(s), from_problem.sde.drift(s));
+            assert_eq!(
+                from_registry.sde.diffusion(s),
+                from_problem.sde.diffusion(s)
+            );
+            assert_eq!(
+                from_registry.sde.milstein_term(s),
+                from_problem.sde.milstein_term(s)
+            );
+            let path = [3.0, s];
+            assert_eq!(
+                from_registry.payoff.value(&path),
+                from_problem.payoff.value(&path)
+            );
+        }
+    }
+
+    #[test]
+    fn gbm_key_forces_geometric_drift() {
+        let p = Problem::default(); // additive drift
+        let gbm = build_scenario("gbm-call", &p).unwrap();
+        assert_ne!(gbm.sde.drift(1.0), gbm.sde.drift(5.0));
+    }
+}

@@ -1,0 +1,72 @@
+//! [`Scenario`] — one (SDE dynamics, path payoff) pair, the unit the
+//! registry hands out and the engine simulates.
+
+use std::sync::Arc;
+
+use crate::hedging::Problem;
+
+use super::payoff::{EuropeanCall, Payoff};
+use super::sde::{BlackScholes, Sde};
+
+/// Registry key of the seed scenario: the problem's own Black–Scholes
+/// dynamics hedging a European call. Everything built before the scenario
+/// subsystem (the AOT artifacts, the regression anchors) assumes it.
+pub const DEFAULT_SCENARIO: &str = "bs-call";
+
+/// One simulation scenario: dynamics plus payoff. Cheap to clone (the
+/// trait objects are shared), so backends can own one.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Registry key, e.g. `"bs-call"`, `"ou-asian"`, `"cir-digital"`.
+    pub name: String,
+    pub sde: Arc<dyn Sde>,
+    pub payoff: Arc<dyn Payoff>,
+}
+
+impl Scenario {
+    /// The default scenario for a problem — the seed engine's hard-coded
+    /// behavior (drift form from `problem.drift`, European call at the
+    /// problem's strike), reproduced bitwise.
+    pub fn from_problem(p: &Problem) -> Scenario {
+        Scenario {
+            name: DEFAULT_SCENARIO.to_string(),
+            sde: Arc::new(BlackScholes::from_problem(p)),
+            payoff: Arc::new(EuropeanCall {
+                strike: p.strike as f32,
+            }),
+        }
+    }
+
+    /// Whether this is the default scenario (the only one the AOT/XLA
+    /// artifacts are lowered for).
+    pub fn is_default(&self) -> bool {
+        self.name == DEFAULT_SCENARIO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scenario_mirrors_problem() {
+        let p = Problem::default();
+        let sc = Scenario::from_problem(&p);
+        assert!(sc.is_default());
+        assert_eq!(sc.name, "bs-call");
+        assert_eq!(sc.sde.s0(), p.s0 as f32);
+        // additive drift by default: a(s) independent of s
+        assert_eq!(sc.sde.drift(1.0), sc.sde.drift(5.0));
+        // payoff kinks at the problem strike
+        assert_eq!(sc.payoff.value(&[3.0, 2.9]), 0.0);
+        assert!((sc.payoff.value(&[3.0, 3.5]) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn clone_shares_components() {
+        let sc = Scenario::from_problem(&Problem::default());
+        let cl = sc.clone();
+        assert_eq!(cl.name, sc.name);
+        assert_eq!(cl.sde.drift(2.0), sc.sde.drift(2.0));
+    }
+}

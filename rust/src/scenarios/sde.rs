@@ -1,0 +1,293 @@
+//! The [`Sde`] trait — everything the Milstein integrator needs from a
+//! 1-D diffusion `dS = a(S) dt + b(S) dB` — and the registered dynamics.
+//!
+//! The scheme (strong order 1):
+//!
+//! `S+ = clamp(S + a(S) dt + b(S) dW + 1/2 b(S) b'(S) (dW^2 - dt))`
+//!
+//! Implementations may override [`Sde::milstein_term`] when the product
+//! `1/2 b b'` has a cheaper or numerically preferable closed form — the
+//! Black–Scholes dynamics do exactly that to stay **bit-identical** with
+//! the seed engine's inlined `half_s2 * s` (f32 multiplication is not
+//! associative, so the factoring matters for the regression anchors).
+
+use crate::hedging::{Drift, Problem};
+
+/// A 1-D SDE in Milstein normal form. All coefficients are f32 — the
+/// whole simulation hot path is f32, mirroring the Pallas kernel.
+pub trait Sde: std::fmt::Debug + Send + Sync {
+    /// Registry key fragment (e.g. `"bs"`, `"ou"`, `"cir"`).
+    fn name(&self) -> &'static str;
+
+    /// Initial state `S_0`.
+    fn s0(&self) -> f32;
+
+    /// Drift coefficient `a(s)`.
+    fn drift(&self, s: f32) -> f32;
+
+    /// Diffusion coefficient `b(s)`.
+    fn diffusion(&self, s: f32) -> f32;
+
+    /// Diffusion derivative `b'(s)` (the Milstein correction input).
+    fn diffusion_dv(&self, s: f32) -> f32;
+
+    /// The Milstein correction factor `1/2 b(s) b'(s)`; override when a
+    /// closed form avoids re-association or division by zero.
+    fn milstein_term(&self, s: f32) -> f32 {
+        0.5 * self.diffusion(s) * self.diffusion_dv(s)
+    }
+
+    /// Post-step state projection (e.g. full truncation for square-root
+    /// processes). Identity by default.
+    fn clamp(&self, s: f32) -> f32 {
+        s
+    }
+}
+
+/// Black–Scholes dynamics `dS = a dt + sigma S dB` with either the
+/// paper's additive drift `a = mu` or true GBM `a = mu S`.
+///
+/// This is the seed engine's hard-coded SDE, factored behind the trait
+/// with the exact same f32 coefficient groupings (`sigma * s`,
+/// `half_s2 * s`) so the default scenario reproduces the seed numbers
+/// bitwise.
+#[derive(Debug, Clone, Copy)]
+pub struct BlackScholes {
+    pub mu: f32,
+    pub sigma: f32,
+    pub s0: f32,
+    /// Precomputed `0.5 * sigma^2`, matching the seed's operation order.
+    half_s2: f32,
+    pub geometric: bool,
+}
+
+impl BlackScholes {
+    pub fn new(mu: f32, sigma: f32, s0: f32, geometric: bool) -> Self {
+        BlackScholes {
+            mu,
+            sigma,
+            s0,
+            half_s2: 0.5 * sigma * sigma,
+            geometric,
+        }
+    }
+
+    /// The problem's own dynamics (drift form taken from `problem.drift`).
+    pub fn from_problem(p: &Problem) -> Self {
+        BlackScholes::new(
+            p.mu as f32,
+            p.sigma as f32,
+            p.s0 as f32,
+            p.drift == Drift::Geometric,
+        )
+    }
+
+    /// Force true GBM regardless of the problem's drift setting.
+    pub fn geometric(p: &Problem) -> Self {
+        BlackScholes::new(p.mu as f32, p.sigma as f32, p.s0 as f32, true)
+    }
+}
+
+impl Sde for BlackScholes {
+    fn name(&self) -> &'static str {
+        if self.geometric {
+            "gbm"
+        } else {
+            "bs"
+        }
+    }
+
+    fn s0(&self) -> f32 {
+        self.s0
+    }
+
+    fn drift(&self, s: f32) -> f32 {
+        if self.geometric {
+            self.mu * s
+        } else {
+            self.mu
+        }
+    }
+
+    fn diffusion(&self, s: f32) -> f32 {
+        self.sigma * s
+    }
+
+    fn diffusion_dv(&self, _s: f32) -> f32 {
+        self.sigma
+    }
+
+    fn milstein_term(&self, s: f32) -> f32 {
+        // NOT the default `0.5 * (sigma*s) * sigma`: the seed engine
+        // computes `(0.5*sigma*sigma) * s`, and f32 products re-associate
+        // differently. This keeps the default scenario bit-identical.
+        self.half_s2 * s
+    }
+}
+
+/// Ornstein–Uhlenbeck / Vasicek mean-reverting dynamics
+/// `dS = kappa (theta - S) dt + sigma dB` (additive noise, so the
+/// Milstein correction vanishes and the scheme reduces to Euler–Maruyama,
+/// which is already strong order 1 for additive noise).
+#[derive(Debug, Clone, Copy)]
+pub struct OrnsteinUhlenbeck {
+    pub kappa: f32,
+    pub theta: f32,
+    pub sigma: f32,
+    pub s0: f32,
+}
+
+impl OrnsteinUhlenbeck {
+    pub fn new(kappa: f32, theta: f32, sigma: f32, s0: f32) -> Self {
+        OrnsteinUhlenbeck { kappa, theta, sigma, s0 }
+    }
+
+    /// Mean-revert around the problem's `s0` with its `sigma` as the
+    /// absolute volatility (the problem gives no kappa; 1.5 keeps the
+    /// relaxation time well inside the unit maturity).
+    pub fn from_problem(p: &Problem) -> Self {
+        OrnsteinUhlenbeck::new(1.5, p.s0 as f32, p.sigma as f32, p.s0 as f32)
+    }
+}
+
+impl Sde for OrnsteinUhlenbeck {
+    fn name(&self) -> &'static str {
+        "ou"
+    }
+
+    fn s0(&self) -> f32 {
+        self.s0
+    }
+
+    fn drift(&self, s: f32) -> f32 {
+        self.kappa * (self.theta - s)
+    }
+
+    fn diffusion(&self, _s: f32) -> f32 {
+        self.sigma
+    }
+
+    fn diffusion_dv(&self, _s: f32) -> f32 {
+        0.0
+    }
+
+    fn milstein_term(&self, _s: f32) -> f32 {
+        0.0
+    }
+}
+
+/// Cox–Ingersoll–Ross square-root dynamics
+/// `dS = kappa (theta - S) dt + sigma sqrt(S) dB`, discretized with full
+/// truncation (coefficients evaluated at `max(S, 0)`, state clamped to
+/// `>= 0` after each step).
+///
+/// `1/2 b b' = sigma^2 / 4` exactly, so the Milstein correction is a
+/// constant and never divides by `sqrt(S)`.
+#[derive(Debug, Clone, Copy)]
+pub struct CoxIngersollRoss {
+    pub kappa: f32,
+    pub theta: f32,
+    pub sigma: f32,
+    pub s0: f32,
+    /// Precomputed `sigma^2 / 4`.
+    quarter_s2: f32,
+}
+
+impl CoxIngersollRoss {
+    pub fn new(kappa: f32, theta: f32, sigma: f32, s0: f32) -> Self {
+        CoxIngersollRoss {
+            kappa,
+            theta,
+            sigma,
+            s0,
+            quarter_s2: 0.25 * sigma * sigma,
+        }
+    }
+
+    /// Revert around the problem's `s0`. With the paper defaults
+    /// (`s0 = 3`, `sigma = 1`, `kappa = 1.5`) the Feller condition
+    /// `2 kappa theta >= sigma^2` holds with a wide margin, so paths stay
+    /// strictly positive with overwhelming probability.
+    pub fn from_problem(p: &Problem) -> Self {
+        CoxIngersollRoss::new(1.5, p.s0 as f32, p.sigma as f32, p.s0 as f32)
+    }
+}
+
+impl Sde for CoxIngersollRoss {
+    fn name(&self) -> &'static str {
+        "cir"
+    }
+
+    fn s0(&self) -> f32 {
+        self.s0
+    }
+
+    fn drift(&self, s: f32) -> f32 {
+        self.kappa * (self.theta - s)
+    }
+
+    fn diffusion(&self, s: f32) -> f32 {
+        self.sigma * s.max(0.0).sqrt()
+    }
+
+    fn diffusion_dv(&self, s: f32) -> f32 {
+        0.5 * self.sigma / s.max(1e-12).sqrt()
+    }
+
+    fn milstein_term(&self, _s: f32) -> f32 {
+        self.quarter_s2
+    }
+
+    fn clamp(&self, s: f32) -> f32 {
+        s.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bs_matches_seed_coefficient_grouping() {
+        let p = Problem::default();
+        let bs = BlackScholes::from_problem(&p);
+        let s = 2.7f32;
+        let sigma = p.sigma as f32;
+        let half_s2 = 0.5 * sigma * sigma;
+        assert_eq!(bs.diffusion(s), sigma * s);
+        assert_eq!(bs.milstein_term(s), half_s2 * s);
+        assert_eq!(bs.drift(s), p.mu as f32); // additive default
+        assert_eq!(BlackScholes::geometric(&p).drift(s), p.mu as f32 * s);
+    }
+
+    #[test]
+    fn ou_has_no_milstein_correction() {
+        let ou = OrnsteinUhlenbeck::from_problem(&Problem::default());
+        assert_eq!(ou.milstein_term(1.0), 0.0);
+        assert_eq!(ou.diffusion(0.5), ou.diffusion(5.0)); // additive noise
+        // mean reversion: drift pulls toward theta
+        assert!(ou.drift(ou.theta + 1.0) < 0.0);
+        assert!(ou.drift(ou.theta - 1.0) > 0.0);
+    }
+
+    #[test]
+    fn cir_truncation_and_constant_correction() {
+        let cir = CoxIngersollRoss::from_problem(&Problem::default());
+        assert_eq!(cir.diffusion(-0.5), 0.0); // full truncation
+        assert_eq!(cir.clamp(-0.3), 0.0);
+        assert_eq!(cir.clamp(0.3), 0.3);
+        let want = 0.25 * cir.sigma * cir.sigma;
+        assert_eq!(cir.milstein_term(4.0), want);
+        assert_eq!(cir.milstein_term(0.0), want); // no division blow-up
+        // closed form agrees with 1/2 b b' where both are defined
+        let s = 2.0f32;
+        let direct = 0.5 * cir.diffusion(s) * cir.diffusion_dv(s);
+        assert!((direct - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cir_feller_condition_holds_for_defaults() {
+        let cir = CoxIngersollRoss::from_problem(&Problem::default());
+        assert!(2.0 * cir.kappa * cir.theta >= cir.sigma * cir.sigma);
+    }
+}

@@ -3,6 +3,31 @@
 //! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
 //! defaults, required arguments and auto-generated `--help` text — the
 //! subset the `repro` binary and the examples need.
+//!
+//! # Scenario selection (`--scenario`)
+//!
+//! Every training/experiment subcommand of `repro` accepts
+//! `--scenario <sde>-<payoff>` (default `bs-call`), resolved against
+//! [`crate::scenarios::registry`]; `repro scenarios` lists the keys. A
+//! non-default scenario implies `--backend native` when no backend is
+//! pinned by `--backend` or an explicit `runtime.backend` key in the
+//! `--config` TOML (the XLA artifacts only cover the default; a pinned
+//! `xla` backend is rejected loudly). The equivalent TOML (see
+//! `configs/scenario_ou_asian.toml`):
+//!
+//! ```toml
+//! [scenario]
+//! name = "ou-asian"        # Ornstein–Uhlenbeck dynamics, Asian call
+//!
+//! [runtime]
+//! backend = "native"       # required for non-default scenarios
+//!
+//! [problem]
+//! sigma = 1.0              # scenario parameters come from [problem]
+//! strike = 3.0
+//! ```
+//!
+//! CLI equivalent: `repro train --scenario ou-asian --method dmlmc`.
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -2,8 +2,14 @@
 
 use std::path::PathBuf;
 
-/// Artifact directory, if `make artifacts` has been run.
+/// Artifact directory, if `make artifacts` has been run AND this build
+/// can actually execute artifacts (the default build substitutes the
+/// stub runtime, whose `XlaRuntime::load` always errors — artifacts on
+/// disk must not un-skip the XLA tests there).
 pub fn artifacts_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "xla") {
+        return None;
+    }
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }

@@ -1,0 +1,146 @@
+//! Scenario-generic invariants: every registered scenario must satisfy
+//! the structural prerequisites of the paper's estimator —
+//!
+//! * **strong fine/coarse coupling** — the MSE between fine- and
+//!   coarse-grid evaluations of one coupled sample decays across levels
+//!   (state-level for each SDE, payoff-level for each scenario), which is
+//!   what Assumption 2 rests on;
+//! * **finite coupled gradients** — the objective's hand-rolled backward
+//!   pass stays finite (and generically non-zero) under every dynamics x
+//!   payoff pair.
+//!
+//! This generalizes `engine::milstein::tests::strong_convergence_of_coupling`
+//! from the hard-coded Black–Scholes call to the whole registry.
+
+use dmlmc::engine::mlp::init_params;
+use dmlmc::engine::{coupled_value_and_grad_scenario, simulate_paths_sde};
+use dmlmc::hedging::Problem;
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::scenarios::{all_scenario_names, build_scenario, Payoff, Scenario, SDE_KEYS};
+
+const BATCH: usize = 2000;
+const LEVELS: std::ops::RangeInclusive<usize> = 1..=4;
+
+/// Fine/coarse MSE of `f(path)` per level for one scenario.
+fn coupling_mse(sc: &Scenario, p: &Problem, f: impl Fn(&[f32]) -> f32) -> Vec<f64> {
+    let src = BrownianSource::new(0x5C);
+    let mut errs = Vec::new();
+    for level in LEVELS {
+        let n = p.n_steps(level);
+        let dw = src.increments(
+            Purpose::Diagnostic,
+            0,
+            level as u32,
+            0,
+            BATCH,
+            n,
+            p.dt(level),
+        );
+        let fine = simulate_paths_sde(&dw, BATCH, n, &*sc.sde, p.maturity);
+        let dwc = BrownianSource::coarsen(&dw, BATCH, n);
+        let coarse = simulate_paths_sde(&dwc, BATCH, n / 2, &*sc.sde, p.maturity);
+        let mse = (0..BATCH)
+            .map(|b| {
+                let rf = &fine[b * (n + 1)..(b + 1) * (n + 1)];
+                let rc = &coarse[b * (n / 2 + 1)..(b + 1) * (n / 2 + 1)];
+                ((f(rf) - f(rc)) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / BATCH as f64;
+        errs.push(mse);
+    }
+    errs
+}
+
+#[test]
+fn every_sde_has_strong_state_coupling() {
+    // Terminal-state MSE must decay geometrically for each dynamics —
+    // the strong-order guarantee the payoff-level coupling inherits.
+    let p = Problem::default();
+    for sde_key in SDE_KEYS {
+        let sc = build_scenario(&format!("{sde_key}-call"), &p).unwrap();
+        let errs = coupling_mse(&sc, &p, |row| row[row.len() - 1]);
+        for w in errs.windows(2) {
+            assert!(
+                w[1] < w[0] * 0.75,
+                "{sde_key}: state MSE not decaying: {errs:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_scenario_has_decaying_payoff_coupling() {
+    // Payoff-level MSE across levels: smooth payoffs decay like the
+    // state; the digital indicator decays slower (rate ~ strong order /
+    // 2) but must still decay end-to-end across three doublings.
+    let p = Problem::default();
+    for name in all_scenario_names() {
+        let sc = build_scenario(&name, &p).unwrap();
+        let payoff = sc.payoff.clone();
+        let errs = coupling_mse(&sc, &p, |row| payoff.value(row));
+        assert!(
+            errs.iter().all(|e| e.is_finite()),
+            "{name}: non-finite payoff MSE {errs:?}"
+        );
+        assert!(
+            *errs.last().unwrap() < errs[0] * 0.8,
+            "{name}: payoff MSE not decaying: {errs:?}"
+        );
+    }
+}
+
+#[test]
+fn every_scenario_has_finite_coupled_gradients() {
+    let p = Problem::default();
+    let params = init_params(0);
+    let src = BrownianSource::new(0x5D);
+    for name in all_scenario_names() {
+        let sc = build_scenario(&name, &p).unwrap();
+        for level in [0usize, 2] {
+            let n = p.n_steps(level);
+            let batch = 16;
+            let dw = src.increments(
+                Purpose::Grad,
+                0,
+                level as u32,
+                0,
+                batch,
+                n,
+                p.dt(level),
+            );
+            let (loss, grad) =
+                coupled_value_and_grad_scenario(&params, &dw, batch, level, &p, &sc);
+            assert!(loss.is_finite(), "{name} l{level}: loss {loss}");
+            assert!(
+                grad.iter().all(|g| g.is_finite()),
+                "{name} l{level}: non-finite gradient"
+            );
+            // level 0 is an uncoupled objective: it must actually push on
+            // the parameters for every scenario.
+            if level == 0 {
+                assert!(
+                    grad.iter().any(|&g| g != 0.0),
+                    "{name}: all-zero level-0 gradient"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_is_complete_and_consistent() {
+    let p = Problem::default();
+    let names = all_scenario_names();
+    assert!(names.len() >= 12, "registry shrank: {names:?}");
+    for name in &names {
+        let sc = build_scenario(name, &p).unwrap();
+        // the key round-trips through the component names
+        let (sde_key, payoff_key) = name.split_once('-').unwrap();
+        assert_eq!(sc.payoff.name(), payoff_key, "{name}");
+        // `bs` reports its drift-form-dependent name; others are exact
+        if sde_key != "bs" {
+            assert_eq!(sc.sde.name(), sde_key, "{name}");
+        }
+    }
+}
