@@ -37,8 +37,11 @@ fn main() -> anyhow::Result<()> {
         "reading the table: `b_hat` is the fitted decay exponent of \
          E||grad Delta_l F||^2 (Assumption 2 wants b > c = {}); `ratio` is\n\
          the measured MLMC/DMLMC total parallel cost — the paper's \
-         advantage. Note the discontinuous digital payoffs: their weaker\n\
-         decay is the classic hard case of the MLMC literature.",
+         advantage. Note the discontinuous payoffs (digital, and the\n\
+         barrier uo-call/di-put whose knock events are grid-dependent): \
+         their weaker decay is the classic hard case of the MLMC\n\
+         literature. The heston-* rows run the 2-factor stochastic-vol \
+         dynamics through the same estimator.",
         cfg.mlmc.c
     );
     Ok(())

@@ -3,6 +3,9 @@
 //!
 //! * per-level coupled gradient chunk — native engine vs compiled HLO
 //! * Brownian batch generation (RNG substrate)
+//! * materialized vs streaming simulation (bs-call D=1, heston D=2) —
+//!   the streaming refactor's headline; paths/sec per case is written to
+//!   `BENCH_scenarios.json` so future PRs have a perf trajectory
 //! * estimator assembly + optimizer update (pure L3 overhead)
 //! * end-to-end DMLMC step latency distribution across a period
 //!
@@ -11,11 +14,58 @@
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::engine::milstein::{factor_rows, fold_path, simulate_paths_sde};
 use dmlmc::engine::mlp::init_params;
 use dmlmc::mlmc::estimator::ChunkAccumulator;
 use dmlmc::optim::{Optimizer, Sgd};
 use dmlmc::rng::{brownian::Purpose, BrownianSource};
 use dmlmc::runtime::{GradBackend, NativeBackend, XlaRuntime};
+use dmlmc::scenarios::sde::{BlackScholes, Heston};
+use dmlmc::scenarios::{build_scenario, Sde};
+use dmlmc::util::json::{obj, Json};
+
+/// One `BENCH_scenarios.json` row: paths/sec for a simulation case.
+struct SimCase {
+    name: &'static str,
+    dim: usize,
+    mode: &'static str,
+    paths_per_sec: f64,
+}
+
+fn paths_per_sec(batch: usize, s: &dmlmc::bench::Summary) -> f64 {
+    let rate = batch as f64 / s.median.as_secs_f64();
+    // a zero median (coarse timer) must not put `inf` in the artifact
+    if rate.is_finite() {
+        rate
+    } else {
+        0.0
+    }
+}
+
+fn write_scenarios_json(cases: &[SimCase]) {
+    let rows: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("name", Json::Str(c.name.to_string())),
+                ("dim", Json::Num(c.dim as f64)),
+                ("mode", Json::Str(c.mode.to_string())),
+                ("paths_per_sec", Json::Num(c.paths_per_sec.round())),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("hotpath/simulation".to_string())),
+        ("unit", Json::Str("paths_per_sec".to_string())),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_scenarios.json";
+    // panic (not just log) so a CI write failure fails THIS step, not the
+    // later artifact upload with a misleading "no files found"
+    std::fs::write(path, format!("{doc}\n"))
+        .unwrap_or_else(|e| panic!("could not write {path}: {e}"));
+    eprintln!("wrote {path}");
+}
 
 fn main() {
     let cfg = ExperimentConfig::default_paper();
@@ -28,6 +78,84 @@ fn main() {
     h.run("rng/brownian_64x256", || {
         black_box(src.increments(Purpose::Grad, 0, 6, 0, 64, 256, problem.dt(6)));
     });
+
+    // ---- materialized vs streaming simulation -------------------------
+    // The streaming fold must beat (or at worst match) materialize-then-
+    // read: it performs the same arithmetic without the
+    // batch x (n_steps + 1) buffer. bs-call is the D=1 fast path; heston
+    // exercises the D=2 generic loop.
+    let mut sim_cases: Vec<SimCase> = Vec::new();
+    {
+        let batch = 64;
+        let n = problem.n_steps(6);
+        let dt = problem.dt(6) as f32;
+        let bs = BlackScholes::from_problem(&problem);
+        let dw = src.increments(Purpose::Grad, 0, 6, 0, batch, n, problem.dt(6));
+        let s_mat = h.run("sim/bs_materialized_64x256", || {
+            black_box(simulate_paths_sde(&dw, batch, n, &bs, problem.maturity));
+        });
+        sim_cases.push(SimCase {
+            name: "bs-call",
+            dim: 1,
+            mode: "materialized",
+            paths_per_sec: paths_per_sec(batch, &s_mat),
+        });
+        let s_str = h.run("sim/bs_streaming_64x256", || {
+            let mut acc = 0.0f32;
+            for b in 0..batch {
+                let rows = factor_rows(&dw, 1, batch, n, b);
+                fold_path(&bs, &rows[..1], n, dt, |_, st| acc += st[0]);
+            }
+            black_box(acc);
+        });
+        sim_cases.push(SimCase {
+            name: "bs-call",
+            dim: 1,
+            mode: "streaming",
+            paths_per_sec: paths_per_sec(batch, &s_str),
+        });
+
+        let heston = Heston::from_problem(&problem);
+        let dw2 = src.increments_multi(
+            Purpose::Grad, 0, 6, 0, batch, n, problem.dt(6), heston.dim(),
+        );
+        let s_mat2 = h.run("sim/heston_materialized_64x256", || {
+            black_box(simulate_paths_sde(&dw2, batch, n, &heston, problem.maturity));
+        });
+        sim_cases.push(SimCase {
+            name: "heston-call",
+            dim: 2,
+            mode: "materialized",
+            paths_per_sec: paths_per_sec(batch, &s_mat2),
+        });
+        let s_str2 = h.run("sim/heston_streaming_64x256", || {
+            let mut acc = 0.0f32;
+            for b in 0..batch {
+                let rows = factor_rows(&dw2, 2, batch, n, b);
+                fold_path(&heston, &rows[..2], n, dt, |_, st| acc += st[0]);
+            }
+            black_box(acc);
+        });
+        sim_cases.push(SimCase {
+            name: "heston-call",
+            dim: 2,
+            mode: "streaming",
+            paths_per_sec: paths_per_sec(batch, &s_str2),
+        });
+
+        // full objective chunk under a 2-factor scenario (dyn dispatch)
+        let sc = build_scenario("heston-call", &problem).unwrap();
+        let hb = NativeBackend::with_scenario(problem, sc);
+        let batch3 = hb.grad_chunk(3);
+        let n3 = problem.n_steps(3);
+        let dw3 = src.increments_multi(
+            Purpose::Grad, 0, 3, 0, batch3, n3, problem.dt(3), 2,
+        );
+        h.run("native/grad_l3_heston", || {
+            black_box(hb.grad_coupled_chunk(3, &params, &dw3).unwrap());
+        });
+    }
+    write_scenarios_json(&sim_cases);
 
     // ---- native engine per level --------------------------------------
     let native = NativeBackend::new(problem);

@@ -416,10 +416,10 @@ backend = "native"
     fn scenario_validation_rules() {
         // unknown key rejected with the registry listed
         let e = ExperimentConfig::from_toml(
-            "[scenario]\nname = \"heston-call\"\n\n[runtime]\nbackend = \"native\"",
+            "[scenario]\nname = \"sabr-call\"\n\n[runtime]\nbackend = \"native\"",
         )
         .unwrap_err();
-        assert!(e.0.contains("heston-call"), "{}", e.0);
+        assert!(e.0.contains("sabr-call"), "{}", e.0);
         assert!(e.0.contains("bs-call"), "{}", e.0);
         // A backend-silent TOML with a non-default scenario parses (the
         // CLI may still override the backend) but the full validate()
@@ -431,6 +431,17 @@ backend = "native"
         let mut fixed = cfg;
         fixed.runtime.backend = Backend::Native;
         assert!(fixed.validate().is_ok());
+    }
+
+    #[test]
+    fn heston_and_barrier_scenarios_validate() {
+        // multi-factor + dashed payoff keys resolve from TOML end to end
+        let cfg = ExperimentConfig::from_toml(
+            "[scenario]\nname = \"heston-uo-call\"\n\n[runtime]\nbackend = \"native\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario, "heston-uo-call");
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -50,9 +50,10 @@ fn run_one<B: GradBackend + ?Sized>(
     let batch = backend.grad_chunk(spec.level);
     let n_steps = problem.n_steps(spec.level);
     let dt = problem.dt(spec.level);
+    let n_factors = backend.n_factors();
     let mut acc = ChunkAccumulator::new(backend.n_params());
     for chunk in 0..spec.n_chunks {
-        let dw = src.increments(
+        let dw = src.increments_multi(
             Purpose::Grad,
             step,
             spec.level as u32,
@@ -60,6 +61,7 @@ fn run_one<B: GradBackend + ?Sized>(
             batch,
             n_steps,
             dt,
+            n_factors,
         );
         let (loss, grad) = backend.grad_coupled_chunk(spec.level, params, &dw)?;
         acc.add(loss, &grad);

@@ -206,7 +206,7 @@ impl Trainer {
         let dt = self.backend.problem().dt(lmax);
         let mut acc = ChunkAccumulator::new(self.backend.n_params());
         for chunk in 0..self.naive_chunks {
-            let dw = self.src.increments(
+            let dw = self.src.increments_multi(
                 Purpose::Grad,
                 t,
                 lmax as u32,
@@ -214,6 +214,7 @@ impl Trainer {
                 batch,
                 n_steps,
                 dt,
+                self.backend.n_factors(),
             );
             let (loss, grad) = self.backend.grad_naive_chunk(&self.params, &dw)?;
             acc.add(loss, &grad);
@@ -233,7 +234,7 @@ impl Trainer {
         let mut total = 0.0;
         for chunk in 0..self.cfg.train.eval_chunks.max(1) {
             // Purpose::Eval + step 0: the same batch at every evaluation.
-            let dw = self.src.increments(
+            let dw = self.src.increments_multi(
                 Purpose::Eval,
                 0,
                 lmax as u32,
@@ -241,6 +242,7 @@ impl Trainer {
                 batch,
                 n_steps,
                 dt,
+                self.backend.n_factors(),
             );
             total += self.backend.loss_eval_chunk(&self.params, &dw)?;
         }
@@ -496,6 +498,25 @@ mod tests {
             curve.points.last().unwrap().loss,
             base.points.last().unwrap().loss
         );
+    }
+
+    #[test]
+    fn two_factor_scenario_trains_end_to_end() {
+        // Heston (dim 2): the whole stack — dispatcher, cache, eval —
+        // must route factor-major increments and stay finite.
+        let mut cfg = smoke_cfg();
+        cfg.scenario = "heston-call".to_string();
+        let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        assert_eq!(tr.backend().n_factors(), 2);
+        let curve = tr.run().unwrap();
+        assert!(curve.points.iter().all(|p| p.loss.is_finite()));
+        // naive method exercises the finest-grid entry point too
+        let mut cfg2 = smoke_cfg();
+        cfg2.scenario = "heston-uo-call".to_string();
+        cfg2.train.steps = 2;
+        let mut tr2 = Trainer::from_config(&cfg2, Method::Naive, 0).unwrap();
+        let curve2 = tr2.run().unwrap();
+        assert!(curve2.points.iter().all(|p| p.loss.is_finite()));
     }
 
     #[test]

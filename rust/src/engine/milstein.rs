@@ -1,28 +1,124 @@
 //! Milstein SDE integrator — Rust mirror of the L1 Pallas kernel
-//! (`python/compile/kernels/milstein.py`) and its jnp oracle.
+//! (`python/compile/kernels/milstein.py`) and its jnp oracle, generalized
+//! to D-dimensional dynamics and **streaming** consumption.
 //!
-//! Scheme for `dS = a(S) dt + b(S) dB` (strong order 1):
+//! Per-factor scheme for `dS_k = a_k(S) dt + b_k(S) dB_k` (strong order 1
+//! for commutative noise):
 //!
-//! `S+ = S + a(S) dt + b(S) dW + 1/2 b(S) b'(S) (dW^2 - dt)`
+//! `S_k+ = S_k + a_k(S) dt + b_k(S) dW_k + 1/2 b_k(S) b_k'(S) (dW_k^2 - dt)`
 //!
 //! computed in f32 with the same operation order as the kernel so the
-//! cross-check tests can use tight tolerances. The coefficients come from
-//! an [`Sde`]; the [`simulate_paths`] entry point wraps the problem's own
-//! Black–Scholes dynamics and is bit-identical to the pre-scenario
-//! engine (the SDE returns the seed's exact f32 coefficient groupings).
+//! cross-check tests can use tight tolerances.
+//!
+//! The core is [`fold_path`]: it integrates ONE path and hands every
+//! state (including `S_0`) to a visitor closure, so consumers — the
+//! streaming objective, terminal-value diagnostics, payoff observers —
+//! fold the path online and nothing allocates a `batch x (n_steps + 1)`
+//! buffer. The D = 1 branch is written out scalar so concrete-SDE
+//! callers monomorphize to the seed engine's exact inner loop
+//! (bit-identical f32 operation order); the D >= 2 branch applies the
+//! driver correlation (`dW_1 = rho dW_0^raw + sqrt(1 - rho^2) dW_1^raw`)
+//! and updates the factors jointly from the pre-step state.
+//!
+//! Increment batches are **factor-major** `dw[n_factors, batch, n_steps]`
+//! (see [`crate::rng::BrownianSource::increments_multi`]); for D = 1 that
+//! is exactly the seed's row-major `[batch, n_steps]` layout, so every
+//! seed-era call site is untouched. [`simulate_paths`] /
+//! [`simulate_paths_sde`] still materialize price rows for diagnostics,
+//! cross-checks and tests — implemented on top of the fold.
 
 use crate::hedging::Problem;
-use crate::scenarios::sde::BlackScholes;
+use crate::scenarios::sde::{BlackScholes, State, MAX_DIM};
 use crate::scenarios::Sde;
 
-/// Simulate `batch` paths of `sde` over `n_steps` from row-major
-/// increments `dw[batch, n_steps]`; returns row-major
-/// `s[batch, n_steps + 1]` (including `S_0`).
+/// The per-factor increment rows of sample `b` in a factor-major batch
+/// `dw[dim, batch, n_steps]`; inactive factor slots get empty slices.
+/// Pass `&rows[..dim]` to [`fold_path`].
+#[inline]
+pub fn factor_rows<'a>(
+    dw: &'a [f32],
+    dim: usize,
+    batch: usize,
+    n_steps: usize,
+    b: usize,
+) -> [&'a [f32]; MAX_DIM] {
+    let mut rows: [&[f32]; MAX_DIM] = [&[]; MAX_DIM];
+    for (k, row) in rows.iter_mut().enumerate().take(dim) {
+        let off = (k * batch + b) * n_steps;
+        *row = &dw[off..off + n_steps];
+    }
+    rows
+}
+
+/// Integrate one path of `sde` and hand every state to `visit(t, state)`
+/// for `t = 0..=n_steps` (`t = 0` is the initial state). `rows[k]` is the
+/// factor-`k` increment row (`n_steps` entries); `rows.len()` must equal
+/// `sde.dim()`.
 ///
-/// Generic (`S: Sde + ?Sized`) so concrete-SDE callers like
-/// [`simulate_paths`] monomorphize and keep the seed engine's inlined
-/// inner loop, while `&dyn Sde` callers (the scenario objective) still
-/// dispatch dynamically.
+/// Generic (`S: Sde + ?Sized`) so concrete-SDE callers monomorphize and
+/// keep the seed engine's inlined inner loop, while `&dyn Sde` callers
+/// (the scenario objective) dispatch dynamically.
+#[inline]
+pub fn fold_path<S: Sde + ?Sized, F: FnMut(usize, &State)>(
+    sde: &S,
+    rows: &[&[f32]],
+    n_steps: usize,
+    dt: f32,
+    mut visit: F,
+) {
+    let dim = sde.dim();
+    debug_assert_eq!(rows.len(), dim, "one increment row per factor");
+    let mut s = sde.s0_state();
+    visit(0, &s);
+    if dim == 1 {
+        // Monomorphized scalar fast path: the seed recurrence, same f32
+        // operation order (the bitwise regression anchors pin this).
+        // Slicing to n_steps makes a too-short row panic, exactly like
+        // the generic branch's indexing would.
+        let row = &rows[0][..n_steps];
+        let mut x = s[0];
+        for (t, &dwt) in row.iter().enumerate() {
+            let drift = sde.drift(x);
+            let diff = sde.diffusion(x);
+            let corr = sde.milstein_term(x);
+            x = sde.clamp(x + drift * dt + diff * dwt + corr * (dwt * dwt - dt));
+            s[0] = x;
+            visit(t + 1, &s);
+        }
+    } else {
+        let rho = sde.correlation();
+        let orth = (1.0 - rho * rho).max(0.0).sqrt();
+        let mut next = [0.0f32; MAX_DIM];
+        for t in 0..n_steps {
+            for k in 0..dim {
+                // Correlate factor k >= 1 drivers with factor 0's raw
+                // increments (2x2 Cholesky; linear, so it commutes with
+                // the MLMC pairwise coarsening of the raw factors).
+                let dwt = if k == 0 {
+                    rows[0][t]
+                } else {
+                    rho * rows[0][t] + orth * rows[k][t]
+                };
+                let a = sde.drift_factor(&s, k);
+                let b = sde.diffusion_factor(&s, k);
+                let m = sde.milstein_factor(&s, k);
+                next[k] = sde.clamp_factor(
+                    s[k] + a * dt + b * dwt + m * (dwt * dwt - dt),
+                    k,
+                );
+            }
+            s[..dim].copy_from_slice(&next[..dim]);
+            visit(t + 1, &s);
+        }
+    }
+}
+
+/// Simulate `batch` **price rows** (factor 0) of `sde` over `n_steps`
+/// from factor-major increments `dw[dim, batch, n_steps]`; returns
+/// row-major `s[batch, n_steps + 1]` (including `S_0`).
+///
+/// Materializing entry point — kept for diagnostics, HLO cross-checks and
+/// tests; the objective hot path streams via [`fold_path`] instead.
 pub fn simulate_paths_sde<S: Sde + ?Sized>(
     dw: &[f32],
     batch: usize,
@@ -30,21 +126,16 @@ pub fn simulate_paths_sde<S: Sde + ?Sized>(
     sde: &S,
     maturity: f64,
 ) -> Vec<f32> {
-    assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
     let dt = (maturity / n_steps as f64) as f32;
     let mut out = vec![0.0f32; batch * (n_steps + 1)];
     for b in 0..batch {
-        let row_dw = &dw[b * n_steps..(b + 1) * n_steps];
+        let rows = factor_rows(dw, dim, batch, n_steps, b);
         let row_s = &mut out[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
-        let mut s = sde.s0();
-        row_s[0] = s;
-        for (t, &dwt) in row_dw.iter().enumerate() {
-            let drift = sde.drift(s);
-            let diff = sde.diffusion(s);
-            let corr = sde.milstein_term(s);
-            s = sde.clamp(s + drift * dt + diff * dwt + corr * (dwt * dwt - dt));
-            row_s[t + 1] = s;
-        }
+        fold_path(sde, &rows[..dim], n_steps, dt, |t, st| {
+            row_s[t] = st[0];
+        });
     }
     out
 }
@@ -61,15 +152,41 @@ pub fn simulate_paths(
     simulate_paths_sde(dw, batch, n_steps, &sde, problem.maturity)
 }
 
-/// Terminal values only (convenience for diagnostics/cross-checks).
+/// Terminal prices only, via the streaming core — no per-path buffer is
+/// ever allocated (the old implementation materialized the full
+/// `batch x (n_steps + 1)` grid just to read its last column).
+pub fn terminal_values_sde<S: Sde + ?Sized>(
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    sde: &S,
+    maturity: f64,
+) -> Vec<f32> {
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
+    let dt = (maturity / n_steps as f64) as f32;
+    (0..batch)
+        .map(|b| {
+            let rows = factor_rows(dw, dim, batch, n_steps, b);
+            let mut last = 0.0f32;
+            fold_path(sde, &rows[..dim], n_steps, dt, |_, st| {
+                last = st[0];
+            });
+            last
+        })
+        .collect()
+}
+
+/// [`terminal_values_sde`] under the problem's own Black–Scholes
+/// dynamics (convenience for diagnostics/cross-checks).
 pub fn terminal_values(
     dw: &[f32],
     batch: usize,
     n_steps: usize,
     problem: &Problem,
 ) -> Vec<f32> {
-    let s = simulate_paths(dw, batch, n_steps, problem);
-    (0..batch).map(|b| s[b * (n_steps + 1) + n_steps]).collect()
+    let sde = BlackScholes::from_problem(problem);
+    terminal_values_sde(dw, batch, n_steps, &sde, problem.maturity)
 }
 
 #[cfg(test)]
@@ -77,6 +194,7 @@ mod tests {
     use super::*;
     use crate::hedging::Drift;
     use crate::rng::{brownian::Purpose, BrownianSource};
+    use crate::scenarios::sde::Heston;
 
     fn problem() -> Problem {
         Problem::default()
@@ -119,6 +237,23 @@ mod tests {
     }
 
     #[test]
+    fn terminal_values_match_materialized_last_column_bitwise() {
+        // The streaming terminal path must be the same recurrence as the
+        // materializing one — last column, to the bit.
+        let p = problem();
+        let batch = 32;
+        let n = 64;
+        let dw = BrownianSource::new(3).increments(
+            Purpose::Diagnostic, 0, 0, 0, batch, n, p.maturity / n as f64,
+        );
+        let s = simulate_paths(&dw, batch, n, &p);
+        let term = terminal_values(&dw, batch, n, &p);
+        for b in 0..batch {
+            assert_eq!(term[b], s[b * (n + 1) + n], "path {b}");
+        }
+    }
+
+    #[test]
     fn cir_paths_stay_non_negative() {
         use crate::scenarios::sde::CoxIngersollRoss;
         // Stress the truncation: tiny s0 relative to the noise.
@@ -130,6 +265,141 @@ mod tests {
         );
         let s = simulate_paths_sde(&dw, batch, n, &sde, 1.0);
         assert!(s.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn heston_variance_stays_non_negative_across_levels() {
+        // Full truncation must keep the variance factor >= 0 on every
+        // grid the MLMC estimator simulates — stress with a high
+        // vol-of-vol that violates Feller (2 kappa theta < xi^2).
+        let sde = Heston::new(1.0, 1.5, 0.04, 1.0, -0.7, 3.0, 0.04);
+        let src = BrownianSource::new(13);
+        let p = problem();
+        for level in 0..=4usize {
+            let n = p.n_steps(level);
+            let batch = 128;
+            let dw = src.increments_multi(
+                Purpose::Diagnostic, 0, level as u32, 0, batch, n,
+                p.dt(level), sde.dim(),
+            );
+            let dt = p.dt(level) as f32;
+            for b in 0..batch {
+                let rows = factor_rows(&dw, sde.dim(), batch, n, b);
+                fold_path(&sde, &rows[..sde.dim()], n, dt, |t, st| {
+                    assert!(
+                        st[1] >= 0.0 && st[1].is_finite(),
+                        "level {level} path {b} step {t}: v = {}",
+                        st[1]
+                    );
+                    assert!(st[0].is_finite());
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn heston_correlation_induces_price_vol_comovement() {
+        // rho < 0 must show up in the *simulated dynamics*: per-step
+        // price moves and variance moves, measured on states produced by
+        // fold_path, are negatively correlated. (The exact mixing is
+        // pinned bitwise by the handwritten-recurrence test below; this
+        // checks the end-to-end statistical effect and its sign.)
+        let sde = Heston::from_problem(&problem());
+        let batch = 2000;
+        let n = 16;
+        let dw = BrownianSource::new(5).increments_multi(
+            Purpose::Diagnostic, 0, 0, 0, batch, n, 1.0 / n as f64, 2,
+        );
+        let dt = 1.0f32 / n as f32;
+        let mut num = 0.0f64;
+        let mut d0 = 0.0f64;
+        let mut d1 = 0.0f64;
+        for b in 0..batch {
+            let rows = factor_rows(&dw, 2, batch, n, b);
+            let mut prev = [0.0f32; 2];
+            fold_path(&sde, &rows[..2], n, dt, |t, st| {
+                if t > 0 {
+                    let ds = (st[0] - prev[0]) as f64;
+                    let dv = (st[1] - prev[1]) as f64;
+                    num += ds * dv;
+                    d0 += ds * ds;
+                    d1 += dv * dv;
+                }
+                prev = *st;
+            });
+        }
+        let realized = num / (d0 * d1).sqrt();
+        assert!(
+            realized < -0.3,
+            "price/vol comovement too weak for rho = {}: {realized}",
+            sde.rho
+        );
+    }
+
+    #[test]
+    fn heston_matches_handwritten_two_factor_recurrence_bitwise() {
+        // Pins the generic D=2 loop — INCLUDING the Cholesky correlation
+        // placement (factor 0 raw, factor 1 = rho*raw0 + orth*raw1) and
+        // the pre-step-state coefficient evaluation — against an inline
+        // reference with real noise. A sign/placement bug in the
+        // correlation mixing flips these states and fails bitwise.
+        let sde = Heston::new(1.0, 1.5, 1.0, 0.5, -0.7, 3.0, 1.0);
+        let n = 32;
+        let dt = 1.0f32 / n as f32;
+        let dw = BrownianSource::new(41).increments_multi(
+            Purpose::Diagnostic, 0, 0, 0, 1, n, 1.0 / n as f64, 2,
+        );
+        let rows = factor_rows(&dw, 2, 1, n, 0);
+        let mut got = Vec::new();
+        fold_path(&sde, &rows[..2], n, dt, |_, st| got.push(*st));
+
+        let rho = sde.rho;
+        let orth = (1.0 - rho * rho).max(0.0).sqrt();
+        let mut s = 3.0f32;
+        let mut v = 1.0f32;
+        let mut want = vec![[s, v]];
+        for t in 0..n {
+            let dw0 = rows[0][t];
+            let dw1 = rho * rows[0][t] + orth * rows[1][t];
+            let vol = v.max(0.0).sqrt();
+            let s_next = s + (sde.mu * s) * dt
+                + (vol * s) * dw0
+                + (0.5 * v.max(0.0) * s) * (dw0 * dw0 - dt);
+            let v_next = (v + (sde.kappa * (sde.theta - v)) * dt
+                + (sde.xi * vol) * dw1
+                + (0.25 * sde.xi * sde.xi) * (dw1 * dw1 - dt))
+                .max(0.0);
+            s = s_next;
+            v = v_next;
+            want.push([s, v]);
+        }
+        assert_eq!(got, want, "2-factor recurrence drifted");
+    }
+
+    #[test]
+    fn heston_zero_noise_recurrence() {
+        // dW = 0 for both factors: deterministic Milstein drift steps.
+        let sde = Heston::new(1.0, 1.5, 1.0, 0.5, -0.7, 3.0, 1.0);
+        let n = 8;
+        let dt = 1.0 / n as f32;
+        let dw = vec![0.0f32; 2 * n];
+        let rows = factor_rows(&dw, 2, 1, n, 0);
+        let mut states = Vec::new();
+        fold_path(&sde, &rows[..2], n, dt, |_, st| states.push(*st));
+        assert_eq!(states.len(), n + 1);
+        let mut s = 3.0f32;
+        let mut v = 1.0f32;
+        for t in 0..n {
+            let s_next = s + sde.mu * s * dt
+                - 0.5 * v.max(0.0) * s * dt;
+            let v_next =
+                (v + sde.kappa * (sde.theta - v) * dt - 0.25 * sde.xi * sde.xi * dt)
+                    .max(0.0);
+            s = s_next;
+            v = v_next;
+            assert!((states[t + 1][0] - s).abs() < 1e-6, "step {t} price");
+            assert!((states[t + 1][1] - v).abs() < 1e-6, "step {t} var");
+        }
     }
 
     #[test]
@@ -202,6 +472,38 @@ mod tests {
         }
         for w in errs.windows(2) {
             assert!(w[1] < w[0] * 0.6, "errors not decaying: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn heston_coupling_decays() {
+        // Fine/coarse terminal-price MSE under the 2-factor dynamics with
+        // per-factor coarsening of the raw increments.
+        let sde = Heston::from_problem(&problem());
+        let p = problem();
+        let src = BrownianSource::new(23);
+        let batch = 2000;
+        let mut errs = Vec::new();
+        for level in 1..=4usize {
+            let n = p.n_steps(level);
+            let dw = src.increments_multi(
+                Purpose::Diagnostic, 0, level as u32, 0, batch, n,
+                p.dt(level), 2,
+            );
+            let fine = terminal_values_sde(&dw, batch, n, &sde, p.maturity);
+            let dwc = BrownianSource::coarsen_multi(&dw, 2, batch, n);
+            let coarse =
+                terminal_values_sde(&dwc, batch, n / 2, &sde, p.maturity);
+            let mse = fine
+                .iter()
+                .zip(&coarse)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / batch as f64;
+            errs.push(mse);
+        }
+        for w in errs.windows(2) {
+            assert!(w[1] < w[0] * 0.75, "heston MSE not decaying: {errs:?}");
         }
     }
 

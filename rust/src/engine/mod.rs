@@ -11,7 +11,10 @@
 //! * **benchmarks** — a baseline the runtime's hot path is compared to.
 
 //! The integrator and objective are generic over a
-//! [`crate::scenarios::Scenario`] (SDE dynamics x path payoff); the plain
+//! [`crate::scenarios::Scenario`] — a D-dimensional SDE dynamics
+//! (D <= [`crate::scenarios::MAX_DIM`], correlated Brownian drivers)
+//! paired with a **streaming** path payoff (`init → observe → finish`
+//! observers; the hot path never materializes a path buffer). The plain
 //! entry points run the problem's default Black–Scholes-call scenario
 //! bit-identically to the seed engine.
 
@@ -19,7 +22,10 @@ pub mod milstein;
 pub mod mlp;
 pub mod objective;
 
-pub use milstein::{simulate_paths, simulate_paths_sde};
+pub use milstein::{
+    fold_path, simulate_paths, simulate_paths_sde, terminal_values,
+    terminal_values_sde,
+};
 pub use mlp::{MlpParams, HIDDEN, N_IN, N_PARAMS};
 pub use objective::{
     coupled_value_and_grad, coupled_value_and_grad_scenario, loss_only,

@@ -13,15 +13,30 @@
 //! model (`stop_gradient` on the path) — which is also why any payoff
 //! slots in: it contributes a residual value, never its own gradient.
 //!
+//! # Streaming hot path
+//!
+//! The objective **streams**: each path is integrated step by step
+//! ([`super::milstein::fold_path`]) while the hedging MLP forward pass,
+//! the gains accumulation and the payoff observer
+//! (`init → observe → finish`, see [`crate::scenarios::payoff`]) fold the
+//! states online. The only per-call scratch is `O(n_steps)` (the reused
+//! forward tapes and the price-increment row the backward pass needs) —
+//! the seed engine's `batch x (n_steps + 1)` path materialization is
+//! gone from the hot path. Every per-sample f32 operation has the same
+//! inputs and order as the materialized seed loop, so the default
+//! scenario's loss/gradients are **bit-identical** (anchored by the
+//! regression tests below).
+//!
 //! The `*_scenario` entry points take an explicit [`Scenario`]; the plain
-//! entry points run the problem's default scenario and are bit-identical
-//! to the pre-scenario engine.
+//! entry points run the problem's default scenario. Increment batches are
+//! factor-major `dw[dim, batch, n_steps]` with `dim = sde.dim()` — for
+//! the 1-D dynamics exactly the seed layout.
 
-use super::milstein::simulate_paths_sde;
+use super::milstein::{factor_rows, fold_path};
 use super::mlp::{backward_row, forward_row, MlpParams, N_PARAMS, OFF_P0};
 use crate::hedging::Problem;
 use crate::rng::BrownianSource;
-use crate::scenarios::payoff::EuropeanCall;
+use crate::scenarios::payoff::{EuropeanCall, PathAccum};
 use crate::scenarios::sde::BlackScholes;
 use crate::scenarios::{Payoff, Scenario, Sde};
 
@@ -134,7 +149,8 @@ fn coupled_value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
         params, dw_fine, batch, n_fine, problem, sde, payoff, 1.0, &mut grad,
     );
     if level > 0 {
-        let dw_coarse = BrownianSource::coarsen(dw_fine, batch, n_fine);
+        let dw_coarse =
+            BrownianSource::coarsen_multi(dw_fine, sde.dim(), batch, n_fine);
         loss += accumulate_value_and_grad(
             params, &dw_coarse, batch, n_fine / 2, problem, sde, payoff, -1.0, &mut grad,
         );
@@ -187,18 +203,34 @@ fn loss_only_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
     sde: &S,
     payoff: &P,
 ) -> f64 {
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
     let p = MlpParams::new(params);
-    let s = simulate_paths_sde(dw, batch, n_steps, sde, problem.maturity);
+    let dt = (problem.maturity / n_steps as f64) as f32;
     let dt_grid = problem.maturity as f32 / n_steps as f32;
     let mut total = 0.0f64;
     for b in 0..batch {
-        let row = &s[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
+        let rows = factor_rows(dw, dim, batch, n_steps, b);
+        // Streamed per-path fold: MLP forward + gains + payoff observer,
+        // one state at a time — no path buffer.
         let mut gains = 0.0f32;
-        for n in 0..n_steps {
-            let h = forward_row(&p, [n as f32 * dt_grid, row[n]]).0;
-            gains += h * (row[n + 1] - row[n]);
-        }
-        let payoff_v = payoff.value(row);
+        let mut acc = PathAccum::default();
+        let mut pending_h = 0.0f32;
+        let mut prev = 0.0f32;
+        fold_path(sde, &rows[..dim], n_steps, dt, |t, st| {
+            let s_t = st[0];
+            if t == 0 {
+                acc = payoff.init(st);
+            } else {
+                gains += pending_h * (s_t - prev);
+                payoff.observe(&mut acc, t, n_steps, st);
+            }
+            if t < n_steps {
+                pending_h = forward_row(&p, [t as f32 * dt_grid, s_t]).0;
+            }
+            prev = s_t;
+        });
+        let payoff_v = payoff.finish(&acc, n_steps);
         let r = payoff_v - gains - p.p0();
         total += (r as f64) * (r as f64);
     }
@@ -208,6 +240,12 @@ fn loss_only_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
 /// Shared fwd+bwd over one grid, scaling the contribution by `sign`
 /// (+1 fine term, -1 coarse term). Returns `sign * loss` and accumulates
 /// `sign * grad` into `grad`.
+///
+/// Streams each path through [`fold_path`]: the forward tapes and the
+/// per-step price increments (which the backward pass replays) are the
+/// only scratch, both `O(n_steps)` and reused across the batch — the
+/// path itself is never materialized. Identical f32 operations in
+/// identical order as the seed's materialize-then-read loop.
 fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
     params: &[f32],
     dw: &[f32],
@@ -219,27 +257,42 @@ fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
     sign: f32,
     grad: &mut [f32],
 ) -> f64 {
-    assert_eq!(dw.len(), batch * n_steps, "dw shape mismatch");
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
     let p = MlpParams::new(params);
-    let s = simulate_paths_sde(dw, batch, n_steps, sde, problem.maturity);
+    let dt = (problem.maturity / n_steps as f64) as f32;
     let dt_grid = problem.maturity as f32 / n_steps as f32;
     let inv_b = 1.0f32 / batch as f32;
 
-    // Tape reuse: one row of tapes per path (n_steps entries).
+    // Scratch reuse: one row of tapes + price increments per path.
     let mut tapes = Vec::with_capacity(n_steps);
-    let mut holdings = vec![0.0f32; n_steps];
+    let mut ds = vec![0.0f32; n_steps];
     let mut total = 0.0f64;
     for b in 0..batch {
-        let row = &s[b * (n_steps + 1)..(b + 1) * (n_steps + 1)];
+        let rows = factor_rows(dw, dim, batch, n_steps, b);
         tapes.clear();
         let mut gains = 0.0f32;
-        for n in 0..n_steps {
-            let (h, tape) = forward_row(&p, [n as f32 * dt_grid, row[n]]);
-            holdings[n] = h;
-            tapes.push(tape);
-            gains += h * (row[n + 1] - row[n]);
-        }
-        let payoff_v = payoff.value(row);
+        let mut acc = PathAccum::default();
+        let mut pending_h = 0.0f32;
+        let mut prev = 0.0f32;
+        fold_path(sde, &rows[..dim], n_steps, dt, |t, st| {
+            let s_t = st[0];
+            if t == 0 {
+                acc = payoff.init(st);
+            } else {
+                let d = s_t - prev;
+                ds[t - 1] = d;
+                gains += pending_h * d;
+                payoff.observe(&mut acc, t, n_steps, st);
+            }
+            if t < n_steps {
+                let (h, tape) = forward_row(&p, [t as f32 * dt_grid, s_t]);
+                pending_h = h;
+                tapes.push(tape);
+            }
+            prev = s_t;
+        });
+        let payoff_v = payoff.finish(&acc, n_steps);
         let r = payoff_v - gains - p.p0();
         total += (r as f64) * (r as f64);
 
@@ -247,7 +300,7 @@ fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
         let dr = sign * 2.0 * r * inv_b;
         grad[OFF_P0] += -dr;
         for n in 0..n_steps {
-            let g_h = -dr * (row[n + 1] - row[n]);
+            let g_h = -dr * ds[n];
             backward_row(&p, &tapes[n], g_h, grad);
         }
     }
@@ -389,7 +442,14 @@ mod tests {
     #[test]
     fn non_default_scenarios_produce_finite_coupled_grads() {
         let (prob, params, dw) = setup(2, 8);
-        for name in ["ou-asian", "cir-lookback", "gbm-digital", "bs-put"] {
+        for name in [
+            "ou-asian",
+            "cir-lookback",
+            "gbm-digital",
+            "bs-put",
+            "bs-uo-call",
+            "gbm-di-put",
+        ] {
             let sc = crate::scenarios::build_scenario(name, &prob).unwrap();
             let (loss, grad) =
                 coupled_value_and_grad_scenario(&params, &dw, 8, 2, &prob, &sc);
@@ -398,6 +458,82 @@ mod tests {
                 grad.iter().all(|g| g.is_finite()),
                 "{name}: non-finite gradient"
             );
+        }
+    }
+
+    #[test]
+    fn heston_scenarios_produce_finite_coupled_grads_at_every_level() {
+        // 2-factor dw: factor-major [2, batch, n]. Every level must yield
+        // finite coupled losses/gradients (acceptance criterion for the
+        // multi-factor core).
+        let prob = Problem::default();
+        let params = init_params(0);
+        let src = BrownianSource::new(31);
+        for name in ["heston-call", "heston-put", "heston-uo-call"] {
+            let sc = crate::scenarios::build_scenario(name, &prob).unwrap();
+            assert_eq!(sc.sde.dim(), 2);
+            for level in 0..=prob.lmax {
+                let n = prob.n_steps(level);
+                let batch = 8;
+                let dw = src.increments_multi(
+                    Purpose::Grad, 0, level as u32, 0, batch, n,
+                    prob.dt(level), 2,
+                );
+                let (loss, grad) = coupled_value_and_grad_scenario(
+                    &params, &dw, batch, level, &prob, &sc,
+                );
+                assert!(loss.is_finite(), "{name} l{level}: loss {loss}");
+                assert!(
+                    grad.iter().all(|g| g.is_finite()),
+                    "{name} l{level}: non-finite gradient"
+                );
+                if level == 0 {
+                    assert!(
+                        grad.iter().any(|&g| g != 0.0),
+                        "{name}: all-zero level-0 gradient"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_loss_matches_materialized_reference_bitwise() {
+        // The streaming objective performs the same f32 operations in the
+        // same order as materialize-then-read; the f64 loss must agree to
+        // the last bit, for the default scenario and for path-dependent
+        // payoffs on every 1-D dynamics.
+        let prob = Problem::default();
+        let params = init_params(0);
+        let p = MlpParams::new(&params);
+        let src = BrownianSource::new(77);
+        for name in ["bs-call", "ou-asian", "cir-lookback", "bs-uo-call"] {
+            let sc = crate::scenarios::build_scenario(name, &prob).unwrap();
+            let batch = 16;
+            let n = prob.n_steps(2);
+            let dw = src.increments(
+                Purpose::Grad, 0, 2, 0, batch, n, prob.dt(2),
+            );
+            let got = loss_only_scenario(&params, &dw, batch, n, &prob, &sc);
+
+            // materialized reference: full path buffer, then payoff reads
+            let s = crate::engine::milstein::simulate_paths_sde(
+                &dw, batch, n, &*sc.sde, prob.maturity,
+            );
+            let dtg = prob.maturity as f32 / n as f32;
+            let mut want = 0.0f64;
+            for b in 0..batch {
+                let row = &s[b * (n + 1)..(b + 1) * (n + 1)];
+                let mut gains = 0.0f32;
+                for t in 0..n {
+                    gains += forward_row(&p, [t as f32 * dtg, row[t]]).0
+                        * (row[t + 1] - row[t]);
+                }
+                let r = sc.payoff.value(row) - gains - p.p0();
+                want += (r as f64) * (r as f64);
+            }
+            want /= batch as f64;
+            assert_eq!(got, want, "{name}: streaming loss drifted");
         }
     }
 

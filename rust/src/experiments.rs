@@ -104,7 +104,7 @@ pub fn figure1(cfg: &ExperimentConfig, snapshots: usize, quiet: bool) -> Result<
                 let mut w = Welford::new();
                 let mut ws = Welford::new();
                 for chunk in 0..DIAG_CHUNKS {
-                    let dw = src.increments(
+                    let dw = src.increments_multi(
                         Purpose::Diagnostic,
                         t,
                         level as u32,
@@ -112,6 +112,7 @@ pub fn figure1(cfg: &ExperimentConfig, snapshots: usize, quiet: bool) -> Result<
                         batch,
                         n,
                         cfg.problem.dt(level),
+                        tr.backend().n_factors(),
                     );
                     let norms =
                         tr.backend()
@@ -343,7 +344,7 @@ pub fn fit_b_hat(
         let batch = backend.diag_chunk();
         let mut w = Welford::new();
         for chunk in 0..SWEEP_CHUNKS {
-            let dw = src.increments(
+            let dw = src.increments_multi(
                 Purpose::Diagnostic,
                 0,
                 level as u32,
@@ -351,6 +352,7 @@ pub fn fit_b_hat(
                 batch,
                 n,
                 cfg.problem.dt(level),
+                backend.n_factors(),
             );
             for v in backend.grad_norms_chunk(level, params, &dw)? {
                 w.push(v as f64);
@@ -497,10 +499,14 @@ mod tests {
         c.train.eval_every = 6;
         c.mlmc.n_effective = 32;
         c.train.dmlmc_warmup = 0;
-        let names: Vec<String> =
-            ["bs-call", "ou-asian", "cir-digital"].iter().map(|s| s.to_string()).collect();
+        // spans D = 1 and D = 2 dynamics plus a barrier payoff — the
+        // acceptance surface of the multi-factor/streaming refactor
+        let names: Vec<String> = ["bs-call", "ou-asian", "heston-call", "gbm-uo-call"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
         let rows = scenario_sweep(&c, &names, true).unwrap();
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.b_hat.is_finite(), "{}: b_hat {}", r.name, r.b_hat);
             assert!(

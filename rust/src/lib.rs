@@ -25,17 +25,27 @@
 //!
 //! ## Scenarios
 //!
-//! The engine is generic over a [`scenarios::Scenario`] — an SDE
-//! dynamics ([`scenarios::Sde`]: Black–Scholes, Ornstein–Uhlenbeck,
-//! Cox–Ingersoll–Ross) paired with a path payoff ([`scenarios::Payoff`]:
-//! European call/put, Asian, lookback, digital). Scenarios are selected
-//! by string key (`"ou-asian"`, `"cir-digital"`, …) via the
+//! The engine is generic over a [`scenarios::Scenario`] — a
+//! D-dimensional SDE dynamics ([`scenarios::Sde`], `D <=`
+//! [`scenarios::MAX_DIM`]: Black–Scholes, Ornstein–Uhlenbeck,
+//! Cox–Ingersoll–Ross, and 2-factor Heston stochastic vol with
+//! correlated Brownian drivers) paired with a **streaming** path payoff
+//! ([`scenarios::Payoff`], an `init → observe → finish` observer:
+//! European call/put, Asian, lookback, digital, and up-and-out /
+//! down-and-in barriers with in-stream hit-tracking). The simulation
+//! spine streams: the integrator ([`engine::milstein::fold_path`]) hands
+//! each state to the objective and the payoff observer online, so the
+//! native hot path never allocates a `batch x (n_steps + 1)` path buffer
+//! (`cargo bench --bench hotpath` tracks materialized vs streaming
+//! paths/sec in `BENCH_scenarios.json`). Scenarios are selected by
+//! string key (`"ou-asian"`, `"heston-uo-call"`, …) via the
 //! `scenario.name` TOML key or the `--scenario` CLI flag, and run on the
 //! native backend; the default `"bs-call"` scenario reproduces the seed
-//! engine bit-for-bit and is the only one the XLA artifacts cover. The
-//! `repro scenario-sweep` subcommand (and `examples/scenario_sweep.rs`)
-//! fits each scenario's variance-decay exponent `b` (Assumption 2) and
-//! tabulates the MLMC vs delayed-MLMC parallel cost.
+//! engine bit-for-bit — through the D-generic + streaming refactor — and
+//! is the only one the XLA artifacts cover. The `repro scenario-sweep`
+//! subcommand (and `examples/scenario_sweep.rs`) fits each scenario's
+//! variance-decay exponent `b` (Assumption 2) and tabulates the MLMC vs
+//! delayed-MLMC parallel cost.
 //!
 //! ## Quickstart
 //!

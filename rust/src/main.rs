@@ -17,8 +17,10 @@ fn root_command() -> Command {
             .opt(Opt::value("backend", "xla|native (overrides config)"))
             .opt(Opt::value(
                 "scenario",
-                "scenario key `<sde>-<payoff>`, e.g. bs-call|ou-asian|cir-digital \
-                 (see `repro scenarios`); non-default keys imply --backend native",
+                "scenario key `<sde>-<payoff>`, e.g. bs-call|ou-asian|heston-call \
+                 |bs-uo-call (see `repro scenarios`; heston is 2-factor \
+                 stochastic vol, uo-call/di-put are barrier payoffs); \
+                 non-default keys imply --backend native",
             ))
             .opt(Opt::value("steps", "override train.steps"))
             .opt(Opt::value("n-effective", "override mlmc.n_effective"))

@@ -7,7 +7,37 @@
 //! (how many processors before DMLMC's advantage saturates) can be swept —
 //! used by `examples/complexity_table.rs` and the ablation bench.
 
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
 use super::cost::CostModel;
+
+/// One processor's running load, ordered by `(load, index)` — the heap
+/// pops the least-loaded processor, ties broken by the smallest index,
+/// which is exactly the `min_by`-over-a-slice "first minimum" rule of the
+/// expanded LPT reference (loads are finite and non-negative, so
+/// `total_cmp` agrees with `partial_cmp` on every comparison made).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Slot {
+    load: f64,
+    idx: usize,
+}
+
+impl Eq for Slot {}
+
+impl Ord for Slot {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.load
+            .total_cmp(&other.load)
+            .then(self.idx.cmp(&other.idx))
+    }
+}
+
+impl PartialOrd for Slot {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
 
 /// A unit of schedulable work: one level refresh (N_l parallel samples,
 /// each of depth `2^{c l}`).
@@ -43,25 +73,35 @@ impl PramMachine {
         // groups longest-first and assign counts greedily. Equal-length
         // tasks are interchangeable, so this is bit-identical to the
         // expanded sort — including the first-min tie-breaking.
+        //
+        // The least-loaded processor comes from a binary heap keyed by
+        // `(load, index)` — O(S log P) over S samples instead of the old
+        // O(S x P) scan, which dominated for large-N level-0 jobs. The
+        // heap performs the *identical assignment sequence* (same argmin,
+        // same first-min tie-break via the index key), so every
+        // per-processor f64 load accumulates in the same order and the
+        // result is bit-exact with the expanded reference (guarded by
+        // `counting_schedule_matches_expansion_bitwise`).
         let mut groups: Vec<(f64, usize)> = jobs
             .iter()
             .filter(|j| j.n_samples > 0)
             .map(|j| (self.model.sample_cost(j.level), j.n_samples))
             .collect();
         groups.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut loads = vec![0.0f64; self.processors];
+        let mut heap: BinaryHeap<Reverse<Slot>> = (0..self.processors)
+            .map(|idx| Reverse(Slot { load: 0.0, idx }))
+            .collect();
         for (len, count) in groups {
             for _ in 0..count {
-                // assign to least-loaded processor
-                let (idx, _) = loads
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
-                loads[idx] += len;
+                // assign to least-loaded processor (first-min on ties)
+                let Reverse(mut slot) = heap.pop().expect("processors > 0");
+                slot.load += len;
+                heap.push(Reverse(slot));
             }
         }
-        loads.into_iter().fold(0.0, f64::max)
+        heap.into_iter()
+            .map(|Reverse(s)| s.load)
+            .fold(0.0, f64::max)
     }
 
     /// Brent's-theorem lower bound for the same step.
@@ -145,6 +185,15 @@ mod tests {
     #[should_panic(expected = "at least one")]
     fn zero_processors_panics() {
         PramMachine::new(0, CostModel::new(1.0));
+    }
+
+    #[test]
+    fn heap_schedule_handles_large_sample_counts() {
+        // The O(S log P) heap makes very large N cheap; identical unit
+        // tasks spread perfectly evenly, so the makespan is exact.
+        let m = machine(8);
+        let jobs = [LevelJob { level: 0, n_samples: 1_000_000 }];
+        assert_eq!(m.step_makespan(&jobs), 125_000.0);
     }
 
     /// The pre-optimization LPT: expand one task per sample and sort.

@@ -10,6 +10,20 @@
 //! Stream addressing (`stream = hash(step, level, chunk, purpose)`) keeps
 //! every batch independent yet fully reproducible, matching footnote 7 of
 //! the paper: refresh samples are independent across time and levels.
+//!
+//! # Multi-factor batches
+//!
+//! Multi-factor SDEs (Heston-style stochastic vol) drive each state
+//! factor with its own Brownian motion. [`BrownianSource::increments_multi`]
+//! produces a factor-major batch `dW[n_factors, batch, n_steps]` of
+//! *independent* factor blocks, each addressed by `(purpose, step, level,
+//! chunk, factor)`; the factor-0 block is bit-identical to the 1-factor
+//! [`BrownianSource::increments`] batch of the same address, so the
+//! default scenario's streams never move. Cross-factor correlation is a
+//! *linear* map applied inside the integrator (Cholesky of the 2x2
+//! correlation matrix), which commutes with pairwise summation — so the
+//! MLMC coupling coarsens each factor block independently
+//! ([`BrownianSource::coarsen_multi`]), exactly as today per factor.
 
 use super::normal::NormalStream;
 
@@ -43,15 +57,19 @@ impl BrownianSource {
         BrownianSource { seed }
     }
 
-    /// Stable stream id for `(purpose, step, level, chunk)`.
+    /// Stable stream id for `(purpose, step, level, chunk, factor)`.
     ///
     /// SplitMix64-style mixing keeps distinct coordinates statistically
     /// independent even though they are structured (small integers).
-    fn stream_id(purpose: Purpose, step: u64, level: u32, chunk: u32) -> u64 {
+    /// `factor` is mixed in multiplicatively so factor 0 leaves the
+    /// pre-factor stream id untouched — the 1-factor addresses (and with
+    /// them every seed-era batch) are bit-stable.
+    fn stream_id(purpose: Purpose, step: u64, level: u32, chunk: u32, factor: u32) -> u64 {
         let mut x = purpose.tag()
             ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
             ^ ((level as u64) << 48)
-            ^ ((chunk as u64) << 32);
+            ^ ((chunk as u64) << 32)
+            ^ (factor as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
         x ^= x >> 30;
         x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
         x ^= x >> 27;
@@ -61,7 +79,7 @@ impl BrownianSource {
     }
 
     /// Row-major `dW[batch, n_steps]` with `dW ~ N(0, dt)` on the fine
-    /// grid of the addressed batch.
+    /// grid of the addressed batch (the single-factor case).
     pub fn increments(
         &self,
         purpose: Purpose,
@@ -72,13 +90,36 @@ impl BrownianSource {
         n_steps: usize,
         dt: f64,
     ) -> Vec<f32> {
-        let stream = Self::stream_id(purpose, step, level, chunk);
-        let ns = NormalStream::new(self.seed, stream);
-        let mut out = vec![0.0f32; batch * n_steps];
-        ns.fill(&mut out);
+        self.increments_multi(purpose, step, level, chunk, batch, n_steps, dt, 1)
+    }
+
+    /// Factor-major `dW[n_factors, batch, n_steps]`: `n_factors`
+    /// independent Brownian factor blocks for one addressed batch. The
+    /// factor-0 block is bit-identical to [`BrownianSource::increments`]
+    /// at the same address.
+    pub fn increments_multi(
+        &self,
+        purpose: Purpose,
+        step: u64,
+        level: u32,
+        chunk: u32,
+        batch: usize,
+        n_steps: usize,
+        dt: f64,
+        n_factors: usize,
+    ) -> Vec<f32> {
+        assert!(n_factors >= 1, "need at least one factor");
+        let block = batch * n_steps;
+        let mut out = vec![0.0f32; n_factors * block];
         let scale = (dt as f32).sqrt();
-        for v in &mut out {
-            *v *= scale;
+        for k in 0..n_factors {
+            let stream = Self::stream_id(purpose, step, level, chunk, k as u32);
+            let ns = NormalStream::new(self.seed, stream);
+            let dst = &mut out[k * block..(k + 1) * block];
+            ns.fill(dst);
+            for v in dst.iter_mut() {
+                *v *= scale;
+            }
         }
         out
     }
@@ -97,6 +138,33 @@ impl BrownianSource {
             for (k, d) in dst.iter_mut().enumerate() {
                 *d = row[2 * k] + row[2 * k + 1];
             }
+        }
+        out
+    }
+
+    /// [`BrownianSource::coarsen`] of a factor-major multi-factor batch
+    /// `dW[n_factors, batch, n_fine]` — every factor block is coarsened
+    /// independently (the coupling is per-driver). Bit-identical to
+    /// `coarsen` for `n_factors == 1`.
+    pub fn coarsen_multi(
+        dw_fine: &[f32],
+        n_factors: usize,
+        batch: usize,
+        n_fine: usize,
+    ) -> Vec<f32> {
+        if n_factors == 1 {
+            // the common (default-scenario) case: no intermediate buffer
+            return Self::coarsen(dw_fine, batch, n_fine);
+        }
+        assert_eq!(
+            dw_fine.len(),
+            n_factors * batch * n_fine,
+            "shape mismatch"
+        );
+        let mut out = Vec::with_capacity(n_factors * batch * n_fine / 2);
+        for k in 0..n_factors {
+            let block = &dw_fine[k * batch * n_fine..(k + 1) * batch * n_fine];
+            out.extend_from_slice(&Self::coarsen(block, batch, n_fine));
         }
         out
     }
@@ -162,5 +230,63 @@ mod tests {
     #[should_panic(expected = "even")]
     fn coarsen_rejects_odd_grid() {
         BrownianSource::coarsen(&[1.0, 2.0, 3.0], 1, 3);
+    }
+
+    #[test]
+    fn factor0_block_bit_identical_to_single_factor() {
+        // The multi-factor generalization must not move the seed-era
+        // streams: factor 0 of any D reproduces the 1-factor batch.
+        let src = BrownianSource::new(17);
+        let single = src.increments(Purpose::Grad, 3, 2, 1, 4, 8, 0.125);
+        for n_factors in [1usize, 2] {
+            let multi = src.increments_multi(
+                Purpose::Grad, 3, 2, 1, 4, 8, 0.125, n_factors,
+            );
+            assert_eq!(multi.len(), n_factors * 4 * 8);
+            assert_eq!(&multi[..4 * 8], &single[..], "D = {n_factors}");
+        }
+    }
+
+    #[test]
+    fn factor_blocks_are_distinct_and_correctly_scaled() {
+        let src = BrownianSource::new(9);
+        let dt = 0.02;
+        let multi =
+            src.increments_multi(Purpose::Grad, 0, 1, 0, 500, 32, dt, 2);
+        let (a, b) = multi.split_at(500 * 32);
+        assert_ne!(a, b, "factor blocks must be independent draws");
+        for block in [a, b] {
+            let var = block.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                / block.len() as f64;
+            assert!((var - dt).abs() < dt * 0.05, "var {var} vs dt {dt}");
+        }
+        // cross-factor sample correlation ~ 0 (raw factors are independent;
+        // any rho is applied later, inside the integrator)
+        let corr = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| (x as f64) * (y as f64))
+            .sum::<f64>()
+            / (a.len() as f64 * dt);
+        assert!(corr.abs() < 0.05, "raw factor correlation {corr}");
+    }
+
+    #[test]
+    fn coarsen_multi_is_per_factor_coarsen() {
+        let src = BrownianSource::new(2);
+        let fine = src.increments_multi(Purpose::Grad, 0, 1, 0, 3, 8, 0.1, 2);
+        let coarse = BrownianSource::coarsen_multi(&fine, 2, 3, 8);
+        assert_eq!(coarse.len(), 2 * 3 * 4);
+        for k in 0..2 {
+            let want =
+                BrownianSource::coarsen(&fine[k * 24..(k + 1) * 24], 3, 8);
+            assert_eq!(&coarse[k * 12..(k + 1) * 12], &want[..], "factor {k}");
+        }
+        // single-factor coarsen_multi is bit-identical to coarsen
+        let single = src.increments(Purpose::Grad, 0, 1, 0, 3, 8, 0.1);
+        assert_eq!(
+            BrownianSource::coarsen_multi(&single, 1, 3, 8),
+            BrownianSource::coarsen(&single, 3, 8)
+        );
     }
 }

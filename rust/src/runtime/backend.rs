@@ -34,9 +34,19 @@ pub trait GradBackend {
     /// Chunk batch for the per-sample diagnostics (Figure 1).
     fn diag_chunk(&self) -> usize;
 
+    /// Brownian factors every `dw` batch must carry (the scenario SDE's
+    /// dimension). Callers generate factor-major
+    /// `dw[n_factors, batch, n_steps]` via
+    /// [`crate::rng::BrownianSource::increments_multi`]; for the default
+    /// 1-D scenarios this is exactly the seed layout.
+    fn n_factors(&self) -> usize {
+        1
+    }
+
     /// One chunk of the coupled objective `Delta_l F` value-and-grad.
-    /// `dw` is row-major `[grad_chunk(level), n_steps(level)]` fine-grid
-    /// increments. Returns `(loss_delta, grad[n_params])`.
+    /// `dw` is factor-major `[n_factors, grad_chunk(level),
+    /// n_steps(level)]` fine-grid increments. Returns
+    /// `(loss_delta, grad[n_params])`.
     fn grad_coupled_chunk(
         &self,
         level: usize,
@@ -108,6 +118,30 @@ impl NativeBackend {
     pub fn scenario(&self) -> &Scenario {
         &self.scenario
     }
+
+    /// The increments of sample `b` from a factor-major `dw[dim, batch,
+    /// n]` batch, as a `[dim, 1, n]` batch the engine can run with
+    /// `batch = 1` (the per-sample diagnostics). For `dim == 1` the
+    /// sample's row is already contiguous and is borrowed zero-copy; only
+    /// `dim > 1` gathers the non-contiguous factor rows into `buf`.
+    fn sample_rows<'a>(
+        dw: &'a [f32],
+        dim: usize,
+        batch: usize,
+        n: usize,
+        b: usize,
+        buf: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        if dim == 1 {
+            return &dw[b * n..(b + 1) * n];
+        }
+        buf.clear();
+        let rows = crate::engine::milstein::factor_rows(dw, dim, batch, n, b);
+        for row in rows.iter().take(dim) {
+            buf.extend_from_slice(row);
+        }
+        buf
+    }
 }
 
 impl GradBackend for NativeBackend {
@@ -133,6 +167,10 @@ impl GradBackend for NativeBackend {
 
     fn diag_chunk(&self) -> usize {
         32
+    }
+
+    fn n_factors(&self) -> usize {
+        self.scenario.sde.dim()
     }
 
     fn grad_coupled_chunk(
@@ -184,10 +222,12 @@ impl GradBackend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let n = self.problem.n_steps(level);
         let batch = self.diag_chunk();
-        anyhow::ensure!(dw.len() == batch * n, "diag dw shape mismatch");
+        let dim = self.n_factors();
+        anyhow::ensure!(dw.len() == dim * batch * n, "diag dw shape mismatch");
         let mut out = Vec::with_capacity(batch);
+        let mut buf = Vec::with_capacity(dim * n);
         for b in 0..batch {
-            let row = &dw[b * n..(b + 1) * n];
+            let row = Self::sample_rows(dw, dim, batch, n, b, &mut buf);
             let (_, g) = engine::coupled_value_and_grad_scenario(
                 params,
                 row,
@@ -210,7 +250,8 @@ impl GradBackend for NativeBackend {
     ) -> Result<Vec<f32>> {
         let n = self.problem.n_steps(level);
         let batch = self.diag_chunk();
-        anyhow::ensure!(dw.len() == batch * n, "diag dw shape mismatch");
+        let dim = self.n_factors();
+        anyhow::ensure!(dw.len() == dim * batch * n, "diag dw shape mismatch");
         let dx = params1
             .iter()
             .zip(params2)
@@ -219,8 +260,9 @@ impl GradBackend for NativeBackend {
             .sqrt()
             .max(1e-12);
         let mut out = Vec::with_capacity(batch);
+        let mut buf = Vec::with_capacity(dim * n);
         for b in 0..batch {
-            let row = &dw[b * n..(b + 1) * n];
+            let row = Self::sample_rows(dw, dim, batch, n, b, &mut buf);
             let (_, g1) = engine::coupled_value_and_grad_scenario(
                 params1,
                 row,
@@ -334,6 +376,35 @@ mod tests {
         let (l2, g2) = explicit.grad_coupled_chunk(2, &params, &dw).unwrap();
         assert_eq!(l1, l2);
         assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn heston_backend_runs_two_factor_chunks() {
+        use crate::scenarios::build_scenario;
+        let problem = Problem::default();
+        let b = NativeBackend::with_scenario(
+            problem,
+            build_scenario("heston-call", &problem).unwrap(),
+        );
+        assert_eq!(b.n_factors(), 2);
+        let params = init_params(0);
+        let level = 2;
+        let n = problem.n_steps(level);
+        let dw = BrownianSource::new(0).increments_multi(
+            Purpose::Grad, 0, level as u32, 0, b.grad_chunk(level), n,
+            problem.dt(level), b.n_factors(),
+        );
+        let (loss, grad) = b.grad_coupled_chunk(level, &params, &dw).unwrap();
+        assert!(loss.is_finite());
+        assert!(grad.iter().all(|g| g.is_finite()));
+        // per-sample diagnostics extract non-contiguous factor rows
+        let dwd = BrownianSource::new(1).increments_multi(
+            Purpose::Diagnostic, 0, level as u32, 0, b.diag_chunk(), n,
+            problem.dt(level), b.n_factors(),
+        );
+        let norms = b.grad_norms_chunk(level, &params, &dwd).unwrap();
+        assert_eq!(norms.len(), b.diag_chunk());
+        assert!(norms.iter().all(|&v| v >= 0.0 && v.is_finite()));
     }
 
     #[test]

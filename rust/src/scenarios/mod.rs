@@ -1,32 +1,43 @@
-//! Pluggable simulation scenarios: SDE dynamics x path payoffs.
+//! Pluggable simulation scenarios: SDE dynamics x streaming path payoffs.
 //!
 //! The paper's delayed-MLMC estimator only needs a sequential simulation
 //! whose level variances decay (Assumption 2) — nothing ties it to the
 //! Appendix-C Black–Scholes call. This module factors the scenario out of
 //! the engine hot path:
 //!
-//! * [`Sde`] — drift/diffusion/diffusion-derivative, i.e. everything the
-//!   Milstein integrator ([`crate::engine::milstein`]) consumes;
-//! * [`Payoff`] — a functional of the whole simulated path, consumed by
-//!   the objective ([`crate::engine::objective`]);
+//! * [`Sde`] — a D-dimensional diffusion (`D <=` [`MAX_DIM`]) with
+//!   per-factor drift/diffusion/Milstein coefficients and a correlation
+//!   between the driving Brownian factors, i.e. everything the Milstein
+//!   integrator ([`crate::engine::milstein`]) consumes. D = 1
+//!   (Black–Scholes, OU, CIR) and D = 2 ([`sde::Heston`] stochastic vol)
+//!   are registered;
+//! * [`Payoff`] — a **streaming observer** (`init → observe → finish`
+//!   over a tiny [`payoff::PathAccum`]) folded over the path by the
+//!   objective ([`crate::engine::objective`]) one state at a time, so the
+//!   native hot path never materializes a `batch x (n_steps + 1)` path
+//!   buffer. Terminal, Asian, lookback, digital and barrier
+//!   (up-and-out / down-and-in, hit-tracking in-stream) payoffs are
+//!   registered;
 //! * [`Scenario`] — one (SDE, payoff) pair; [`registry`] builds them from
-//!   string keys like `"ou-asian"` (see `--scenario` on the `repro` CLI
-//!   and the `scenario.name` TOML key).
+//!   string keys like `"ou-asian"` or `"heston-uo-call"` (see
+//!   `--scenario` on the `repro` CLI and the `scenario.name` TOML key).
 //!
 //! The default [`DEFAULT_SCENARIO`] (`"bs-call"`) reproduces the seed
-//! engine bit-for-bit, so every pre-existing engine/dispatcher/trainer
-//! test doubles as a regression anchor for this refactor. Non-default
-//! scenarios run on the native backend only — the AOT/XLA artifacts are
-//! lowered for the default scenario.
+//! engine bit-for-bit — including through the D-generic + streaming
+//! refactor, whose D = 1 fast path keeps the seed's exact f32 operation
+//! order — so every pre-existing engine/dispatcher/trainer test doubles
+//! as a regression anchor. Non-default scenarios run on the native
+//! backend only — the AOT/XLA artifacts are lowered for the default
+//! scenario.
 
 pub mod payoff;
 pub mod registry;
 pub mod scenario;
 pub mod sde;
 
-pub use payoff::Payoff;
+pub use payoff::{PathAccum, Payoff};
 pub use registry::{
     all_scenario_names, build_scenario, build_scenario_or_err, PAYOFF_KEYS, SDE_KEYS,
 };
 pub use scenario::{Scenario, DEFAULT_SCENARIO};
-pub use sde::Sde;
+pub use sde::{promote, Sde, State, MAX_DIM};

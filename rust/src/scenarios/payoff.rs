@@ -1,26 +1,90 @@
-//! The [`Payoff`] trait — a functional of the whole simulated path — and
-//! the registered payoffs.
+//! The [`Payoff`] trait — a **streaming observer** folded over the
+//! simulated path — and the registered payoffs.
 //!
 //! The objective's residual is `r = payoff(path) - gains - p0`; the path
 //! is exogenous (stop-gradient), so a payoff only ever contributes a
 //! *value*, never a parameter gradient of its own. That is what makes the
 //! engine generalization cheap: any path functional slots in.
 //!
-//! Payoffs receive the full state row `S_0 ..= S_T` (`n_steps + 1`
-//! points). Path-dependent payoffs (Asian, lookback) are evaluated on the
-//! grid they are simulated on, so fine and coarse evaluations of one
-//! coupled sample legitimately differ — exactly the discretization error
-//! MLMC telescopes over.
+//! # Streaming protocol (`init → observe → finish`)
+//!
+//! The engine never materializes paths: the integrator produces one state
+//! at a time and the payoff folds it online —
+//!
+//! 1. [`Payoff::init`] at `S_0` returns a fresh [`PathAccum`];
+//! 2. [`Payoff::observe`] folds each post-step state `t = 1..=n_steps`;
+//! 3. [`Payoff::finish`] maps the accumulator to the payoff value.
+//!
+//! [`PathAccum`] is a small fixed `Copy` struct (a running aggregate, the
+//! latest price, a barrier-hit flag), so observing costs a few registers
+//! per path and the hot path allocates nothing per sample. The
+//! accumulation order equals the seed's left-to-right full-path folds, so
+//! every streaming value is bit-identical to the old materialized
+//! `value(path)` — which survives as a provided method *implemented on
+//! top of the observer* for tests and materialized-path diagnostics.
+//!
+//! Payoffs observe the **price factor** (`state[0]`) on the grid they are
+//! simulated on, so fine and coarse evaluations of one coupled sample
+//! legitimately differ — exactly the discretization error MLMC telescopes
+//! over. Barrier payoffs make that concrete: a fine path can cross the
+//! barrier at a grid point the coarse path never sees.
 
+use super::sde::{promote, State};
 use crate::hedging::payoff::{call_payoff, put_payoff};
 
-/// A path functional `payoff(S_0 ..= S_T)`.
+/// Streaming per-path accumulator: one running aggregate, the latest
+/// price, and a barrier-hit flag. Fixed-size and `Copy` so the engine
+/// keeps it in registers; each payoff uses the fields it needs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PathAccum {
+    /// Running aggregate (sum for Asian, running min for lookback, …).
+    pub acc: f32,
+    /// Latest observed price `S_t` (the terminal after the last observe).
+    pub last: f32,
+    /// Whether a barrier has been touched so far (monitored on the grid,
+    /// including `S_0`).
+    pub hit: bool,
+}
+
+/// A path functional, consumed as a streaming observer.
 pub trait Payoff: std::fmt::Debug + Send + Sync {
-    /// Registry key fragment (e.g. `"call"`, `"asian"`).
+    /// Registry key fragment (e.g. `"call"`, `"asian"`, `"uo-call"`).
     fn name(&self) -> &'static str;
 
-    /// Evaluate on one state row `path[n_steps + 1]` (includes `S_0`).
-    fn value(&self, path: &[f32]) -> f32;
+    /// Start one path at its initial state. The default tracks the
+    /// terminal price only — all a terminal payoff (call, put, digital)
+    /// needs, so those implement just `finish`.
+    fn init(&self, s0: &State) -> PathAccum {
+        PathAccum {
+            last: s0[0],
+            ..PathAccum::default()
+        }
+    }
+
+    /// Fold the post-step state of step `t` (`1..=n_steps`); the default
+    /// keeps `acc.last` on the latest price. The grid position is part
+    /// of the observer contract even though the current payoffs ignore
+    /// it: time-dependent functionals (discrete monitoring windows,
+    /// forward-start strikes) need `(t, n_steps)` and the integrator
+    /// already has both in hand.
+    fn observe(&self, acc: &mut PathAccum, _t: usize, _n_steps: usize, state: &State) {
+        acc.last = state[0];
+    }
+
+    /// The payoff value once every step has been observed.
+    fn finish(&self, acc: &PathAccum, n_steps: usize) -> f32;
+
+    /// Materialized-path evaluation on one price row `path[n_steps + 1]`
+    /// (includes `S_0`) — the reference semantics, implemented by
+    /// replaying the row through the streaming observer.
+    fn value(&self, path: &[f32]) -> f32 {
+        let n_steps = path.len() - 1;
+        let mut acc = self.init(&promote(path[0]));
+        for (t, &s) in path.iter().enumerate().skip(1) {
+            self.observe(&mut acc, t, n_steps, &promote(s));
+        }
+        self.finish(&acc, n_steps)
+    }
 }
 
 /// European call `max(S_T - K, 0)` — the paper's instrument. Delegates to
@@ -36,8 +100,8 @@ impl Payoff for EuropeanCall {
         "call"
     }
 
-    fn value(&self, path: &[f32]) -> f32 {
-        call_payoff(path[path.len() - 1], self.strike)
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        call_payoff(acc.last, self.strike)
     }
 }
 
@@ -52,13 +116,15 @@ impl Payoff for EuropeanPut {
         "put"
     }
 
-    fn value(&self, path: &[f32]) -> f32 {
-        put_payoff(path[path.len() - 1], self.strike)
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        put_payoff(acc.last, self.strike)
     }
 }
 
 /// Arithmetic-average Asian call `max(mean(S_1..S_T) - K, 0)`, averaged
-/// over the simulation grid's monitoring points (excluding `S_0`).
+/// over the simulation grid's monitoring points (excluding `S_0`). The
+/// running sum accumulates in grid order — the same left-to-right f32
+/// fold as the seed's materialized `path[1..].iter().sum()`.
 #[derive(Debug, Clone, Copy)]
 pub struct AsianCall {
     pub strike: f32,
@@ -69,10 +135,16 @@ impl Payoff for AsianCall {
         "asian"
     }
 
-    fn value(&self, path: &[f32]) -> f32 {
-        let n = path.len() - 1;
-        let avg = path[1..].iter().sum::<f32>() / n as f32;
-        call_payoff(avg, self.strike)
+    fn init(&self, _s0: &State) -> PathAccum {
+        PathAccum::default()
+    }
+
+    fn observe(&self, acc: &mut PathAccum, _t: usize, _n: usize, state: &State) {
+        acc.acc += state[0];
+    }
+
+    fn finish(&self, acc: &PathAccum, n_steps: usize) -> f32 {
+        call_payoff(acc.acc / n_steps as f32, self.strike)
     }
 }
 
@@ -86,9 +158,21 @@ impl Payoff for LookbackCall {
         "lookback"
     }
 
-    fn value(&self, path: &[f32]) -> f32 {
-        let min = path.iter().fold(f32::INFINITY, |m, &v| m.min(v));
-        path[path.len() - 1] - min
+    fn init(&self, s0: &State) -> PathAccum {
+        PathAccum {
+            acc: s0[0],
+            last: s0[0],
+            hit: false,
+        }
+    }
+
+    fn observe(&self, acc: &mut PathAccum, _t: usize, _n: usize, state: &State) {
+        acc.acc = acc.acc.min(state[0]);
+        acc.last = state[0];
+    }
+
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        acc.last - acc.acc
     }
 }
 
@@ -106,9 +190,83 @@ impl Payoff for DigitalCall {
         "digital"
     }
 
-    fn value(&self, path: &[f32]) -> f32 {
-        if path[path.len() - 1] > self.strike {
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        if acc.last > self.strike {
             1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Up-and-out barrier call: `1{max_t S_t < B} * max(S_T - K, 0)` —
+/// knocked out the moment the price touches the barrier from below. The
+/// hit is tracked *inside* the streaming fold (including at `S_0`), which
+/// is exactly what the materialized engine could not express without
+/// keeping the whole path.
+#[derive(Debug, Clone, Copy)]
+pub struct UpAndOutCall {
+    pub strike: f32,
+    pub barrier: f32,
+}
+
+impl Payoff for UpAndOutCall {
+    fn name(&self) -> &'static str {
+        "uo-call"
+    }
+
+    fn init(&self, s0: &State) -> PathAccum {
+        PathAccum {
+            acc: 0.0,
+            last: s0[0],
+            hit: s0[0] >= self.barrier,
+        }
+    }
+
+    fn observe(&self, acc: &mut PathAccum, _t: usize, _n: usize, state: &State) {
+        acc.hit |= state[0] >= self.barrier;
+        acc.last = state[0];
+    }
+
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        if acc.hit {
+            0.0
+        } else {
+            call_payoff(acc.last, self.strike)
+        }
+    }
+}
+
+/// Down-and-in barrier put: `1{min_t S_t <= B} * max(K - S_T, 0)` —
+/// worthless unless the price touches the barrier from above at some
+/// monitoring point (including `S_0`).
+#[derive(Debug, Clone, Copy)]
+pub struct DownAndInPut {
+    pub strike: f32,
+    pub barrier: f32,
+}
+
+impl Payoff for DownAndInPut {
+    fn name(&self) -> &'static str {
+        "di-put"
+    }
+
+    fn init(&self, s0: &State) -> PathAccum {
+        PathAccum {
+            acc: 0.0,
+            last: s0[0],
+            hit: s0[0] <= self.barrier,
+        }
+    }
+
+    fn observe(&self, acc: &mut PathAccum, _t: usize, _n: usize, state: &State) {
+        acc.hit |= state[0] <= self.barrier;
+        acc.last = state[0];
+    }
+
+    fn finish(&self, acc: &PathAccum, _n: usize) -> f32 {
+        if acc.hit {
+            put_payoff(acc.last, self.strike)
         } else {
             0.0
         }
@@ -120,6 +278,17 @@ mod tests {
     use super::*;
 
     const PATH: [f32; 5] = [3.0, 2.0, 4.0, 1.5, 3.5];
+
+    /// Drive a payoff through the streaming protocol directly (what the
+    /// engine does), independent of the provided `value` replay.
+    fn stream(p: &dyn Payoff, path: &[f32]) -> f32 {
+        let n = path.len() - 1;
+        let mut acc = p.init(&promote(path[0]));
+        for t in 1..=n {
+            p.observe(&mut acc, t, n, &promote(path[t]));
+        }
+        p.finish(&acc, n)
+    }
 
     #[test]
     fn european_uses_terminal_value_only() {
@@ -160,5 +329,89 @@ mod tests {
             let want = (s - 3.0f32).max(0.0);
             assert_eq!(EuropeanCall { strike: 3.0 }.value(&path), want);
         }
+    }
+
+    #[test]
+    fn streaming_fold_matches_value_replay() {
+        // `value` is defined as a replay of the observer, but check the
+        // protocol plumbing explicitly for every registered payoff.
+        let payoffs: Vec<Box<dyn Payoff>> = vec![
+            Box::new(EuropeanCall { strike: 3.0 }),
+            Box::new(EuropeanPut { strike: 3.0 }),
+            Box::new(AsianCall { strike: 2.5 }),
+            Box::new(LookbackCall),
+            Box::new(DigitalCall { strike: 3.0 }),
+            Box::new(UpAndOutCall { strike: 3.0, barrier: 4.5 }),
+            Box::new(DownAndInPut { strike: 3.0, barrier: 1.75 }),
+        ];
+        for p in &payoffs {
+            assert_eq!(
+                stream(p.as_ref(), &PATH),
+                p.value(&PATH),
+                "{} streams differently",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn up_and_out_knocks_out_on_touch() {
+        let uo = UpAndOutCall { strike: 3.0, barrier: 4.0 };
+        // PATH touches 4.0 at t = 2 -> knocked out despite S_T = 3.5 > K
+        assert_eq!(uo.value(&PATH), 0.0);
+        // barrier above the path maximum -> plain call
+        let safe = UpAndOutCall { strike: 3.0, barrier: 100.0 };
+        assert_eq!(safe.value(&PATH), 0.5);
+    }
+
+    #[test]
+    fn barrier_hit_exactly_at_s0() {
+        // S_0 on the barrier: up-and-out is knocked out at inception …
+        let uo = UpAndOutCall { strike: 1.0, barrier: 3.0 };
+        assert_eq!(uo.value(&PATH), 0.0);
+        // … and down-and-in is knocked in at inception.
+        let di = DownAndInPut { strike: 4.0, barrier: 3.0 };
+        assert_eq!(di.value(&PATH), 0.5); // put_payoff(3.5, 4.0)
+    }
+
+    #[test]
+    fn barrier_hit_on_the_final_step() {
+        // The terminal observation itself must count as a monitoring
+        // point: path peaks only at S_T.
+        let path = [3.0f32, 3.2, 3.4, 5.0];
+        let uo = UpAndOutCall { strike: 3.0, barrier: 5.0 };
+        assert_eq!(uo.value(&path), 0.0, "terminal touch must knock out");
+        let down = [3.0f32, 2.8, 2.6, 1.0];
+        let di = DownAndInPut { strike: 3.0, barrier: 1.0 };
+        assert_eq!(di.value(&down), 2.0, "terminal touch must knock in");
+    }
+
+    #[test]
+    fn fine_path_hits_while_coarse_path_misses() {
+        // One coupled sample, two grids: the fine grid visits an
+        // excursion above the barrier that the 2x-coarser grid skips —
+        // the legitimate discretization difference MLMC telescopes over.
+        let fine = [3.0f32, 4.6, 3.1, 3.2, 3.5];
+        let coarse = [3.0f32, 3.1, 3.5]; // every second point
+        let uo = UpAndOutCall { strike: 3.0, barrier: 4.5 };
+        assert_eq!(uo.value(&fine), 0.0, "fine path crossed the barrier");
+        assert_eq!(
+            uo.value(&coarse),
+            0.5,
+            "coarse path never saw the excursion"
+        );
+    }
+
+    #[test]
+    fn down_and_in_requires_the_hit() {
+        let di = DownAndInPut { strike: 3.0, barrier: 1.75 };
+        // PATH dips to 1.5 <= 1.75 at t = 3 -> knocked in, put is OTM at
+        // S_T = 3.5 -> 0, but via the *hit* branch
+        assert_eq!(di.value(&PATH), 0.0);
+        let di_deep = DownAndInPut { strike: 4.0, barrier: 1.75 };
+        assert_eq!(di_deep.value(&PATH), 0.5);
+        // barrier below the path minimum -> never knocked in
+        let never = DownAndInPut { strike: 4.0, barrier: 1.0 };
+        assert_eq!(never.value(&PATH), 0.0);
     }
 }

@@ -1,12 +1,16 @@
 //! String-keyed scenario registry: `"<sde>-<payoff>"` keys over the full
-//! cross product of registered dynamics and payoffs.
+//! cross product of registered dynamics and payoffs (the key splits at
+//! the *first* dash, so payoff keys may themselves be dashed:
+//! `"heston-uo-call"` is the `heston` dynamics under the `uo-call`
+//! payoff).
 //!
-//! | SDE key | dynamics |
-//! |---------|----------|
-//! | `bs`    | Black–Scholes with the problem's drift form (the default) |
-//! | `gbm`   | Black–Scholes forced geometric (true GBM) |
-//! | `ou`    | Ornstein–Uhlenbeck/Vasicek mean reversion |
-//! | `cir`   | Cox–Ingersoll–Ross square-root diffusion |
+//! | SDE key  | dynamics | dim |
+//! |----------|----------|-----|
+//! | `bs`     | Black–Scholes with the problem's drift form (the default) | 1 |
+//! | `gbm`    | Black–Scholes forced geometric (true GBM) | 1 |
+//! | `ou`     | Ornstein–Uhlenbeck/Vasicek mean reversion | 1 |
+//! | `cir`    | Cox–Ingersoll–Ross square-root diffusion | 1 |
+//! | `heston` | Heston stochastic vol (correlated price/variance factors, full truncation) | 2 |
 //!
 //! | payoff key | functional |
 //! |------------|------------|
@@ -15,27 +19,41 @@
 //! | `asian`    | arithmetic-average Asian call |
 //! | `lookback` | floating-strike lookback call |
 //! | `digital`  | cash-or-nothing `1{S_T > K}` |
+//! | `uo-call`  | up-and-out barrier call, barrier `1.5 s0` (knock-out tracked in-stream) |
+//! | `di-put`   | down-and-in barrier put, barrier `0.5 s0` (knock-in tracked in-stream) |
 //!
 //! Scenario parameters (strike, `s0`, `sigma`, drift form) come from the
 //! [`Problem`], so one TOML `[problem]` section configures every scenario
-//! consistently; kappa/theta for the mean-reverting families are fixed
-//! registry defaults documented on their constructors.
+//! consistently; kappa/theta for the mean-reverting families, the Heston
+//! vol-of-vol/correlation, and the barrier multiples are fixed registry
+//! defaults documented on their constructors.
 
 use std::sync::Arc;
 
 use crate::hedging::Problem;
 
 use super::payoff::{
-    AsianCall, DigitalCall, EuropeanCall, EuropeanPut, LookbackCall, Payoff,
+    AsianCall, DigitalCall, DownAndInPut, EuropeanCall, EuropeanPut,
+    LookbackCall, Payoff, UpAndOutCall,
 };
 use super::scenario::Scenario;
-use super::sde::{BlackScholes, CoxIngersollRoss, OrnsteinUhlenbeck, Sde};
+use super::sde::{BlackScholes, CoxIngersollRoss, Heston, OrnsteinUhlenbeck, Sde};
 
 /// Registered SDE keys (first key is the default family).
-pub const SDE_KEYS: &[&str] = &["bs", "gbm", "ou", "cir"];
+pub const SDE_KEYS: &[&str] = &["bs", "gbm", "ou", "cir", "heston"];
 
 /// Registered payoff keys (first key is the default payoff).
-pub const PAYOFF_KEYS: &[&str] = &["call", "put", "asian", "lookback", "digital"];
+pub const PAYOFF_KEYS: &[&str] = &[
+    "call", "put", "asian", "lookback", "digital", "uo-call", "di-put",
+];
+
+/// Barrier placement relative to `s0` for the registry's barrier payoffs
+/// (up-and-out above, down-and-in below). Chosen so both barriers are
+/// touched with non-trivial probability under the paper's Appendix-C
+/// volatility, keeping the knock branches statistically alive in tests
+/// and sweeps.
+pub const UP_BARRIER_MULT: f64 = 1.5;
+pub const DOWN_BARRIER_MULT: f64 = 0.5;
 
 /// Every registered scenario name — the `SDE_KEYS x PAYOFF_KEYS` cross
 /// product, default first.
@@ -70,6 +88,7 @@ pub fn build_scenario(name: &str, problem: &Problem) -> Option<Scenario> {
         "gbm" => Arc::new(BlackScholes::geometric(problem)),
         "ou" => Arc::new(OrnsteinUhlenbeck::from_problem(problem)),
         "cir" => Arc::new(CoxIngersollRoss::from_problem(problem)),
+        "heston" => Arc::new(Heston::from_problem(problem)),
         _ => return None,
     };
     let strike = problem.strike as f32;
@@ -79,6 +98,14 @@ pub fn build_scenario(name: &str, problem: &Problem) -> Option<Scenario> {
         "asian" => Arc::new(AsianCall { strike }),
         "lookback" => Arc::new(LookbackCall),
         "digital" => Arc::new(DigitalCall { strike }),
+        "uo-call" => Arc::new(UpAndOutCall {
+            strike,
+            barrier: (problem.s0 * UP_BARRIER_MULT) as f32,
+        }),
+        "di-put" => Arc::new(DownAndInPut {
+            strike,
+            barrier: (problem.s0 * DOWN_BARRIER_MULT) as f32,
+        }),
         _ => return None,
     };
     Some(Scenario {
@@ -110,10 +137,33 @@ mod tests {
     #[test]
     fn unknown_keys_rejected() {
         let p = Problem::default();
-        assert!(build_scenario("heston-call", &p).is_none());
+        assert!(build_scenario("sabr-call", &p).is_none());
         assert!(build_scenario("bs-barrier", &p).is_none());
         assert!(build_scenario("bscall", &p).is_none());
         assert!(build_scenario("", &p).is_none());
+    }
+
+    #[test]
+    fn heston_and_barrier_scenarios_resolve() {
+        let p = Problem::default();
+        for name in ["heston-call", "heston-put", "heston-uo-call"] {
+            let sc = build_scenario(name, &p)
+                .unwrap_or_else(|| panic!("`{name}` did not build"));
+            assert_eq!(sc.sde.dim(), 2, "{name}");
+            assert_ne!(sc.sde.correlation(), 0.0, "{name}");
+        }
+        let uo = build_scenario("bs-uo-call", &p).unwrap();
+        assert_eq!(uo.payoff.name(), "uo-call");
+        let di = build_scenario("gbm-di-put", &p).unwrap();
+        assert_eq!(di.payoff.name(), "di-put");
+        // barrier placement: knocked out at 1.5 s0, knocked in at 0.5 s0
+        let up = (p.s0 * UP_BARRIER_MULT) as f32;
+        let s0 = p.s0 as f32;
+        assert_eq!(uo.payoff.value(&[s0, up, s0 + 1.0]), 0.0);
+        assert!(uo.payoff.value(&[s0, s0, s0 + 1.0]) > 0.0);
+        let down = (p.s0 * DOWN_BARRIER_MULT) as f32;
+        assert!(di.payoff.value(&[s0, down, s0 - 1.0]) > 0.0);
+        assert_eq!(di.payoff.value(&[s0, s0, s0 - 1.0]), 0.0);
     }
 
     #[test]

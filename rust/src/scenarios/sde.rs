@@ -1,9 +1,26 @@
 //! The [`Sde`] trait — everything the Milstein integrator needs from a
-//! 1-D diffusion `dS = a(S) dt + b(S) dB` — and the registered dynamics.
+//! D-dimensional diffusion `dS_k = a_k(S) dt + b_k(S) dB_k` (`D <=`
+//! [`MAX_DIM`], diagonal noise, optionally correlated drivers) — and the
+//! registered dynamics.
 //!
-//! The scheme (strong order 1):
+//! The per-factor scheme (strong order 1 for commutative noise):
 //!
-//! `S+ = clamp(S + a(S) dt + b(S) dW + 1/2 b(S) b'(S) (dW^2 - dt))`
+//! `S_k+ = clamp_k(S_k + a_k(S) dt + b_k(S) dW_k + 1/2 b_k(S)
+//! (db_k/dS_k)(S) (dW_k^2 - dt))`
+//!
+//! The trait has two faces bridged by default methods:
+//!
+//! * the **scalar interface** (`s0`/`drift`/`diffusion`/`milstein_term`/
+//!   `clamp`) — the seed-era 1-D API, what 1-D dynamics implement and
+//!   what the monomorphized D=1 fast path of the integrator calls;
+//! * the **factor interface** (`s0_state`/`drift_factor`/… over a
+//!   [`State`] vector) — what multi-factor dynamics ([`Heston`])
+//!   implement and the generic D-loop calls.
+//!
+//! Each face's defaults delegate to the other, so a concrete SDE
+//! implements exactly one of them (implementing neither would recurse —
+//! don't). Factor 0 is by convention the *traded price* — the component
+//! the hedging MLP observes and every payoff reads.
 //!
 //! Implementations may override [`Sde::milstein_term`] when the product
 //! `1/2 b b'` has a cheaper or numerically preferable closed form — the
@@ -13,22 +30,57 @@
 
 use crate::hedging::{Drift, Problem};
 
-/// A 1-D SDE in Milstein normal form. All coefficients are f32 — the
-/// whole simulation hot path is f32, mirroring the Pallas kernel.
+/// Maximum number of state factors any registered SDE may use. Kept as a
+/// small fixed constant so per-path state lives in registers, never on
+/// the heap.
+pub const MAX_DIM: usize = 2;
+
+/// One simulation state: the active factors occupy `0..dim`, inactive
+/// slots are zero.
+pub type State = [f32; MAX_DIM];
+
+/// Lift a scalar price into a [`State`] (factor 0 set, rest zero).
+#[inline]
+pub fn promote(s: f32) -> State {
+    let mut st = [0.0f32; MAX_DIM];
+    st[0] = s;
+    st
+}
+
+/// A D-dimensional SDE in Milstein normal form with diagonal noise. All
+/// coefficients are f32 — the whole simulation hot path is f32,
+/// mirroring the Pallas kernel.
 pub trait Sde: std::fmt::Debug + Send + Sync {
-    /// Registry key fragment (e.g. `"bs"`, `"ou"`, `"cir"`).
+    /// Registry key fragment (e.g. `"bs"`, `"ou"`, `"cir"`, `"heston"`).
     fn name(&self) -> &'static str;
 
-    /// Initial state `S_0`.
-    fn s0(&self) -> f32;
+    /// Number of active state factors (`1..=MAX_DIM`); each factor has
+    /// its own driving Brownian motion.
+    fn dim(&self) -> usize {
+        1
+    }
+
+    // --- scalar interface (factor 0; the seed-era 1-D API) ------------
+
+    /// Initial state `S_0` (factor 0).
+    fn s0(&self) -> f32 {
+        self.s0_state()[0]
+    }
 
     /// Drift coefficient `a(s)`.
-    fn drift(&self, s: f32) -> f32;
+    fn drift(&self, s: f32) -> f32 {
+        self.drift_factor(&promote(s), 0)
+    }
 
     /// Diffusion coefficient `b(s)`.
-    fn diffusion(&self, s: f32) -> f32;
+    fn diffusion(&self, s: f32) -> f32 {
+        self.diffusion_factor(&promote(s), 0)
+    }
 
     /// Diffusion derivative `b'(s)` (the Milstein correction input).
+    /// Deliberately **required** — defaulting it to zero would silently
+    /// degrade a forgetful new 1-D dynamics to Euler. Multi-factor
+    /// dynamics that implement `milstein_factor` directly return 0 here.
     fn diffusion_dv(&self, s: f32) -> f32;
 
     /// The Milstein correction factor `1/2 b(s) b'(s)`; override when a
@@ -41,6 +93,42 @@ pub trait Sde: std::fmt::Debug + Send + Sync {
     /// processes). Identity by default.
     fn clamp(&self, s: f32) -> f32 {
         s
+    }
+
+    // --- factor interface (the D-dimensional generalization) ----------
+
+    /// Initial state vector (inactive factors zero).
+    fn s0_state(&self) -> State {
+        promote(self.s0())
+    }
+
+    /// Drift coefficient `a_k(S)` of factor `k`.
+    fn drift_factor(&self, s: &State, _k: usize) -> f32 {
+        self.drift(s[0])
+    }
+
+    /// Diffusion coefficient `b_k(S)` of factor `k` (diagonal noise:
+    /// factor `k` is driven by `dB_k` only).
+    fn diffusion_factor(&self, s: &State, _k: usize) -> f32 {
+        self.diffusion(s[0])
+    }
+
+    /// Milstein correction factor `1/2 b_k (db_k/dS_k)` of factor `k`.
+    fn milstein_factor(&self, s: &State, _k: usize) -> f32 {
+        self.milstein_term(s[0])
+    }
+
+    /// Post-step projection of factor `k`.
+    fn clamp_factor(&self, v: f32, _k: usize) -> f32 {
+        self.clamp(v)
+    }
+
+    /// Correlation `rho` between the factor-0 and factor-1 Brownian
+    /// drivers (the integrator maps independent raw increments through
+    /// the 2x2 Cholesky factor `[[1, 0], [rho, sqrt(1 - rho^2)]]`).
+    /// Ignored for `dim() == 1`.
+    fn correlation(&self) -> f32 {
+        0.0
     }
 }
 
@@ -243,6 +331,129 @@ impl Sde for CoxIngersollRoss {
     }
 }
 
+/// Heston stochastic-volatility dynamics (the canonical 2-factor model):
+///
+/// `dS = mu S dt + sqrt(v) S dW_1`
+/// `dv = kappa (theta - v) dt + xi sqrt(v) dW_2`,  `corr(dW_1, dW_2) = rho`
+///
+/// discretized with **full truncation**: every `sqrt(v)` reads
+/// `max(v, 0)` and the variance factor is clamped to `>= 0` after each
+/// step (the price factor is left unclamped, like the seed
+/// Black–Scholes engine). The per-factor Milstein corrections are the
+/// diagonal ones — `1/2 v S` for the price, `xi^2 / 4` for the variance
+/// (constant, like CIR) — without the cross-factor Lévy-area terms, the
+/// standard simplification in the MLMC literature; the level coupling
+/// still decays, which is all Assumption 2 needs (verified empirically
+/// by the scenario suite).
+#[derive(Debug, Clone, Copy)]
+pub struct Heston {
+    pub mu: f32,
+    pub kappa: f32,
+    pub theta: f32,
+    /// Vol-of-vol.
+    pub xi: f32,
+    /// Driver correlation (negative = equity leverage effect).
+    pub rho: f32,
+    pub s0: f32,
+    pub v0: f32,
+    /// Precomputed `xi^2 / 4` (the variance factor's Milstein constant).
+    quarter_xi2: f32,
+}
+
+impl Heston {
+    pub fn new(
+        mu: f32,
+        kappa: f32,
+        theta: f32,
+        xi: f32,
+        rho: f32,
+        s0: f32,
+        v0: f32,
+    ) -> Self {
+        assert!(rho.abs() <= 1.0, "correlation must be in [-1, 1]");
+        Heston {
+            mu,
+            kappa,
+            theta,
+            xi,
+            rho,
+            s0,
+            v0,
+            quarter_xi2: 0.25 * xi * xi,
+        }
+    }
+
+    /// Registry defaults: the problem's `mu` as a geometric drift,
+    /// initial/long-run variance `sigma^2` (so the initial volatility
+    /// matches the problem's `sigma`), `kappa = 1.5` (relaxation well
+    /// inside the unit maturity, like the OU/CIR registrations),
+    /// `xi = 0.5`, `rho = -0.7` (equity-style leverage). With the paper
+    /// defaults (`sigma = 1`) the Feller condition `2 kappa theta >=
+    /// xi^2` holds with a wide margin.
+    pub fn from_problem(p: &Problem) -> Self {
+        let v0 = (p.sigma * p.sigma) as f32;
+        Heston::new(p.mu as f32, 1.5, v0, 0.5, -0.7, p.s0 as f32, v0)
+    }
+}
+
+impl Sde for Heston {
+    fn name(&self) -> &'static str {
+        "heston"
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    /// The scalar Milstein input is unused: the factor interface below
+    /// supplies the per-factor corrections in closed form.
+    fn diffusion_dv(&self, _s: f32) -> f32 {
+        0.0
+    }
+
+    fn s0_state(&self) -> State {
+        [self.s0, self.v0]
+    }
+
+    fn drift_factor(&self, s: &State, k: usize) -> f32 {
+        if k == 0 {
+            self.mu * s[0]
+        } else {
+            self.kappa * (self.theta - s[1])
+        }
+    }
+
+    fn diffusion_factor(&self, s: &State, k: usize) -> f32 {
+        let vol = s[1].max(0.0).sqrt();
+        if k == 0 {
+            vol * s[0]
+        } else {
+            self.xi * vol
+        }
+    }
+
+    fn milstein_factor(&self, s: &State, k: usize) -> f32 {
+        if k == 0 {
+            // 1/2 * (sqrt(v) S) * d(sqrt(v) S)/dS = 1/2 v S
+            0.5 * s[1].max(0.0) * s[0]
+        } else {
+            self.quarter_xi2
+        }
+    }
+
+    fn clamp_factor(&self, v: f32, k: usize) -> f32 {
+        if k == 1 {
+            v.max(0.0)
+        } else {
+            v
+        }
+    }
+
+    fn correlation(&self) -> f32 {
+        self.rho
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,5 +500,67 @@ mod tests {
     fn cir_feller_condition_holds_for_defaults() {
         let cir = CoxIngersollRoss::from_problem(&Problem::default());
         assert!(2.0 * cir.kappa * cir.theta >= cir.sigma * cir.sigma);
+    }
+
+    #[test]
+    fn scalar_sdes_bridge_to_the_factor_interface() {
+        // The factor-interface defaults must delegate factor 0 to the
+        // scalar methods — the D-generic integrator then sees exactly
+        // the seed coefficients for every 1-D dynamics.
+        let p = Problem::default();
+        let bs = BlackScholes::from_problem(&p);
+        assert_eq!(bs.dim(), 1);
+        assert_eq!(bs.s0_state(), promote(bs.s0()));
+        let st = promote(2.7);
+        assert_eq!(bs.drift_factor(&st, 0), bs.drift(2.7));
+        assert_eq!(bs.diffusion_factor(&st, 0), bs.diffusion(2.7));
+        assert_eq!(bs.milstein_factor(&st, 0), bs.milstein_term(2.7));
+        assert_eq!(bs.correlation(), 0.0);
+        let cir = CoxIngersollRoss::from_problem(&p);
+        assert_eq!(cir.clamp_factor(-0.4, 0), 0.0);
+    }
+
+    #[test]
+    fn heston_factor_structure() {
+        let p = Problem::default();
+        let h = Heston::from_problem(&p);
+        assert_eq!(h.dim(), 2);
+        assert_eq!(h.name(), "heston");
+        assert_eq!(h.s0_state(), [p.s0 as f32, (p.sigma * p.sigma) as f32]);
+        assert!(h.correlation() < 0.0 && h.correlation() >= -1.0);
+        // Feller condition for the registry defaults
+        assert!(2.0 * h.kappa * h.theta >= h.xi * h.xi);
+
+        let s = [3.0f32, 0.64];
+        // price factor: geometric drift, sqrt(v) S diffusion, 1/2 v S term
+        assert_eq!(h.drift_factor(&s, 0), h.mu * 3.0);
+        assert_eq!(h.diffusion_factor(&s, 0), 0.64f32.sqrt() * 3.0);
+        assert_eq!(h.milstein_factor(&s, 0), 0.5 * 0.64 * 3.0);
+        // variance factor: mean reversion, xi sqrt(v), constant xi^2/4
+        assert_eq!(h.drift_factor(&s, 1), h.kappa * (h.theta - 0.64));
+        assert_eq!(h.diffusion_factor(&s, 1), h.xi * 0.64f32.sqrt());
+        assert_eq!(h.milstein_factor(&s, 1), 0.25 * h.xi * h.xi);
+    }
+
+    #[test]
+    fn heston_full_truncation() {
+        let h = Heston::from_problem(&Problem::default());
+        // negative variance: coefficients read v+ = 0, state clamps to 0
+        let s = [3.0f32, -0.5];
+        assert_eq!(h.diffusion_factor(&s, 0), 0.0);
+        assert_eq!(h.diffusion_factor(&s, 1), 0.0);
+        assert_eq!(h.milstein_factor(&s, 0), 0.0);
+        assert_eq!(h.clamp_factor(-0.5, 1), 0.0);
+        assert_eq!(h.clamp_factor(0.5, 1), 0.5);
+        // the price factor is never clamped (matches the seed BS engine)
+        assert_eq!(h.clamp_factor(-1.0, 0), -1.0);
+        // the milstein constant never divides by sqrt(v)
+        assert_eq!(h.milstein_factor(&s, 1), 0.25 * h.xi * h.xi);
+    }
+
+    #[test]
+    #[should_panic(expected = "correlation")]
+    fn heston_rejects_out_of_range_rho() {
+        Heston::new(1.0, 1.5, 1.0, 0.5, -1.5, 3.0, 1.0);
     }
 }

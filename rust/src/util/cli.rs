@@ -8,16 +8,23 @@
 //!
 //! Every training/experiment subcommand of `repro` accepts
 //! `--scenario <sde>-<payoff>` (default `bs-call`), resolved against
-//! [`crate::scenarios::registry`]; `repro scenarios` lists the keys. A
-//! non-default scenario implies `--backend native` when no backend is
-//! pinned by `--backend` or an explicit `runtime.backend` key in the
-//! `--config` TOML (the XLA artifacts only cover the default; a pinned
-//! `xla` backend is rejected loudly). The equivalent TOML (see
-//! `configs/scenario_ou_asian.toml`):
+//! [`crate::scenarios::registry`]; `repro scenarios` lists the keys
+//! (the key splits at the *first* dash, so dashed payoff keys like
+//! `uo-call` compose: `heston-uo-call`). SDE keys cover 1-D dynamics
+//! (`bs`, `gbm`, `ou`, `cir`) and the 2-factor `heston` stochastic-vol
+//! model; payoff keys cover terminal (`call`, `put`, `digital`),
+//! path-dependent (`asian`, `lookback`) and barrier (`uo-call` up-and-out,
+//! `di-put` down-and-in) functionals, all evaluated as streaming
+//! observers. A non-default scenario implies `--backend native` when no
+//! backend is pinned by `--backend` or an explicit `runtime.backend` key
+//! in the `--config` TOML (the XLA artifacts only cover the default; a
+//! pinned `xla` backend is rejected loudly). The equivalent TOML (see
+//! `configs/scenario_ou_asian.toml` and
+//! `configs/scenario_heston_barrier.toml`):
 //!
 //! ```toml
 //! [scenario]
-//! name = "ou-asian"        # Ornstein–Uhlenbeck dynamics, Asian call
+//! name = "heston-uo-call"  # Heston stochastic vol, up-and-out call
 //!
 //! [runtime]
 //! backend = "native"       # required for non-default scenarios
@@ -27,7 +34,7 @@
 //! strike = 3.0
 //! ```
 //!
-//! CLI equivalent: `repro train --scenario ou-asian --method dmlmc`.
+//! CLI equivalent: `repro train --scenario heston-uo-call --method dmlmc`.
 
 use std::collections::BTreeMap;
 use std::fmt;

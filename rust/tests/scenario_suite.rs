@@ -10,7 +10,10 @@
 //!   payoff pair.
 //!
 //! This generalizes `engine::milstein::tests::strong_convergence_of_coupling`
-//! from the hard-coded Black–Scholes call to the whole registry.
+//! from the hard-coded Black–Scholes call to the whole registry,
+//! including the 2-factor Heston dynamics (factor-major increments,
+//! per-factor coarsening) and the barrier payoffs (whose knock events
+//! are tracked inside the streaming fold).
 
 use dmlmc::engine::mlp::init_params;
 use dmlmc::engine::{coupled_value_and_grad_scenario, simulate_paths_sde};
@@ -21,13 +24,15 @@ use dmlmc::scenarios::{all_scenario_names, build_scenario, Payoff, Scenario, SDE
 const BATCH: usize = 2000;
 const LEVELS: std::ops::RangeInclusive<usize> = 1..=4;
 
-/// Fine/coarse MSE of `f(path)` per level for one scenario.
+/// Fine/coarse MSE of `f(path)` per level for one scenario (price rows;
+/// multi-factor dynamics coarsen each factor block independently).
 fn coupling_mse(sc: &Scenario, p: &Problem, f: impl Fn(&[f32]) -> f32) -> Vec<f64> {
     let src = BrownianSource::new(0x5C);
+    let dim = sc.sde.dim();
     let mut errs = Vec::new();
     for level in LEVELS {
         let n = p.n_steps(level);
-        let dw = src.increments(
+        let dw = src.increments_multi(
             Purpose::Diagnostic,
             0,
             level as u32,
@@ -35,9 +40,10 @@ fn coupling_mse(sc: &Scenario, p: &Problem, f: impl Fn(&[f32]) -> f32) -> Vec<f6
             BATCH,
             n,
             p.dt(level),
+            dim,
         );
         let fine = simulate_paths_sde(&dw, BATCH, n, &*sc.sde, p.maturity);
-        let dwc = BrownianSource::coarsen(&dw, BATCH, n);
+        let dwc = BrownianSource::coarsen_multi(&dw, dim, BATCH, n);
         let coarse = simulate_paths_sde(&dwc, BATCH, n / 2, &*sc.sde, p.maturity);
         let mse = (0..BATCH)
             .map(|b| {
@@ -72,8 +78,19 @@ fn every_sde_has_strong_state_coupling() {
 #[test]
 fn every_scenario_has_decaying_payoff_coupling() {
     // Payoff-level MSE across levels: smooth payoffs decay like the
-    // state; the digital indicator decays slower (rate ~ strong order /
-    // 2) but must still decay end-to-end across three doublings.
+    // state; the discontinuous ones (digital, barriers) decay slower
+    // (rate ~ strong order / 2) but must still decay end-to-end. Two
+    // invariants per scenario:
+    //
+    // * **alive** — the level-1 fine/coarse MSE is strictly positive
+    //   (a payoff that degenerates to a constant, e.g. a barrier that
+    //   knocks every path out, fails here);
+    // * **decaying** — continuous payoffs must beat the strict
+    //   last-vs-first criterion (a finest-level regression fails
+    //   immediately); the discontinuous ones (digital, barriers), whose
+    //   per-level MSEs are sparse-event estimates on the mean-reverting
+    //   dynamics, use a pooled coarse-levels-vs-fine-levels comparison
+    //   that halves the estimator noise.
     let p = Problem::default();
     for name in all_scenario_names() {
         let sc = build_scenario(&name, &p).unwrap();
@@ -84,9 +101,26 @@ fn every_scenario_has_decaying_payoff_coupling() {
             "{name}: non-finite payoff MSE {errs:?}"
         );
         assert!(
-            *errs.last().unwrap() < errs[0] * 0.8,
-            "{name}: payoff MSE not decaying: {errs:?}"
+            errs[0] > 0.0,
+            "{name}: payoff coupling is dead (constant payoff?): {errs:?}"
         );
+        assert_eq!(errs.len(), 4);
+        let discontinuous = name.ends_with("digital")
+            || name.ends_with("uo-call")
+            || name.ends_with("di-put");
+        if discontinuous {
+            let coarse_pool = errs[0] + errs[1];
+            let fine_pool = errs[2] + errs[3];
+            assert!(
+                fine_pool < coarse_pool * 0.8,
+                "{name}: payoff MSE not decaying: {errs:?}"
+            );
+        } else {
+            assert!(
+                *errs.last().unwrap() < errs[0] * 0.8,
+                "{name}: payoff MSE not decaying: {errs:?}"
+            );
+        }
     }
 }
 
@@ -97,10 +131,11 @@ fn every_scenario_has_finite_coupled_gradients() {
     let src = BrownianSource::new(0x5D);
     for name in all_scenario_names() {
         let sc = build_scenario(&name, &p).unwrap();
+        let dim = sc.sde.dim();
         for level in [0usize, 2] {
             let n = p.n_steps(level);
             let batch = 16;
-            let dw = src.increments(
+            let dw = src.increments_multi(
                 Purpose::Grad,
                 0,
                 level as u32,
@@ -108,6 +143,7 @@ fn every_scenario_has_finite_coupled_gradients() {
                 batch,
                 n,
                 p.dt(level),
+                dim,
             );
             let (loss, grad) =
                 coupled_value_and_grad_scenario(&params, &dw, batch, level, &p, &sc);
@@ -129,10 +165,65 @@ fn every_scenario_has_finite_coupled_gradients() {
 }
 
 #[test]
+fn barrier_hits_split_between_fine_and_coarse_grids() {
+    // The up-and-out knock event is grid-dependent: across a coupled
+    // batch some fine paths must touch the barrier at a monitoring point
+    // their coarse siblings skip. That asymmetry is the discontinuous
+    // part of the level correction MLMC telescopes over — assert it is
+    // statistically alive (and one-sided enough to be a *barrier* effect,
+    // not noise).
+    let p = Problem::default();
+    let sc = build_scenario("bs-uo-call", &p).unwrap();
+    let src = BrownianSource::new(0xBA);
+    let level = 3;
+    let n = p.n_steps(level);
+    let dw = src.increments(Purpose::Diagnostic, 0, level as u32, 0, BATCH, n, p.dt(level));
+    let fine = simulate_paths_sde(&dw, BATCH, n, &*sc.sde, p.maturity);
+    let dwc = BrownianSource::coarsen(&dw, BATCH, n);
+    let coarse = simulate_paths_sde(&dwc, BATCH, n / 2, &*sc.sde, p.maturity);
+    let barrier = (p.s0 * dmlmc::scenarios::registry::UP_BARRIER_MULT) as f32;
+    let hit = |row: &[f32]| row.iter().any(|&s| s >= barrier);
+    let mut fine_only = 0usize;
+    let mut coarse_only = 0usize;
+    let mut both = 0usize;
+    for b in 0..BATCH {
+        let hf = hit(&fine[b * (n + 1)..(b + 1) * (n + 1)]);
+        let hc = hit(&coarse[b * (n / 2 + 1)..(b + 1) * (n / 2 + 1)]);
+        match (hf, hc) {
+            (true, false) => fine_only += 1,
+            (false, true) => coarse_only += 1,
+            (true, true) => both += 1,
+            _ => {}
+        }
+    }
+    assert!(both > 0, "no coupled sample hit on both grids");
+    assert!(
+        fine_only > 0,
+        "no fine-only hits — the finer grid must catch excursions the \
+         coarse one skips"
+    );
+    // The finer grid monitors a superset of price excursions in
+    // distribution: fine-only hits must dominate coarse-only ones.
+    assert!(
+        fine_only > coarse_only,
+        "fine-only {fine_only} !> coarse-only {coarse_only}"
+    );
+}
+
+#[test]
 fn registry_is_complete_and_consistent() {
     let p = Problem::default();
     let names = all_scenario_names();
     assert!(names.len() >= 12, "registry shrank: {names:?}");
+    assert!(
+        names.iter().any(|n| n.starts_with("heston-")),
+        "heston family missing"
+    );
+    assert!(
+        names.iter().any(|n| n.ends_with("uo-call"))
+            && names.iter().any(|n| n.ends_with("di-put")),
+        "barrier payoffs missing"
+    );
     for name in &names {
         let sc = build_scenario(name, &p).unwrap();
         // the key round-trips through the component names
@@ -142,5 +233,6 @@ fn registry_is_complete_and_consistent() {
         if sde_key != "bs" {
             assert_eq!(sc.sde.name(), sde_key, "{name}");
         }
+        assert!(sc.sde.dim() >= 1 && sc.sde.dim() <= dmlmc::scenarios::MAX_DIM);
     }
 }
