@@ -11,7 +11,7 @@
 
 ARTIFACTS_DIR := rust/artifacts
 
-.PHONY: artifacts build test fmt clippy bench clean
+.PHONY: artifacts build test fmt clippy bench bench-parallel clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -30,6 +30,11 @@ clippy:
 
 bench:
 	cd rust && cargo bench --bench hotpath
+
+# Measured pool makespan vs PRAM prediction over P x method; emits
+# rust/BENCH_parallel.json (see `repro parallel-sweep --help`).
+bench-parallel:
+	cd rust && cargo run --release --bin repro -- parallel-sweep --quiet
 
 clean:
 	rm -rf $(ARTIFACTS_DIR)

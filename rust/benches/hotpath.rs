@@ -13,8 +13,9 @@
 
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
-use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::coordinator::{run_jobs_pool, LevelJobSpec, Method, Trainer};
 use dmlmc::engine::milstein::{factor_rows, fold_path, simulate_paths_sde};
+use dmlmc::exec::WorkerPool;
 use dmlmc::engine::mlp::init_params;
 use dmlmc::mlmc::estimator::ChunkAccumulator;
 use dmlmc::optim::{Optimizer, Sgd};
@@ -154,6 +155,53 @@ fn main() {
         h.run("native/grad_l3_heston", || {
             black_box(hb.grad_coupled_chunk(3, &params, &dw3).unwrap());
         });
+    }
+
+    // ---- pool dispatch (executor overhead per chunk) --------------------
+    // One representative MLMC refresh (every level, a few chunks each)
+    // through the chunk-sharded pool at P = 1 and P = 4. P = 1 isolates
+    // the executor's fixed cost against the sequential engine numbers
+    // above; P = 4 shows the realized speedup. samples/sec lands in
+    // BENCH_scenarios.json next to the simulation cases.
+    {
+        let pool_jobs: Vec<LevelJobSpec> = (0..=problem.lmax)
+            .map(|level| LevelJobSpec {
+                level,
+                n_chunks: if level <= 1 { 2 } else { 1 },
+            })
+            .collect();
+        let cases: Vec<(&'static str, usize, NativeBackend)> = vec![
+            ("bs-call", 1, NativeBackend::new(problem)),
+            (
+                "heston-call",
+                2,
+                NativeBackend::with_scenario(
+                    problem,
+                    build_scenario("heston-call", &problem).unwrap(),
+                ),
+            ),
+        ];
+        for (name, dim, backend) in &cases {
+            let total_samples: usize = pool_jobs
+                .iter()
+                .map(|j| j.n_chunks * backend.grad_chunk(j.level))
+                .sum();
+            for p in [1usize, 4] {
+                let mut pool = WorkerPool::new(p);
+                let s = h.run(&format!("pool/{name}_p{p}"), || {
+                    black_box(
+                        run_jobs_pool(backend, &src, 0, &params, &pool_jobs, &mut pool)
+                            .unwrap(),
+                    );
+                });
+                sim_cases.push(SimCase {
+                    name: *name,
+                    dim: *dim,
+                    mode: if p == 1 { "pool-p1" } else { "pool-p4" },
+                    paths_per_sec: paths_per_sec(total_samples, &s),
+                });
+            }
+        }
     }
     write_scenarios_json(&sim_cases);
 

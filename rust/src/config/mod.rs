@@ -98,6 +98,32 @@ impl Default for TrainConfig {
     }
 }
 
+/// Parallel-execution settings ([`crate::exec::WorkerPool`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecutionConfig {
+    /// Worker threads for the chunk-sharded pool: `0` (the default) =
+    /// auto (one per available core), `1` = a single pooled worker
+    /// (sequential order, executor overhead included), `n > 1` = that
+    /// many workers. The pool is the default execution path for `Sync`
+    /// backends (the native engine); the PJRT runtime's `!Send` handles
+    /// always dispatch sequentially regardless of this setting.
+    /// Gradients are bit-identical for every value (tested).
+    pub workers: usize,
+}
+
+impl ExecutionConfig {
+    /// The concrete worker count: `workers`, or the machine's available
+    /// parallelism when 0 (falling back to 1 if that is unknowable).
+    pub fn resolved_workers(&self) -> usize {
+        match self.workers {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
+        }
+    }
+}
+
 /// Runtime / IO settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -123,6 +149,7 @@ pub struct ExperimentConfig {
     pub mlmc: MlmcConfig,
     pub train: TrainConfig,
     pub runtime: RuntimeConfig,
+    pub execution: ExecutionConfig,
     /// Scenario registry key (`scenario.name` in TOML, `--scenario` on
     /// the CLI). The default `"bs-call"` is the seed behavior; anything
     /// else requires the native backend.
@@ -136,6 +163,7 @@ impl Default for ExperimentConfig {
             mlmc: MlmcConfig::default(),
             train: TrainConfig::default(),
             runtime: RuntimeConfig::default(),
+            execution: ExecutionConfig::default(),
             scenario: DEFAULT_SCENARIO.to_string(),
         }
     }
@@ -253,6 +281,11 @@ impl ExperimentConfig {
             cfg.scenario = s.to_string();
         }
 
+        // [execution]
+        if let Some(v) = getu("execution.workers") {
+            cfg.execution.workers = v;
+        }
+
         // [runtime]
         if let Some(s) = gets("runtime.backend") {
             cfg.runtime.backend = Backend::parse(s)
@@ -339,6 +372,7 @@ const KNOWN_KEYS: &[&str] = &[
     "train.clip_norm",
     "train.dmlmc_warmup",
     "scenario.name",
+    "execution.workers",
     "runtime.backend",
     "runtime.artifacts_dir",
     "runtime.out_dir",
@@ -442,6 +476,26 @@ backend = "native"
         .unwrap();
         assert_eq!(cfg.scenario, "heston-uo-call");
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn execution_workers_parse_and_resolve() {
+        // default: auto
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.execution.workers, 0);
+        assert!(cfg.execution.resolved_workers() >= 1);
+
+        let cfg =
+            ExperimentConfig::from_toml("[execution]\nworkers = 4").unwrap();
+        assert_eq!(cfg.execution.workers, 4);
+        assert_eq!(cfg.execution.resolved_workers(), 4);
+
+        // explicit single worker stays single
+        let one = ExecutionConfig { workers: 1 };
+        assert_eq!(one.resolved_workers(), 1);
+
+        // typo'd key still rejected
+        assert!(ExperimentConfig::from_toml("[execution]\nworkerz = 2").is_err());
     }
 
     #[test]

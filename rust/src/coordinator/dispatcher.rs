@@ -2,13 +2,18 @@
 //!
 //! A step's due levels are independent jobs (independent Brownian
 //! streams, shared read-only parameters), so they can run concurrently.
-//! Two execution strategies with *identical* results (tested):
+//! Three execution strategies with *identical* results (tested):
 //!
 //! * [`run_jobs`] — sequential; works with any backend, including the
 //!   PJRT runtime (whose handles are `!Send` — raw C pointers);
-//! * [`run_jobs_threaded`] — scoped threads, one per level, for `Sync`
-//!   backends (the native engine). Demonstrates the real concurrency the
-//!   PRAM cost model accounts for.
+//! * [`run_jobs_pool`] — the chunk-sharded worker pool
+//!   ([`crate::exec::WorkerPool`]): every job is split into per-chunk
+//!   tasks, LPT-scheduled over P workers, and reduced in fixed chunk
+//!   order — bit-identical to [`run_jobs`] for every worker count. The
+//!   default path for `Sync` backends (the native engine).
+//! * [`run_jobs_threaded`] — the historical one-scoped-thread-per-level
+//!   strategy, now a thin wrapper over the pool with `workers = n_jobs`
+//!   (one concurrency code path instead of two).
 //!
 //! Determinism across strategies comes from counter-based RNG: the batch
 //! for `(step, level, chunk)` is a pure function of its address, not of
@@ -16,6 +21,7 @@
 
 use anyhow::Result;
 
+use crate::exec::{ChunkTask, StepExecReport, WorkerPool};
 use crate::hedging::Problem;
 use crate::mlmc::estimator::ChunkAccumulator;
 use crate::rng::{brownian::Purpose, BrownianSource};
@@ -38,6 +44,34 @@ pub struct LevelResult {
     pub n_samples: usize,
 }
 
+/// One chunk of one level job: generate the addressed Brownian batch and
+/// run the coupled value-and-grad. The single definition of the
+/// `(step, level, chunk)` -> dw -> gradient mapping — both the sequential
+/// loop and the pool closure go through here, so the pool-vs-sequential
+/// bit-identity can never drift apart at this layer.
+fn grad_chunk_at<B: GradBackend + ?Sized>(
+    backend: &B,
+    problem: &Problem,
+    src: &BrownianSource,
+    step: u64,
+    level: usize,
+    chunk: usize,
+    params: &[f32],
+) -> Result<(f64, Vec<f32>)> {
+    let batch = backend.grad_chunk(level);
+    let dw = src.increments_multi(
+        Purpose::Grad,
+        step,
+        level as u32,
+        chunk as u32,
+        batch,
+        problem.n_steps(level),
+        problem.dt(level),
+        backend.n_factors(),
+    );
+    backend.grad_coupled_chunk(level, params, &dw)
+}
+
 /// Execute one level job (chunk loop + averaging).
 fn run_one<B: GradBackend + ?Sized>(
     backend: &B,
@@ -47,23 +81,10 @@ fn run_one<B: GradBackend + ?Sized>(
     params: &[f32],
     spec: LevelJobSpec,
 ) -> Result<LevelResult> {
-    let batch = backend.grad_chunk(spec.level);
-    let n_steps = problem.n_steps(spec.level);
-    let dt = problem.dt(spec.level);
-    let n_factors = backend.n_factors();
     let mut acc = ChunkAccumulator::new(backend.n_params());
     for chunk in 0..spec.n_chunks {
-        let dw = src.increments_multi(
-            Purpose::Grad,
-            step,
-            spec.level as u32,
-            chunk as u32,
-            batch,
-            n_steps,
-            dt,
-            n_factors,
-        );
-        let (loss, grad) = backend.grad_coupled_chunk(spec.level, params, &dw)?;
+        let (loss, grad) =
+            grad_chunk_at(backend, problem, src, step, spec.level, chunk, params)?;
         acc.add(loss, &grad);
     }
     let (loss_delta, grad) = acc.finish();
@@ -71,7 +92,7 @@ fn run_one<B: GradBackend + ?Sized>(
         level: spec.level,
         loss_delta,
         grad,
-        n_samples: spec.n_chunks * batch,
+        n_samples: spec.n_chunks * backend.grad_chunk(spec.level),
     })
 }
 
@@ -89,8 +110,80 @@ pub fn run_jobs<B: GradBackend + ?Sized>(
         .collect()
 }
 
-/// Threaded dispatch: one scoped thread per level job (for `Sync`
-/// backends). Produces bit-identical results to [`run_jobs`].
+/// Shard `jobs` into per-chunk pool tasks. The LPT weight is the chunk's
+/// row-work `batch x n_steps` — the same `2^{c l}`-shaped cost the PRAM
+/// model assigns per sample (for c = 1), so the pool's greedy schedule
+/// mirrors the modeled one.
+fn chunk_tasks<B: GradBackend + ?Sized>(
+    backend: &B,
+    problem: &Problem,
+    jobs: &[LevelJobSpec],
+) -> Vec<ChunkTask> {
+    let mut tasks = Vec::new();
+    for (group, &spec) in jobs.iter().enumerate() {
+        let weight = backend.grad_chunk(spec.level) as f64
+            * problem.n_steps(spec.level) as f64;
+        for chunk in 0..spec.n_chunks {
+            tasks.push(ChunkTask {
+                group,
+                chunk,
+                level: spec.level,
+                weight,
+            });
+        }
+    }
+    tasks
+}
+
+/// Pooled dispatch with execution telemetry: shard into chunk tasks, run
+/// on the pool, reduce bit-exactly (see [`crate::exec`]). Results ordered
+/// like `jobs`; the report carries measured makespan and per-worker busy
+/// time for this step.
+pub fn run_jobs_pool_with_report<B: GradBackend + Sync + ?Sized>(
+    backend: &B,
+    src: &BrownianSource,
+    step: u64,
+    params: &[f32],
+    jobs: &[LevelJobSpec],
+    pool: &mut WorkerPool,
+) -> Result<(Vec<LevelResult>, StepExecReport)> {
+    let problem = *backend.problem();
+    let tasks = chunk_tasks(backend, &problem, jobs);
+    let (reduced, report) = pool.execute(&tasks, jobs.len(), |t| {
+        grad_chunk_at(backend, &problem, src, step, t.level, t.chunk, params)
+    })?;
+    let results = jobs
+        .iter()
+        .zip(reduced)
+        .map(|(&spec, (loss_delta, grad))| LevelResult {
+            level: spec.level,
+            loss_delta,
+            grad,
+            n_samples: spec.n_chunks * backend.grad_chunk(spec.level),
+        })
+        .collect();
+    Ok((results, report))
+}
+
+/// Pooled dispatch (telemetry discarded). Bit-identical to [`run_jobs`]
+/// for every worker count.
+pub fn run_jobs_pool<B: GradBackend + Sync + ?Sized>(
+    backend: &B,
+    src: &BrownianSource,
+    step: u64,
+    params: &[f32],
+    jobs: &[LevelJobSpec],
+    pool: &mut WorkerPool,
+) -> Result<Vec<LevelResult>> {
+    run_jobs_pool_with_report(backend, src, step, params, jobs, pool)
+        .map(|(results, _)| results)
+}
+
+/// Threaded dispatch with the historical *worker count* (one worker per
+/// level job), as a thin wrapper over the pool. Note the granularity is
+/// the pool's, not the old per-level one: tasks are per-chunk and
+/// LPT-ordered, so one level's chunks may spread across several workers.
+/// Results are bit-identical to [`run_jobs`] either way.
 pub fn run_jobs_threaded<B: GradBackend + Sync>(
     backend: &B,
     src: &BrownianSource,
@@ -98,21 +191,8 @@ pub fn run_jobs_threaded<B: GradBackend + Sync>(
     params: &[f32],
     jobs: &[LevelJobSpec],
 ) -> Result<Vec<LevelResult>> {
-    let problem = *backend.problem();
-    let handles: Vec<Result<LevelResult>> = std::thread::scope(|scope| {
-        let mut joins = Vec::with_capacity(jobs.len());
-        for &spec in jobs {
-            let problem = &problem;
-            joins.push(scope.spawn(move || {
-                run_one(backend, problem, src, step, params, spec)
-            }));
-        }
-        joins
-            .into_iter()
-            .map(|j| j.join().expect("level job panicked"))
-            .collect()
-    });
-    handles.into_iter().collect()
+    let mut pool = WorkerPool::new(jobs.len().max(1));
+    run_jobs_pool(backend, src, step, params, jobs, &mut pool)
 }
 
 #[cfg(test)]
@@ -165,6 +245,60 @@ mod tests {
     }
 
     #[test]
+    fn pool_matches_sequential_bitwise_for_every_worker_count() {
+        let (b, src, params) = setup();
+        let seq = run_jobs(&b, &src, 7, &params, &jobs()).unwrap();
+        for workers in [1usize, 2, 3, 8] {
+            let mut pool = WorkerPool::new(workers);
+            let out =
+                run_jobs_pool(&b, &src, 7, &params, &jobs(), &mut pool).unwrap();
+            for (a, c) in seq.iter().zip(&out) {
+                assert_eq!(a.level, c.level, "P={workers}");
+                assert_eq!(a.loss_delta, c.loss_delta, "P={workers}");
+                assert_eq!(a.grad, c.grad, "P={workers} level {}", a.level);
+                assert_eq!(a.n_samples, c.n_samples, "P={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_report_accounts_every_chunk() {
+        let (b, src, params) = setup();
+        let mut pool = WorkerPool::new(2);
+        let (_, report) =
+            run_jobs_pool_with_report(&b, &src, 0, &params, &jobs(), &mut pool)
+                .unwrap();
+        // jobs() has 2 + 1 + 1 = 4 chunks
+        assert_eq!(report.n_tasks, 4);
+        let executed: usize = report.workers.iter().map(|w| w.tasks).sum();
+        assert_eq!(executed, 4);
+        assert!(report.makespan.as_secs_f64() > 0.0);
+        assert!(report.utilization() > 0.0 && report.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn chunk_tasks_shard_and_weight_by_level() {
+        let (b, _, _) = setup();
+        let problem = *b.problem();
+        let tasks = chunk_tasks(&b, &problem, &jobs());
+        assert_eq!(tasks.len(), 4);
+        assert_eq!(tasks[0], ChunkTask {
+            group: 0,
+            chunk: 0,
+            level: 0,
+            weight: (b.grad_chunk(0) * problem.n_steps(0)) as f64,
+        });
+        // The chunk policy keeps batch x n_steps at 512 rows for levels
+        // <= 4 (uniform chunks), so only deep levels outweigh them.
+        let deep = chunk_tasks(
+            &b,
+            &problem,
+            &[LevelJobSpec { level: 6, n_chunks: 1 }],
+        );
+        assert!(deep[0].weight > tasks[0].weight);
+    }
+
+    #[test]
     fn distinct_steps_get_distinct_samples() {
         let (b, src, params) = setup();
         let spec = [LevelJobSpec { level: 1, n_chunks: 1 }];
@@ -177,5 +311,9 @@ mod tests {
     fn empty_jobs_ok() {
         let (b, src, params) = setup();
         assert!(run_jobs(&b, &src, 0, &params, &[]).unwrap().is_empty());
+        let mut pool = WorkerPool::new(2);
+        assert!(run_jobs_pool(&b, &src, 0, &params, &[], &mut pool)
+            .unwrap()
+            .is_empty());
     }
 }

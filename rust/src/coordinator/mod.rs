@@ -5,8 +5,11 @@
 //! reused from [`cache::GradientCache`]; refreshes for the due levels are
 //! independent jobs ([`dispatcher`]) whose parallel cost is accounted as
 //! the max depth over the concurrently running levels
-//! ([`crate::parallel::cost`]). [`trainer::Trainer`] ties it together and
-//! also implements the two baselines (naive SGD, standard MLMC SGD).
+//! ([`crate::parallel::cost`]) and — on `Sync` backends — actually
+//! executed across P workers by the chunk-sharded pool ([`crate::exec`]),
+//! bit-identically to sequential dispatch. [`trainer::Trainer`] ties it
+//! together and also implements the two baselines (naive SGD, standard
+//! MLMC SGD).
 
 pub mod cache;
 pub mod dispatcher;
@@ -15,7 +18,10 @@ pub mod scheduler;
 pub mod trainer;
 
 pub use cache::GradientCache;
-pub use dispatcher::{run_jobs, run_jobs_threaded, LevelJobSpec, LevelResult};
+pub use dispatcher::{
+    run_jobs, run_jobs_pool, run_jobs_pool_with_report, run_jobs_threaded,
+    LevelJobSpec, LevelResult,
+};
 pub use method::Method;
 pub use scheduler::DelayedSchedule;
 pub use trainer::Trainer;

@@ -13,11 +13,14 @@
 use anyhow::{anyhow, Result};
 
 use super::cache::GradientCache;
-use super::dispatcher::{run_jobs, LevelJobSpec, LevelResult};
+use super::dispatcher::{
+    run_jobs, run_jobs_pool_with_report, LevelJobSpec, LevelResult,
+};
 use super::method::Method;
 use super::scheduler::DelayedSchedule;
 use crate::config::{Backend, ExperimentConfig};
 use crate::engine;
+use crate::exec::{ChunkTask, ExecStats, WorkerPool};
 use crate::metrics::{CurvePoint, LearningCurve};
 use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
 use crate::mlmc::LevelAllocation;
@@ -41,6 +44,10 @@ pub struct Trainer {
     optimizer: Box<dyn Optimizer>,
     src: BrownianSource,
     cost_model: CostModel,
+    /// Chunk-sharded execution pool — `Some` for `Sync` backends (the
+    /// default path; bit-identical to sequential dispatch), `None` for
+    /// `!Send` backends (PJRT), which always dispatch sequentially.
+    pool: Option<WorkerPool>,
     pub params: Vec<f32>,
     cumulative: StepCost,
     steps_done: u64,
@@ -81,6 +88,9 @@ impl Trainer {
             "backend n_params {n_params} != engine {}",
             params.len()
         );
+        let pool = backend
+            .sync_view()
+            .map(|_| WorkerPool::new(cfg.execution.resolved_workers()));
 
         Ok(Trainer {
             cfg: cfg.clone(),
@@ -93,6 +103,7 @@ impl Trainer {
             optimizer,
             src: BrownianSource::new(seed),
             cost_model: CostModel::new(cfg.mlmc.c),
+            pool,
             backend,
             params,
             cumulative: StepCost::default(),
@@ -163,7 +174,21 @@ impl Trainer {
             Method::Naive => self.naive_gradient(t)?,
             Method::Mlmc | Method::Dmlmc => {
                 let jobs = self.jobs_for_step(t);
-                let results = run_jobs(&*self.backend, &self.src, t, &self.params, &jobs)?;
+                let results = if let (Some(sb), Some(pool)) =
+                    (self.backend.sync_view(), self.pool.as_mut())
+                {
+                    let (results, _report) = run_jobs_pool_with_report(
+                        sb,
+                        &self.src,
+                        t,
+                        &self.params,
+                        &jobs,
+                        pool,
+                    )?;
+                    results
+                } else {
+                    run_jobs(&*self.backend, &self.src, t, &self.params, &jobs)?
+                };
                 let cost_jobs: Vec<(usize, usize)> =
                     results.iter().map(|r| (r.level, r.n_samples)).collect();
                 let cost = StepCost::from_jobs(&self.cost_model, &cost_jobs);
@@ -199,14 +224,48 @@ impl Trainer {
         }
     }
 
-    fn naive_gradient(&self, t: u64) -> Result<(f64, Vec<f32>, StepCost)> {
-        let lmax = self.backend.problem().lmax;
+    /// The naive finest-grid gradient. Chunks are independent (same
+    /// counter-based addressing as the level jobs), so they run on the
+    /// pool when one exists; the chunk-ordered reduction keeps the result
+    /// bit-identical to the sequential loop.
+    fn naive_gradient(&mut self, t: u64) -> Result<(f64, Vec<f32>, StepCost)> {
+        let problem = *self.backend.problem();
+        let lmax = problem.lmax;
         let batch = self.backend.naive_chunk();
-        let n_steps = self.backend.problem().n_steps(lmax);
-        let dt = self.backend.problem().dt(lmax);
+        let n_steps = problem.n_steps(lmax);
+        let dt = problem.dt(lmax);
+        let n_factors = self.backend.n_factors();
+        let n_chunks = self.naive_chunks;
+        let n_samples = n_chunks * batch;
+        let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
+        let src = self.src;
+        if let (Some(sb), Some(pool)) =
+            (self.backend.sync_view(), self.pool.as_mut())
+        {
+            let weight = batch as f64 * n_steps as f64;
+            let tasks: Vec<ChunkTask> = (0..n_chunks)
+                .map(|chunk| ChunkTask { group: 0, chunk, level: lmax, weight })
+                .collect();
+            let params = &self.params;
+            let (mut reduced, _report) = pool.execute(&tasks, 1, |task| {
+                let dw = src.increments_multi(
+                    Purpose::Grad,
+                    t,
+                    lmax as u32,
+                    task.chunk as u32,
+                    batch,
+                    n_steps,
+                    dt,
+                    n_factors,
+                );
+                sb.grad_naive_chunk(params, &dw)
+            })?;
+            let (loss, grad) = reduced.pop().expect("one reduction group");
+            return Ok((loss, grad, cost));
+        }
         let mut acc = ChunkAccumulator::new(self.backend.n_params());
-        for chunk in 0..self.naive_chunks {
-            let dw = self.src.increments_multi(
+        for chunk in 0..n_chunks {
+            let dw = src.increments_multi(
                 Purpose::Grad,
                 t,
                 lmax as u32,
@@ -214,14 +273,12 @@ impl Trainer {
                 batch,
                 n_steps,
                 dt,
-                self.backend.n_factors(),
+                n_factors,
             );
             let (loss, grad) = self.backend.grad_naive_chunk(&self.params, &dw)?;
             acc.add(loss, &grad);
         }
         let (loss, grad) = acc.finish();
-        let n_samples = self.naive_chunks * batch;
-        let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
         Ok((loss, grad, cost))
     }
 
@@ -293,6 +350,23 @@ impl Trainer {
     /// the complexity table and tests.
     pub fn chunks_per_level(&self) -> &[usize] {
         &self.chunks_per_level
+    }
+
+    /// Chunks a naive refresh runs (`ceil(N / naive_chunk)`).
+    pub fn naive_chunks(&self) -> usize {
+        self.naive_chunks
+    }
+
+    /// Measured execution telemetry (per-step makespans, per-worker busy
+    /// time, utilization) — `None` when the backend dispatches
+    /// sequentially (no pool).
+    pub fn exec_stats(&self) -> Option<&ExecStats> {
+        self.pool.as_ref().map(|p| p.stats())
+    }
+
+    /// The pool's worker count, when pooled dispatch is active.
+    pub fn exec_workers(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.workers())
     }
 
     /// The estimator the *next* step would use from the current cache
@@ -526,6 +600,50 @@ mod tests {
         cfg.runtime.backend = Backend::Xla;
         let err = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap_err();
         assert!(format!("{err:#}").contains("native"));
+    }
+
+    #[test]
+    fn curves_are_bitwise_invariant_to_worker_count() {
+        // The pool's fixed-order reduction makes the whole trajectory —
+        // not just one gradient — independent of P, for every method
+        // (naive exercises the pooled finest-grid path).
+        for method in [Method::Naive, Method::Mlmc, Method::Dmlmc] {
+            let run = |workers: usize| {
+                let mut cfg = smoke_cfg();
+                cfg.train.steps = 6;
+                cfg.train.eval_every = 2;
+                cfg.execution.workers = workers;
+                let mut tr = Trainer::from_config(&cfg, method, 1).unwrap();
+                let curve = tr.run().unwrap();
+                assert_eq!(tr.exec_workers(), Some(workers));
+                (curve, tr.params.clone())
+            };
+            let (c1, p1) = run(1);
+            for workers in [2usize, 3] {
+                let (c, p) = run(workers);
+                assert_eq!(p, p1, "{method}: params differ at P={workers}");
+                for (a, b) in c.points.iter().zip(&c1.points) {
+                    assert_eq!(a.loss, b.loss, "{method} P={workers}");
+                    assert_eq!(a.grad_norm, b.grad_norm, "{method} P={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exec_stats_cover_every_step() {
+        let mut cfg = smoke_cfg();
+        cfg.train.steps = 5;
+        cfg.execution.workers = 2;
+        let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        tr.run().unwrap();
+        let stats = tr.exec_stats().expect("native backend pools");
+        assert_eq!(stats.steps, 5);
+        assert_eq!(stats.makespans.len(), 5);
+        assert_eq!(stats.busy_per_worker.len(), 2);
+        assert!(stats.tasks > 0);
+        let util = stats.utilization();
+        assert!((0.0..=1.0).contains(&util), "utilization {util}");
     }
 
     #[test]

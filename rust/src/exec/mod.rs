@@ -1,0 +1,49 @@
+//! Parallel execution runtime — a chunk-sharded worker pool with
+//! bit-exact reduction.
+//!
+//! The paper's parallel-complexity claims were so far only *modeled*
+//! ([`crate::parallel::pram`]); this module actually executes a step's
+//! chunk workload across `P` OS threads and measures wall-clock makespan,
+//! so the MLMC-vs-DMLMC gap becomes an observable number (`repro
+//! parallel-sweep`, `BENCH_parallel.json`).
+//!
+//! # Design
+//!
+//! * **Sharding** — a step's level jobs are split into per-chunk
+//!   [`ChunkTask`]s (one backend execution each). Chunks are the natural
+//!   grain: they are pure functions of their address `(purpose, step,
+//!   level, chunk)` thanks to the counter-based RNG, so execution order
+//!   cannot change any result.
+//! * **Scheduling** — tasks are sorted longest-processing-time first
+//!   ([`lpt_order`], weight = `batch x n_steps`, the same greedy rule the
+//!   PRAM model simulates) into a single shared queue; idle workers pull
+//!   the next-heaviest task from an atomic cursor. A shared LPT queue IS
+//!   greedy list scheduling: a worker that finishes early "steals" the
+//!   work a static partition would have pinned elsewhere.
+//! * **Reduction** — every task result lands in a pre-addressed slot
+//!   `(group, chunk)`; after the join, the *main thread* folds each
+//!   group's chunks in ascending chunk order through the same
+//!   [`ChunkAccumulator`](crate::mlmc::estimator::ChunkAccumulator) the
+//!   sequential path uses. Gradients are therefore **bit-identical to
+//!   sequential dispatch for every worker count** (f32 addition is
+//!   non-associative — order is pinned, not hoped for).
+//! * **Observability** — each dispatch returns a [`StepExecReport`]:
+//!   measured makespan, per-worker busy time and task counts keyed by
+//!   *stable worker indices* `0..P` (not thread ids, which change across
+//!   runs); [`ExecStats`] accumulates them over a training run.
+//!
+//! The pool object is persistent across steps (scheduling policy, chaos
+//! knobs and cumulative stats live as long as the `Trainer`); the worker
+//! threads themselves are scoped per dispatch because the backend borrow
+//! is step-scoped — spawn cost is microseconds against millisecond-scale
+//! chunk work, and `std::thread::scope` keeps the whole runtime
+//! unsafe-free. Pinning / NUMA placement and a truly resident thread set
+//! are follow-ups (see ROADMAP).
+
+pub mod pool;
+pub mod stats;
+pub mod task;
+
+pub use pool::WorkerPool;
+pub use stats::{ExecStats, StepExecReport, WorkerStat};
+pub use task::{lpt_order, ChunkTask};

@@ -1,0 +1,387 @@
+//! The worker pool: greedy LPT execution of [`ChunkTask`]s over `P`
+//! scoped std threads, with fixed-order (bit-exact) reduction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::stats::{ExecStats, StepExecReport, WorkerStat};
+use super::task::{lpt_order, ChunkTask};
+use crate::mlmc::estimator::ChunkAccumulator;
+
+/// Deterministic per-task sleep injection — a scheduling-perturbation
+/// harness for determinism tests: whatever interleaving the sleeps force,
+/// the reduced gradients must stay bit-identical.
+#[derive(Debug, Clone, Copy)]
+struct ChaosDelays {
+    seed: u64,
+    max_micros: u64,
+}
+
+impl ChaosDelays {
+    /// splitmix64-style hash of (seed, task, worker) -> [0, max] µs.
+    fn delay(&self, task: u64, worker: u64) -> Duration {
+        let mut x = self
+            .seed
+            .wrapping_add(task.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(worker.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        Duration::from_micros(x % (self.max_micros + 1))
+    }
+}
+
+/// What one worker brings home from a dispatch.
+struct WorkerOut {
+    worker: usize,
+    busy: Duration,
+    results: Vec<(usize, Result<(f64, Vec<f32>)>)>,
+}
+
+/// Persistent chunk-execution runtime: `P` workers, an LPT-ordered shared
+/// queue, and per-run [`ExecStats`]. See the module docs of
+/// [`crate::exec`] for the design (sharding / scheduling / reduction).
+#[derive(Debug)]
+pub struct WorkerPool {
+    workers: usize,
+    chaos: Option<ChaosDelays>,
+    stats: ExecStats,
+}
+
+impl WorkerPool {
+    /// A pool with `workers >= 1` workers. One worker degenerates to
+    /// sequential execution through the same code path (useful as the
+    /// measured P = 1 baseline, executor overhead included).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "need at least one worker");
+        WorkerPool {
+            workers,
+            chaos: None,
+            stats: ExecStats::new(workers),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Cumulative stats over every dispatch this pool has run.
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    /// Inject a pseudorandom sleep of up to `max_micros` µs before every
+    /// task, derived from `(seed, task, worker)` — perturbs the schedule
+    /// without touching any numeric input. `max_micros = 0` disables.
+    /// Test/debug facility: results must be invariant under it.
+    pub fn set_chaos_delays(&mut self, seed: u64, max_micros: u64) {
+        self.chaos = if max_micros == 0 {
+            None
+        } else {
+            Some(ChaosDelays { seed, max_micros })
+        };
+    }
+
+    /// Execute `tasks` across the workers and reduce each of the
+    /// `n_groups` groups in ascending chunk order.
+    ///
+    /// `run` computes one chunk: it must be a pure function of the task's
+    /// address (`group`/`chunk`/`level`) so execution order is
+    /// irrelevant; the counter-based RNG gives the dispatcher exactly
+    /// that. Returns one `(mean loss, mean gradient)` per group — the
+    /// fold is the same `ChunkAccumulator` sequence the sequential
+    /// dispatcher performs, so the result is bit-identical to sequential
+    /// execution for every worker count.
+    ///
+    /// Errors: the error of the lowest-indexed failing task is returned
+    /// (deterministic whichever worker hit it first). Panics in `run`
+    /// propagate.
+    pub fn execute<F>(
+        &mut self,
+        tasks: &[ChunkTask],
+        n_groups: usize,
+        run: F,
+    ) -> Result<(Vec<(f64, Vec<f32>)>, StepExecReport)>
+    where
+        F: Fn(&ChunkTask) -> Result<(f64, Vec<f32>)> + Sync,
+    {
+        debug_assert!(tasks.iter().all(|t| t.group < n_groups));
+        let started = Instant::now();
+
+        let mut worker_outs: Vec<WorkerOut> = if tasks.is_empty() {
+            // Nothing to run: report an idle dispatch without paying the
+            // thread-spawn cost (DMLMC steps where no level is due).
+            (0..self.workers)
+                .map(|worker| WorkerOut {
+                    worker,
+                    busy: Duration::ZERO,
+                    results: Vec::new(),
+                })
+                .collect()
+        } else {
+            let order = lpt_order(tasks);
+            let cursor = AtomicUsize::new(0);
+            let chaos = self.chaos;
+            let order_ref = &order;
+            let cursor_ref = &cursor;
+            let run_ref = &run;
+            // An oversubscribed pool (workers > tasks) spawns only as
+            // many threads as there are tasks; the unspawned workers
+            // still appear in the report (idle, zero busy) so worker
+            // indices stay stable.
+            let spawn_n = self.workers.min(tasks.len());
+            let mut outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+                let mut joins = Vec::with_capacity(spawn_n);
+                for worker in 0..spawn_n {
+                    joins.push(scope.spawn(move || {
+                        let mut out = WorkerOut {
+                            worker,
+                            busy: Duration::ZERO,
+                            results: Vec::new(),
+                        };
+                        loop {
+                            let slot = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                            if slot >= order_ref.len() {
+                                break;
+                            }
+                            let idx = order_ref[slot];
+                            if let Some(c) = chaos {
+                                std::thread::sleep(
+                                    c.delay(idx as u64, worker as u64),
+                                );
+                            }
+                            let t0 = Instant::now();
+                            let result = run_ref(&tasks[idx]);
+                            out.busy += t0.elapsed();
+                            out.results.push((idx, result));
+                        }
+                        out
+                    }));
+                }
+                joins
+                    .into_iter()
+                    .map(|j| j.join().expect("pool worker panicked"))
+                    .collect()
+            });
+            for worker in spawn_n..self.workers {
+                outs.push(WorkerOut {
+                    worker,
+                    busy: Duration::ZERO,
+                    results: Vec::new(),
+                });
+            }
+            outs
+        };
+        let makespan = started.elapsed();
+
+        // Scatter every task result into its pre-addressed slot; remember
+        // the lowest-indexed error (deterministic across schedules).
+        worker_outs.sort_by_key(|o| o.worker);
+        let mut slots: Vec<Option<(f64, Vec<f32>)>> = vec![None; tasks.len()];
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut worker_stats = Vec::with_capacity(self.workers);
+        for out in worker_outs {
+            worker_stats.push(WorkerStat {
+                worker: out.worker,
+                busy: out.busy,
+                tasks: out.results.len(),
+            });
+            for (idx, result) in out.results {
+                match result {
+                    Ok(v) => slots[idx] = Some(v),
+                    Err(e) => {
+                        if first_err.as_ref().map_or(true, |(i, _)| idx < *i) {
+                            first_err = Some((idx, e));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((idx, err)) = first_err {
+            let t = tasks[idx];
+            return Err(err.context(format!(
+                "pool task {idx} (group {}, level {}, chunk {}) failed",
+                t.group, t.level, t.chunk
+            )));
+        }
+
+        // Fixed-order reduction: groups in index order, chunks ascending —
+        // the exact fold of the sequential dispatcher.
+        let mut per_group: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        for (idx, t) in tasks.iter().enumerate() {
+            per_group[t.group].push(idx);
+        }
+        let mut reduced = Vec::with_capacity(n_groups);
+        for group in &mut per_group {
+            group.sort_by_key(|&idx| tasks[idx].chunk);
+            let dim = group
+                .first()
+                .and_then(|&idx| slots[idx].as_ref())
+                .map(|(_, g)| g.len())
+                .unwrap_or(0);
+            let mut acc = ChunkAccumulator::new(dim);
+            for &idx in group.iter() {
+                let (loss, grad) = slots[idx].take().expect("task result missing");
+                acc.add(loss, &grad);
+            }
+            // An empty group panics here ("no chunks accumulated"), just
+            // like the sequential path's accumulator would.
+            reduced.push(acc.finish());
+        }
+
+        let report = StepExecReport {
+            workers: worker_stats,
+            makespan,
+            n_tasks: tasks.len(),
+        };
+        self.stats.record(&report);
+        Ok((reduced, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic chunk: loss = group*100 + chunk, grad = [chunk, group]
+    /// scaled — deterministic, distinguishable, order-sensitive to sum.
+    fn run_synthetic(t: &ChunkTask) -> Result<(f64, Vec<f32>)> {
+        let loss = t.group as f64 * 100.0 + t.chunk as f64;
+        let grad = vec![
+            (t.chunk as f32 + 1.0) * 0.1,
+            (t.group as f32 + 1.0) * 0.25,
+        ];
+        Ok((loss, grad))
+    }
+
+    fn tasks(groups: &[usize]) -> Vec<ChunkTask> {
+        let mut out = Vec::new();
+        for (group, &n) in groups.iter().enumerate() {
+            for chunk in 0..n {
+                out.push(ChunkTask {
+                    group,
+                    chunk,
+                    level: group,
+                    weight: (group + 1) as f64,
+                });
+            }
+        }
+        out
+    }
+
+    /// Sequential reference: the exact fold `run_one` performs.
+    fn sequential(groups: &[usize]) -> Vec<(f64, Vec<f32>)> {
+        let ts = tasks(groups);
+        let mut out = Vec::new();
+        for (group, &n) in groups.iter().enumerate() {
+            let mut acc = ChunkAccumulator::new(2);
+            for chunk in 0..n {
+                let t = ts
+                    .iter()
+                    .find(|t| t.group == group && t.chunk == chunk)
+                    .unwrap();
+                let (loss, grad) = run_synthetic(t).unwrap();
+                acc.add(loss, &grad);
+            }
+            out.push(acc.finish());
+        }
+        out
+    }
+
+    #[test]
+    fn matches_sequential_for_many_worker_counts() {
+        let groups = [3usize, 1, 4, 2];
+        let want = sequential(&groups);
+        for workers in [1usize, 2, 3, 8, 16] {
+            let mut pool = WorkerPool::new(workers);
+            let (got, report) = pool
+                .execute(&tasks(&groups), groups.len(), run_synthetic)
+                .unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.0, b.0, "loss differs at P={workers}");
+                assert_eq!(a.1, b.1, "grad differs at P={workers}");
+            }
+            assert_eq!(report.n_tasks, 10);
+            assert_eq!(report.workers.len(), workers);
+            let tasks_run: usize = report.workers.iter().map(|w| w.tasks).sum();
+            assert_eq!(tasks_run, 10);
+        }
+    }
+
+    #[test]
+    fn chaos_delays_do_not_change_results() {
+        let groups = [2usize, 3];
+        let want = sequential(&groups);
+        for seed in [1u64, 2, 3] {
+            let mut pool = WorkerPool::new(4);
+            pool.set_chaos_delays(seed, 300);
+            let (got, _) = pool
+                .execute(&tasks(&groups), groups.len(), run_synthetic)
+                .unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1, b.1);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dispatch_reports_idle() {
+        let mut pool = WorkerPool::new(3);
+        let (reduced, report) = pool.execute(&[], 0, run_synthetic).unwrap();
+        assert!(reduced.is_empty());
+        assert_eq!(report.n_tasks, 0);
+        assert_eq!(report.utilization(), 0.0);
+        assert_eq!(pool.stats().steps, 1);
+    }
+
+    #[test]
+    fn lowest_indexed_error_wins() {
+        let ts = tasks(&[4usize]);
+        let mut pool = WorkerPool::new(4);
+        let err = pool
+            .execute(&ts, 1, |t| {
+                if t.chunk >= 1 {
+                    Err(anyhow::anyhow!("boom chunk {}", t.chunk))
+                } else {
+                    run_synthetic(t)
+                }
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk 1"), "{msg}");
+        assert!(msg.contains("pool task"), "{msg}");
+    }
+
+    #[test]
+    fn stats_accumulate_across_dispatches() {
+        let mut pool = WorkerPool::new(2);
+        for _ in 0..3 {
+            pool.execute(&tasks(&[2usize]), 1, run_synthetic).unwrap();
+        }
+        assert_eq!(pool.stats().steps, 3);
+        assert_eq!(pool.stats().tasks, 6);
+        assert_eq!(pool.stats().makespans.len(), 3);
+        assert_eq!(pool.stats().busy_per_worker.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_workers_panics() {
+        WorkerPool::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no chunks")]
+    fn empty_group_panics_like_sequential() {
+        let mut pool = WorkerPool::new(2);
+        // group 1 exists but has no tasks
+        let ts = tasks(&[2usize]);
+        let _ = pool.execute(&ts, 2, run_synthetic);
+    }
+}

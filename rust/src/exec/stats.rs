@@ -1,0 +1,171 @@
+//! Execution telemetry: per-dispatch reports and per-run accumulation,
+//! keyed by **stable worker indices** (0..P). Thread ids are deliberately
+//! absent — they change across runs and would make run manifests
+//! non-reproducible.
+
+use std::time::Duration;
+
+/// One worker's share of one dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStat {
+    /// Stable worker index (0..P), constant across dispatches and runs.
+    pub worker: usize,
+    /// Time spent executing tasks (excludes queue waits).
+    pub busy: Duration,
+    /// Tasks this worker executed.
+    pub tasks: usize,
+}
+
+/// Telemetry of one pool dispatch (= one SGD step's refresh workload).
+#[derive(Debug, Clone)]
+pub struct StepExecReport {
+    /// Per-worker stats, indexed by stable worker id.
+    pub workers: Vec<WorkerStat>,
+    /// Wall-clock time from dispatch start to last task completion —
+    /// the *measured* counterpart of `PramMachine::step_makespan`.
+    pub makespan: Duration,
+    /// Tasks dispatched.
+    pub n_tasks: usize,
+}
+
+impl StepExecReport {
+    /// Sum of worker busy times (the step's measured "work").
+    pub fn busy_total(&self) -> Duration {
+        self.workers.iter().map(|w| w.busy).sum()
+    }
+
+    /// `busy_total / (P x makespan)` in [0, 1] — how much of the pool's
+    /// capacity the step actually used. 0 for an empty dispatch.
+    pub fn utilization(&self) -> f64 {
+        let span = self.makespan.as_secs_f64() * self.workers.len() as f64;
+        if span > 0.0 {
+            (self.busy_total().as_secs_f64() / span).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Cumulative execution stats over a run (one record per dispatch).
+#[derive(Debug, Clone)]
+pub struct ExecStats {
+    /// Dispatches recorded (= SGD steps executed through the pool).
+    pub steps: usize,
+    /// Total tasks executed.
+    pub tasks: usize,
+    /// Cumulative busy time per stable worker index.
+    pub busy_per_worker: Vec<Duration>,
+    /// Measured makespan of each dispatch, in dispatch order (seconds).
+    pub makespans: Vec<f64>,
+}
+
+impl ExecStats {
+    pub fn new(workers: usize) -> Self {
+        ExecStats {
+            steps: 0,
+            tasks: 0,
+            busy_per_worker: vec![Duration::ZERO; workers],
+            makespans: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, report: &StepExecReport) {
+        self.steps += 1;
+        self.tasks += report.n_tasks;
+        for w in &report.workers {
+            self.busy_per_worker[w.worker] += w.busy;
+        }
+        self.makespans.push(report.makespan.as_secs_f64());
+    }
+
+    /// Total measured makespan over all dispatches (seconds).
+    pub fn total_makespan(&self) -> f64 {
+        self.makespans.iter().sum()
+    }
+
+    /// Mean measured per-step makespan (seconds); 0 before any dispatch.
+    pub fn mean_makespan(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.total_makespan() / self.steps as f64
+        }
+    }
+
+    /// Run-level utilization: total busy / (P x total makespan).
+    pub fn utilization(&self) -> f64 {
+        let span = self.total_makespan() * self.busy_per_worker.len() as f64;
+        if span > 0.0 {
+            let busy: f64 = self
+                .busy_per_worker
+                .iter()
+                .map(|d| d.as_secs_f64())
+                .sum();
+            (busy / span).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(busy_ms: &[u64], makespan_ms: u64) -> StepExecReport {
+        StepExecReport {
+            workers: busy_ms
+                .iter()
+                .enumerate()
+                .map(|(worker, &ms)| WorkerStat {
+                    worker,
+                    busy: Duration::from_millis(ms),
+                    tasks: 1,
+                })
+                .collect(),
+            makespan: Duration::from_millis(makespan_ms),
+            n_tasks: busy_ms.len(),
+        }
+    }
+
+    #[test]
+    fn utilization_of_balanced_dispatch_is_high() {
+        let r = report(&[10, 10], 10);
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        assert_eq!(r.busy_total(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn utilization_of_imbalanced_dispatch_is_half() {
+        let r = report(&[10, 0], 10);
+        assert!((r.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_dispatch_utilization_zero() {
+        let r = report(&[0, 0], 0);
+        assert_eq!(r.utilization(), 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate_per_worker() {
+        let mut s = ExecStats::new(2);
+        s.record(&report(&[10, 4], 10));
+        s.record(&report(&[2, 8], 8));
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.tasks, 4);
+        assert_eq!(s.busy_per_worker[0], Duration::from_millis(12));
+        assert_eq!(s.busy_per_worker[1], Duration::from_millis(12));
+        assert!((s.total_makespan() - 0.018).abs() < 1e-9);
+        assert!((s.mean_makespan() - 0.009).abs() < 1e-9);
+        assert!(s.utilization() > 0.6 && s.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn fresh_stats_are_zero() {
+        let s = ExecStats::new(3);
+        assert_eq!(s.mean_makespan(), 0.0);
+        assert_eq!(s.utilization(), 0.0);
+        assert_eq!(s.busy_per_worker.len(), 3);
+    }
+}

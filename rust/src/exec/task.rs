@@ -1,0 +1,61 @@
+//! The pool's unit of work: one chunk of one level job, plus the LPT
+//! priority used to order the shared queue.
+
+/// One schedulable chunk. `group` addresses the reduction slot (one group
+/// per level job), `chunk` fixes the fold order within the group, `weight`
+/// is the LPT priority (any monotone proxy for the chunk's runtime; the
+/// dispatcher uses `batch x n_steps`, mirroring the PRAM model's
+/// `2^{c l}`-per-sample cost shape for c = 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkTask {
+    /// Reduction group (index into the step's job list).
+    pub group: usize,
+    /// Chunk index within the group — the reduction order key.
+    pub chunk: usize,
+    /// Discretization level (diagnostics / RNG addressing).
+    pub level: usize,
+    /// LPT priority: larger runs earlier.
+    pub weight: f64,
+}
+
+/// Longest-processing-time order over `tasks`: indices sorted by weight
+/// descending, ties broken by `(group, chunk)` ascending so the schedule
+/// itself is deterministic (results never depend on it — only worker
+/// busy-time telemetry does).
+pub fn lpt_order(tasks: &[ChunkTask]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[b]
+            .weight
+            .total_cmp(&tasks[a].weight)
+            .then(tasks[a].group.cmp(&tasks[b].group))
+            .then(tasks[a].chunk.cmp(&tasks[b].chunk))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(group: usize, chunk: usize, weight: f64) -> ChunkTask {
+        ChunkTask { group, chunk, level: 0, weight }
+    }
+
+    #[test]
+    fn heaviest_first() {
+        let tasks = [task(0, 0, 1.0), task(0, 1, 8.0), task(1, 0, 4.0)];
+        assert_eq!(lpt_order(&tasks), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn ties_break_by_group_then_chunk() {
+        let tasks = [task(1, 0, 2.0), task(0, 1, 2.0), task(0, 0, 2.0)];
+        assert_eq!(lpt_order(&tasks), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(lpt_order(&[]).is_empty());
+    }
+}

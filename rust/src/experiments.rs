@@ -11,7 +11,7 @@ use crate::metrics::aggregate::AggregatedCurve;
 use crate::metrics::{aggregate_curves, LearningCurve, Welford};
 use crate::mlmc::theory::{TheoryParams, TheoryRow};
 use crate::mlmc::{fit_decay_rate, DecaySeries};
-use crate::parallel::CostModel;
+use crate::parallel::{CostModel, LevelJob, PramMachine};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::{GradBackend, NativeBackend};
 use crate::scenarios::build_scenario_or_err;
@@ -430,6 +430,155 @@ pub fn render_scenario_table(rows: &[ScenarioRow]) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Parallel sweep — measured pool makespan vs the PRAM model's prediction
+// ---------------------------------------------------------------------------
+
+/// One (method, worker count) cell of the parallel sweep: what the pool
+/// *measured* on this machine next to what the PRAM model *predicts* for
+/// the same schedule at the same P.
+#[derive(Debug, Clone)]
+pub struct ParallelCell {
+    pub method: Method,
+    pub workers: usize,
+    pub steps: usize,
+    /// Mean measured per-step makespan (seconds) over the training run.
+    pub measured_mean_s: f64,
+    /// Total measured makespan (seconds).
+    pub measured_total_s: f64,
+    /// Pool utilization: busy / (P x makespan), in [0, 1].
+    pub utilization: f64,
+    /// Mean per-step makespan predicted by greedy LPT on the PRAM model
+    /// (`PramMachine::step_makespan`), in model work units.
+    pub pram_makespan: f64,
+    /// Mean per-step Brent lower bound (`max(work/P, depth)`), in model
+    /// work units.
+    pub brent_bound: f64,
+    pub final_loss: f64,
+}
+
+/// The PRAM jobs of step `t` under `method` — the same workload the pool
+/// executes, expressed in samples for the counting scheduler.
+fn pram_jobs(tr: &Trainer, method: Method, t: u64) -> Vec<LevelJob> {
+    match method {
+        Method::Naive => vec![LevelJob {
+            level: tr.cfg.problem.lmax,
+            n_samples: tr.naive_chunks() * tr.backend().naive_chunk(),
+        }],
+        _ => tr
+            .jobs_for_step(t)
+            .iter()
+            .map(|j| LevelJob {
+                level: j.level,
+                n_samples: j.n_chunks * tr.backend().grad_chunk(j.level),
+            })
+            .collect(),
+    }
+}
+
+/// For every `P` in `workers` x every method: train on the native backend
+/// with a `P`-worker pool, and record the measured per-step makespan next
+/// to the PRAM-predicted one for the identical schedule. This is the
+/// experiment that turns the paper's parallel-complexity gap (DMLMC's
+/// per-iteration depth ~ O(1) vs MLMC's O(2^lmax)) into wall-clock
+/// numbers.
+pub fn parallel_sweep(
+    cfg: &ExperimentConfig,
+    workers: &[usize],
+    quiet: bool,
+) -> Result<Vec<ParallelCell>> {
+    anyhow::ensure!(!workers.is_empty(), "need at least one worker count");
+    let mut cells = Vec::new();
+    for &p in workers {
+        anyhow::ensure!(p > 0, "worker counts must be positive (got {p})");
+        for method in Method::all() {
+            let mut c = cfg.clone();
+            c.runtime.backend = Backend::Native;
+            c.execution.workers = p;
+            let mut tr = Trainer::from_config(&c, method, 0)?;
+            // Model predictions first: jobs_for_step is pure, so the
+            // schedule can be replayed without running anything.
+            let machine = PramMachine::new(p, CostModel::new(c.mlmc.c));
+            let mut pram_total = 0.0;
+            let mut brent_total = 0.0;
+            for t in 0..c.train.steps as u64 {
+                let jobs = pram_jobs(&tr, method, t);
+                pram_total += machine.step_makespan(&jobs);
+                brent_total += machine.brent_bound(&jobs);
+            }
+            let curve = tr.run()?;
+            let stats = tr
+                .exec_stats()
+                .expect("native backend always pools")
+                .clone();
+            let steps = c.train.steps as f64;
+            let cell = ParallelCell {
+                method,
+                workers: p,
+                steps: c.train.steps,
+                measured_mean_s: stats.mean_makespan(),
+                measured_total_s: stats.total_makespan(),
+                utilization: stats.utilization(),
+                pram_makespan: pram_total / steps,
+                brent_bound: brent_total / steps,
+                final_loss: curve.final_loss().unwrap_or(f64::NAN),
+            };
+            if !quiet {
+                eprintln!(
+                    "parallel_sweep: {method:<6} P={p}  measured {:.3} ms/step  \
+                     pram {:.0}  util {:.0}%",
+                    cell.measured_mean_s * 1e3,
+                    cell.pram_makespan,
+                    cell.utilization * 100.0
+                );
+            }
+            cells.push(cell);
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the sweep as text. Speedups are relative to the same method's
+/// cell at the smallest swept worker count, for measured and predicted
+/// makespans alike — the unit-free comparison between the pool and the
+/// PRAM model.
+pub fn render_parallel_table(cells: &[ParallelCell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>4} {:>14} {:>10} {:>12} {:>10} {:>8} {:>12}\n",
+        "method", "P", "meas ms/step", "meas spdup", "pram pred", "pram spdup",
+        "util", "final loss"
+    ));
+    let baseline = |m: Method| {
+        cells
+            .iter()
+            .filter(|c| c.method == m)
+            .min_by_key(|c| c.workers)
+    };
+    for c in cells {
+        let (ms, ps) = baseline(c.method)
+            .map(|b| {
+                (
+                    b.measured_mean_s / c.measured_mean_s.max(1e-12),
+                    b.pram_makespan / c.pram_makespan.max(1e-12),
+                )
+            })
+            .unwrap_or((f64::NAN, f64::NAN));
+        out.push_str(&format!(
+            "{:<8} {:>4} {:>14.3} {:>10.2} {:>12.0} {:>10.2} {:>7.0}% {:>12.4}\n",
+            c.method.name(),
+            c.workers,
+            c.measured_mean_s * 1e3,
+            ms,
+            c.pram_makespan,
+            ps,
+            c.utilization * 100.0,
+            c.final_loss
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -529,6 +678,57 @@ mod tests {
     fn scenario_sweep_rejects_unknown_names() {
         let names = vec!["nope-call".to_string()];
         assert!(scenario_sweep(&cfg(), &names, true).is_err());
+    }
+
+    #[test]
+    fn parallel_sweep_produces_all_cells_with_model_and_measurement() {
+        let mut c = cfg();
+        c.train.steps = 6;
+        c.train.eval_every = 6;
+        c.train.dmlmc_warmup = 0;
+        let cells = parallel_sweep(&c, &[1, 2], true).unwrap();
+        assert_eq!(cells.len(), 6); // 2 worker counts x 3 methods
+        for cell in &cells {
+            assert!(cell.measured_mean_s >= 0.0);
+            assert!(cell.measured_total_s.is_finite());
+            assert!(cell.final_loss.is_finite(), "{}", cell.method);
+            assert!((0.0..=1.0).contains(&cell.utilization));
+            // LPT makespan can never beat Brent's lower bound
+            assert!(
+                cell.pram_makespan >= cell.brent_bound - 1e-9,
+                "{} P={}: pram {} < brent {}",
+                cell.method,
+                cell.workers,
+                cell.pram_makespan,
+                cell.brent_bound
+            );
+        }
+        // The paper's claim at the model level, per cell: DMLMC's
+        // predicted per-step makespan is below standard MLMC's.
+        let pram = |m: Method, p: usize| {
+            cells
+                .iter()
+                .find(|c| c.method == m && c.workers == p)
+                .unwrap()
+                .pram_makespan
+        };
+        for p in [1usize, 2] {
+            assert!(
+                pram(Method::Dmlmc, p) < pram(Method::Mlmc, p),
+                "P={p}: dmlmc pram {} !< mlmc pram {}",
+                pram(Method::Dmlmc, p),
+                pram(Method::Mlmc, p)
+            );
+        }
+        let txt = render_parallel_table(&cells);
+        assert!(txt.contains("dmlmc"));
+        assert!(txt.lines().count() >= 7);
+    }
+
+    #[test]
+    fn parallel_sweep_rejects_bad_worker_lists() {
+        assert!(parallel_sweep(&cfg(), &[], true).is_err());
+        assert!(parallel_sweep(&cfg(), &[0], true).is_err());
     }
 
     #[test]

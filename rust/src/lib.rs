@@ -47,6 +47,23 @@
 //! variance-decay exponent `b` (Assumption 2) and tabulates the MLMC vs
 //! delayed-MLMC parallel cost.
 //!
+//! ## Parallel execution
+//!
+//! Beyond *modeling* parallel cost ([`parallel`]), the crate *executes*
+//! it: [`exec::WorkerPool`] shards each step's level jobs into per-chunk
+//! tasks, schedules them longest-first over `P` std-thread workers, and
+//! reduces results in fixed chunk order — so the assembled gradient is
+//! **bit-identical to sequential dispatch for every worker count** (the
+//! counter-based [`rng`] makes each chunk a pure function of its
+//! address). The pool is the default execution path for `Sync` backends
+//! (the native engine; `execution.workers` in TOML / `--workers` on the
+//! CLI, 0 = one per core); the PJRT runtime's `!Send` handles keep it on
+//! sequential dispatch. `repro parallel-sweep` sweeps P x method,
+//! records measured per-step makespan next to the PRAM model's
+//! [`parallel::PramMachine::step_makespan`] prediction, and emits
+//! `BENCH_parallel.json` — turning the paper's MLMC-vs-DMLMC
+//! parallel-cost gap into a wall-clock observable.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -73,6 +90,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod exec;
 pub mod experiments;
 pub mod hedging;
 pub mod metrics;

@@ -8,7 +8,7 @@ use anyhow::{anyhow, Result};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
 use dmlmc::experiments;
-use dmlmc::metrics::writer::{write_csv, write_jsonl};
+use dmlmc::metrics::writer::{write_csv, write_jsonl_exec};
 use dmlmc::util::cli::{Args, Command, Opt};
 
 fn root_command() -> Command {
@@ -27,6 +27,14 @@ fn root_command() -> Command {
             .opt(Opt::value("seeds", "override train.n_seeds"))
             .opt(Opt::value("lr", "override train.lr"))
             .opt(Opt::value("d", "override mlmc.d (delay exponent)"))
+            .opt(Opt::value(
+                "workers",
+                "pool worker threads (execution.workers): 0 = auto (one \
+                 per core), 1 = single pooled worker, n = n workers; \
+                 results are bit-identical for every value. For \
+                 parallel-sweep this is the comma-separated list of worker \
+                 counts to sweep",
+            ))
             .opt(Opt::value("out-dir", "output directory"))
             .opt(Opt::switch("quiet", "suppress progress output"))
     };
@@ -67,6 +75,14 @@ fn root_command() -> Command {
                 "all",
             )),
         ))
+        .subcommand(common(
+            Command::new(
+                "parallel-sweep",
+                "measured pool makespan vs PRAM prediction over P x method \
+                 (emits BENCH_parallel.json; defaults to 48 steps unless \
+                 --steps is given)",
+            ),
+        ))
         .subcommand(Command::new(
             "scenarios",
             "list the registered scenario keys",
@@ -77,6 +93,13 @@ fn root_command() -> Command {
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    load_config_with(args, false)
+}
+
+/// `workers_list_ok`: only `parallel-sweep` accepts the comma-list form
+/// of `--workers` (and parses it itself); everywhere else a list is a
+/// user error and must not silently fall back to the default.
+fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConfig> {
     // Whether the TOML itself pins `runtime.backend` (a config file that
     // stays silent about the backend is not a pin). Costs a second parse
     // of a sub-kilobyte file at startup; parse errors are left for
@@ -126,6 +149,18 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.parse_f64("d")? {
         cfg.mlmc.d = v;
     }
+    // `--workers` is a single count for training commands and a comma
+    // list for parallel-sweep (which parses the list itself).
+    if let Some(v) = args.get("workers") {
+        if !v.contains(',') {
+            cfg.execution.workers = args.parse_usize("workers")?.unwrap_or(0);
+        } else if !workers_list_ok {
+            return Err(anyhow!(
+                "--workers takes a single integer here (got `{v}`); the \
+                 comma-list form is only for `parallel-sweep`"
+            ));
+        }
+    }
     if let Some(v) = args.get("out-dir") {
         cfg.runtime.out_dir = PathBuf::from(v);
     }
@@ -163,7 +198,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed
     ));
     write_csv(&out, &curve)?;
-    write_jsonl(&cfg.runtime.out_dir.join("runs.jsonl"), &curve)?;
+    // Manifest rows carry pool telemetry keyed by stable worker indices.
+    write_jsonl_exec(
+        &cfg.runtime.out_dir.join("runs.jsonl"),
+        &curve,
+        tr.exec_stats(),
+    )?;
     eprintln!("wrote {}", out.display());
     Ok(())
 }
@@ -304,6 +344,67 @@ fn cmd_scenario_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_parallel_sweep(args: &Args) -> Result<()> {
+    use dmlmc::util::json::{obj, Json};
+    let mut cfg = load_config_with(args, true)?;
+    // The paper-scale default (400 steps x 10 seeds) is a figure budget,
+    // not a sweep budget; default to a short horizon unless the step
+    // count is pinned by --steps or an explicit `train.steps` in the
+    // --config TOML (same pin-detection convention as runtime.backend in
+    // load_config: a config file silent about steps is not a pin).
+    if args.get("steps").is_none() {
+        let toml_pins_steps = args
+            .get("config")
+            .and_then(|p| std::fs::read_to_string(p).ok())
+            .and_then(|t| dmlmc::util::toml::TomlDoc::parse(&t).ok())
+            .map(|doc| doc.get("train.steps").is_some())
+            .unwrap_or(false);
+        if !toml_pins_steps {
+            cfg.train.steps = 48;
+        }
+    }
+    let workers: Vec<usize> = args
+        .get_or("workers", "1,2,4,8")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad worker count `{s}`"))
+        })
+        .collect::<Result<_>>()?;
+    let cells = experiments::parallel_sweep(&cfg, &workers, args.flag("quiet"))?;
+    println!("{}", experiments::render_parallel_table(&cells));
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("method", Json::Str(c.method.name().to_string())),
+                ("workers", Json::Num(c.workers as f64)),
+                ("steps", Json::Num(c.steps as f64)),
+                ("measured_mean_makespan_s", Json::Num(c.measured_mean_s)),
+                ("measured_total_s", Json::Num(c.measured_total_s)),
+                ("utilization", Json::Num(c.utilization)),
+                ("pram_makespan", Json::Num(c.pram_makespan)),
+                ("brent_bound", Json::Num(c.brent_bound)),
+                ("final_loss", Json::Num(c.final_loss)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("parallel-sweep".to_string())),
+        ("scenario", Json::Str(cfg.scenario.clone())),
+        ("n_effective", Json::Num(cfg.mlmc.n_effective as f64)),
+        ("steps", Json::Num(cfg.train.steps as f64)),
+        ("cells", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_parallel.json";
+    std::fs::write(path, format!("{doc}\n"))
+        .map_err(|e| anyhow!("could not write {path}: {e}"))?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     use dmlmc::runtime::Manifest;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -343,6 +444,7 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(&args),
         "sweep" => cmd_sweep(&args),
         "scenario-sweep" => cmd_scenario_sweep(&args),
+        "parallel-sweep" => cmd_parallel_sweep(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {

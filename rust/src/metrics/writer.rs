@@ -3,12 +3,17 @@
 //! Output layout (under `--out-dir`):
 //!   `curve_<method>_seed<k>.csv`   one row per evaluation point
 //!   `runs.jsonl`                   one JSON object per completed run
+//!
+//! Run manifests are **reproducible across runs**: execution telemetry is
+//! keyed by the pool's stable worker indices (0..P), never by thread ids
+//! (which the OS hands out differently every run).
 
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use super::recorder::LearningCurve;
+use crate::exec::ExecStats;
 use crate::util::json::{obj, Json};
 
 /// Write one curve as CSV (header + one row per point).
@@ -30,6 +35,36 @@ pub fn write_csv(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
 
 /// Append one run-summary JSON object to a JSONL file.
 pub fn write_jsonl(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
+    write_jsonl_exec(path, curve, None)
+}
+
+/// The manifest's execution block: per-worker busy seconds indexed by the
+/// pool's stable worker id (array position == worker index), plus the
+/// run's makespan/utilization aggregates.
+fn exec_json(stats: &ExecStats) -> Json {
+    let busy: Vec<Json> = stats
+        .busy_per_worker
+        .iter()
+        .map(|d| Json::Num(d.as_secs_f64()))
+        .collect();
+    obj(vec![
+        ("workers", Json::Num(stats.busy_per_worker.len() as f64)),
+        ("steps", Json::Num(stats.steps as f64)),
+        ("tasks", Json::Num(stats.tasks as f64)),
+        ("total_makespan_s", Json::Num(stats.total_makespan())),
+        ("mean_step_makespan_s", Json::Num(stats.mean_makespan())),
+        ("utilization", Json::Num(stats.utilization())),
+        ("per_worker_busy_s", Json::Arr(busy)),
+    ])
+}
+
+/// Append one run-summary JSON object, optionally carrying the pool's
+/// execution telemetry ([`ExecStats`], worker-index keyed).
+pub fn write_jsonl_exec(
+    path: &Path,
+    curve: &LearningCurve,
+    exec: Option<&ExecStats>,
+) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         fs::create_dir_all(dir)?;
     }
@@ -62,6 +97,7 @@ pub fn write_jsonl(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
                 .map(|p| Json::Num(p.par_cost))
                 .unwrap_or(Json::Null),
         ),
+        ("exec", exec.map(exec_json).unwrap_or(Json::Null)),
     ]);
     writeln!(w, "{summary}")
 }
@@ -106,11 +142,16 @@ mod tests {
     use super::*;
     use crate::metrics::recorder::CurvePoint;
 
+    /// Unique-per-call temp dir from a process-stable counter — no
+    /// thread-id tagging (thread ids differ run to run; a monotone index
+    /// names the same dirs every run, matching the manifest policy).
     fn tempdir() -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
         let dir = std::env::temp_dir().join(format!(
-            "dmlmc_test_{}_{:?}",
+            "dmlmc_test_{}_{}",
             std::process::id(),
-            std::thread::current().id()
+            SEQ.fetch_add(1, Ordering::Relaxed)
         ));
         fs::create_dir_all(&dir).unwrap();
         dir
@@ -158,6 +199,46 @@ mod tests {
             assert_eq!(j.get("method").unwrap().as_str(), Some("mlmc"));
             assert_eq!(j.get("final_loss").unwrap().as_f64(), Some(1.25));
         }
+    }
+
+    #[test]
+    fn jsonl_exec_block_uses_stable_worker_indices() {
+        use std::time::Duration;
+        let path = tempdir().join("runs_exec.jsonl");
+        let _ = fs::remove_file(&path);
+        let mut stats = crate::exec::ExecStats::new(2);
+        stats.record(&crate::exec::StepExecReport {
+            workers: vec![
+                crate::exec::WorkerStat {
+                    worker: 0,
+                    busy: Duration::from_millis(30),
+                    tasks: 3,
+                },
+                crate::exec::WorkerStat {
+                    worker: 1,
+                    busy: Duration::from_millis(10),
+                    tasks: 1,
+                },
+            ],
+            makespan: Duration::from_millis(40),
+            n_tasks: 4,
+        });
+        write_jsonl_exec(&path, &curve(), Some(&stats)).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        let exec = j.get("exec").unwrap();
+        assert_eq!(exec.get("workers").unwrap().as_usize(), Some(2));
+        assert_eq!(exec.get("tasks").unwrap().as_usize(), Some(4));
+        let busy = exec.get("per_worker_busy_s").unwrap().as_arr().unwrap();
+        // array position IS the worker index — stable across runs
+        assert_eq!(busy.len(), 2);
+        assert!((busy[0].as_f64().unwrap() - 0.03).abs() < 1e-9);
+        assert!((busy[1].as_f64().unwrap() - 0.01).abs() < 1e-9);
+        // no exec stats -> explicit null, row still parses
+        write_jsonl(&path, &curve()).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        let j2 = Json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(j2.get("exec"), Some(&Json::Null));
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod cost;
 pub mod pram;
 
 pub use cost::{CostModel, StepCost};
-pub use pram::PramMachine;
+pub use pram::{LevelJob, PramMachine};

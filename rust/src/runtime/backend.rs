@@ -43,6 +43,15 @@ pub trait GradBackend {
         1
     }
 
+    /// This backend as a `Sync` trait object, if it is one — the gate for
+    /// pooled/threaded dispatch ([`crate::exec::WorkerPool`]). The default
+    /// is `None` (sequential dispatch only), which is correct for the
+    /// PJRT runtime whose handles are `!Send` raw C pointers; the native
+    /// engine overrides it.
+    fn sync_view(&self) -> Option<&(dyn GradBackend + Sync)> {
+        None
+    }
+
     /// One chunk of the coupled objective `Delta_l F` value-and-grad.
     /// `dw` is factor-major `[n_factors, grad_chunk(level),
     /// n_steps(level)]` fine-grid increments. Returns
@@ -171,6 +180,10 @@ impl GradBackend for NativeBackend {
 
     fn n_factors(&self) -> usize {
         self.scenario.sde.dim()
+    }
+
+    fn sync_view(&self) -> Option<&(dyn GradBackend + Sync)> {
+        Some(self)
     }
 
     fn grad_coupled_chunk(
@@ -405,6 +418,21 @@ mod tests {
         let norms = b.grad_norms_chunk(level, &params, &dwd).unwrap();
         assert_eq!(norms.len(), b.diag_chunk());
         assert!(norms.iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn native_backend_exposes_a_sync_view() {
+        let b = backend();
+        let sv = b.sync_view().expect("native engine is Sync");
+        assert_eq!(sv.name(), "native");
+        // the view is the same backend: identical chunk policy
+        assert_eq!(sv.grad_chunk(0), b.grad_chunk(0));
+        // non-default (2-factor) scenarios are Sync too
+        let h = NativeBackend::with_scenario(
+            Problem::default(),
+            crate::scenarios::build_scenario("heston-call", &Problem::default()).unwrap(),
+        );
+        assert!(h.sync_view().is_some());
     }
 
     #[test]

@@ -35,6 +35,29 @@
 //! ```
 //!
 //! CLI equivalent: `repro train --scenario heston-uo-call --method dmlmc`.
+//!
+//! # Parallel execution (`--workers`, `repro parallel-sweep`)
+//!
+//! Training/experiment subcommands accept `--workers <n>` (TOML:
+//! `execution.workers`): the worker-thread count of the chunk-sharded
+//! execution pool ([`crate::exec::WorkerPool`]). `0` (the default) means
+//! one worker per available core; `1` runs a single pooled worker.
+//! Gradients are **bit-identical for every worker count** — the pool
+//! reduces per-chunk results in a fixed order, and the counter-based RNG
+//! makes each chunk a pure function of its `(step, level, chunk)`
+//! address — so `--workers` is purely a throughput knob. It applies to
+//! `Sync` backends (`--backend native`); the PJRT runtime's `!Send`
+//! handles always dispatch sequentially.
+//!
+//! `repro parallel-sweep` measures the pool against the PRAM cost model:
+//! it trains every method at each `P` in `--workers <comma list>`
+//! (default `1,2,4,8` — on this one subcommand the flag is a list),
+//! prints measured vs predicted per-step makespan and utilization, and
+//! writes `BENCH_parallel.json`. Example:
+//!
+//! ```text
+//! repro parallel-sweep --workers 1,2,4,8 --steps 48 --n-effective 256
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;

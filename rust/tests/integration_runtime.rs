@@ -166,10 +166,14 @@ fn smoothness_zero_for_identical_params_via_hlo() {
 // ---------------------------------------------------------------------------
 
 fn clone_artifacts(dir: &std::path::Path) -> std::path::PathBuf {
+    // counter-named (not thread-id-named): stable across runs, unique
+    // within the process — same policy as the run manifests
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
     let dst = std::env::temp_dir().join(format!(
-        "dmlmc_corrupt_{}_{:?}",
+        "dmlmc_corrupt_{}_{}",
         std::process::id(),
-        std::thread::current().id()
+        SEQ.fetch_add(1, Ordering::Relaxed)
     ));
     let _ = std::fs::remove_dir_all(&dst);
     std::fs::create_dir_all(&dst).unwrap();

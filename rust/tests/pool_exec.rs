@@ -1,0 +1,241 @@
+//! Integration suite for the parallel execution runtime (`dmlmc::exec`):
+//! bit-exact equivalence of pooled and sequential dispatch across worker
+//! counts, oversubscription, schedule perturbation (chaos sleeps), the
+//! trainer-level plumbing, and the parallel-sweep driver.
+
+use dmlmc::config::ExperimentConfig;
+use dmlmc::coordinator::{
+    run_jobs, run_jobs_pool, run_jobs_pool_with_report, LevelJobSpec, Method,
+    Trainer,
+};
+use dmlmc::engine::mlp::init_params;
+use dmlmc::exec::WorkerPool;
+use dmlmc::hedging::Problem;
+use dmlmc::rng::BrownianSource;
+use dmlmc::runtime::NativeBackend;
+use dmlmc::scenarios::build_scenario;
+
+fn setup() -> (NativeBackend, BrownianSource, Vec<f32>) {
+    (
+        NativeBackend::new(Problem::default()),
+        BrownianSource::new(11),
+        init_params(0),
+    )
+}
+
+fn assert_bitwise_eq(
+    seq: &[dmlmc::coordinator::LevelResult],
+    pooled: &[dmlmc::coordinator::LevelResult],
+    tag: &str,
+) {
+    assert_eq!(seq.len(), pooled.len(), "{tag}: result count");
+    for (a, b) in seq.iter().zip(pooled) {
+        assert_eq!(a.level, b.level, "{tag}");
+        assert_eq!(a.n_samples, b.n_samples, "{tag} level {}", a.level);
+        assert_eq!(
+            a.loss_delta.to_bits(),
+            b.loss_delta.to_bits(),
+            "{tag}: loss at level {}",
+            a.level
+        );
+        assert_eq!(a.grad.len(), b.grad.len(), "{tag}");
+        for (i, (x, y)) in a.grad.iter().zip(&b.grad).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{tag}: grad[{i}] at level {}",
+                a.level
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_bitwise_equal_to_sequential_for_required_worker_counts() {
+    let (b, src, params) = setup();
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 3 },
+        LevelJobSpec { level: 2, n_chunks: 2 },
+        LevelJobSpec { level: 4, n_chunks: 1 },
+        LevelJobSpec { level: 6, n_chunks: 2 },
+    ];
+    let seq = run_jobs(&b, &src, 5, &params, &jobs).unwrap();
+    for workers in [1usize, 2, 3, 8] {
+        let mut pool = WorkerPool::new(workers);
+        let pooled =
+            run_jobs_pool(&b, &src, 5, &params, &jobs, &mut pool).unwrap();
+        assert_bitwise_eq(&seq, &pooled, &format!("P={workers}"));
+    }
+}
+
+#[test]
+fn oversubscribed_pool_matches_sequential() {
+    // More workers than total chunks: 8 workers, 2 chunks. Idle workers
+    // must spin down cleanly and the reduction must be unaffected.
+    let (b, src, params) = setup();
+    let jobs = vec![
+        LevelJobSpec { level: 1, n_chunks: 1 },
+        LevelJobSpec { level: 5, n_chunks: 1 },
+    ];
+    let seq = run_jobs(&b, &src, 3, &params, &jobs).unwrap();
+    let mut pool = WorkerPool::new(8);
+    let (pooled, report) =
+        run_jobs_pool_with_report(&b, &src, 3, &params, &jobs, &mut pool)
+            .unwrap();
+    assert_bitwise_eq(&seq, &pooled, "oversubscribed");
+    assert_eq!(report.workers.len(), 8);
+    let executed: usize = report.workers.iter().map(|w| w.tasks).sum();
+    assert_eq!(executed, 2);
+    // at least 6 workers never saw a task
+    let idle = report.workers.iter().filter(|w| w.tasks == 0).count();
+    assert!(idle >= 6, "idle workers: {idle}");
+}
+
+#[test]
+fn single_chunk_job_matches_sequential() {
+    let (b, src, params) = setup();
+    let jobs = vec![LevelJobSpec { level: 3, n_chunks: 1 }];
+    let seq = run_jobs(&b, &src, 0, &params, &jobs).unwrap();
+    for workers in [1usize, 4] {
+        let mut pool = WorkerPool::new(workers);
+        let pooled =
+            run_jobs_pool(&b, &src, 0, &params, &jobs, &mut pool).unwrap();
+        assert_bitwise_eq(&seq, &pooled, &format!("single-chunk P={workers}"));
+    }
+}
+
+#[test]
+fn random_per_task_sleeps_cannot_change_the_gradient() {
+    // Chaos mode sleeps a pseudorandom duration before every task,
+    // scrambling which worker runs what and in which real-time order.
+    // The pre-addressed slots + fixed-order reduction must erase all of
+    // it: bit-identical to sequential, for several chaos seeds.
+    let (b, src, params) = setup();
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 4 },
+        LevelJobSpec { level: 2, n_chunks: 3 },
+        LevelJobSpec { level: 5, n_chunks: 2 },
+    ];
+    let seq = run_jobs(&b, &src, 9, &params, &jobs).unwrap();
+    for chaos_seed in [0xA5u64, 0x5A, 0x77] {
+        let mut pool = WorkerPool::new(4);
+        pool.set_chaos_delays(chaos_seed, 400);
+        let pooled =
+            run_jobs_pool(&b, &src, 9, &params, &jobs, &mut pool).unwrap();
+        assert_bitwise_eq(&seq, &pooled, &format!("chaos seed {chaos_seed}"));
+    }
+}
+
+#[test]
+fn two_factor_scenario_pools_bitwise() {
+    // Heston (D = 2): factor-major increments flow through the pool
+    // closure exactly as through run_one.
+    let problem = Problem::default();
+    let b = NativeBackend::with_scenario(
+        problem,
+        build_scenario("heston-call", &problem).unwrap(),
+    );
+    let src = BrownianSource::new(4);
+    let params = init_params(2);
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 2 },
+        LevelJobSpec { level: 3, n_chunks: 2 },
+    ];
+    let seq = run_jobs(&b, &src, 1, &params, &jobs).unwrap();
+    for workers in [2usize, 5] {
+        let mut pool = WorkerPool::new(workers);
+        let pooled =
+            run_jobs_pool(&b, &src, 1, &params, &jobs, &mut pool).unwrap();
+        assert_bitwise_eq(&seq, &pooled, &format!("heston P={workers}"));
+    }
+}
+
+#[test]
+fn trainer_curves_identical_across_worker_counts_with_chaos_free_pool() {
+    // End-to-end: full DMLMC training trajectories at P = 1 and P = 3
+    // agree to the last bit (losses come from eval on fixed streams, so
+    // equality means every parameter update matched).
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.train.steps = 8;
+    cfg.train.eval_every = 2;
+    cfg.mlmc.n_effective = 64;
+    let run = |workers: usize| {
+        let mut c = cfg.clone();
+        c.execution.workers = workers;
+        let mut tr = Trainer::from_config(&c, Method::Dmlmc, 3).unwrap();
+        let curve = tr.run().unwrap();
+        (curve, tr.params.clone())
+    };
+    let (c1, p1) = run(1);
+    let (c3, p3) = run(3);
+    assert_eq!(p1.len(), p3.len());
+    for (a, b) in p1.iter().zip(&p3) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in c1.points.iter().zip(&c3.points) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+}
+
+#[test]
+fn exec_report_telemetry_is_consistent() {
+    let (b, src, params) = setup();
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 4 },
+        LevelJobSpec { level: 6, n_chunks: 1 },
+    ];
+    let mut pool = WorkerPool::new(2);
+    let (_, report) =
+        run_jobs_pool_with_report(&b, &src, 0, &params, &jobs, &mut pool)
+            .unwrap();
+    assert_eq!(report.n_tasks, 5);
+    assert_eq!(report.workers.len(), 2);
+    // stable indices 0..P in order
+    for (i, w) in report.workers.iter().enumerate() {
+        assert_eq!(w.worker, i);
+    }
+    // busy time is measured inside the makespan window
+    assert!(report.busy_total().as_secs_f64() > 0.0);
+    let max_busy = report
+        .workers
+        .iter()
+        .map(|w| w.busy.as_secs_f64())
+        .fold(0.0f64, f64::max);
+    assert!(
+        report.makespan.as_secs_f64() >= max_busy * 0.5,
+        "makespan {} vs max busy {max_busy}",
+        report.makespan.as_secs_f64()
+    );
+    // a second dispatch accumulates into the same stats
+    let _ = run_jobs_pool(&b, &src, 1, &params, &jobs, &mut pool).unwrap();
+    assert_eq!(pool.stats().steps, 2);
+    assert_eq!(pool.stats().tasks, 10);
+}
+
+#[test]
+fn parallel_sweep_end_to_end_smoke() {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.train.steps = 4;
+    cfg.train.eval_every = 4;
+    cfg.mlmc.n_effective = 32;
+    let cells =
+        dmlmc::experiments::parallel_sweep(&cfg, &[2], true).unwrap();
+    assert_eq!(cells.len(), 3); // one P, three methods
+    for cell in &cells {
+        assert_eq!(cell.workers, 2);
+        assert!(cell.measured_total_s >= 0.0);
+        assert!(cell.pram_makespan > 0.0);
+        assert!(cell.brent_bound > 0.0);
+    }
+    // model-level ordering: dmlmc's predicted mean per-step makespan is
+    // the smallest of the three methods
+    let pram = |m: Method| {
+        cells
+            .iter()
+            .find(|c| c.method == m)
+            .unwrap()
+            .pram_makespan
+    };
+    assert!(pram(Method::Dmlmc) < pram(Method::Mlmc));
+    assert!(pram(Method::Mlmc) <= pram(Method::Naive));
+}
