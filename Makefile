@@ -11,7 +11,7 @@
 
 ARTIFACTS_DIR := rust/artifacts
 
-.PHONY: artifacts build test fmt clippy bench bench-parallel clean
+.PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -35,6 +35,11 @@ bench:
 # rust/BENCH_parallel.json (see `repro parallel-sweep --help`).
 bench-parallel:
 	cd rust && cargo run --release --bin repro -- parallel-sweep --quiet
+
+# Resident vs scoped (spawn-per-dispatch) pool overhead on light
+# level-0-only dispatches (see `repro exec-bench --help`).
+bench-exec:
+	cd rust && cargo run --release --bin repro -- exec-bench
 
 clean:
 	rm -rf $(ARTIFACTS_DIR)

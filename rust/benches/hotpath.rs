@@ -11,6 +11,8 @@
 //!
 //! `cargo bench --bench hotpath`
 
+use std::sync::Arc;
+
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{run_jobs_pool, LevelJobSpec, Method, Trainer};
@@ -170,15 +172,15 @@ fn main() {
                 n_chunks: if level <= 1 { 2 } else { 1 },
             })
             .collect();
-        let cases: Vec<(&'static str, usize, NativeBackend)> = vec![
-            ("bs-call", 1, NativeBackend::new(problem)),
+        let cases: Vec<(&'static str, usize, Arc<NativeBackend>)> = vec![
+            ("bs-call", 1, Arc::new(NativeBackend::new(problem))),
             (
                 "heston-call",
                 2,
-                NativeBackend::with_scenario(
+                Arc::new(NativeBackend::with_scenario(
                     problem,
                     build_scenario("heston-call", &problem).unwrap(),
-                ),
+                )),
             ),
         ];
         for (name, dim, backend) in &cases {

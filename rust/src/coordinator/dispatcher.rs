@@ -6,18 +6,24 @@
 //!
 //! * [`run_jobs`] — sequential; works with any backend, including the
 //!   PJRT runtime (whose handles are `!Send` — raw C pointers);
-//! * [`run_jobs_pool`] — the chunk-sharded worker pool
+//! * [`run_jobs_pool`] — the chunk-sharded **resident** worker pool
 //!   ([`crate::exec::WorkerPool`]): every job is split into per-chunk
-//!   tasks, LPT-scheduled over P workers, and reduced in fixed chunk
-//!   order — bit-identical to [`run_jobs`] for every worker count. The
-//!   default path for `Sync` backends (the native engine).
-//! * [`run_jobs_threaded`] — the historical one-scoped-thread-per-level
-//!   strategy, now a thin wrapper over the pool with `workers = n_jobs`
-//!   (one concurrency code path instead of two).
+//!   tasks, LPT-scheduled over P parked-between-dispatches workers, and
+//!   reduced in fixed chunk order — bit-identical to [`run_jobs`] for
+//!   every worker count. The default path for shareable backends (the
+//!   native engine, via `GradBackend::into_shared`). The pool workers
+//!   are `'static`, so the dispatch closure captures `Arc`-cloned
+//!   backend/params snapshots rather than scope-borrowed references.
+//! * [`run_jobs_threaded`] — the historical "threaded" entry point, a
+//!   thin wrapper over [`run_jobs_pool`] on a **caller-supplied** pool
+//!   (one concurrency code path instead of two; a fresh pool per call
+//!   used to silently drop the accumulated [`crate::exec::ExecStats`]).
 //!
 //! Determinism across strategies comes from counter-based RNG: the batch
 //! for `(step, level, chunk)` is a pure function of its address, not of
 //! execution order.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -111,9 +117,13 @@ pub fn run_jobs<B: GradBackend + ?Sized>(
 }
 
 /// Shard `jobs` into per-chunk pool tasks. The LPT weight is the chunk's
-/// row-work `batch x n_steps` — the same `2^{c l}`-shaped cost the PRAM
-/// model assigns per sample (for c = 1), so the pool's greedy schedule
-/// mirrors the modeled one.
+/// *coupled* row-work `batch x (n_steps(l) + n_steps(l-1))`: a level-`l >
+/// 0` chunk simulates both the fine and the coarse grid of every coupled
+/// sample, so both halves count (weighting by the fine grid alone
+/// under-weights coupled levels ~1.5x relative to level 0, skewing the
+/// greedy schedule and the measured-vs-PRAM comparison). Level 0 has no
+/// coarse half. Weights only order the queue — results are bit-identical
+/// regardless.
 fn chunk_tasks<B: GradBackend + ?Sized>(
     backend: &B,
     problem: &Problem,
@@ -121,8 +131,13 @@ fn chunk_tasks<B: GradBackend + ?Sized>(
 ) -> Vec<ChunkTask> {
     let mut tasks = Vec::new();
     for (group, &spec) in jobs.iter().enumerate() {
+        let coarse_steps = if spec.level > 0 {
+            problem.n_steps(spec.level - 1)
+        } else {
+            0
+        };
         let weight = backend.grad_chunk(spec.level) as f64
-            * problem.n_steps(spec.level) as f64;
+            * (problem.n_steps(spec.level) + coarse_steps) as f64;
         for chunk in 0..spec.n_chunks {
             tasks.push(ChunkTask {
                 group,
@@ -136,21 +151,41 @@ fn chunk_tasks<B: GradBackend + ?Sized>(
 }
 
 /// Pooled dispatch with execution telemetry: shard into chunk tasks, run
-/// on the pool, reduce bit-exactly (see [`crate::exec`]). Results ordered
-/// like `jobs`; the report carries measured makespan and per-worker busy
-/// time for this step.
-pub fn run_jobs_pool_with_report<B: GradBackend + Sync + ?Sized>(
-    backend: &B,
+/// on the (resident) pool, reduce bit-exactly (see [`crate::exec`]).
+/// Results ordered like `jobs`; the report carries measured makespan,
+/// per-worker busy time and dispatch overhead for this step.
+///
+/// The backend arrives as an `Arc` because the pool's resident workers
+/// need a `'static` job: the dispatch closure captures an `Arc` clone of
+/// the backend plus copied/`Arc`-snapshotted inputs (`Problem` and
+/// `BrownianSource` are `Copy`; `params` is snapshotted once per
+/// dispatch).
+pub fn run_jobs_pool_with_report<B>(
+    backend: &Arc<B>,
     src: &BrownianSource,
     step: u64,
     params: &[f32],
     jobs: &[LevelJobSpec],
     pool: &mut WorkerPool,
-) -> Result<(Vec<LevelResult>, StepExecReport)> {
+) -> Result<(Vec<LevelResult>, StepExecReport)>
+where
+    B: GradBackend + Send + Sync + ?Sized + 'static,
+{
     let problem = *backend.problem();
-    let tasks = chunk_tasks(backend, &problem, jobs);
-    let (reduced, report) = pool.execute(&tasks, jobs.len(), |t| {
-        grad_chunk_at(backend, &problem, src, step, t.level, t.chunk, params)
+    let tasks = chunk_tasks(&**backend, &problem, jobs);
+    let shared = backend.clone();
+    let src = *src;
+    let params_snap: Arc<[f32]> = Arc::from(params);
+    let (reduced, report) = pool.execute(&tasks, jobs.len(), move |t: &ChunkTask| {
+        grad_chunk_at(
+            &*shared,
+            &problem,
+            &src,
+            step,
+            t.level,
+            t.chunk,
+            &params_snap,
+        )
     })?;
     let results = jobs
         .iter()
@@ -167,32 +202,41 @@ pub fn run_jobs_pool_with_report<B: GradBackend + Sync + ?Sized>(
 
 /// Pooled dispatch (telemetry discarded). Bit-identical to [`run_jobs`]
 /// for every worker count.
-pub fn run_jobs_pool<B: GradBackend + Sync + ?Sized>(
-    backend: &B,
+pub fn run_jobs_pool<B>(
+    backend: &Arc<B>,
     src: &BrownianSource,
     step: u64,
     params: &[f32],
     jobs: &[LevelJobSpec],
     pool: &mut WorkerPool,
-) -> Result<Vec<LevelResult>> {
+) -> Result<Vec<LevelResult>>
+where
+    B: GradBackend + Send + Sync + ?Sized + 'static,
+{
     run_jobs_pool_with_report(backend, src, step, params, jobs, pool)
         .map(|(results, _)| results)
 }
 
-/// Threaded dispatch with the historical *worker count* (one worker per
-/// level job), as a thin wrapper over the pool. Note the granularity is
-/// the pool's, not the old per-level one: tasks are per-chunk and
-/// LPT-ordered, so one level's chunks may spread across several workers.
-/// Results are bit-identical to [`run_jobs`] either way.
-pub fn run_jobs_threaded<B: GradBackend + Sync>(
-    backend: &B,
+/// The historical "threaded" entry point, as a thin wrapper over the
+/// pool. The pool is **caller-supplied** (it used to build a fresh
+/// `WorkerPool` per call, which silently dropped the `ExecStats`
+/// accumulated across calls — telemetry now survives in `pool.stats()`).
+/// Note the granularity is the pool's, not the old per-level one: tasks
+/// are per-chunk and LPT-ordered, so one level's chunks may spread
+/// across several workers. Results are bit-identical to [`run_jobs`]
+/// either way.
+pub fn run_jobs_threaded<B>(
+    backend: &Arc<B>,
     src: &BrownianSource,
     step: u64,
     params: &[f32],
     jobs: &[LevelJobSpec],
-) -> Result<Vec<LevelResult>> {
-    let mut pool = WorkerPool::new(jobs.len().max(1));
-    run_jobs_pool(backend, src, step, params, jobs, &mut pool)
+    pool: &mut WorkerPool,
+) -> Result<Vec<LevelResult>>
+where
+    B: GradBackend + Send + Sync + ?Sized + 'static,
+{
+    run_jobs_pool(backend, src, step, params, jobs, pool)
 }
 
 #[cfg(test)]
@@ -202,9 +246,9 @@ mod tests {
     use crate::hedging::Problem;
     use crate::runtime::NativeBackend;
 
-    fn setup() -> (NativeBackend, BrownianSource, Vec<f32>) {
+    fn setup() -> (Arc<NativeBackend>, BrownianSource, Vec<f32>) {
         (
-            NativeBackend::new(Problem::default()),
+            Arc::new(NativeBackend::new(Problem::default())),
             BrownianSource::new(42),
             init_params(0),
         )
@@ -221,7 +265,7 @@ mod tests {
     #[test]
     fn sequential_results_are_sane() {
         let (b, src, params) = setup();
-        let out = run_jobs(&b, &src, 0, &params, &jobs()).unwrap();
+        let out = run_jobs(&*b, &src, 0, &params, &jobs()).unwrap();
         assert_eq!(out.len(), 3);
         assert_eq!(out[0].level, 0);
         assert_eq!(out[0].n_samples, 2 * b.grad_chunk(0));
@@ -235,8 +279,10 @@ mod tests {
     #[test]
     fn threaded_matches_sequential_bitwise() {
         let (b, src, params) = setup();
-        let seq = run_jobs(&b, &src, 7, &params, &jobs()).unwrap();
-        let thr = run_jobs_threaded(&b, &src, 7, &params, &jobs()).unwrap();
+        let seq = run_jobs(&*b, &src, 7, &params, &jobs()).unwrap();
+        let mut pool = WorkerPool::new(jobs().len());
+        let thr =
+            run_jobs_threaded(&b, &src, 7, &params, &jobs(), &mut pool).unwrap();
         for (a, c) in seq.iter().zip(&thr) {
             assert_eq!(a.level, c.level);
             assert_eq!(a.loss_delta, c.loss_delta);
@@ -245,9 +291,25 @@ mod tests {
     }
 
     #[test]
+    fn threaded_stats_survive_consecutive_calls() {
+        // Regression: run_jobs_threaded used to build a fresh WorkerPool
+        // per call, silently dropping the ExecStats accumulated so far.
+        let (b, src, params) = setup();
+        let mut pool = WorkerPool::new(2);
+        for step in 0..3 {
+            run_jobs_threaded(&b, &src, step, &params, &jobs(), &mut pool)
+                .unwrap();
+        }
+        assert_eq!(pool.stats().steps, 3);
+        assert_eq!(pool.stats().tasks, 3 * 4); // jobs() has 4 chunks
+        assert_eq!(pool.stats().makespans.len(), 3);
+        assert_eq!(pool.stats().overheads.len(), 3);
+    }
+
+    #[test]
     fn pool_matches_sequential_bitwise_for_every_worker_count() {
         let (b, src, params) = setup();
-        let seq = run_jobs(&b, &src, 7, &params, &jobs()).unwrap();
+        let seq = run_jobs(&*b, &src, 7, &params, &jobs()).unwrap();
         for workers in [1usize, 2, 3, 8] {
             let mut pool = WorkerPool::new(workers);
             let out =
@@ -268,30 +330,35 @@ mod tests {
         let (_, report) =
             run_jobs_pool_with_report(&b, &src, 0, &params, &jobs(), &mut pool)
                 .unwrap();
-        // jobs() has 2 + 1 + 1 = 4 chunks
+        // jobs() has 2 + 1 + 1 = 4 chunks. Assert on task *accounting*,
+        // never on wall-clock positivity: under a coarse clock a fast
+        // dispatch can legitimately measure a zero makespan.
         assert_eq!(report.n_tasks, 4);
         let executed: usize = report.workers.iter().map(|w| w.tasks).sum();
         assert_eq!(executed, 4);
-        assert!(report.makespan.as_secs_f64() > 0.0);
-        assert!(report.utilization() > 0.0 && report.utilization() <= 1.0);
+        assert_eq!(report.workers.len(), 2);
+        assert!(report.utilization() <= 1.0);
+        assert!(report.makespan >= report.dispatch_overhead());
+        assert_eq!(pool.stats().steps, 1);
+        assert_eq!(pool.stats().tasks, 4);
     }
 
     #[test]
     fn chunk_tasks_shard_and_weight_by_level() {
         let (b, _, _) = setup();
         let problem = *b.problem();
-        let tasks = chunk_tasks(&b, &problem, &jobs());
+        let tasks = chunk_tasks(&*b, &problem, &jobs());
         assert_eq!(tasks.len(), 4);
+        // level 0 has no coarse half
         assert_eq!(tasks[0], ChunkTask {
             group: 0,
             chunk: 0,
             level: 0,
             weight: (b.grad_chunk(0) * problem.n_steps(0)) as f64,
         });
-        // The chunk policy keeps batch x n_steps at 512 rows for levels
-        // <= 4 (uniform chunks), so only deep levels outweigh them.
+        // deep coupled levels outweigh level-0 chunks
         let deep = chunk_tasks(
-            &b,
+            &*b,
             &problem,
             &[LevelJobSpec { level: 6, n_chunks: 1 }],
         );
@@ -299,18 +366,48 @@ mod tests {
     }
 
     #[test]
+    fn chunk_task_weight_counts_both_coupled_grids() {
+        // Pin the per-level weight formula: batch x (n_steps(l) +
+        // n_steps(l-1)) for l > 0, batch x n_steps(0) at the base level.
+        let (b, _, _) = setup();
+        let problem = *b.problem();
+        for level in 0..=problem.lmax {
+            let t = chunk_tasks(
+                &*b,
+                &problem,
+                &[LevelJobSpec { level, n_chunks: 1 }],
+            );
+            let coarse = if level > 0 { problem.n_steps(level - 1) } else { 0 };
+            let want =
+                (b.grad_chunk(level) * (problem.n_steps(level) + coarse)) as f64;
+            assert_eq!(t[0].weight, want, "level {level}");
+        }
+        // With the uniform 512-fine-row chunk policy (levels <= 4), a
+        // coupled chunk carries exactly 1.5x the row-work of a level-0
+        // chunk — the imbalance the old fine-grid-only weight ignored.
+        let l0 = chunk_tasks(&*b, &problem, &[LevelJobSpec { level: 0, n_chunks: 1 }]);
+        let l2 = chunk_tasks(&*b, &problem, &[LevelJobSpec { level: 2, n_chunks: 1 }]);
+        assert_eq!(
+            (b.grad_chunk(2) * problem.n_steps(2)) as f64,
+            l0[0].weight,
+            "chunk policy changed: fine rows no longer uniform"
+        );
+        assert_eq!(l2[0].weight, 1.5 * l0[0].weight);
+    }
+
+    #[test]
     fn distinct_steps_get_distinct_samples() {
         let (b, src, params) = setup();
         let spec = [LevelJobSpec { level: 1, n_chunks: 1 }];
-        let a = run_jobs(&b, &src, 0, &params, &spec).unwrap();
-        let c = run_jobs(&b, &src, 1, &params, &spec).unwrap();
+        let a = run_jobs(&*b, &src, 0, &params, &spec).unwrap();
+        let c = run_jobs(&*b, &src, 1, &params, &spec).unwrap();
         assert_ne!(a[0].grad, c[0].grad);
     }
 
     #[test]
     fn empty_jobs_ok() {
         let (b, src, params) = setup();
-        assert!(run_jobs(&b, &src, 0, &params, &[]).unwrap().is_empty());
+        assert!(run_jobs(&*b, &src, 0, &params, &[]).unwrap().is_empty());
         let mut pool = WorkerPool::new(2);
         assert!(run_jobs_pool(&b, &src, 0, &params, &[], &mut pool)
             .unwrap()

@@ -5,9 +5,10 @@
 //! reused from [`cache::GradientCache`]; refreshes for the due levels are
 //! independent jobs ([`dispatcher`]) whose parallel cost is accounted as
 //! the max depth over the concurrently running levels
-//! ([`crate::parallel::cost`]) and — on `Sync` backends — actually
-//! executed across P workers by the chunk-sharded pool ([`crate::exec`]),
-//! bit-identically to sequential dispatch. [`trainer::Trainer`] ties it
+//! ([`crate::parallel::cost`]) and — on shareable (`Arc`-held) backends —
+//! actually executed across P resident workers by the chunk-sharded pool
+//! ([`crate::exec`]), bit-identically to sequential dispatch.
+//! [`trainer::Trainer`] ties it
 //! together and also implements the two baselines (naive SGD, standard
 //! MLMC SGD).
 

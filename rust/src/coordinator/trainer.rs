@@ -10,6 +10,8 @@
 //!    evaluation set (same across steps, methods and seeds — the
 //!    learning-curve y-axis of Figure 2).
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use super::cache::GradientCache;
@@ -27,14 +29,40 @@ use crate::mlmc::LevelAllocation;
 use crate::optim::{self, Optimizer};
 use crate::parallel::{CostModel, StepCost};
 use crate::rng::{brownian::Purpose, BrownianSource};
-use crate::runtime::{GradBackend, NativeBackend, XlaRuntime};
+use crate::runtime::{GradBackend, NativeBackend, SharedBackend, XlaRuntime};
+
+/// How the trainer holds its backend. Shareable backends (the native
+/// engine) live behind an `Arc` so the resident pool's `'static` dispatch
+/// closures can co-own them; `!Send` backends (PJRT — raw C pointers)
+/// stay boxed and dispatch sequentially. Decided once at construction via
+/// [`GradBackend::into_shared`].
+enum BackendHandle {
+    Shared(SharedBackend),
+    Local(Box<dyn GradBackend>),
+}
+
+impl BackendHandle {
+    fn as_dyn(&self) -> &dyn GradBackend {
+        match self {
+            BackendHandle::Shared(b) => &**b,
+            BackendHandle::Local(b) => &**b,
+        }
+    }
+
+    fn shared(&self) -> Option<&SharedBackend> {
+        match self {
+            BackendHandle::Shared(b) => Some(b),
+            BackendHandle::Local(_) => None,
+        }
+    }
+}
 
 /// One training run: a method, a seed, a backend, a config.
 pub struct Trainer {
     pub cfg: ExperimentConfig,
     pub method: Method,
     pub seed: u64,
-    backend: Box<dyn GradBackend>,
+    backend: BackendHandle,
     schedule: DelayedSchedule,
     cache: GradientCache,
     /// Chunks (not samples) to run per level refresh.
@@ -44,9 +72,11 @@ pub struct Trainer {
     optimizer: Box<dyn Optimizer>,
     src: BrownianSource,
     cost_model: CostModel,
-    /// Chunk-sharded execution pool — `Some` for `Sync` backends (the
-    /// default path; bit-identical to sequential dispatch), `None` for
-    /// `!Send` backends (PJRT), which always dispatch sequentially.
+    /// Chunk-sharded resident execution pool — `Some` for shareable
+    /// (`Arc`-held) backends (the default path; bit-identical to
+    /// sequential dispatch), `None` for `!Send` backends (PJRT), which
+    /// always dispatch sequentially. The pool's worker threads are
+    /// spawned once here and live until the trainer drops.
     pool: Option<WorkerPool>,
     pub params: Vec<f32>,
     cumulative: StepCost,
@@ -62,18 +92,29 @@ impl Trainer {
         backend: Box<dyn GradBackend>,
     ) -> Result<Trainer> {
         cfg.validate().map_err(|e| anyhow!(e))?;
-        let problem = *backend.problem();
+        // Decide the ownership model up front: shareable backends go
+        // behind an Arc (resident-pool dispatch), the rest stay boxed
+        // (sequential dispatch).
+        let backend = match backend.into_shared() {
+            Ok(shared) => BackendHandle::Shared(shared),
+            Err(local) => BackendHandle::Local(local),
+        };
+        let problem = *backend.as_dyn().problem();
         let lmax = problem.lmax;
 
         // Per-level sample allocation, rounded up to backend chunk sizes.
         let alloc = LevelAllocation::paper(lmax, cfg.mlmc.n_effective, cfg.mlmc.b, cfg.mlmc.c);
-        let chunk_sizes: Vec<usize> = (0..=lmax).map(|l| backend.grad_chunk(l)).collect();
+        let chunk_sizes: Vec<usize> =
+            (0..=lmax).map(|l| backend.as_dyn().grad_chunk(l)).collect();
         let rounded = alloc.round_to_chunks(&chunk_sizes);
         let chunks_per_level: Vec<usize> = (0..=lmax)
             .map(|l| rounded.n(l) / chunk_sizes[l])
             .collect();
-        let naive_chunks =
-            cfg.mlmc.n_effective.div_ceil(backend.naive_chunk()).max(1);
+        let naive_chunks = cfg
+            .mlmc
+            .n_effective
+            .div_ceil(backend.as_dyn().naive_chunk())
+            .max(1);
 
         let schedule = match method {
             Method::Dmlmc => DelayedSchedule::new(lmax, cfg.mlmc.d),
@@ -82,14 +123,14 @@ impl Trainer {
         let optimizer = optim::by_name(&cfg.train.optimizer, cfg.train.lr)
             .ok_or_else(|| anyhow!("unknown optimizer `{}`", cfg.train.optimizer))?;
         let params = engine::mlp::init_params(seed);
-        let n_params = backend.n_params();
+        let n_params = backend.as_dyn().n_params();
         anyhow::ensure!(
             params.len() == n_params,
             "backend n_params {n_params} != engine {}",
             params.len()
         );
         let pool = backend
-            .sync_view()
+            .shared()
             .map(|_| WorkerPool::new(cfg.execution.resolved_workers()));
 
         Ok(Trainer {
@@ -143,7 +184,7 @@ impl Trainer {
     /// The level jobs step `t` must run.
     pub fn jobs_for_step(&self, t: u64) -> Vec<LevelJobSpec> {
         let all_levels = |tr: &Trainer| -> Vec<LevelJobSpec> {
-            (0..=tr.backend.problem().lmax)
+            (0..=tr.backend.as_dyn().problem().lmax)
                 .map(|level| LevelJobSpec {
                     level,
                     n_chunks: tr.chunks_per_level[level],
@@ -174,11 +215,11 @@ impl Trainer {
             Method::Naive => self.naive_gradient(t)?,
             Method::Mlmc | Method::Dmlmc => {
                 let jobs = self.jobs_for_step(t);
-                let results = if let (Some(sb), Some(pool)) =
-                    (self.backend.sync_view(), self.pool.as_mut())
+                let results = if let (Some(shared), Some(pool)) =
+                    (self.backend.shared(), self.pool.as_mut())
                 {
                     let (results, _report) = run_jobs_pool_with_report(
-                        sb,
+                        shared,
                         &self.src,
                         t,
                         &self.params,
@@ -187,7 +228,13 @@ impl Trainer {
                     )?;
                     results
                 } else {
-                    run_jobs(&*self.backend, &self.src, t, &self.params, &jobs)?
+                    run_jobs(
+                        self.backend.as_dyn(),
+                        &self.src,
+                        t,
+                        &self.params,
+                        &jobs,
+                    )?
                 };
                 let cost_jobs: Vec<(usize, usize)> =
                     results.iter().map(|r| (r.level, r.n_samples)).collect();
@@ -229,41 +276,46 @@ impl Trainer {
     /// pool when one exists; the chunk-ordered reduction keeps the result
     /// bit-identical to the sequential loop.
     fn naive_gradient(&mut self, t: u64) -> Result<(f64, Vec<f32>, StepCost)> {
-        let problem = *self.backend.problem();
+        let problem = *self.backend.as_dyn().problem();
         let lmax = problem.lmax;
-        let batch = self.backend.naive_chunk();
+        let batch = self.backend.as_dyn().naive_chunk();
         let n_steps = problem.n_steps(lmax);
         let dt = problem.dt(lmax);
-        let n_factors = self.backend.n_factors();
+        let n_factors = self.backend.as_dyn().n_factors();
         let n_chunks = self.naive_chunks;
         let n_samples = n_chunks * batch;
         let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
         let src = self.src;
-        if let (Some(sb), Some(pool)) =
-            (self.backend.sync_view(), self.pool.as_mut())
+        if let (Some(shared), Some(pool)) =
+            (self.backend.shared(), self.pool.as_mut())
         {
+            // finest grid only, no coupling — no coarse half in the weight
             let weight = batch as f64 * n_steps as f64;
             let tasks: Vec<ChunkTask> = (0..n_chunks)
                 .map(|chunk| ChunkTask { group: 0, chunk, level: lmax, weight })
                 .collect();
-            let params = &self.params;
-            let (mut reduced, _report) = pool.execute(&tasks, 1, |task| {
-                let dw = src.increments_multi(
-                    Purpose::Grad,
-                    t,
-                    lmax as u32,
-                    task.chunk as u32,
-                    batch,
-                    n_steps,
-                    dt,
-                    n_factors,
-                );
-                sb.grad_naive_chunk(params, &dw)
-            })?;
+            // The resident workers need a 'static job: co-own the backend
+            // and snapshot the parameters for this dispatch.
+            let backend = shared.clone();
+            let params_snap: Arc<[f32]> = Arc::from(self.params.as_slice());
+            let (mut reduced, _report) =
+                pool.execute(&tasks, 1, move |task: &ChunkTask| {
+                    let dw = src.increments_multi(
+                        Purpose::Grad,
+                        t,
+                        lmax as u32,
+                        task.chunk as u32,
+                        batch,
+                        n_steps,
+                        dt,
+                        n_factors,
+                    );
+                    backend.grad_naive_chunk(&params_snap, &dw)
+                })?;
             let (loss, grad) = reduced.pop().expect("one reduction group");
             return Ok((loss, grad, cost));
         }
-        let mut acc = ChunkAccumulator::new(self.backend.n_params());
+        let mut acc = ChunkAccumulator::new(self.backend.as_dyn().n_params());
         for chunk in 0..n_chunks {
             let dw = src.increments_multi(
                 Purpose::Grad,
@@ -275,7 +327,10 @@ impl Trainer {
                 dt,
                 n_factors,
             );
-            let (loss, grad) = self.backend.grad_naive_chunk(&self.params, &dw)?;
+            let (loss, grad) = self
+                .backend
+                .as_dyn()
+                .grad_naive_chunk(&self.params, &dw)?;
             acc.add(loss, &grad);
         }
         let (loss, grad) = acc.finish();
@@ -284,10 +339,11 @@ impl Trainer {
 
     /// Held-out loss on the FIXED evaluation set (chunk-averaged).
     pub fn eval_loss(&self) -> Result<f64> {
-        let lmax = self.backend.problem().lmax;
-        let batch = self.backend.eval_chunk();
-        let n_steps = self.backend.problem().n_steps(lmax);
-        let dt = self.backend.problem().dt(lmax);
+        let be = self.backend.as_dyn();
+        let lmax = be.problem().lmax;
+        let batch = be.eval_chunk();
+        let n_steps = be.problem().n_steps(lmax);
+        let dt = be.problem().dt(lmax);
         let mut total = 0.0;
         for chunk in 0..self.cfg.train.eval_chunks.max(1) {
             // Purpose::Eval + step 0: the same batch at every evaluation.
@@ -299,9 +355,9 @@ impl Trainer {
                 batch,
                 n_steps,
                 dt,
-                self.backend.n_factors(),
+                be.n_factors(),
             );
-            total += self.backend.loss_eval_chunk(&self.params, &dw)?;
+            total += be.loss_eval_chunk(&self.params, &dw)?;
         }
         Ok(total / self.cfg.train.eval_chunks.max(1) as f64)
     }
@@ -343,7 +399,7 @@ impl Trainer {
 
     /// Read-only access to the backend (diagnostics drivers).
     pub fn backend(&self) -> &dyn GradBackend {
-        &*self.backend
+        self.backend.as_dyn()
     }
 
     /// Per-level chunk counts (N_l rounded to chunks) — introspection for
@@ -385,7 +441,7 @@ impl Trainer {
     /// reference the delayed estimator is compared against in the
     /// ablation bench.
     pub fn fresh_mlmc_gradient(&self, stream_seed: u64) -> Result<(f64, Vec<f32>)> {
-        let lmax = self.backend.problem().lmax;
+        let lmax = self.backend.as_dyn().problem().lmax;
         let jobs: Vec<LevelJobSpec> = (0..=lmax)
             .map(|level| LevelJobSpec {
                 level,
@@ -393,8 +449,14 @@ impl Trainer {
             })
             .collect();
         let src = BrownianSource::new(stream_seed);
-        let results = run_jobs(&*self.backend, &src, u64::MAX - 1, &self.params, &jobs)?;
-        let mut grad = vec![0.0f32; self.backend.n_params()];
+        let results = run_jobs(
+            self.backend.as_dyn(),
+            &src,
+            u64::MAX - 1,
+            &self.params,
+            &jobs,
+        )?;
+        let mut grad = vec![0.0f32; self.backend.as_dyn().n_params()];
         let mut loss = 0.0;
         for r in results {
             loss += r.loss_delta;

@@ -15,35 +15,46 @@
 //!   level, chunk)` thanks to the counter-based RNG, so execution order
 //!   cannot change any result.
 //! * **Scheduling** — tasks are sorted longest-processing-time first
-//!   ([`lpt_order`], weight = `batch x n_steps`, the same greedy rule the
-//!   PRAM model simulates) into a single shared queue; idle workers pull
-//!   the next-heaviest task from an atomic cursor. A shared LPT queue IS
-//!   greedy list scheduling: a worker that finishes early "steals" the
-//!   work a static partition would have pinned elsewhere.
+//!   ([`lpt_order`], weight = the coupled row-work `batch x (n_steps(l) +
+//!   n_steps(l-1))` — the chunk's true cost; the PRAM model's `2^{c l}`
+//!   per-sample price has the same scaling, with the coarse half
+//!   absorbed into Assumption 1's constant) into a single shared queue;
+//!   idle workers pull the next-heaviest task from an atomic cursor. A
+//!   shared LPT queue IS greedy list scheduling: a worker that finishes
+//!   early "steals" the work a static partition would have pinned
+//!   elsewhere.
 //! * **Reduction** — every task result lands in a pre-addressed slot
-//!   `(group, chunk)`; after the join, the *main thread* folds each
-//!   group's chunks in ascending chunk order through the same
+//!   `(group, chunk)`; once every worker has deposited, the *main thread*
+//!   folds each group's chunks in ascending chunk order through the same
 //!   [`ChunkAccumulator`](crate::mlmc::estimator::ChunkAccumulator) the
 //!   sequential path uses. Gradients are therefore **bit-identical to
 //!   sequential dispatch for every worker count** (f32 addition is
 //!   non-associative — order is pinned, not hoped for).
+//! * **Residency** — the `P` worker threads are spawned **once** at pool
+//!   construction, park on a condvar between dispatches, and are joined
+//!   on `Drop` ([`SpawnMode::Resident`]). Dispatch closures are
+//!   `'static`: they capture `Arc`-cloned backend/params snapshots
+//!   (plumbed via `GradBackend::into_shared`, see
+//!   [`crate::runtime::GradBackend`]), so `execute` is
+//!   enqueue-tasks + wait-on-completion, not spawn + join. The historical
+//!   spawn-per-dispatch strategy survives as [`SpawnMode::Scoped`] — the
+//!   measured baseline of the spawn-overhead comparison (`repro
+//!   exec-bench`, the `exec_compare` row of `BENCH_parallel.json`). A
+//!   panicking task is caught and surfaces as that task's error; the
+//!   pool survives for later dispatches.
 //! * **Observability** — each dispatch returns a [`StepExecReport`]:
 //!   measured makespan, per-worker busy time and task counts keyed by
 //!   *stable worker indices* `0..P` (not thread ids, which change across
-//!   runs); [`ExecStats`] accumulates them over a training run.
+//!   runs), and the **dispatch overhead** (makespan minus max worker
+//!   busy — the executor's fixed per-step cost); [`ExecStats`]
+//!   accumulates them over a training run.
 //!
-//! The pool object is persistent across steps (scheduling policy, chaos
-//! knobs and cumulative stats live as long as the `Trainer`); the worker
-//! threads themselves are scoped per dispatch because the backend borrow
-//! is step-scoped — spawn cost is microseconds against millisecond-scale
-//! chunk work, and `std::thread::scope` keeps the whole runtime
-//! unsafe-free. Pinning / NUMA placement and a truly resident thread set
-//! are follow-ups (see ROADMAP).
+//! Core pinning / NUMA placement remain follow-ups (see ROADMAP).
 
 pub mod pool;
 pub mod stats;
 pub mod task;
 
-pub use pool::WorkerPool;
+pub use pool::{SpawnMode, WorkerPool};
 pub use stats::{ExecStats, StepExecReport, WorkerStat};
 pub use task::{lpt_order, ChunkTask};

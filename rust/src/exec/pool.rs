@@ -1,7 +1,18 @@
 //! The worker pool: greedy LPT execution of [`ChunkTask`]s over `P`
-//! scoped std threads, with fixed-order (bit-exact) reduction.
+//! **resident** worker threads, with fixed-order (bit-exact) reduction.
+//!
+//! Threads are spawned once at pool construction, park on a condvar
+//! between dispatches, and are joined on `Drop` — no per-dispatch
+//! `std::thread::scope`. The historical spawn-per-dispatch strategy is
+//! kept as [`SpawnMode::Scoped`], the measured baseline of the
+//! resident-vs-scoped overhead comparison (`repro exec-bench`,
+//! `BENCH_parallel.json`).
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -9,6 +20,26 @@ use anyhow::Result;
 use super::stats::{ExecStats, StepExecReport, WorkerStat};
 use super::task::{lpt_order, ChunkTask};
 use crate::mlmc::estimator::ChunkAccumulator;
+
+/// The pool's unit-of-work closure: evaluated once per [`ChunkTask`].
+/// `'static + Send + Sync` because resident workers outlive any one
+/// dispatch — callers capture `Arc`-cloned backend/params snapshots, not
+/// scope-borrowed references (see [`crate::coordinator::dispatcher`]).
+type Job = Arc<dyn Fn(&ChunkTask) -> Result<(f64, Vec<f32>)> + Send + Sync>;
+
+/// How the pool obtains its worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// `P` threads spawned once at construction, parked on a condvar
+    /// between dispatches, joined on `Drop`. The default: per-dispatch
+    /// cost is a wakeup, not a thread spawn — the regime that matters
+    /// for DMLMC's light (level-0-only) steps.
+    Resident,
+    /// Spawn `min(P, n_tasks)` scoped threads per dispatch (the
+    /// historical strategy). Kept as the measured baseline for the
+    /// spawn-overhead comparison; results are bit-identical either way.
+    Scoped,
+}
 
 /// Deterministic per-task sleep injection — a scheduling-perturbation
 /// harness for determinism tests: whatever interleaving the sleeps force,
@@ -42,31 +73,213 @@ struct WorkerOut {
     results: Vec<(usize, Result<(f64, Vec<f32>)>)>,
 }
 
-/// Persistent chunk-execution runtime: `P` workers, an LPT-ordered shared
-/// queue, and per-run [`ExecStats`]. See the module docs of
-/// [`crate::exec`] for the design (sharding / scheduling / reduction).
-#[derive(Debug)]
+/// Everything the workers need for one dispatch, shared by `Arc` so it
+/// outlives the `execute` stack frame from the workers' point of view.
+struct Dispatch {
+    tasks: Vec<ChunkTask>,
+    /// LPT order over `tasks`; workers pull indices through `cursor`.
+    order: Vec<usize>,
+    cursor: AtomicUsize,
+    chaos: Option<ChaosDelays>,
+    run: Job,
+    /// Worker deposits `execute` waits for before reducing.
+    expected: usize,
+    outs: Mutex<Vec<WorkerOut>>,
+    /// Signalled (under `outs`) when the last expected deposit lands.
+    done: Condvar,
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One worker's share of one dispatch: pull LPT-ordered task indices from
+/// the shared cursor until the queue drains. A panic inside the job is
+/// caught and recorded as that task's error — a resident worker must
+/// survive the dispatch, or every later dispatch would deadlock waiting
+/// for its deposit.
+fn drain(worker: usize, d: &Dispatch) -> WorkerOut {
+    let mut out = WorkerOut {
+        worker,
+        busy: Duration::ZERO,
+        results: Vec::new(),
+    };
+    loop {
+        let slot = d.cursor.fetch_add(1, Ordering::Relaxed);
+        if slot >= d.order.len() {
+            break;
+        }
+        let idx = d.order[slot];
+        if let Some(c) = d.chaos {
+            std::thread::sleep(c.delay(idx as u64, worker as u64));
+        }
+        let t0 = Instant::now();
+        let run = &*d.run;
+        let task = &d.tasks[idx];
+        let result = match catch_unwind(AssertUnwindSafe(|| run(task))) {
+            Ok(r) => r,
+            Err(payload) => Err(anyhow::anyhow!(
+                "task panicked: {}",
+                panic_message(payload)
+            )),
+        };
+        out.busy += t0.elapsed();
+        out.results.push((idx, result));
+    }
+    out
+}
+
+/// Hand a finished worker's share back to `execute`; the last expected
+/// deposit wakes the dispatcher.
+fn deposit(d: &Dispatch, out: WorkerOut) {
+    let mut outs = d.outs.lock().expect("pool mutex poisoned");
+    outs.push(out);
+    if outs.len() >= d.expected {
+        d.done.notify_all();
+    }
+}
+
+/// What the resident threads watch between dispatches.
+struct RegistryState {
+    /// Bumped once per dispatch; workers compare against their last seen
+    /// value, so a notification missed while depositing is never lost.
+    epoch: u64,
+    dispatch: Option<Arc<Dispatch>>,
+    shutdown: bool,
+}
+
+struct Registry {
+    state: Mutex<RegistryState>,
+    work: Condvar,
+}
+
+/// A resident worker's whole life: wait for a new epoch, drain the
+/// dispatch, deposit, repeat — until shutdown.
+fn worker_main(worker: usize, registry: Arc<Registry>) {
+    let mut seen = 0u64;
+    loop {
+        let dispatch = {
+            let mut st = registry.state.lock().expect("pool mutex poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st
+                        .dispatch
+                        .clone()
+                        .expect("epoch advanced without a dispatch");
+                }
+                st = registry.work.wait(st).expect("pool mutex poisoned");
+            }
+        };
+        let out = drain(worker, &dispatch);
+        deposit(&dispatch, out);
+    }
+}
+
+/// Persistent chunk-execution runtime: `P` resident workers, an
+/// LPT-ordered shared queue, and per-run [`ExecStats`]. See the module
+/// docs of [`crate::exec`] for the design (sharding / scheduling /
+/// reduction / residency).
 pub struct WorkerPool {
     workers: usize,
+    mode: SpawnMode,
     chaos: Option<ChaosDelays>,
     stats: ExecStats,
+    /// OS threads spawned over the pool's lifetime: `P` once for
+    /// [`SpawnMode::Resident`], `min(P, n_tasks)` per dispatch for
+    /// [`SpawnMode::Scoped`] — the observable the spawn-overhead bench
+    /// and the spawn-once lifecycle tests key on.
+    threads_spawned: usize,
+    registry: Option<Arc<Registry>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("mode", &self.mode)
+            .field("threads_spawned", &self.threads_spawned)
+            .field("stats", &self.stats)
+            .finish()
+    }
 }
 
 impl WorkerPool {
-    /// A pool with `workers >= 1` workers. One worker degenerates to
-    /// sequential execution through the same code path (useful as the
-    /// measured P = 1 baseline, executor overhead included).
+    /// A resident pool with `workers >= 1` threads, spawned now and
+    /// joined on `Drop`. One worker degenerates to sequential execution
+    /// through the same code path (useful as the measured P = 1
+    /// baseline, executor overhead included).
     pub fn new(workers: usize) -> Self {
+        Self::with_mode(workers, SpawnMode::Resident)
+    }
+
+    /// The historical spawn-per-dispatch pool — the baseline side of the
+    /// resident-vs-scoped overhead comparison.
+    pub fn new_scoped(workers: usize) -> Self {
+        Self::with_mode(workers, SpawnMode::Scoped)
+    }
+
+    pub fn with_mode(workers: usize, mode: SpawnMode) -> Self {
         assert!(workers > 0, "need at least one worker");
-        WorkerPool {
+        let mut pool = WorkerPool {
             workers,
+            mode,
             chaos: None,
             stats: ExecStats::new(workers),
+            threads_spawned: 0,
+            registry: None,
+            handles: Vec::new(),
+        };
+        if mode == SpawnMode::Resident {
+            let registry = Arc::new(Registry {
+                state: Mutex::new(RegistryState {
+                    epoch: 0,
+                    dispatch: None,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+            });
+            for worker in 0..workers {
+                let reg = registry.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("dmlmc-pool-{worker}"))
+                    .spawn(move || worker_main(worker, reg))
+                    .expect("failed to spawn pool worker");
+                pool.handles.push(handle);
+            }
+            pool.threads_spawned = workers;
+            pool.registry = Some(registry);
         }
+        pool
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    pub fn mode(&self) -> SpawnMode {
+        self.mode
+    }
+
+    /// OS threads spawned so far (lifetime total; constant == `workers`
+    /// for a resident pool, grows per dispatch for a scoped one).
+    pub fn threads_spawned(&self) -> usize {
+        self.threads_spawned
+    }
+
+    /// Live resident worker threads (0 for a scoped pool).
+    pub fn resident_threads(&self) -> usize {
+        self.handles.len()
     }
 
     /// Cumulative stats over every dispatch this pool has run.
@@ -92,14 +305,17 @@ impl WorkerPool {
     /// `run` computes one chunk: it must be a pure function of the task's
     /// address (`group`/`chunk`/`level`) so execution order is
     /// irrelevant; the counter-based RNG gives the dispatcher exactly
-    /// that. Returns one `(mean loss, mean gradient)` per group — the
-    /// fold is the same `ChunkAccumulator` sequence the sequential
-    /// dispatcher performs, so the result is bit-identical to sequential
-    /// execution for every worker count.
+    /// that. It is `'static` because resident workers outlive the
+    /// dispatch — capture `Arc` clones, not borrows. Returns one
+    /// `(mean loss, mean gradient)` per group — the fold is the same
+    /// `ChunkAccumulator` sequence the sequential dispatcher performs, so
+    /// the result is bit-identical to sequential execution for every
+    /// worker count and both spawn modes.
     ///
     /// Errors: the error of the lowest-indexed failing task is returned
-    /// (deterministic whichever worker hit it first). Panics in `run`
-    /// propagate.
+    /// (deterministic whichever worker hit it first). A panic inside
+    /// `run` is caught and surfaces as that task's error — the pool
+    /// itself survives and later dispatches proceed normally.
     pub fn execute<F>(
         &mut self,
         tasks: &[ChunkTask],
@@ -107,75 +323,95 @@ impl WorkerPool {
         run: F,
     ) -> Result<(Vec<(f64, Vec<f32>)>, StepExecReport)>
     where
-        F: Fn(&ChunkTask) -> Result<(f64, Vec<f32>)> + Sync,
+        F: Fn(&ChunkTask) -> Result<(f64, Vec<f32>)> + Send + Sync + 'static,
     {
+        let run: Job = Arc::new(run);
         debug_assert!(tasks.iter().all(|t| t.group < n_groups));
         let started = Instant::now();
 
         let mut worker_outs: Vec<WorkerOut> = if tasks.is_empty() {
-            // Nothing to run: report an idle dispatch without paying the
-            // thread-spawn cost (DMLMC steps where no level is due).
-            (0..self.workers)
-                .map(|worker| WorkerOut {
-                    worker,
-                    busy: Duration::ZERO,
-                    results: Vec::new(),
-                })
-                .collect()
+            // Nothing to run: report an idle dispatch without waking (or
+            // spawning) anything (DMLMC steps where no level is due).
+            Vec::new()
         } else {
-            let order = lpt_order(tasks);
-            let cursor = AtomicUsize::new(0);
-            let chaos = self.chaos;
-            let order_ref = &order;
-            let cursor_ref = &cursor;
-            let run_ref = &run;
-            // An oversubscribed pool (workers > tasks) spawns only as
-            // many threads as there are tasks; the unspawned workers
-            // still appear in the report (idle, zero busy) so worker
-            // indices stay stable.
-            let spawn_n = self.workers.min(tasks.len());
-            let mut outs: Vec<WorkerOut> = std::thread::scope(|scope| {
-                let mut joins = Vec::with_capacity(spawn_n);
-                for worker in 0..spawn_n {
-                    joins.push(scope.spawn(move || {
-                        let mut out = WorkerOut {
-                            worker,
-                            busy: Duration::ZERO,
-                            results: Vec::new(),
-                        };
-                        loop {
-                            let slot = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                            if slot >= order_ref.len() {
-                                break;
-                            }
-                            let idx = order_ref[slot];
-                            if let Some(c) = chaos {
-                                std::thread::sleep(
-                                    c.delay(idx as u64, worker as u64),
-                                );
-                            }
-                            let t0 = Instant::now();
-                            let result = run_ref(&tasks[idx]);
-                            out.busy += t0.elapsed();
-                            out.results.push((idx, result));
-                        }
-                        out
-                    }));
-                }
-                joins
-                    .into_iter()
-                    .map(|j| j.join().expect("pool worker panicked"))
-                    .collect()
+            let expected = match self.mode {
+                SpawnMode::Resident => self.workers,
+                // An oversubscribed scoped pool (workers > tasks) spawns
+                // only as many threads as there are tasks.
+                SpawnMode::Scoped => self.workers.min(tasks.len()),
+            };
+            let dispatch = Arc::new(Dispatch {
+                tasks: tasks.to_vec(),
+                order: lpt_order(tasks),
+                cursor: AtomicUsize::new(0),
+                chaos: self.chaos,
+                run,
+                expected,
+                outs: Mutex::new(Vec::with_capacity(expected)),
+                done: Condvar::new(),
             });
-            for worker in spawn_n..self.workers {
-                outs.push(WorkerOut {
+            match self.mode {
+                SpawnMode::Resident => {
+                    let registry = self
+                        .registry
+                        .as_ref()
+                        .expect("resident pool has a registry");
+                    {
+                        let mut st =
+                            registry.state.lock().expect("pool mutex poisoned");
+                        st.epoch += 1;
+                        st.dispatch = Some(dispatch.clone());
+                    }
+                    registry.work.notify_all();
+                    let mut outs =
+                        dispatch.outs.lock().expect("pool mutex poisoned");
+                    while outs.len() < dispatch.expected {
+                        outs = dispatch
+                            .done
+                            .wait(outs)
+                            .expect("pool mutex poisoned");
+                    }
+                    let collected = std::mem::take(&mut *outs);
+                    drop(outs);
+                    // Release the job (and the backend/params Arcs it
+                    // captured) now, not at the next dispatch.
+                    registry
+                        .state
+                        .lock()
+                        .expect("pool mutex poisoned")
+                        .dispatch = None;
+                    collected
+                }
+                SpawnMode::Scoped => {
+                    self.threads_spawned += expected;
+                    std::thread::scope(|scope| {
+                        for worker in 0..expected {
+                            let d = dispatch.clone();
+                            scope.spawn(move || deposit(&d, drain(worker, &d)));
+                        }
+                    });
+                    let mut outs =
+                        dispatch.outs.lock().expect("pool mutex poisoned");
+                    std::mem::take(&mut *outs)
+                }
+            }
+        };
+        // Workers that deposited nothing (scoped: unspawned; empty
+        // dispatch: everyone) still appear in the report (idle, zero
+        // busy) so worker indices stay stable 0..P.
+        let mut present = vec![false; self.workers];
+        for out in &worker_outs {
+            present[out.worker] = true;
+        }
+        for (worker, seen) in present.into_iter().enumerate() {
+            if !seen {
+                worker_outs.push(WorkerOut {
                     worker,
                     busy: Duration::ZERO,
                     results: Vec::new(),
                 });
             }
-            outs
-        };
+        }
         let makespan = started.elapsed();
 
         // Scatter every task result into its pre-addressed slot; remember
@@ -240,6 +476,24 @@ impl WorkerPool {
         };
         self.stats.record(&report);
         Ok((reduced, report))
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Shut the resident threads down and join them. Never panics (a
+    /// poisoned registry — a worker died mid-dispatch — still gets its
+    /// shutdown flag set via `into_inner`).
+    fn drop(&mut self) {
+        if let Some(registry) = self.registry.take() {
+            match registry.state.lock() {
+                Ok(mut st) => st.shutdown = true,
+                Err(poisoned) => poisoned.into_inner().shutdown = true,
+            }
+            registry.work.notify_all();
+            for handle in self.handles.drain(..) {
+                let _ = handle.join();
+            }
+        }
     }
 }
 
@@ -314,6 +568,24 @@ mod tests {
     }
 
     #[test]
+    fn scoped_mode_matches_resident_bitwise() {
+        let groups = [2usize, 3, 1];
+        let want = sequential(&groups);
+        for workers in [1usize, 2, 4] {
+            let mut pool = WorkerPool::new_scoped(workers);
+            assert_eq!(pool.mode(), SpawnMode::Scoped);
+            let (got, report) = pool
+                .execute(&tasks(&groups), groups.len(), run_synthetic)
+                .unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.0, b.0, "scoped loss differs at P={workers}");
+                assert_eq!(a.1, b.1, "scoped grad differs at P={workers}");
+            }
+            assert_eq!(report.workers.len(), workers);
+        }
+    }
+
+    #[test]
     fn chaos_delays_do_not_change_results() {
         let groups = [2usize, 3];
         let want = sequential(&groups);
@@ -345,7 +617,7 @@ mod tests {
         let ts = tasks(&[4usize]);
         let mut pool = WorkerPool::new(4);
         let err = pool
-            .execute(&ts, 1, |t| {
+            .execute(&ts, 1, |t: &ChunkTask| {
                 if t.chunk >= 1 {
                     Err(anyhow::anyhow!("boom chunk {}", t.chunk))
                 } else {
@@ -368,6 +640,62 @@ mod tests {
         assert_eq!(pool.stats().tasks, 6);
         assert_eq!(pool.stats().makespans.len(), 3);
         assert_eq!(pool.stats().busy_per_worker.len(), 2);
+    }
+
+    #[test]
+    fn resident_pool_spawns_threads_once() {
+        let mut pool = WorkerPool::new(3);
+        assert_eq!(pool.mode(), SpawnMode::Resident);
+        assert_eq!(pool.threads_spawned(), 3);
+        assert_eq!(pool.resident_threads(), 3);
+        for _ in 0..5 {
+            pool.execute(&tasks(&[2usize, 1]), 2, run_synthetic).unwrap();
+        }
+        // spawn-once: dispatches reuse the same threads
+        assert_eq!(pool.threads_spawned(), 3);
+        assert_eq!(pool.resident_threads(), 3);
+        assert_eq!(pool.stats().steps, 5);
+    }
+
+    #[test]
+    fn scoped_pool_spawns_per_dispatch() {
+        let mut pool = WorkerPool::new_scoped(2);
+        assert_eq!(pool.threads_spawned(), 0);
+        assert_eq!(pool.resident_threads(), 0);
+        for _ in 0..3 {
+            pool.execute(&tasks(&[2usize]), 1, run_synthetic).unwrap();
+        }
+        // min(P = 2, tasks = 2) fresh threads per dispatch
+        assert_eq!(pool.threads_spawned(), 6);
+    }
+
+    #[test]
+    fn panicking_task_reports_error_and_pool_survives() {
+        let mut pool = WorkerPool::new(2);
+        let err = pool
+            .execute(&tasks(&[3usize]), 1, |t: &ChunkTask| {
+                if t.chunk == 1 {
+                    panic!("chunk exploded");
+                }
+                run_synthetic(t)
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("chunk exploded"), "{msg}");
+        // the resident workers survive: the next dispatch must neither
+        // deadlock nor misbehave
+        let want = sequential(&[2usize]);
+        let (got, _) = pool.execute(&tasks(&[2usize]), 1, run_synthetic).unwrap();
+        assert_eq!(got[0].0, want[0].0);
+        assert_eq!(got[0].1, want[0].1);
+    }
+
+    #[test]
+    fn dropping_a_resident_pool_joins_cleanly() {
+        let mut pool = WorkerPool::new(4);
+        pool.execute(&tasks(&[3usize]), 1, run_synthetic).unwrap();
+        drop(pool); // must not hang or panic
     }
 
     #[test]

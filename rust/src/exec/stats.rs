@@ -34,6 +34,24 @@ impl StepExecReport {
         self.workers.iter().map(|w| w.busy).sum()
     }
 
+    /// Longest single-worker busy time in this dispatch.
+    pub fn max_busy(&self) -> Duration {
+        self.workers
+            .iter()
+            .map(|w| w.busy)
+            .max()
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Executor overhead of this dispatch: measured makespan minus the
+    /// busiest worker — wakeup/spawn/join/scatter cost that is *not*
+    /// chunk work. This is the per-step fixed cost the resident pool
+    /// amortizes away relative to spawn-per-dispatch (and what DMLMC's
+    /// light level-0-only steps are most sensitive to).
+    pub fn dispatch_overhead(&self) -> Duration {
+        self.makespan.saturating_sub(self.max_busy())
+    }
+
     /// `busy_total / (P x makespan)` in [0, 1] — how much of the pool's
     /// capacity the step actually used. 0 for an empty dispatch.
     pub fn utilization(&self) -> f64 {
@@ -57,6 +75,9 @@ pub struct ExecStats {
     pub busy_per_worker: Vec<Duration>,
     /// Measured makespan of each dispatch, in dispatch order (seconds).
     pub makespans: Vec<f64>,
+    /// Dispatch overhead (makespan minus max worker busy) of each
+    /// dispatch, in dispatch order (seconds).
+    pub overheads: Vec<f64>,
 }
 
 impl ExecStats {
@@ -66,6 +87,7 @@ impl ExecStats {
             tasks: 0,
             busy_per_worker: vec![Duration::ZERO; workers],
             makespans: Vec::new(),
+            overheads: Vec::new(),
         }
     }
 
@@ -76,6 +98,7 @@ impl ExecStats {
             self.busy_per_worker[w.worker] += w.busy;
         }
         self.makespans.push(report.makespan.as_secs_f64());
+        self.overheads.push(report.dispatch_overhead().as_secs_f64());
     }
 
     /// Total measured makespan over all dispatches (seconds).
@@ -89,6 +112,16 @@ impl ExecStats {
             0.0
         } else {
             self.total_makespan() / self.steps as f64
+        }
+    }
+
+    /// Mean per-dispatch executor overhead (seconds); 0 before any
+    /// dispatch. See [`StepExecReport::dispatch_overhead`].
+    pub fn mean_dispatch_overhead(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.overheads.iter().sum::<f64>() / self.steps as f64
         }
     }
 
@@ -139,6 +172,22 @@ mod tests {
     fn utilization_of_imbalanced_dispatch_is_half() {
         let r = report(&[10, 0], 10);
         assert!((r.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_overhead_is_makespan_minus_max_busy() {
+        let r = report(&[10, 4], 13);
+        assert_eq!(r.max_busy(), Duration::from_millis(10));
+        assert_eq!(r.dispatch_overhead(), Duration::from_millis(3));
+        // overhead saturates at zero (busy can exceed a coarse makespan)
+        let tight = report(&[10, 4], 8);
+        assert_eq!(tight.dispatch_overhead(), Duration::ZERO);
+        // accumulation
+        let mut s = ExecStats::new(2);
+        s.record(&report(&[10, 4], 13));
+        s.record(&report(&[4, 8], 9));
+        assert_eq!(s.overheads.len(), 2);
+        assert!((s.mean_dispatch_overhead() - 0.002).abs() < 1e-9);
     }
 
     #[test]

@@ -4,8 +4,11 @@
 /// One schedulable chunk. `group` addresses the reduction slot (one group
 /// per level job), `chunk` fixes the fold order within the group, `weight`
 /// is the LPT priority (any monotone proxy for the chunk's runtime; the
-/// dispatcher uses `batch x n_steps`, mirroring the PRAM model's
-/// `2^{c l}`-per-sample cost shape for c = 1).
+/// dispatcher uses the coupled row-work `batch x (n_steps(l) +
+/// n_steps(l-1))` — a level-`l > 0` chunk simulates both the fine and the
+/// coarse grid of every sample, so both halves count. The PRAM model
+/// prices a sample at `2^{c l}`, same scaling with the coarse half in
+/// Assumption 1's constant).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChunkTask {
     /// Reduction group (index into the step's job list).

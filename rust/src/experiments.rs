@@ -2,10 +2,15 @@
 //! examples and the per-figure benches. Each paper table/figure has one
 //! driver here (DESIGN.md §3 experiment index).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{Backend, ExperimentConfig};
-use crate::coordinator::{Method, Trainer};
+use crate::coordinator::{
+    run_jobs_pool_with_report, LevelJobSpec, Method, Trainer,
+};
+use crate::exec::WorkerPool;
 use crate::hedging::bs_call_price;
 use crate::metrics::aggregate::AggregatedCurve;
 use crate::metrics::{aggregate_curves, LearningCurve, Welford};
@@ -448,6 +453,10 @@ pub struct ParallelCell {
     pub measured_total_s: f64,
     /// Pool utilization: busy / (P x makespan), in [0, 1].
     pub utilization: f64,
+    /// Mean per-step dispatch overhead (seconds): measured makespan minus
+    /// the busiest worker — the executor's fixed per-step cost, which the
+    /// resident pool amortizes relative to spawn-per-dispatch.
+    pub overhead_mean_s: f64,
     /// Mean per-step makespan predicted by greedy LPT on the PRAM model
     /// (`PramMachine::step_makespan`), in model work units.
     pub pram_makespan: f64,
@@ -519,6 +528,7 @@ pub fn parallel_sweep(
                 measured_mean_s: stats.mean_makespan(),
                 measured_total_s: stats.total_makespan(),
                 utilization: stats.utilization(),
+                overhead_mean_s: stats.mean_dispatch_overhead(),
                 pram_makespan: pram_total / steps,
                 brent_bound: brent_total / steps,
                 final_loss: curve.final_loss().unwrap_or(f64::NAN),
@@ -526,8 +536,9 @@ pub fn parallel_sweep(
             if !quiet {
                 eprintln!(
                     "parallel_sweep: {method:<6} P={p}  measured {:.3} ms/step  \
-                     pram {:.0}  util {:.0}%",
+                     ovh {:.3} ms  pram {:.0}  util {:.0}%",
                     cell.measured_mean_s * 1e3,
+                    cell.overhead_mean_s * 1e3,
                     cell.pram_makespan,
                     cell.utilization * 100.0
                 );
@@ -545,9 +556,9 @@ pub fn parallel_sweep(
 pub fn render_parallel_table(cells: &[ParallelCell]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<8} {:>4} {:>14} {:>10} {:>12} {:>10} {:>8} {:>12}\n",
-        "method", "P", "meas ms/step", "meas spdup", "pram pred", "pram spdup",
-        "util", "final loss"
+        "{:<8} {:>4} {:>14} {:>10} {:>10} {:>12} {:>10} {:>8} {:>12}\n",
+        "method", "P", "meas ms/step", "meas spdup", "ovh ms", "pram pred",
+        "pram spdup", "util", "final loss"
     ));
     let baseline = |m: Method| {
         cells
@@ -565,17 +576,134 @@ pub fn render_parallel_table(cells: &[ParallelCell]) -> String {
             })
             .unwrap_or((f64::NAN, f64::NAN));
         out.push_str(&format!(
-            "{:<8} {:>4} {:>14.3} {:>10.2} {:>12.0} {:>10.2} {:>7.0}% {:>12.4}\n",
+            "{:<8} {:>4} {:>14.3} {:>10.2} {:>10.3} {:>12.0} {:>10.2} {:>7.0}% \
+             {:>12.4}\n",
             c.method.name(),
             c.workers,
             c.measured_mean_s * 1e3,
             ms,
+            c.overhead_mean_s * 1e3,
             c.pram_makespan,
             ps,
             c.utilization * 100.0,
             c.final_loss
         ));
     }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Exec bench — resident vs scoped spawn overhead on light dispatches
+// ---------------------------------------------------------------------------
+
+/// Resident-vs-scoped spawn-overhead comparison on a **light**
+/// (level-0-only) dispatch — the typical DMLMC step after warmup, where
+/// the refresh is one small job and per-step executor overhead dominates
+/// the measured makespan. This is the number that shows the resident
+/// pool's win directly instead of asserting it.
+#[derive(Debug, Clone)]
+pub struct ExecOverheadComparison {
+    pub workers: usize,
+    /// Measured dispatches per mode (one extra warmup dispatch per mode
+    /// is excluded from the means).
+    pub steps: usize,
+    pub resident_overhead_mean_s: f64,
+    pub scoped_overhead_mean_s: f64,
+    pub resident_makespan_mean_s: f64,
+    pub scoped_makespan_mean_s: f64,
+    /// OS threads spawned over the whole run: `workers` for the resident
+    /// pool, ~`(steps + 1) x min(workers, tasks)` for the scoped one.
+    pub resident_threads_spawned: usize,
+    pub scoped_threads_spawned: usize,
+}
+
+/// Run the same light (level-0-only) dispatch `steps` times through a
+/// resident pool and through a scoped (spawn-per-dispatch) pool, and
+/// report the mean per-step dispatch overhead and makespan of each.
+/// Results of the two modes are bit-identical (same LPT queue, same
+/// fixed-order reduction); only the executor's fixed cost differs.
+pub fn exec_overhead_compare(
+    cfg: &ExperimentConfig,
+    workers: usize,
+    steps: usize,
+) -> Result<ExecOverheadComparison> {
+    anyhow::ensure!(workers > 0, "need at least one worker");
+    anyhow::ensure!(steps > 0, "need at least one measured step");
+    let scenario = build_scenario_or_err(&cfg.scenario, &cfg.problem)?;
+    let backend: Arc<NativeBackend> =
+        Arc::new(NativeBackend::with_scenario(cfg.problem, scenario));
+    let src = BrownianSource::new(0);
+    let params = crate::engine::mlp::init_params(0);
+    // The DMLMC steady-state light step: refresh level 0 only.
+    let n_chunks = cfg
+        .mlmc
+        .n_effective
+        .div_ceil(backend.grad_chunk(0))
+        .max(1);
+    let jobs = vec![LevelJobSpec { level: 0, n_chunks }];
+    let measure = |pool: &mut WorkerPool| -> Result<(f64, f64)> {
+        // warmup dispatch: first-touch costs (page faults, thread starts)
+        run_jobs_pool_with_report(&backend, &src, 0, &params, &jobs, pool)?;
+        let mut overhead = 0.0;
+        let mut makespan = 0.0;
+        for t in 1..=steps as u64 {
+            let (_, report) =
+                run_jobs_pool_with_report(&backend, &src, t, &params, &jobs, pool)?;
+            overhead += report.dispatch_overhead().as_secs_f64();
+            makespan += report.makespan.as_secs_f64();
+        }
+        Ok((overhead / steps as f64, makespan / steps as f64))
+    };
+    let mut resident = WorkerPool::new(workers);
+    let (resident_overhead_mean_s, resident_makespan_mean_s) =
+        measure(&mut resident)?;
+    let mut scoped = WorkerPool::new_scoped(workers);
+    let (scoped_overhead_mean_s, scoped_makespan_mean_s) = measure(&mut scoped)?;
+    Ok(ExecOverheadComparison {
+        workers,
+        steps,
+        resident_overhead_mean_s,
+        scoped_overhead_mean_s,
+        resident_makespan_mean_s,
+        scoped_makespan_mean_s,
+        resident_threads_spawned: resident.threads_spawned(),
+        scoped_threads_spawned: scoped.threads_spawned(),
+    })
+}
+
+/// Render the comparison as text (CLI `repro exec-bench`).
+pub fn render_exec_comparison(cmp: &ExecOverheadComparison) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "exec overhead, light (level-0-only) dispatch, P = {}, {} steps:\n",
+        cmp.workers, cmp.steps
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>14} {:>14} {:>16}\n",
+        "mode", "ovh ms/step", "mksp ms/step", "threads spawned"
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>14.4} {:>14.4} {:>16}\n",
+        "resident",
+        cmp.resident_overhead_mean_s * 1e3,
+        cmp.resident_makespan_mean_s * 1e3,
+        cmp.resident_threads_spawned
+    ));
+    out.push_str(&format!(
+        "{:<10} {:>14.4} {:>14.4} {:>16}\n",
+        "scoped",
+        cmp.scoped_overhead_mean_s * 1e3,
+        cmp.scoped_makespan_mean_s * 1e3,
+        cmp.scoped_threads_spawned
+    ));
+    let ratio = if cmp.resident_overhead_mean_s > 0.0 {
+        cmp.scoped_overhead_mean_s / cmp.resident_overhead_mean_s
+    } else {
+        f64::INFINITY
+    };
+    out.push_str(&format!(
+        "scoped / resident overhead ratio: {ratio:.2}x\n"
+    ));
     out
 }
 
@@ -691,6 +819,8 @@ mod tests {
         for cell in &cells {
             assert!(cell.measured_mean_s >= 0.0);
             assert!(cell.measured_total_s.is_finite());
+            assert!(cell.overhead_mean_s >= 0.0);
+            assert!(cell.overhead_mean_s <= cell.measured_mean_s + 1e-12);
             assert!(cell.final_loss.is_finite(), "{}", cell.method);
             assert!((0.0..=1.0).contains(&cell.utilization));
             // LPT makespan can never beat Brent's lower bound
@@ -722,6 +852,7 @@ mod tests {
         }
         let txt = render_parallel_table(&cells);
         assert!(txt.contains("dmlmc"));
+        assert!(txt.contains("ovh ms"));
         assert!(txt.lines().count() >= 7);
     }
 
@@ -729,6 +860,30 @@ mod tests {
     fn parallel_sweep_rejects_bad_worker_lists() {
         assert!(parallel_sweep(&cfg(), &[], true).is_err());
         assert!(parallel_sweep(&cfg(), &[0], true).is_err());
+    }
+
+    #[test]
+    fn exec_comparison_renders_both_modes() {
+        let cmp = ExecOverheadComparison {
+            workers: 4,
+            steps: 16,
+            resident_overhead_mean_s: 10e-6,
+            scoped_overhead_mean_s: 60e-6,
+            resident_makespan_mean_s: 1e-3,
+            scoped_makespan_mean_s: 1.05e-3,
+            resident_threads_spawned: 4,
+            scoped_threads_spawned: 68,
+        };
+        let txt = render_exec_comparison(&cmp);
+        assert!(txt.contains("resident"));
+        assert!(txt.contains("scoped"));
+        assert!(txt.contains("6.00x"), "{txt}");
+    }
+
+    #[test]
+    fn exec_overhead_compare_rejects_degenerate_inputs() {
+        assert!(exec_overhead_compare(&cfg(), 0, 4).is_err());
+        assert!(exec_overhead_compare(&cfg(), 2, 0).is_err());
     }
 
     #[test]

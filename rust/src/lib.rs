@@ -51,18 +51,26 @@
 //!
 //! Beyond *modeling* parallel cost ([`parallel`]), the crate *executes*
 //! it: [`exec::WorkerPool`] shards each step's level jobs into per-chunk
-//! tasks, schedules them longest-first over `P` std-thread workers, and
-//! reduces results in fixed chunk order — so the assembled gradient is
-//! **bit-identical to sequential dispatch for every worker count** (the
-//! counter-based [`rng`] makes each chunk a pure function of its
-//! address). The pool is the default execution path for `Sync` backends
-//! (the native engine; `execution.workers` in TOML / `--workers` on the
-//! CLI, 0 = one per core); the PJRT runtime's `!Send` handles keep it on
-//! sequential dispatch. `repro parallel-sweep` sweeps P x method,
-//! records measured per-step makespan next to the PRAM model's
+//! tasks, schedules them longest-first over `P` **resident** worker
+//! threads — spawned once at pool construction, parked on a condvar
+//! between dispatches, joined on `Drop` — and reduces results in fixed
+//! chunk order, so the assembled gradient is **bit-identical to
+//! sequential dispatch for every worker count** (the counter-based
+//! [`rng`] makes each chunk a pure function of its address). Dispatch
+//! closures are `'static`: the trainer holds shareable backends behind
+//! an `Arc` (`GradBackend::into_shared`) and each dispatch captures
+//! `Arc`-cloned backend/params snapshots. The pool is the default
+//! execution path for shareable backends (the native engine;
+//! `execution.workers` in TOML / `--workers` on the CLI, 0 = one per
+//! core); the PJRT runtime's `!Send` handles keep it on sequential
+//! dispatch. `repro parallel-sweep` sweeps P x method, records measured
+//! per-step makespan and dispatch overhead (makespan minus max worker
+//! busy) next to the PRAM model's
 //! [`parallel::PramMachine::step_makespan`] prediction, and emits
-//! `BENCH_parallel.json` — turning the paper's MLMC-vs-DMLMC
-//! parallel-cost gap into a wall-clock observable.
+//! `BENCH_parallel.json` — including a resident-vs-scoped
+//! (spawn-per-dispatch) overhead comparison (`repro exec-bench`, `make
+//! bench-exec`) that prices the executor's fixed cost on DMLMC's light
+//! level-0-only steps.
 //!
 //! ## Quickstart
 //!

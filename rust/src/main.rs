@@ -79,8 +79,18 @@ fn root_command() -> Command {
             Command::new(
                 "parallel-sweep",
                 "measured pool makespan vs PRAM prediction over P x method \
-                 (emits BENCH_parallel.json; defaults to 48 steps unless \
-                 --steps is given)",
+                 (emits BENCH_parallel.json with per-cell dispatch overhead \
+                 and a resident-vs-scoped exec_compare row; defaults to 48 \
+                 steps unless --steps is given)",
+            ),
+        ))
+        .subcommand(common(
+            Command::new(
+                "exec-bench",
+                "resident vs scoped (spawn-per-dispatch) pool overhead on \
+                 light level-0-only dispatches (--workers, default 4, \
+                 0 = one per core; --steps measured dispatches per mode, \
+                 default 64)",
             ),
         ))
         .subcommand(Command::new(
@@ -385,23 +395,82 @@ fn cmd_parallel_sweep(args: &Args) -> Result<()> {
                 ("measured_mean_makespan_s", Json::Num(c.measured_mean_s)),
                 ("measured_total_s", Json::Num(c.measured_total_s)),
                 ("utilization", Json::Num(c.utilization)),
+                ("dispatch_overhead_mean_s", Json::Num(c.overhead_mean_s)),
                 ("pram_makespan", Json::Num(c.pram_makespan)),
                 ("brent_bound", Json::Num(c.brent_bound)),
                 ("final_loss", Json::Num(c.final_loss)),
             ])
         })
         .collect();
+    // Resident-vs-scoped spawn-overhead comparison at P = 4 on the light
+    // (level-0-only) DMLMC-style dispatch — the regime where per-step
+    // executor overhead dominates and the resident pool's win shows.
+    let cmp =
+        experiments::exec_overhead_compare(&cfg, 4, cfg.train.steps.max(8))?;
+    if !args.flag("quiet") {
+        eprint!("{}", experiments::render_exec_comparison(&cmp));
+    }
     let doc = obj(vec![
         ("bench", Json::Str("parallel-sweep".to_string())),
         ("scenario", Json::Str(cfg.scenario.clone())),
         ("n_effective", Json::Num(cfg.mlmc.n_effective as f64)),
         ("steps", Json::Num(cfg.train.steps as f64)),
         ("cells", Json::Arr(rows)),
+        (
+            "exec_compare",
+            obj(vec![
+                ("workers", Json::Num(cmp.workers as f64)),
+                ("steps", Json::Num(cmp.steps as f64)),
+                (
+                    "resident_overhead_mean_s",
+                    Json::Num(cmp.resident_overhead_mean_s),
+                ),
+                (
+                    "scoped_overhead_mean_s",
+                    Json::Num(cmp.scoped_overhead_mean_s),
+                ),
+                (
+                    "resident_makespan_mean_s",
+                    Json::Num(cmp.resident_makespan_mean_s),
+                ),
+                (
+                    "scoped_makespan_mean_s",
+                    Json::Num(cmp.scoped_makespan_mean_s),
+                ),
+                (
+                    "resident_threads_spawned",
+                    Json::Num(cmp.resident_threads_spawned as f64),
+                ),
+                (
+                    "scoped_threads_spawned",
+                    Json::Num(cmp.scoped_threads_spawned as f64),
+                ),
+            ]),
+        ),
     ]);
     let path = "BENCH_parallel.json";
     std::fs::write(path, format!("{doc}\n"))
         .map_err(|e| anyhow!("could not write {path}: {e}"))?;
     eprintln!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_exec_bench(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    // `--workers` here is the single comparison P, not a sweep list. An
+    // explicit value — flag or `execution.workers` in the config TOML —
+    // is honored (0 = one per core, the flag's documented auto); with
+    // neither set, default to a representative P = 4 rather than
+    // whole-machine auto.
+    let workers = if args.get("workers").is_some() || cfg.execution.workers != 0
+    {
+        cfg.execution.resolved_workers()
+    } else {
+        4
+    };
+    let steps = args.parse_usize("steps")?.unwrap_or(64);
+    let cmp = experiments::exec_overhead_compare(&cfg, workers, steps)?;
+    print!("{}", experiments::render_exec_comparison(&cmp));
     Ok(())
 }
 
@@ -445,6 +514,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "scenario-sweep" => cmd_scenario_sweep(&args),
         "parallel-sweep" => cmd_parallel_sweep(&args),
+        "exec-bench" => cmd_exec_bench(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {

@@ -53,6 +53,10 @@ fn exec_json(stats: &ExecStats) -> Json {
         ("tasks", Json::Num(stats.tasks as f64)),
         ("total_makespan_s", Json::Num(stats.total_makespan())),
         ("mean_step_makespan_s", Json::Num(stats.mean_makespan())),
+        (
+            "mean_dispatch_overhead_s",
+            Json::Num(stats.mean_dispatch_overhead()),
+        ),
         ("utilization", Json::Num(stats.utilization())),
         ("per_worker_busy_s", Json::Arr(busy)),
     ])
@@ -229,6 +233,17 @@ mod tests {
         let exec = j.get("exec").unwrap();
         assert_eq!(exec.get("workers").unwrap().as_usize(), Some(2));
         assert_eq!(exec.get("tasks").unwrap().as_usize(), Some(4));
+        // dispatch overhead: 40 ms makespan - 30 ms max busy = 10 ms
+        assert!(
+            (exec
+                .get("mean_dispatch_overhead_s")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                - 0.01)
+                .abs()
+                < 1e-9
+        );
         let busy = exec.get("per_worker_busy_s").unwrap().as_arr().unwrap();
         // array position IS the worker index — stable across runs
         assert_eq!(busy.len(), 2);

@@ -10,11 +10,17 @@
 //! dictates (`grad_chunk(level)` etc.); the coordinator accumulates chunks
 //! to reach the `N_l` allocation.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::engine;
 use crate::hedging::Problem;
 use crate::scenarios::Scenario;
+
+/// A thread-safe backend handle the resident pool's `'static` dispatch
+/// jobs can co-own — the `Ok` side of [`GradBackend::into_shared`].
+pub type SharedBackend = Arc<dyn GradBackend + Send + Sync>;
 
 /// Gradient/loss execution interface (one chunk at a time).
 pub trait GradBackend {
@@ -43,14 +49,17 @@ pub trait GradBackend {
         1
     }
 
-    /// This backend as a `Sync` trait object, if it is one — the gate for
-    /// pooled/threaded dispatch ([`crate::exec::WorkerPool`]). The default
-    /// is `None` (sequential dispatch only), which is correct for the
-    /// PJRT runtime whose handles are `!Send` raw C pointers; the native
-    /// engine overrides it.
-    fn sync_view(&self) -> Option<&(dyn GradBackend + Sync)> {
-        None
-    }
+    /// Convert this boxed backend into a shared (`Arc`) handle — the gate
+    /// for pooled dispatch ([`crate::exec::WorkerPool`]). The resident
+    /// pool's workers outlive any one dispatch, so its job closures are
+    /// `'static` and must capture an owned `Arc` of the backend instead
+    /// of a scope-borrowed reference. `Ok` shares the backend (the native
+    /// engine: plain data, `Send + Sync`); `Err` hands the box back for
+    /// backends that cannot cross threads (the PJRT runtime's handles are
+    /// `!Send` raw C pointers) — those dispatch sequentially.
+    fn into_shared(
+        self: Box<Self>,
+    ) -> std::result::Result<SharedBackend, Box<dyn GradBackend>>;
 
     /// One chunk of the coupled objective `Delta_l F` value-and-grad.
     /// `dw` is factor-major `[n_factors, grad_chunk(level),
@@ -182,8 +191,10 @@ impl GradBackend for NativeBackend {
         self.scenario.sde.dim()
     }
 
-    fn sync_view(&self) -> Option<&(dyn GradBackend + Sync)> {
-        Some(self)
+    fn into_shared(
+        self: Box<Self>,
+    ) -> std::result::Result<SharedBackend, Box<dyn GradBackend>> {
+        Ok(Arc::new(*self))
     }
 
     fn grad_coupled_chunk(
@@ -421,18 +432,21 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_exposes_a_sync_view() {
-        let b = backend();
-        let sv = b.sync_view().expect("native engine is Sync");
-        assert_eq!(sv.name(), "native");
-        // the view is the same backend: identical chunk policy
-        assert_eq!(sv.grad_chunk(0), b.grad_chunk(0));
-        // non-default (2-factor) scenarios are Sync too
-        let h = NativeBackend::with_scenario(
+    fn native_backend_converts_into_a_shared_handle() {
+        let b: Box<dyn GradBackend> = Box::new(backend());
+        let shared = b.into_shared().ok().expect("native engine is Send + Sync");
+        assert_eq!(shared.name(), "native");
+        // the shared handle is the same backend: identical chunk policy
+        assert_eq!(shared.grad_chunk(0), 128);
+        // and it clones freely across dispatch closures
+        let clone = shared.clone();
+        assert_eq!(clone.n_params(), shared.n_params());
+        // non-default (2-factor) scenarios share too
+        let h: Box<dyn GradBackend> = Box::new(NativeBackend::with_scenario(
             Problem::default(),
             crate::scenarios::build_scenario("heston-call", &Problem::default()).unwrap(),
-        );
-        assert!(h.sync_view().is_some());
+        ));
+        assert!(h.into_shared().is_ok());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod xla_rt;
 #[cfg(not(feature = "xla"))]
 pub mod xla_stub;
 
-pub use backend::{GradBackend, NativeBackend};
+pub use backend::{GradBackend, NativeBackend, SharedBackend};
 pub use manifest::{EntryKind, EntryMeta, Manifest};
 #[cfg(feature = "xla")]
 pub use xla_rt::XlaRuntime;

@@ -139,6 +139,15 @@ impl GradBackend for XlaRuntime {
         self.manifest.n_params
     }
 
+    fn into_shared(
+        self: Box<Self>,
+    ) -> std::result::Result<super::backend::SharedBackend, Box<dyn GradBackend>> {
+        // PJRT client/executable handles are raw C pointers (!Send):
+        // this runtime cannot cross threads, so it stays boxed and the
+        // trainer dispatches sequentially.
+        Err(self)
+    }
+
     fn problem(&self) -> &Problem {
         &self.manifest.problem
     }

@@ -51,6 +51,15 @@ impl GradBackend for XlaRuntime {
         match self.never {}
     }
 
+    fn into_shared(
+        self: Box<Self>,
+    ) -> std::result::Result<super::backend::SharedBackend, Box<dyn GradBackend>> {
+        // Mirrors the real runtime: PJRT handles are !Send, so the
+        // backend stays boxed and dispatches sequentially. (Unreachable
+        // here — the stub is uninhabited — but the contract must match.)
+        Err(self)
+    }
+
     fn problem(&self) -> &Problem {
         match self.never {}
     }

@@ -40,23 +40,30 @@
 //!
 //! Training/experiment subcommands accept `--workers <n>` (TOML:
 //! `execution.workers`): the worker-thread count of the chunk-sharded
-//! execution pool ([`crate::exec::WorkerPool`]). `0` (the default) means
-//! one worker per available core; `1` runs a single pooled worker.
-//! Gradients are **bit-identical for every worker count** — the pool
-//! reduces per-chunk results in a fixed order, and the counter-based RNG
-//! makes each chunk a pure function of its `(step, level, chunk)`
-//! address — so `--workers` is purely a throughput knob. It applies to
-//! `Sync` backends (`--backend native`); the PJRT runtime's `!Send`
-//! handles always dispatch sequentially.
+//! **resident** execution pool ([`crate::exec::WorkerPool`] — threads
+//! spawned once per trainer, parked between dispatches). `0` (the
+//! default) means one worker per available core; `1` runs a single
+//! pooled worker. Gradients are **bit-identical for every worker
+//! count** — the pool reduces per-chunk results in a fixed order, and
+//! the counter-based RNG makes each chunk a pure function of its
+//! `(step, level, chunk)` address — so `--workers` is purely a
+//! throughput knob. It applies to shareable backends (`--backend
+//! native`); the PJRT runtime's `!Send` handles always dispatch
+//! sequentially.
 //!
 //! `repro parallel-sweep` measures the pool against the PRAM cost model:
 //! it trains every method at each `P` in `--workers <comma list>`
 //! (default `1,2,4,8` — on this one subcommand the flag is a list),
-//! prints measured vs predicted per-step makespan and utilization, and
-//! writes `BENCH_parallel.json`. Example:
+//! prints measured vs predicted per-step makespan, per-step dispatch
+//! overhead and utilization, and writes `BENCH_parallel.json` (per-cell
+//! `dispatch_overhead_mean_s` plus a resident-vs-scoped `exec_compare`
+//! row). `repro exec-bench` (`make bench-exec`) isolates that
+//! comparison: the same light level-0-only dispatch through a resident
+//! and a spawn-per-dispatch pool. Examples:
 //!
 //! ```text
 //! repro parallel-sweep --workers 1,2,4,8 --steps 48 --n-effective 256
+//! repro exec-bench --workers 4 --steps 64
 //! ```
 
 use std::collections::BTreeMap;

@@ -1,23 +1,26 @@
 //! Integration suite for the parallel execution runtime (`dmlmc::exec`):
 //! bit-exact equivalence of pooled and sequential dispatch across worker
 //! counts, oversubscription, schedule perturbation (chaos sleeps), the
-//! trainer-level plumbing, and the parallel-sweep driver.
+//! resident-pool lifecycle (spawn-once threads, clean join, panic
+//! survival), the trainer-level plumbing, and the parallel-sweep driver.
+
+use std::sync::Arc;
 
 use dmlmc::config::ExperimentConfig;
 use dmlmc::coordinator::{
-    run_jobs, run_jobs_pool, run_jobs_pool_with_report, LevelJobSpec, Method,
-    Trainer,
+    run_jobs, run_jobs_pool, run_jobs_pool_with_report, run_jobs_threaded,
+    LevelJobSpec, Method, Trainer,
 };
 use dmlmc::engine::mlp::init_params;
-use dmlmc::exec::WorkerPool;
+use dmlmc::exec::{ChunkTask, SpawnMode, WorkerPool};
 use dmlmc::hedging::Problem;
 use dmlmc::rng::BrownianSource;
 use dmlmc::runtime::NativeBackend;
 use dmlmc::scenarios::build_scenario;
 
-fn setup() -> (NativeBackend, BrownianSource, Vec<f32>) {
+fn setup() -> (Arc<NativeBackend>, BrownianSource, Vec<f32>) {
     (
-        NativeBackend::new(Problem::default()),
+        Arc::new(NativeBackend::new(Problem::default())),
         BrownianSource::new(11),
         init_params(0),
     )
@@ -59,7 +62,7 @@ fn pool_bitwise_equal_to_sequential_for_required_worker_counts() {
         LevelJobSpec { level: 4, n_chunks: 1 },
         LevelJobSpec { level: 6, n_chunks: 2 },
     ];
-    let seq = run_jobs(&b, &src, 5, &params, &jobs).unwrap();
+    let seq = run_jobs(&*b, &src, 5, &params, &jobs).unwrap();
     for workers in [1usize, 2, 3, 8] {
         let mut pool = WorkerPool::new(workers);
         let pooled =
@@ -77,7 +80,7 @@ fn oversubscribed_pool_matches_sequential() {
         LevelJobSpec { level: 1, n_chunks: 1 },
         LevelJobSpec { level: 5, n_chunks: 1 },
     ];
-    let seq = run_jobs(&b, &src, 3, &params, &jobs).unwrap();
+    let seq = run_jobs(&*b, &src, 3, &params, &jobs).unwrap();
     let mut pool = WorkerPool::new(8);
     let (pooled, report) =
         run_jobs_pool_with_report(&b, &src, 3, &params, &jobs, &mut pool)
@@ -95,7 +98,7 @@ fn oversubscribed_pool_matches_sequential() {
 fn single_chunk_job_matches_sequential() {
     let (b, src, params) = setup();
     let jobs = vec![LevelJobSpec { level: 3, n_chunks: 1 }];
-    let seq = run_jobs(&b, &src, 0, &params, &jobs).unwrap();
+    let seq = run_jobs(&*b, &src, 0, &params, &jobs).unwrap();
     for workers in [1usize, 4] {
         let mut pool = WorkerPool::new(workers);
         let pooled =
@@ -116,7 +119,7 @@ fn random_per_task_sleeps_cannot_change_the_gradient() {
         LevelJobSpec { level: 2, n_chunks: 3 },
         LevelJobSpec { level: 5, n_chunks: 2 },
     ];
-    let seq = run_jobs(&b, &src, 9, &params, &jobs).unwrap();
+    let seq = run_jobs(&*b, &src, 9, &params, &jobs).unwrap();
     for chaos_seed in [0xA5u64, 0x5A, 0x77] {
         let mut pool = WorkerPool::new(4);
         pool.set_chaos_delays(chaos_seed, 400);
@@ -131,17 +134,17 @@ fn two_factor_scenario_pools_bitwise() {
     // Heston (D = 2): factor-major increments flow through the pool
     // closure exactly as through run_one.
     let problem = Problem::default();
-    let b = NativeBackend::with_scenario(
+    let b = Arc::new(NativeBackend::with_scenario(
         problem,
         build_scenario("heston-call", &problem).unwrap(),
-    );
+    ));
     let src = BrownianSource::new(4);
     let params = init_params(2);
     let jobs = vec![
         LevelJobSpec { level: 0, n_chunks: 2 },
         LevelJobSpec { level: 3, n_chunks: 2 },
     ];
-    let seq = run_jobs(&b, &src, 1, &params, &jobs).unwrap();
+    let seq = run_jobs(&*b, &src, 1, &params, &jobs).unwrap();
     for workers in [2usize, 5] {
         let mut pool = WorkerPool::new(workers);
         let pooled =
@@ -212,6 +215,125 @@ fn exec_report_telemetry_is_consistent() {
     assert_eq!(pool.stats().tasks, 10);
 }
 
+// ---------------------------------------------------------------------------
+// Resident lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resident_pool_thread_count_is_constant_across_dispatches() {
+    let (b, src, params) = setup();
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 2 },
+        LevelJobSpec { level: 1, n_chunks: 1 },
+    ];
+    let mut pool = WorkerPool::new(3);
+    assert_eq!(pool.mode(), SpawnMode::Resident);
+    assert_eq!(pool.threads_spawned(), 3);
+    assert_eq!(pool.resident_threads(), 3);
+    for step in 0..4 {
+        run_jobs_pool(&b, &src, step, &params, &jobs, &mut pool).unwrap();
+        // spawn-once: no dispatch adds a thread
+        assert_eq!(pool.threads_spawned(), 3, "after step {step}");
+        assert_eq!(pool.resident_threads(), 3, "after step {step}");
+    }
+    assert_eq!(pool.stats().steps, 4);
+    // the scoped baseline, by contrast, spawns fresh threads every time
+    let mut scoped = WorkerPool::new_scoped(3);
+    for step in 0..4 {
+        run_jobs_pool(&b, &src, step, &params, &jobs, &mut scoped).unwrap();
+    }
+    assert_eq!(scoped.threads_spawned(), 4 * 3); // min(P=3, tasks=3) per step
+    assert_eq!(scoped.resident_threads(), 0);
+}
+
+#[test]
+fn dropping_the_pool_joins_resident_threads_cleanly() {
+    let (b, src, params) = setup();
+    let mut pool = WorkerPool::new(4);
+    run_jobs_pool(
+        &b,
+        &src,
+        0,
+        &params,
+        &[LevelJobSpec { level: 0, n_chunks: 2 }],
+        &mut pool,
+    )
+    .unwrap();
+    drop(pool); // must not hang or panic (threads join on Drop)
+    // an unused pool joins cleanly too
+    drop(WorkerPool::new(2));
+}
+
+#[test]
+fn panicking_task_does_not_deadlock_later_dispatches() {
+    let mut pool = WorkerPool::new(2);
+    let tasks: Vec<ChunkTask> = (0..3)
+        .map(|chunk| ChunkTask { group: 0, chunk, level: 0, weight: 1.0 })
+        .collect();
+    let err = pool
+        .execute(&tasks, 1, |t: &ChunkTask| {
+            if t.chunk == 2 {
+                panic!("injected task panic");
+            }
+            Ok((t.chunk as f64, vec![1.0f32]))
+        })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    // the resident workers must have survived the panic: a real
+    // dispatch on the same pool completes and matches sequential
+    let (b, src, params) = setup();
+    let jobs = vec![LevelJobSpec { level: 0, n_chunks: 2 }];
+    let seq = run_jobs(&*b, &src, 1, &params, &jobs).unwrap();
+    let pooled = run_jobs_pool(&b, &src, 1, &params, &jobs, &mut pool).unwrap();
+    assert_bitwise_eq(&seq, &pooled, "post-panic dispatch");
+    assert_eq!(pool.stats().steps, 1); // the failed dispatch is not recorded
+}
+
+#[test]
+fn arc_shared_heston_backend_runs_consecutive_resident_dispatches() {
+    // Two-factor (Heston) backend behind the Arc that the resident
+    // pool's 'static closures co-own: consecutive dispatches on one pool
+    // stay bit-identical to sequential and accumulate telemetry.
+    let problem = Problem::default();
+    let b: Arc<NativeBackend> = Arc::new(NativeBackend::with_scenario(
+        problem,
+        build_scenario("heston-call", &problem).unwrap(),
+    ));
+    let src = BrownianSource::new(7);
+    let params = init_params(1);
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 2 },
+        LevelJobSpec { level: 2, n_chunks: 1 },
+    ];
+    let mut pool = WorkerPool::new(3);
+    for step in 0..3 {
+        let seq = run_jobs(&*b, &src, step, &params, &jobs).unwrap();
+        let pooled =
+            run_jobs_pool(&b, &src, step, &params, &jobs, &mut pool).unwrap();
+        assert_bitwise_eq(&seq, &pooled, &format!("heston resident step {step}"));
+    }
+    assert_eq!(pool.stats().steps, 3);
+    assert_eq!(pool.stats().tasks, 9);
+    assert_eq!(pool.threads_spawned(), 3);
+    // the Arc is still usable by the caller after all those dispatches
+    assert_eq!(b.n_factors(), 2);
+}
+
+#[test]
+fn threaded_wrapper_accumulates_stats_across_calls() {
+    // Regression for the telemetry-loss bug: run_jobs_threaded used to
+    // build (and drop) a fresh WorkerPool internally on every call.
+    let (b, src, params) = setup();
+    let jobs = vec![LevelJobSpec { level: 0, n_chunks: 2 }];
+    let mut pool = WorkerPool::new(2);
+    for step in 0..2 {
+        run_jobs_threaded(&b, &src, step, &params, &jobs, &mut pool).unwrap();
+    }
+    assert_eq!(pool.stats().steps, 2);
+    assert_eq!(pool.stats().tasks, 4);
+    assert_eq!(pool.stats().overheads.len(), 2);
+}
+
 #[test]
 fn parallel_sweep_end_to_end_smoke() {
     let mut cfg = ExperimentConfig::smoke();
@@ -224,6 +346,7 @@ fn parallel_sweep_end_to_end_smoke() {
     for cell in &cells {
         assert_eq!(cell.workers, 2);
         assert!(cell.measured_total_s >= 0.0);
+        assert!(cell.overhead_mean_s >= 0.0);
         assert!(cell.pram_makespan > 0.0);
         assert!(cell.brent_bound > 0.0);
     }
@@ -238,4 +361,29 @@ fn parallel_sweep_end_to_end_smoke() {
     };
     assert!(pram(Method::Dmlmc) < pram(Method::Mlmc));
     assert!(pram(Method::Mlmc) <= pram(Method::Naive));
+}
+
+#[test]
+fn exec_overhead_compare_smoke() {
+    // The resident-vs-scoped comparison driver behind `repro exec-bench`
+    // and the `exec_compare` row of BENCH_parallel.json. No timing
+    // inequality is asserted (coarse CI clocks); structure and thread
+    // accounting are.
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.mlmc.n_effective = 64;
+    let cmp = dmlmc::experiments::exec_overhead_compare(&cfg, 2, 3).unwrap();
+    assert_eq!(cmp.workers, 2);
+    assert_eq!(cmp.steps, 3);
+    assert!(cmp.resident_overhead_mean_s >= 0.0);
+    assert!(cmp.scoped_overhead_mean_s >= 0.0);
+    assert!(cmp.resident_makespan_mean_s >= 0.0);
+    assert!(cmp.scoped_makespan_mean_s >= 0.0);
+    // spawn-once vs spawn-per-dispatch (warmup + 3 measured dispatches)
+    assert_eq!(cmp.resident_threads_spawned, 2);
+    assert!(
+        cmp.scoped_threads_spawned > cmp.resident_threads_spawned,
+        "scoped spawned {} <= resident {}",
+        cmp.scoped_threads_spawned,
+        cmp.resident_threads_spawned
+    );
 }
