@@ -11,7 +11,8 @@
 
 ARTIFACTS_DIR := rust/artifacts
 
-.PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec clean
+.PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec \
+	bench-fleet clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -40,6 +41,12 @@ bench-parallel:
 # level-0-only dispatches (see `repro exec-bench --help`).
 bench-exec:
 	cd rust && cargo run --release --bin repro -- exec-bench
+
+# Serving-fleet throughput: one resident pool multiplexing N trainers,
+# swept over fleet size x workers; emits rust/BENCH_fleet.json (see
+# `repro fleet-sweep --help`).
+bench-fleet:
+	cd rust && cargo run --release --bin repro -- fleet-sweep --quiet
 
 clean:
 	rm -rf $(ARTIFACTS_DIR)

@@ -16,7 +16,7 @@
 use std::path::PathBuf;
 
 use dmlmc::config::{Backend, ExperimentConfig};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::util::cli::{Command, Opt};
 
 fn main() -> anyhow::Result<()> {
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         snapshots,
         cfg.runtime.backend.name()
     );
-    let fig = experiments::figure1(&cfg, snapshots, false)?;
+    let fig = ExperimentRunner::new(&cfg).figure1(snapshots)?;
 
     println!("\n=== Figure 1 (left): variance proxy E||grad Delta_l||^2 ===");
     println!("{:<6} {:>14} {:>12} {:>16}", "level", "mean", "std", "mean/2^(-b l)");

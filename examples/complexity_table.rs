@@ -7,7 +7,7 @@
 //! ```
 
 use dmlmc::config::{Backend, ExperimentConfig};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::mlmc::LevelAllocation;
 use dmlmc::parallel::{pram::LevelJob, CostModel, PramMachine};
 use dmlmc::util::cli::{Command, Opt};
@@ -39,15 +39,16 @@ fn main() -> anyhow::Result<()> {
         "=== Table 1: theory vs measured over T = {} steps (N = {}, lmax = {}) ===\n",
         cfg.train.steps, cfg.mlmc.n_effective, cfg.problem.lmax
     );
-    let (theory, measured) = experiments::table1(&cfg)?;
-    println!("{}", experiments::render_table1(&theory, &measured));
+    let runner = ExperimentRunner::new(&cfg);
+    let (theory, measured) = runner.table1()?;
+    println!("{}", ExperimentRunner::render_table1(&theory, &measured));
 
     println!(
         "average per-step parallel depth: naive/mlmc = {} (2^c·lmax), dmlmc measured = \
          {:.2}, schedule-predicted = {:.2}, theory Σ2^((c-d)l) = {:.2}",
         2f64.powi(cfg.problem.lmax as i32),
         measured[2].avg_depth,
-        experiments::predicted_avg_depth(&cfg, 1 << 14),
+        runner.predicted_avg_depth(1 << 14),
         dmlmc::mlmc::theory::geom_sum(cfg.mlmc.c - cfg.mlmc.d, cfg.problem.lmax),
     );
 

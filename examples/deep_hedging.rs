@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::Method;
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::metrics::writer::write_csv;
 use dmlmc::util::cli::{Command, Opt};
 
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let results = experiments::figure2(&cfg, false)?;
+    let results = ExperimentRunner::new(&cfg).figure2()?;
     std::fs::create_dir_all(&cfg.runtime.out_dir)?;
 
     for (method, curves, agg) in &results {

@@ -10,7 +10,7 @@
 //! ```
 
 use dmlmc::config::{Backend, ExperimentConfig};
-use dmlmc::experiments::{render_scenario_table, scenario_sweep};
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::scenarios::all_scenario_names;
 
 fn main() -> anyhow::Result<()> {
@@ -30,8 +30,8 @@ fn main() -> anyhow::Result<()> {
         cfg.problem.lmax
     );
 
-    let rows = scenario_sweep(&cfg, &names, false)?;
-    println!("\n{}", render_scenario_table(&rows));
+    let rows = ExperimentRunner::new(&cfg).scenario_sweep(&names)?;
+    println!("\n{}", ExperimentRunner::render_scenario_table(&rows));
 
     println!(
         "reading the table: `b_hat` is the fitted decay exponent of \

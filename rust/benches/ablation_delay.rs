@@ -11,7 +11,7 @@
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::mlmc::estimator::grad_norm;
 
 fn l2_diff(a: &[f32], b: &[f32]) -> f64 {
@@ -32,7 +32,10 @@ fn main() {
 
     println!("\n=== ABLATION: delay exponent d (c = {}) ===", cfg.mlmc.c);
     let ds = [0.0, 0.5, 1.0, 1.5, 2.0];
-    let rows = experiments::sweep_delay(&cfg, &ds).expect("sweep");
+    let rows = ExperimentRunner::new(&cfg)
+        .quiet(true)
+        .sweep_delay(&ds)
+        .expect("sweep");
     println!(
         "{:<6} {:>12} {:>14} {:>14} {:>12} {:>10}",
         "d", "final loss", "std cost", "par cost", "avg depth", "regime"

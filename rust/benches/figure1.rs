@@ -8,7 +8,7 @@
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::engine::mlp::init_params;
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::rng::{brownian::Purpose, BrownianSource};
 use dmlmc::runtime::{GradBackend, NativeBackend};
 
@@ -19,7 +19,10 @@ fn main() {
     cfg.mlmc.n_effective = 64;
 
     // The figure itself.
-    let fig = experiments::figure1(&cfg, 4, true).expect("figure1");
+    let fig = ExperimentRunner::new(&cfg)
+        .quiet(true)
+        .figure1(4)
+        .expect("figure1");
     println!("\n=== FIGURE 1 (decay of variance proxy and smoothness) ===");
     println!(
         "{:<6} {:>16} {:>12} {:>16} {:>12}",

@@ -9,7 +9,7 @@
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 
 fn main() {
     let mut cfg = ExperimentConfig::default_paper();
@@ -20,7 +20,10 @@ fn main() {
     cfg.mlmc.n_effective = 128;
     cfg.train.dmlmc_warmup = 0; // bench the pure schedule, not stability aids
 
-    let results = experiments::figure2(&cfg, true).expect("figure2");
+    let results = ExperimentRunner::new(&cfg)
+        .quiet(true)
+        .figure2()
+        .expect("figure2");
     for axis in ["standard", "parallel"] {
         println!("\n=== FIGURE 2 ({axis} complexity as x-axis) ===");
         println!(

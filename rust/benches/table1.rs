@@ -7,7 +7,7 @@
 use dmlmc::bench::{black_box, Harness};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 
 fn cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default_paper();
@@ -23,16 +23,17 @@ fn main() {
     let cfg = cfg();
 
     // The table itself (the regeneration artifact).
-    let (theory, measured) = experiments::table1(&cfg).expect("table1");
+    let runner = ExperimentRunner::new(&cfg).quiet(true);
+    let (theory, measured) = runner.table1().expect("table1");
     println!(
         "\n=== TABLE 1 (theory vs measured, T = {}, N = {}) ===",
         cfg.train.steps, cfg.mlmc.n_effective
     );
-    println!("{}", experiments::render_table1(&theory, &measured));
+    println!("{}", ExperimentRunner::render_table1(&theory, &measured));
     println!(
         "dmlmc avg per-step depth: measured {:.2} | schedule {:.2} | theory Σ2^((c-d)l) = {:.2}\n",
         measured[2].avg_depth,
-        experiments::predicted_avg_depth(&cfg, 1 << 14),
+        runner.predicted_avg_depth(1 << 14),
         dmlmc::mlmc::theory::geom_sum(cfg.mlmc.c - cfg.mlmc.d, cfg.problem.lmax),
     );
 

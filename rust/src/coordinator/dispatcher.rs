@@ -52,10 +52,11 @@ pub struct LevelResult {
 
 /// One chunk of one level job: generate the addressed Brownian batch and
 /// run the coupled value-and-grad. The single definition of the
-/// `(step, level, chunk)` -> dw -> gradient mapping — both the sequential
-/// loop and the pool closure go through here, so the pool-vs-sequential
-/// bit-identity can never drift apart at this layer.
-fn grad_chunk_at<B: GradBackend + ?Sized>(
+/// `(step, level, chunk)` -> dw -> gradient mapping — the sequential
+/// loop, the pool closure and the fleet's multiplexed dispatch all go
+/// through here, so bit-identity across strategies can never drift apart
+/// at this layer.
+pub(crate) fn grad_chunk_at<B: GradBackend + ?Sized>(
     backend: &B,
     problem: &Problem,
     src: &BrownianSource,
@@ -123,8 +124,9 @@ pub fn run_jobs<B: GradBackend + ?Sized>(
 /// under-weights coupled levels ~1.5x relative to level 0, skewing the
 /// greedy schedule and the measured-vs-PRAM comparison). Level 0 has no
 /// coarse half. Weights only order the queue — results are bit-identical
-/// regardless.
-fn chunk_tasks<B: GradBackend + ?Sized>(
+/// regardless. `pub(crate)` so the fleet can shard each trainer's jobs
+/// with the exact same weights before rebasing group indices.
+pub(crate) fn chunk_tasks<B: GradBackend + ?Sized>(
     backend: &B,
     problem: &Problem,
     jobs: &[LevelJobSpec],

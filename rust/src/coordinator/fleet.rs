@@ -1,0 +1,648 @@
+//! Multi-problem serving fleet: ONE resident [`WorkerPool`] multiplexing
+//! N independent [`Trainer`]s.
+//!
+//! The paper's point (arXiv:2310.02402) is that delayed MLMC shrinks
+//! *per-iteration parallel complexity*; that win only compounds when the
+//! freed worker slots are immediately reusable — i.e. when many
+//! independent SGD problems share one parallel machine (one hedging
+//! problem per portfolio, the ROADMAP's production shape). This module
+//! is that sharing layer:
+//!
+//! * **Sessions** — [`FleetCoordinator::submit`] takes a
+//!   [`TrainerBuilder`] per problem and returns a [`SessionId`] handle;
+//!   [`poll`](FleetCoordinator::poll) reports progress,
+//!   [`drain`](FleetCoordinator::drain) runs everything to completion
+//!   and returns per-session [`FleetRun`]s.
+//! * **Cross-problem batching** — each [`tick`](FleetCoordinator::tick)
+//!   co-schedules one SGD step from *every* running session into a
+//!   single pool dispatch: every session's due level jobs are sharded
+//!   into [`ChunkTask`]s with the usual coupled-row-work LPT weights,
+//!   rebased onto globally unique group indices, and pushed through the
+//!   shared LPT queue together — same-level chunks of different problems
+//!   interleave freely across the `P` workers.
+//! * **Fair-share + backpressure** — one step per running session per
+//!   tick is fair-share by construction (no session can starve another);
+//!   `max_active` bounds how many sessions step concurrently (the rest
+//!   queue and are admitted as others finish) and `max_pending` makes
+//!   `submit` fail fast when the fleet is oversubscribed.
+//! * **Per-problem bit-exactness** — a session's chunk batches are pure
+//!   functions of its own `(seed, step, level, chunk)` address
+//!   (counter-based RNG), its groups are reduced independently in
+//!   ascending chunk order ([`WorkerPool::execute`]), and the apply half
+//!   of the step is the same [`Trainer`] code path as a solo run. Every
+//!   problem's gradient — and hence its whole trajectory — is
+//!   bit-identical to its solo sequential run at every fleet size and
+//!   worker count, chaos delays included (tested in
+//!   `tests/fleet_exec.rs`).
+//! * **Per-problem telemetry** — the shared dispatch's
+//!   [`StepExecReport`] is re-attributed per session via
+//!   [`StepExecReport::slice_groups`], so each problem sees its own
+//!   busy time, task counts and share-of-fleet utilization per step.
+//!
+//! ```no_run
+//! use dmlmc::config::ExperimentConfig;
+//! use dmlmc::coordinator::{FleetCoordinator, Method, TrainerBuilder};
+//!
+//! let cfg = ExperimentConfig::smoke();
+//! let mut fleet = FleetCoordinator::new(4); // one pool, 4 workers
+//! let a = fleet.submit("bs", TrainerBuilder::new(&cfg).method(Method::Dmlmc))?;
+//! let b = fleet.submit(
+//!     "heston",
+//!     TrainerBuilder::new(&cfg).method(Method::Dmlmc).scenario("heston-uo-call"),
+//! )?;
+//! while fleet.poll(a).is_some_and(|s| !s.is_done()) {
+//!     fleet.tick()?; // one co-scheduled step of every running session
+//! }
+//! let runs = fleet.drain()?; // finish b (and any others), collect results
+//! assert_eq!(runs.len(), 2);
+//! # let _ = b;
+//! # anyhow::Ok(())
+//! ```
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::dispatcher::{chunk_tasks, grad_chunk_at, LevelJobSpec, LevelResult};
+use super::method::Method;
+use super::trainer::{Trainer, TrainerBuilder};
+use crate::exec::{ChunkTask, ExecStats, StepExecReport, WorkerPool};
+use crate::hedging::Problem;
+use crate::metrics::{CurvePoint, LearningCurve};
+use crate::rng::{brownian::Purpose, BrownianSource};
+use crate::runtime::SharedBackend;
+
+/// Opaque handle to a submitted session, returned by
+/// [`FleetCoordinator::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SessionId(pub usize);
+
+/// Where a session is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    /// Submitted, waiting for an admission slot (`max_active`).
+    Queued,
+    /// Stepping — participates in every tick's shared dispatch.
+    Running,
+    /// All steps done; result available via [`FleetCoordinator::drain`].
+    Done,
+}
+
+/// Snapshot of one session's progress ([`FleetCoordinator::poll`]).
+#[derive(Debug, Clone)]
+pub struct SessionStatus {
+    pub id: SessionId,
+    pub name: String,
+    pub state: SessionState,
+    /// Steps completed so far.
+    pub steps_done: u64,
+    /// Total steps this session will run.
+    pub steps_total: u64,
+}
+
+impl SessionStatus {
+    pub fn is_done(&self) -> bool {
+        self.state == SessionState::Done
+    }
+}
+
+/// One finished session's results, handed out by
+/// [`FleetCoordinator::drain`].
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    pub id: SessionId,
+    pub name: String,
+    pub method: Method,
+    pub seed: u64,
+    /// The learning curve, on the same eval grid as a solo
+    /// [`Trainer::run`] (bit-identical to it, in fact).
+    pub curve: LearningCurve,
+    /// Final model parameters.
+    pub final_params: Vec<f32>,
+    /// Per-step, per-problem execution reports: this session's slice of
+    /// each shared dispatch (its tasks/busy time under the shared
+    /// makespan).
+    pub reports: Vec<StepExecReport>,
+}
+
+/// What one pool task needs to know about the session it came from. One
+/// entry per reduction group; the dispatch closure routes `task.group`
+/// here. Everything is owned/`Copy`/`Arc` because the resident workers
+/// need a `'static` job.
+struct GroupCtx {
+    backend: SharedBackend,
+    problem: Problem,
+    src: BrownianSource,
+    step: u64,
+    params: Arc<[f32]>,
+    kind: GroupKind,
+}
+
+enum GroupKind {
+    /// A level job's chunks — routed through the dispatcher's
+    /// [`grad_chunk_at`], exactly like solo pooled dispatch.
+    Coupled,
+    /// A naive finest-grid refresh — mirrors `Trainer::naive_gradient`'s
+    /// pooled path (no coupling, so no coarse half).
+    Naive { batch: usize, n_steps: usize, dt: f64 },
+}
+
+/// One session's share of a tick: which global groups are its, and how
+/// to turn their reductions back into a step.
+struct Plan {
+    sess: usize,
+    groups: Range<usize>,
+    /// `Some(jobs)` for MLMC/DMLMC (one group per level job), `None` for
+    /// a naive session (one group total).
+    jobs: Option<Vec<LevelJobSpec>>,
+}
+
+struct Session {
+    id: SessionId,
+    name: String,
+    trainer: Trainer,
+    backend: SharedBackend,
+    src: BrownianSource,
+    /// Next step to run.
+    t: u64,
+    steps: u64,
+    curve: LearningCurve,
+    reports: Vec<StepExecReport>,
+    state: SessionState,
+}
+
+/// The serving fleet: one resident [`WorkerPool`] shared by N trainers.
+/// See the module docs for the scheduling/bit-exactness contract.
+pub struct FleetCoordinator {
+    pool: WorkerPool,
+    sessions: Vec<Session>,
+    next_id: usize,
+    max_active: usize,
+    max_pending: usize,
+    ticks: usize,
+}
+
+impl FleetCoordinator {
+    /// A fleet over a fresh resident pool of `workers` threads, with no
+    /// admission/submission limits (see [`with_limits`](Self::with_limits)).
+    pub fn new(workers: usize) -> Self {
+        Self::with_limits(workers, usize::MAX, usize::MAX)
+    }
+
+    /// Like [`new`](Self::new) with explicit oversubscription bounds:
+    /// at most `max_active` sessions step concurrently (the rest queue),
+    /// and `submit` errors once `max_pending` sessions are queued or
+    /// running (backpressure — callers must drain before submitting
+    /// more).
+    pub fn with_limits(workers: usize, max_active: usize, max_pending: usize) -> Self {
+        FleetCoordinator {
+            pool: WorkerPool::new(workers),
+            sessions: Vec::new(),
+            next_id: 0,
+            max_active: max_active.max(1),
+            max_pending: max_pending.max(1),
+            ticks: 0,
+        }
+    }
+
+    /// The shared pool's worker count.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Cumulative execution stats of the shared pool (one record per
+    /// fleet tick — a tick is one multiplexed dispatch).
+    pub fn exec_stats(&self) -> &ExecStats {
+        self.pool.stats()
+    }
+
+    /// Ticks executed so far.
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Sessions not yet done (queued + running).
+    pub fn pending_sessions(&self) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.state != SessionState::Done)
+            .count()
+    }
+
+    /// Forward deterministic chaos-delay injection to the shared pool
+    /// (scheduling perturbation for determinism tests; 0 disables).
+    pub fn set_chaos_delays(&mut self, seed: u64, max_micros: u64) {
+        self.pool.set_chaos_delays(seed, max_micros);
+    }
+
+    /// Submit a problem to the fleet. The builder is forced to
+    /// [`TrainerBuilder::without_local_pool`] — fleet sessions dispatch
+    /// through the ONE shared pool. Errors when the builder fails, when
+    /// the backend is not shareable (PJRT), or when the fleet is
+    /// oversubscribed (`max_pending`).
+    pub fn submit(&mut self, name: &str, builder: TrainerBuilder) -> Result<SessionId> {
+        let pending = self.pending_sessions();
+        if pending >= self.max_pending {
+            bail!(
+                "fleet oversubscribed: {pending} sessions queued/running >= \
+                 max_pending {}; drain (or poll to completion) before \
+                 submitting more",
+                self.max_pending
+            );
+        }
+        let trainer = builder.without_local_pool().build()?;
+        let backend = trainer.shared_backend().ok_or_else(|| {
+            anyhow!(
+                "fleet sessions need a shareable backend (native engine): the \
+                 PJRT runtime's !Send handles cannot co-own the shared pool's \
+                 'static dispatch closures"
+            )
+        })?;
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        let steps = trainer.cfg.train.steps as u64;
+        let src = trainer.brownian_src();
+        let curve = LearningCurve::new(trainer.method.name(), trainer.seed);
+        self.sessions.push(Session {
+            id,
+            name: name.to_string(),
+            trainer,
+            backend,
+            src,
+            t: 0,
+            steps,
+            curve,
+            reports: Vec::new(),
+            state: SessionState::Queued,
+        });
+        Ok(id)
+    }
+
+    /// Progress snapshot for a session; `None` once drained (or never
+    /// submitted).
+    pub fn poll(&self, id: SessionId) -> Option<SessionStatus> {
+        self.sessions.iter().find(|s| s.id == id).map(|s| SessionStatus {
+            id: s.id,
+            name: s.name.clone(),
+            state: s.state,
+            steps_done: s.t,
+            steps_total: s.steps,
+        })
+    }
+
+    /// Admit queued sessions (submission order) while there is an
+    /// `max_active` slot free; each admission records the step-0 eval
+    /// point, exactly like [`Trainer::run`]'s preamble.
+    fn admit(&mut self) -> Result<()> {
+        let mut running = self
+            .sessions
+            .iter()
+            .filter(|s| s.state == SessionState::Running)
+            .count();
+        for i in 0..self.sessions.len() {
+            if running >= self.max_active {
+                break;
+            }
+            if self.sessions[i].state != SessionState::Queued {
+                continue;
+            }
+            let loss0 = self.sessions[i].trainer.eval_loss()?;
+            let s = &mut self.sessions[i];
+            s.curve.push(CurvePoint {
+                step: 0,
+                loss: loss0,
+                std_cost: 0.0,
+                par_cost: 0.0,
+                grad_norm: 0.0,
+            });
+            if s.steps == 0 {
+                s.state = SessionState::Done;
+                continue;
+            }
+            s.state = SessionState::Running;
+            running += 1;
+        }
+        Ok(())
+    }
+
+    /// Run one fleet tick: admit what fits, co-schedule one SGD step
+    /// from every running session into a single shared-pool dispatch,
+    /// then apply each session's reductions through the regular trainer
+    /// step tail. Returns the number of sessions stepped (0 when
+    /// nothing is running).
+    ///
+    /// On error (a failing chunk task) no session is advanced.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.admit()?;
+
+        // Plan: shard every running session's due work, rebasing group
+        // indices so the multiplexed dispatch reduces each problem's
+        // groups independently (the bit-exactness invariant).
+        let mut tasks: Vec<ChunkTask> = Vec::new();
+        let mut ctxs: Vec<GroupCtx> = Vec::new();
+        let mut plans: Vec<Plan> = Vec::new();
+        for (idx, s) in self.sessions.iter().enumerate() {
+            if s.state != SessionState::Running {
+                continue;
+            }
+            let t = s.t;
+            let params: Arc<[f32]> = Arc::from(s.trainer.params.as_slice());
+            let problem = *s.backend.problem();
+            let base = ctxs.len();
+            match s.trainer.method {
+                Method::Naive => {
+                    let batch = s.backend.naive_chunk();
+                    let n_steps = problem.n_steps(problem.lmax);
+                    // finest grid only, no coupling — no coarse half
+                    let weight = batch as f64 * n_steps as f64;
+                    for chunk in 0..s.trainer.naive_chunks() {
+                        tasks.push(ChunkTask {
+                            group: base,
+                            chunk,
+                            level: problem.lmax,
+                            weight,
+                        });
+                    }
+                    ctxs.push(GroupCtx {
+                        backend: s.backend.clone(),
+                        problem,
+                        src: s.src,
+                        step: t,
+                        params,
+                        kind: GroupKind::Naive {
+                            batch,
+                            n_steps,
+                            dt: problem.dt(problem.lmax),
+                        },
+                    });
+                    plans.push(Plan { sess: idx, groups: base..base + 1, jobs: None });
+                }
+                Method::Mlmc | Method::Dmlmc => {
+                    let jobs = s.trainer.jobs_for_step(t);
+                    let mut local = chunk_tasks(&*s.backend, &problem, &jobs);
+                    for task in &mut local {
+                        task.group += base;
+                    }
+                    tasks.extend(local);
+                    for _ in &jobs {
+                        ctxs.push(GroupCtx {
+                            backend: s.backend.clone(),
+                            problem,
+                            src: s.src,
+                            step: t,
+                            params: params.clone(),
+                            kind: GroupKind::Coupled,
+                        });
+                    }
+                    plans.push(Plan {
+                        sess: idx,
+                        groups: base..base + jobs.len(),
+                        jobs: Some(jobs),
+                    });
+                }
+            }
+        }
+        if plans.is_empty() {
+            return Ok(0);
+        }
+
+        // One dispatch for the whole fleet tick. The closure routes each
+        // task to its group's session context; per-group reduction in
+        // ascending chunk order happens inside the pool, per problem.
+        let n_groups = ctxs.len();
+        let (reduced, report) =
+            self.pool.execute(&tasks, n_groups, move |task: &ChunkTask| {
+                let ctx = &ctxs[task.group];
+                match ctx.kind {
+                    GroupKind::Coupled => grad_chunk_at(
+                        &*ctx.backend,
+                        &ctx.problem,
+                        &ctx.src,
+                        ctx.step,
+                        task.level,
+                        task.chunk,
+                        &ctx.params,
+                    ),
+                    GroupKind::Naive { batch, n_steps, dt } => {
+                        let dw = ctx.src.increments_multi(
+                            Purpose::Grad,
+                            ctx.step,
+                            task.level as u32,
+                            task.chunk as u32,
+                            batch,
+                            n_steps,
+                            dt,
+                            ctx.backend.n_factors(),
+                        );
+                        ctx.backend.grad_naive_chunk(&ctx.params, &dw)
+                    }
+                }
+            })?;
+        let mut reduced: Vec<Option<(f64, Vec<f32>)>> =
+            reduced.into_iter().map(Some).collect();
+
+        // Apply: each session consumes its group range through the same
+        // step tail a solo trainer runs, and records its slice of the
+        // shared dispatch report.
+        let mut stepped = 0;
+        for plan in plans {
+            let s = &mut self.sessions[plan.sess];
+            let t = s.t;
+            let per_problem = report.slice_groups(plan.groups.clone());
+            let (_cost, gnorm) = match plan.jobs {
+                Some(jobs) => {
+                    let results: Vec<LevelResult> = jobs
+                        .iter()
+                        .zip(plan.groups.clone())
+                        .map(|(&spec, group)| {
+                            let (loss_delta, grad) =
+                                reduced[group].take().expect("group reduced once");
+                            LevelResult {
+                                level: spec.level,
+                                loss_delta,
+                                grad,
+                                n_samples: spec.n_chunks
+                                    * s.backend.grad_chunk(spec.level),
+                            }
+                        })
+                        .collect();
+                    s.trainer.apply_level_results(t, results)
+                }
+                None => {
+                    let (_loss, grad) = reduced[plan.groups.start]
+                        .take()
+                        .expect("group reduced once");
+                    s.trainer.apply_naive_result(t, grad)
+                }
+            };
+            s.reports.push(per_problem);
+            let next = t + 1;
+            s.t = next;
+            stepped += 1;
+            let eval_every = s.trainer.cfg.train.eval_every as u64;
+            if next % eval_every == 0 || next == s.steps {
+                let loss = s.trainer.eval_loss()?;
+                let cum = s.trainer.cumulative_cost();
+                s.curve.push(CurvePoint {
+                    step: next as usize,
+                    loss,
+                    std_cost: cum.work,
+                    par_cost: cum.depth,
+                    grad_norm: gnorm,
+                });
+            }
+            if next >= s.steps {
+                s.state = SessionState::Done;
+            }
+        }
+        self.ticks += 1;
+        Ok(stepped)
+    }
+
+    /// Tick until every session is done, then hand out all results (the
+    /// fleet is empty afterwards; handles from before the drain no
+    /// longer poll). Results are in submission order.
+    pub fn drain(&mut self) -> Result<Vec<FleetRun>> {
+        while self.sessions.iter().any(|s| s.state != SessionState::Done) {
+            let stepped = self.tick()?;
+            if stepped == 0
+                && self.sessions.iter().any(|s| s.state != SessionState::Done)
+            {
+                bail!("fleet made no progress with unfinished sessions");
+            }
+        }
+        Ok(self
+            .sessions
+            .drain(..)
+            .map(|s| FleetRun {
+                id: s.id,
+                name: s.name,
+                method: s.trainer.method,
+                seed: s.trainer.seed,
+                final_params: s.trainer.params.clone(),
+                curve: s.curve,
+                reports: s.reports,
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.train.steps = 4;
+        cfg.train.eval_every = 2;
+        cfg.mlmc.n_effective = 64;
+        cfg
+    }
+
+    #[test]
+    fn two_session_fleet_matches_solo_runs_bitwise() {
+        let cfg = cfg();
+        let mut solo_a = Trainer::from_config(&cfg, Method::Dmlmc, 1).unwrap();
+        let curve_a = solo_a.run().unwrap();
+        let mut solo_b = Trainer::from_config(&cfg, Method::Mlmc, 2).unwrap();
+        let curve_b = solo_b.run().unwrap();
+
+        let mut fleet = FleetCoordinator::new(3);
+        let a = fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(1))
+            .unwrap();
+        let b = fleet
+            .submit("b", TrainerBuilder::new(&cfg).method(Method::Mlmc).seed(2))
+            .unwrap();
+        let runs = fleet.drain().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].id, a);
+        assert_eq!(runs[1].id, b);
+        assert_eq!(runs[0].final_params, solo_a.params);
+        assert_eq!(runs[1].final_params, solo_b.params);
+        for (p, q) in runs[0].curve.points.iter().zip(&curve_a.points) {
+            assert_eq!(p.loss, q.loss);
+            assert_eq!(p.grad_norm, q.grad_norm);
+        }
+        for (p, q) in runs[1].curve.points.iter().zip(&curve_b.points) {
+            assert_eq!(p.loss, q.loss);
+        }
+    }
+
+    #[test]
+    fn per_problem_reports_cover_every_step() {
+        let cfg = cfg();
+        let mut fleet = FleetCoordinator::new(2);
+        fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(0))
+            .unwrap();
+        fleet
+            .submit("b", TrainerBuilder::new(&cfg).method(Method::Naive).seed(0))
+            .unwrap();
+        let runs = fleet.drain().unwrap();
+        for run in &runs {
+            assert_eq!(run.reports.len(), cfg.train.steps);
+            for r in &run.reports {
+                assert!(r.n_tasks > 0, "{}: empty per-problem report", run.name);
+                let executed: usize = r.workers.iter().map(|w| w.tasks).sum();
+                assert_eq!(executed, r.n_tasks);
+            }
+        }
+        // every tick was one shared dispatch
+        assert_eq!(fleet.exec_stats().steps, cfg.train.steps);
+        assert_eq!(fleet.ticks(), cfg.train.steps);
+    }
+
+    #[test]
+    fn poll_tracks_lifecycle_and_drain_empties() {
+        let cfg = cfg();
+        let mut fleet = FleetCoordinator::new(2);
+        let id = fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap();
+        let st = fleet.poll(id).unwrap();
+        assert_eq!(st.state, SessionState::Queued);
+        assert_eq!(st.steps_total, cfg.train.steps as u64);
+        fleet.tick().unwrap();
+        let st = fleet.poll(id).unwrap();
+        assert_eq!(st.state, SessionState::Running);
+        assert_eq!(st.steps_done, 1);
+        fleet.drain().unwrap();
+        assert!(fleet.poll(id).is_none(), "drained handles no longer poll");
+        assert_eq!(fleet.pending_sessions(), 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_oversubscription_and_admission_queues() {
+        let cfg = cfg();
+        let mut fleet = FleetCoordinator::with_limits(2, 1, 2);
+        let a = fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap();
+        let b = fleet
+            .submit("b", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap();
+        let err = fleet
+            .submit("c", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("oversubscribed"), "{err:#}");
+        // max_active = 1: b stays queued while a runs...
+        fleet.tick().unwrap();
+        assert_eq!(fleet.poll(a).unwrap().state, SessionState::Running);
+        assert_eq!(fleet.poll(b).unwrap().state, SessionState::Queued);
+        // ...and is admitted once a finishes.
+        let runs = fleet.drain().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1].curve.points.first().unwrap().step, 0);
+    }
+
+    #[test]
+    fn empty_fleet_tick_is_a_noop() {
+        let mut fleet = FleetCoordinator::new(2);
+        assert_eq!(fleet.tick().unwrap(), 0);
+        assert_eq!(fleet.exec_stats().steps, 0, "no idle dispatch recorded");
+        assert!(fleet.drain().unwrap().is_empty());
+    }
+}

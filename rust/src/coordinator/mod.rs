@@ -10,10 +10,18 @@
 //! ([`crate::exec`]), bit-identically to sequential dispatch.
 //! [`trainer::Trainer`] ties it
 //! together and also implements the two baselines (naive SGD, standard
-//! MLMC SGD).
+//! MLMC SGD); trainers are built through [`trainer::TrainerBuilder`]
+//! (named setters) or the [`Trainer::from_config`] shorthand.
+//!
+//! On top of the single-trainer loop sits the **serving fleet**
+//! ([`fleet::FleetCoordinator`]): one resident worker pool multiplexing
+//! N independent trainers with cross-problem batching, fair-share
+//! ticks, backpressure, and per-problem bit-exactness (each session's
+//! trajectory is bit-identical to its solo run).
 
 pub mod cache;
 pub mod dispatcher;
+pub mod fleet;
 pub mod method;
 pub mod scheduler;
 pub mod trainer;
@@ -23,6 +31,7 @@ pub use dispatcher::{
     run_jobs, run_jobs_pool, run_jobs_pool_with_report, run_jobs_threaded,
     LevelJobSpec, LevelResult,
 };
+pub use fleet::{FleetCoordinator, FleetRun, SessionId, SessionState, SessionStatus};
 pub use method::Method;
 pub use scheduler::DelayedSchedule;
-pub use trainer::Trainer;
+pub use trainer::{Trainer, TrainerBuilder};

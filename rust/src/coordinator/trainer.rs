@@ -83,15 +83,135 @@ pub struct Trainer {
     steps_done: u64,
 }
 
-impl Trainer {
-    /// Build with an explicit backend (dependency injection for tests).
-    pub fn new(
-        cfg: &ExperimentConfig,
-        method: Method,
-        seed: u64,
-        backend: Box<dyn GradBackend>,
-    ) -> Result<Trainer> {
+/// Named-setter construction of a [`Trainer`] — the public build path
+/// (the old positional `Trainer::new(cfg, method, seed, backend)` is
+/// gone). Every setter is optional; `build()` validates the assembled
+/// config and fails with a descriptive error instead of a silently
+/// misordered argument list.
+///
+/// ```no_run
+/// # use dmlmc::config::ExperimentConfig;
+/// # use dmlmc::coordinator::{Method, TrainerBuilder};
+/// let mut trainer = TrainerBuilder::new(&ExperimentConfig::smoke())
+///     .method(Method::Dmlmc)
+///     .seed(7)
+///     .scenario("heston-uo-call")
+///     .steps(32)
+///     .workers(4)
+///     .build()?;
+/// trainer.run()?;
+/// # anyhow::Ok(())
+/// ```
+pub struct TrainerBuilder {
+    cfg: ExperimentConfig,
+    method: Method,
+    seed: u64,
+    backend: Option<Box<dyn GradBackend>>,
+    local_pool: bool,
+}
+
+impl TrainerBuilder {
+    /// Start from a config; method defaults to DMLMC, seed to 0.
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        TrainerBuilder {
+            cfg: cfg.clone(),
+            method: Method::Dmlmc,
+            seed: 0,
+            backend: None,
+            local_pool: true,
+        }
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Select a scenario by registry key (`repro scenarios` lists them).
+    /// A non-default scenario implies the native backend — the XLA
+    /// artifacts are lowered for the default scenario only.
+    pub fn scenario(mut self, name: &str) -> Self {
+        self.cfg.scenario = name.to_string();
+        if name != crate::scenarios::DEFAULT_SCENARIO {
+            self.cfg.runtime.backend = Backend::Native;
+        }
+        self
+    }
+
+    /// Training horizon (SGD steps).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.cfg.train.steps = steps;
+        self
+    }
+
+    /// Worker threads of the trainer's own execution pool (0 = one per
+    /// core). Irrelevant under a fleet, which supplies the shared pool.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.execution.workers = workers;
+        self
+    }
+
+    /// Inject an explicit backend (dependency injection for tests)
+    /// instead of building one from the config.
+    pub fn backend(mut self, backend: Box<dyn GradBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Arbitrary config tweak — escape hatch for knobs without a named
+    /// setter (learning rate, eval cadence, `n_effective`, ...).
+    pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Skip the per-trainer resident pool. Used by the fleet: its
+    /// sessions dispatch through the ONE shared coordinator pool, so a
+    /// private P-thread pool per trainer would be dead weight.
+    pub fn without_local_pool(mut self) -> Self {
+        self.local_pool = false;
+        self
+    }
+
+    /// Validate and build. Errors on an invalid config, an unknown
+    /// optimizer/scenario, a non-default scenario pinned to the XLA
+    /// backend, or an engine/backend parameter-count mismatch.
+    pub fn build(self) -> Result<Trainer> {
+        let TrainerBuilder { cfg, method, seed, backend, local_pool } = self;
         cfg.validate().map_err(|e| anyhow!(e))?;
+        let backend: Box<dyn GradBackend> = match backend {
+            Some(b) => b,
+            None => match cfg.runtime.backend {
+                Backend::Native => {
+                    let scenario = crate::scenarios::build_scenario_or_err(
+                        &cfg.scenario,
+                        &cfg.problem,
+                    )?;
+                    Box::new(NativeBackend::with_scenario(cfg.problem, scenario))
+                }
+                Backend::Xla => {
+                    anyhow::ensure!(
+                        cfg.scenario == crate::scenarios::DEFAULT_SCENARIO,
+                        "scenario `{}` needs --backend native: the artifacts \
+                         are lowered for the default scenario only",
+                        cfg.scenario
+                    );
+                    let rt = XlaRuntime::load(&cfg.runtime.artifacts_dir)?;
+                    anyhow::ensure!(
+                        rt.manifest().problem == cfg.problem,
+                        "artifacts were lowered for a different problem than \
+                         the config requests; re-run `make artifacts`"
+                    );
+                    rt.warmup()?;
+                    Box::new(rt)
+                }
+            },
+        };
         // Decide the ownership model up front: shareable backends go
         // behind an Arc (resident-pool dispatch), the rest stay boxed
         // (sequential dispatch).
@@ -103,7 +223,8 @@ impl Trainer {
         let lmax = problem.lmax;
 
         // Per-level sample allocation, rounded up to backend chunk sizes.
-        let alloc = LevelAllocation::paper(lmax, cfg.mlmc.n_effective, cfg.mlmc.b, cfg.mlmc.c);
+        let alloc =
+            LevelAllocation::paper(lmax, cfg.mlmc.n_effective, cfg.mlmc.b, cfg.mlmc.c);
         let chunk_sizes: Vec<usize> =
             (0..=lmax).map(|l| backend.as_dyn().grad_chunk(l)).collect();
         let rounded = alloc.round_to_chunks(&chunk_sizes);
@@ -129,12 +250,17 @@ impl Trainer {
             "backend n_params {n_params} != engine {}",
             params.len()
         );
-        let pool = backend
-            .shared()
-            .map(|_| WorkerPool::new(cfg.execution.resolved_workers()));
+        let pool = if local_pool {
+            backend
+                .shared()
+                .map(|_| WorkerPool::new(cfg.execution.resolved_workers()))
+        } else {
+            None
+        };
+        let cost_model = CostModel::new(cfg.mlmc.c);
 
         Ok(Trainer {
-            cfg: cfg.clone(),
+            cfg,
             method,
             seed,
             cache: GradientCache::new(lmax, n_params),
@@ -143,7 +269,7 @@ impl Trainer {
             schedule,
             optimizer,
             src: BrownianSource::new(seed),
-            cost_model: CostModel::new(cfg.mlmc.c),
+            cost_model,
             pool,
             backend,
             params,
@@ -151,34 +277,14 @@ impl Trainer {
             steps_done: 0,
         })
     }
+}
 
+impl Trainer {
     /// Build the backend from the config (`xla` loads artifacts,
     /// `native` runs the pure-rust engine under the configured scenario).
+    /// Thin wrapper over [`TrainerBuilder`] for the common case.
     pub fn from_config(cfg: &ExperimentConfig, method: Method, seed: u64) -> Result<Trainer> {
-        let backend: Box<dyn GradBackend> = match cfg.runtime.backend {
-            Backend::Native => {
-                let scenario =
-                    crate::scenarios::build_scenario_or_err(&cfg.scenario, &cfg.problem)?;
-                Box::new(NativeBackend::with_scenario(cfg.problem, scenario))
-            }
-            Backend::Xla => {
-                anyhow::ensure!(
-                    cfg.scenario == crate::scenarios::DEFAULT_SCENARIO,
-                    "scenario `{}` needs --backend native: the artifacts \
-                     are lowered for the default scenario only",
-                    cfg.scenario
-                );
-                let rt = XlaRuntime::load(&cfg.runtime.artifacts_dir)?;
-                anyhow::ensure!(
-                    rt.manifest().problem == cfg.problem,
-                    "artifacts were lowered for a different problem than the \
-                     config requests; re-run `make artifacts`"
-                );
-                rt.warmup()?;
-                Box::new(rt)
-            }
-        };
-        Trainer::new(cfg, method, seed, backend)
+        TrainerBuilder::new(cfg).method(method).seed(seed).build()
     }
 
     /// The level jobs step `t` must run.
@@ -210,9 +316,20 @@ impl Trainer {
     }
 
     /// Run one SGD step; returns (step cost, gradient norm).
+    ///
+    /// Split-phase under the hood: the *compute* half produces the step's
+    /// level results (pooled or sequential), the *apply* half
+    /// ([`Self::apply_level_results`] / [`Self::apply_naive_result`])
+    /// updates cache, cost accounting and parameters. The fleet drives
+    /// the same apply half after its own multiplexed dispatch, so solo
+    /// and fleet execution share one numeric path by construction.
     pub fn step(&mut self, t: u64) -> Result<(StepCost, f64)> {
-        let (loss_est, grad, cost) = match self.method {
-            Method::Naive => self.naive_gradient(t)?,
+        match self.method {
+            Method::Naive => {
+                let (loss_est, grad) = self.naive_gradient(t)?;
+                let _ = loss_est; // estimator value; eval uses held-out loss
+                Ok(self.apply_naive_result(t, grad))
+            }
             Method::Mlmc | Method::Dmlmc => {
                 let jobs = self.jobs_for_step(t);
                 let results = if let (Some(shared), Some(pool)) =
@@ -236,21 +353,48 @@ impl Trainer {
                         &jobs,
                     )?
                 };
-                let cost_jobs: Vec<(usize, usize)> =
-                    results.iter().map(|r| (r.level, r.n_samples)).collect();
-                let cost = StepCost::from_jobs(&self.cost_model, &cost_jobs);
-                self.install(t, results);
-                let (loss, grad) = self.cache.assemble();
-                (loss, grad, cost)
+                Ok(self.apply_level_results(t, results))
             }
-        };
+        }
+    }
+
+    /// Apply half of a MLMC/DMLMC step: account cost from the level
+    /// results, refresh the gradient cache, assemble the estimator and
+    /// take the optimizer step. Returns (step cost, gradient norm).
+    /// `pub(crate)`: the fleet calls this with results it computed on the
+    /// shared pool.
+    pub(crate) fn apply_level_results(
+        &mut self,
+        t: u64,
+        results: Vec<LevelResult>,
+    ) -> (StepCost, f64) {
+        let cost_jobs: Vec<(usize, usize)> =
+            results.iter().map(|r| (r.level, r.n_samples)).collect();
+        let cost = StepCost::from_jobs(&self.cost_model, &cost_jobs);
+        self.install(t, results);
+        let (_loss_est, grad) = self.cache.assemble();
+        self.finish_step(t, cost, grad)
+    }
+
+    /// Apply half of a naive step: cost for `naive_chunks` finest-grid
+    /// chunks, then the optimizer step on the reduced gradient.
+    pub(crate) fn apply_naive_result(&mut self, t: u64, grad: Vec<f32>) -> (StepCost, f64) {
+        let lmax = self.backend.as_dyn().problem().lmax;
+        let n_samples = self.naive_chunks * self.backend.as_dyn().naive_chunk();
+        let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
+        self.finish_step(t, cost, grad)
+    }
+
+    /// The shared tail of every step: norm, clip, optimizer update,
+    /// cumulative cost. One definition — solo and fleet execution cannot
+    /// drift apart here.
+    fn finish_step(&mut self, t: u64, cost: StepCost, grad: Vec<f32>) -> (StepCost, f64) {
         let gnorm = grad_norm(&grad);
         let grad = self.clip(grad, gnorm);
         self.optimizer.step(&mut self.params, &grad);
         self.cumulative.add(cost);
         self.steps_done = t + 1;
-        let _ = loss_est; // estimator value (telescoped); eval uses held-out loss
-        Ok((cost, gnorm))
+        (cost, gnorm)
     }
 
     /// Global-norm gradient clipping (no-op when `clip_norm == 0`).
@@ -275,7 +419,7 @@ impl Trainer {
     /// counter-based addressing as the level jobs), so they run on the
     /// pool when one exists; the chunk-ordered reduction keeps the result
     /// bit-identical to the sequential loop.
-    fn naive_gradient(&mut self, t: u64) -> Result<(f64, Vec<f32>, StepCost)> {
+    fn naive_gradient(&mut self, t: u64) -> Result<(f64, Vec<f32>)> {
         let problem = *self.backend.as_dyn().problem();
         let lmax = problem.lmax;
         let batch = self.backend.as_dyn().naive_chunk();
@@ -283,8 +427,6 @@ impl Trainer {
         let dt = problem.dt(lmax);
         let n_factors = self.backend.as_dyn().n_factors();
         let n_chunks = self.naive_chunks;
-        let n_samples = n_chunks * batch;
-        let cost = StepCost::from_jobs(&self.cost_model, &[(lmax, n_samples)]);
         let src = self.src;
         if let (Some(shared), Some(pool)) =
             (self.backend.shared(), self.pool.as_mut())
@@ -313,7 +455,7 @@ impl Trainer {
                     backend.grad_naive_chunk(&params_snap, &dw)
                 })?;
             let (loss, grad) = reduced.pop().expect("one reduction group");
-            return Ok((loss, grad, cost));
+            return Ok((loss, grad));
         }
         let mut acc = ChunkAccumulator::new(self.backend.as_dyn().n_params());
         for chunk in 0..n_chunks {
@@ -334,7 +476,7 @@ impl Trainer {
             acc.add(loss, &grad);
         }
         let (loss, grad) = acc.finish();
-        Ok((loss, grad, cost))
+        Ok((loss, grad))
     }
 
     /// Held-out loss on the FIXED evaluation set (chunk-averaged).
@@ -423,6 +565,20 @@ impl Trainer {
     /// The pool's worker count, when pooled dispatch is active.
     pub fn exec_workers(&self) -> Option<usize> {
         self.pool.as_ref().map(|p| p.workers())
+    }
+
+    /// Co-ownable backend handle (`None` for `!Send` backends). The
+    /// fleet requires this: its multiplexed dispatch closures co-own
+    /// every session's backend.
+    pub(crate) fn shared_backend(&self) -> Option<SharedBackend> {
+        self.backend.shared().cloned()
+    }
+
+    /// This trainer's Brownian stream (counter-based; `Copy`). The fleet
+    /// addresses each session's chunk batches through this, exactly like
+    /// the solo dispatch path.
+    pub(crate) fn brownian_src(&self) -> BrownianSource {
+        self.src
     }
 
     /// The estimator the *next* step would use from the current cache
@@ -706,6 +862,61 @@ mod tests {
         assert!(stats.tasks > 0);
         let util = stats.utilization();
         assert!((0.0..=1.0).contains(&util), "utilization {util}");
+    }
+
+    #[test]
+    fn builder_named_setters_mirror_from_config() {
+        // from_config IS the builder — same knobs, same trajectory.
+        let cfg = smoke_cfg();
+        let mut a = Trainer::from_config(&cfg, Method::Dmlmc, 3).unwrap();
+        let mut b = TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(3).build().unwrap();
+        let ca = a.run().unwrap();
+        let cb = b.run().unwrap();
+        for (pa, pb) in ca.points.iter().zip(&cb.points) {
+            assert_eq!(pa.loss, pb.loss);
+        }
+        assert_eq!(a.params, b.params);
+    }
+
+    #[test]
+    fn builder_scenario_setter_implies_native_backend() {
+        let mut cfg = smoke_cfg();
+        cfg.runtime.backend = Backend::Xla; // would reject a non-default scenario
+        let tr = TrainerBuilder::new(&cfg)
+            .method(Method::Dmlmc)
+            .scenario("heston-call")
+            .steps(2)
+            .build()
+            .unwrap();
+        assert_eq!(tr.backend().n_factors(), 2);
+        assert_eq!(tr.cfg.scenario, "heston-call");
+    }
+
+    #[test]
+    fn builder_tune_and_steps_land_in_config() {
+        let tr = TrainerBuilder::new(&smoke_cfg())
+            .steps(5)
+            .workers(2)
+            .tune(|c| c.train.lr = 0.123)
+            .build()
+            .unwrap();
+        assert_eq!(tr.cfg.train.steps, 5);
+        assert_eq!(tr.exec_workers(), Some(2));
+        assert_eq!(tr.cfg.train.lr, 0.123);
+    }
+
+    #[test]
+    fn builder_without_local_pool_dispatches_sequentially() {
+        let mut tr = TrainerBuilder::new(&smoke_cfg())
+            .method(Method::Mlmc)
+            .without_local_pool()
+            .build()
+            .unwrap();
+        assert!(tr.exec_workers().is_none());
+        assert!(tr.shared_backend().is_some(), "backend is still shareable");
+        // still steps fine through the sequential path
+        tr.step(0).unwrap();
+        assert!(tr.cumulative_cost().depth > 0.0);
     }
 
     #[test]

@@ -45,9 +45,17 @@
 //! * **Observability** — each dispatch returns a [`StepExecReport`]:
 //!   measured makespan, per-worker busy time and task counts keyed by
 //!   *stable worker indices* `0..P` (not thread ids, which change across
-//!   runs), and the **dispatch overhead** (makespan minus max worker
-//!   busy — the executor's fixed per-step cost); [`ExecStats`]
-//!   accumulates them over a training run.
+//!   runs), per-task [`TaskStat`] records (so a multiplexed dispatch can
+//!   be re-attributed per reduction group — the fleet's per-problem
+//!   reports, [`StepExecReport::slice_groups`]), and the **dispatch
+//!   overhead** (makespan minus max worker busy — the executor's fixed
+//!   per-step cost); [`ExecStats`] accumulates them over a training run.
+//! * **Multiplexing** — nothing in the pool is per-trainer: a dispatch
+//!   is just tasks + groups, so [`crate::coordinator::fleet`] batches
+//!   the due chunk tasks of N independent trainers into ONE dispatch per
+//!   fleet tick (globally unique group indices per problem), and the
+//!   fixed-order per-group reduction keeps every problem's gradient
+//!   bit-identical to its solo run.
 //!
 //! Core pinning / NUMA placement remain follow-ups (see ROADMAP).
 
@@ -56,5 +64,5 @@ pub mod stats;
 pub mod task;
 
 pub use pool::{SpawnMode, WorkerPool};
-pub use stats::{ExecStats, StepExecReport, WorkerStat};
+pub use stats::{ExecStats, StepExecReport, TaskStat, WorkerStat};
 pub use task::{lpt_order, ChunkTask};

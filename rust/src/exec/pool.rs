@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::stats::{ExecStats, StepExecReport, WorkerStat};
+use super::stats::{ExecStats, StepExecReport, TaskStat, WorkerStat};
 use super::task::{lpt_order, ChunkTask};
 use crate::mlmc::estimator::ChunkAccumulator;
 
@@ -70,7 +70,10 @@ impl ChaosDelays {
 struct WorkerOut {
     worker: usize,
     busy: Duration,
-    results: Vec<(usize, Result<(f64, Vec<f32>)>)>,
+    /// `(task index, task execution time, result)` — the per-task time
+    /// feeds [`TaskStat`], which the fleet needs to re-attribute one
+    /// multiplexed dispatch back to its constituent problems.
+    results: Vec<(usize, Duration, Result<(f64, Vec<f32>)>)>,
 }
 
 /// Everything the workers need for one dispatch, shared by `Arc` so it
@@ -129,8 +132,9 @@ fn drain(worker: usize, d: &Dispatch) -> WorkerOut {
                 panic_message(payload)
             )),
         };
-        out.busy += t0.elapsed();
-        out.results.push((idx, result));
+        let took = t0.elapsed();
+        out.busy += took;
+        out.results.push((idx, took, result));
     }
     out
 }
@@ -420,13 +424,20 @@ impl WorkerPool {
         let mut slots: Vec<Option<(f64, Vec<f32>)>> = vec![None; tasks.len()];
         let mut first_err: Option<(usize, anyhow::Error)> = None;
         let mut worker_stats = Vec::with_capacity(self.workers);
+        let mut per_task: Vec<TaskStat> = Vec::with_capacity(tasks.len());
         for out in worker_outs {
             worker_stats.push(WorkerStat {
                 worker: out.worker,
                 busy: out.busy,
                 tasks: out.results.len(),
             });
-            for (idx, result) in out.results {
+            for (idx, took, result) in out.results {
+                per_task.push(TaskStat {
+                    task: idx,
+                    group: tasks[idx].group,
+                    worker: out.worker,
+                    busy: took,
+                });
                 match result {
                     Ok(v) => slots[idx] = Some(v),
                     Err(e) => {
@@ -437,6 +448,7 @@ impl WorkerPool {
                 }
             }
         }
+        per_task.sort_by_key(|t| t.task);
         if let Some((idx, err)) = first_err {
             let t = tasks[idx];
             return Err(err.context(format!(
@@ -473,6 +485,7 @@ impl WorkerPool {
             workers: worker_stats,
             makespan,
             n_tasks: tasks.len(),
+            per_task,
         };
         self.stats.record(&report);
         Ok((reduced, report))
@@ -640,6 +653,30 @@ mod tests {
         assert_eq!(pool.stats().tasks, 6);
         assert_eq!(pool.stats().makespans.len(), 3);
         assert_eq!(pool.stats().busy_per_worker.len(), 2);
+    }
+
+    #[test]
+    fn per_task_records_cover_every_task_with_its_group() {
+        let groups = [2usize, 3, 1];
+        for workers in [1usize, 3] {
+            let mut pool = WorkerPool::new(workers);
+            let ts = tasks(&groups);
+            let (_, report) = pool.execute(&ts, groups.len(), run_synthetic).unwrap();
+            assert_eq!(report.per_task.len(), ts.len());
+            for (i, stat) in report.per_task.iter().enumerate() {
+                assert_eq!(stat.task, i, "per_task sorted by task index");
+                assert_eq!(stat.group, ts[i].group);
+                assert!(stat.worker < workers);
+            }
+            // per-task times sum to the per-worker busy rollup
+            let task_total: Duration = report.per_task.iter().map(|t| t.busy).sum();
+            assert_eq!(task_total, report.busy_total());
+            // slicing every group apart partitions the tasks
+            let sliced: usize = (0..groups.len())
+                .map(|g| report.slice_groups(g..g + 1).n_tasks)
+                .sum();
+            assert_eq!(sliced, ts.len());
+        }
     }
 
     #[test]

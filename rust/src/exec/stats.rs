@@ -16,6 +16,23 @@ pub struct WorkerStat {
     pub tasks: usize,
 }
 
+/// One task's execution record within a dispatch. Kept alongside the
+/// per-worker rollup so a **multiplexed** dispatch (several problems'
+/// task groups sharing one pool dispatch, see
+/// [`crate::coordinator::fleet`]) can be re-attributed per group after
+/// the fact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskStat {
+    /// Index of the task in the dispatched slice.
+    pub task: usize,
+    /// Reduction group the task belonged to.
+    pub group: usize,
+    /// Stable worker index that executed it.
+    pub worker: usize,
+    /// Execution time of this single task (excludes queue waits).
+    pub busy: Duration,
+}
+
 /// Telemetry of one pool dispatch (= one SGD step's refresh workload).
 #[derive(Debug, Clone)]
 pub struct StepExecReport {
@@ -26,6 +43,9 @@ pub struct StepExecReport {
     pub makespan: Duration,
     /// Tasks dispatched.
     pub n_tasks: usize,
+    /// Per-task records in ascending task-index order (one per executed
+    /// task; empty groups contribute nothing).
+    pub per_task: Vec<TaskStat>,
 }
 
 impl StepExecReport {
@@ -60,6 +80,39 @@ impl StepExecReport {
             (self.busy_total().as_secs_f64() / span).min(1.0)
         } else {
             0.0
+        }
+    }
+
+    /// Restrict this report to the tasks whose reduction `group` falls in
+    /// `groups`: per-worker busy/task counts are recomputed from the
+    /// [`TaskStat`] records while the makespan (the shared dispatch
+    /// wall-clock) is kept. This is how the fleet derives **per-problem**
+    /// reports out of one multiplexed dispatch; a slice's
+    /// [`utilization`](Self::utilization) therefore reads as "share of
+    /// the whole pool's capacity this problem used".
+    pub fn slice_groups(&self, groups: std::ops::Range<usize>) -> StepExecReport {
+        let per_task: Vec<TaskStat> = self
+            .per_task
+            .iter()
+            .copied()
+            .filter(|t| groups.contains(&t.group))
+            .collect();
+        let mut workers: Vec<WorkerStat> = self
+            .workers
+            .iter()
+            .map(|w| WorkerStat { worker: w.worker, busy: Duration::ZERO, tasks: 0 })
+            .collect();
+        for t in &per_task {
+            if let Some(w) = workers.iter_mut().find(|w| w.worker == t.worker) {
+                w.busy += t.busy;
+                w.tasks += 1;
+            }
+        }
+        StepExecReport {
+            workers,
+            makespan: self.makespan,
+            n_tasks: per_task.len(),
+            per_task,
         }
     }
 }
@@ -158,6 +211,16 @@ mod tests {
                 .collect(),
             makespan: Duration::from_millis(makespan_ms),
             n_tasks: busy_ms.len(),
+            per_task: busy_ms
+                .iter()
+                .enumerate()
+                .map(|(worker, &ms)| TaskStat {
+                    task: worker,
+                    group: worker,
+                    worker,
+                    busy: Duration::from_millis(ms),
+                })
+                .collect(),
         }
     }
 
@@ -208,6 +271,42 @@ mod tests {
         assert!((s.total_makespan() - 0.018).abs() < 1e-9);
         assert!((s.mean_makespan() - 0.009).abs() < 1e-9);
         assert!(s.utilization() > 0.6 && s.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn slice_groups_reattributes_per_problem() {
+        // Two workers, four tasks across groups 0..4 (helper assigns one
+        // task per group). Slice out groups 1..3 and check the rollup.
+        let full = StepExecReport {
+            workers: vec![
+                WorkerStat { worker: 0, busy: Duration::from_millis(30), tasks: 3 },
+                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1 },
+            ],
+            makespan: Duration::from_millis(40),
+            n_tasks: 4,
+            per_task: vec![
+                TaskStat { task: 0, group: 0, worker: 0, busy: Duration::from_millis(10) },
+                TaskStat { task: 1, group: 1, worker: 0, busy: Duration::from_millis(10) },
+                TaskStat { task: 2, group: 2, worker: 1, busy: Duration::from_millis(10) },
+                TaskStat { task: 3, group: 3, worker: 0, busy: Duration::from_millis(10) },
+            ],
+        };
+        let slice = full.slice_groups(1..3);
+        assert_eq!(slice.n_tasks, 2);
+        assert_eq!(slice.makespan, full.makespan);
+        assert_eq!(slice.workers.len(), 2);
+        assert_eq!(slice.workers[0].tasks, 1);
+        assert_eq!(slice.workers[0].busy, Duration::from_millis(10));
+        assert_eq!(slice.workers[1].tasks, 1);
+        assert_eq!(slice.per_task.len(), 2);
+        // utilization of a slice = problem busy / (P x shared makespan)
+        assert!((slice.utilization() - 20.0 / 80.0).abs() < 1e-9);
+        // slices over all groups partition the task records
+        let rest: usize = [full.slice_groups(0..1), full.slice_groups(3..4)]
+            .iter()
+            .map(|r| r.n_tasks)
+            .sum();
+        assert_eq!(rest + slice.n_tasks, full.n_tasks);
     }
 
     #[test]

@@ -1,19 +1,31 @@
 //! Experiment drivers — the reusable logic behind the `repro` CLI, the
 //! examples and the per-figure benches. Each paper table/figure has one
 //! driver here (DESIGN.md §3 experiment index).
+//!
+//! All drivers hang off ONE entry point, [`ExperimentRunner`]: a named
+//! configuration (+ `--out-dir` + quiet flag) whose methods run the
+//! experiments and whose [`artifacts`](ExperimentRunner::artifacts)
+//! hands out the run-scoped [`RunArtifacts`] writer every output goes
+//! through — no experiment hand-rolls its own JSON/CSV path. The table
+//! renderers are associated functions of the runner for the same
+//! reason; a unit test (and a CI grep) pins that this module exports no
+//! top-level `pub fn` that could bypass the runner.
 
+use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::{Backend, ExperimentConfig};
 use crate::coordinator::{
-    run_jobs_pool_with_report, LevelJobSpec, Method, Trainer,
+    run_jobs_pool_with_report, FleetCoordinator, LevelJobSpec, Method, Trainer,
+    TrainerBuilder,
 };
 use crate::exec::WorkerPool;
 use crate::hedging::bs_call_price;
 use crate::metrics::aggregate::AggregatedCurve;
-use crate::metrics::{aggregate_curves, LearningCurve, Welford};
+use crate::metrics::{aggregate_curves, LearningCurve, RunArtifacts, Welford};
 use crate::mlmc::theory::{TheoryParams, TheoryRow};
 use crate::mlmc::{fit_decay_rate, DecaySeries};
 use crate::parallel::{CostModel, LevelJob, PramMachine};
@@ -22,51 +34,7 @@ use crate::runtime::{GradBackend, NativeBackend};
 use crate::scenarios::build_scenario_or_err;
 
 // ---------------------------------------------------------------------------
-// Figure 2 — learning curves of the three methods
-// ---------------------------------------------------------------------------
-
-/// All runs for one method over `n_seeds` seeds.
-pub fn run_method_curves(
-    cfg: &ExperimentConfig,
-    method: Method,
-    quiet: bool,
-) -> Result<Vec<LearningCurve>> {
-    let mut curves = Vec::new();
-    for seed in 0..cfg.train.n_seeds as u64 {
-        let mut tr = Trainer::from_config(cfg, method, seed)?;
-        let curve = tr.run()?;
-        if !quiet {
-            eprintln!(
-                "  {method} seed {seed}: loss {:.4} -> {:.4} (par cost {:.0})",
-                curve.points.first().map(|p| p.loss).unwrap_or(f64::NAN),
-                curve.final_loss().unwrap_or(f64::NAN),
-                curve.points.last().map(|p| p.par_cost).unwrap_or(0.0),
-            );
-        }
-        curves.push(curve);
-    }
-    Ok(curves)
-}
-
-/// The full Figure-2 experiment: 3 methods x n_seeds, aggregated.
-pub fn figure2(
-    cfg: &ExperimentConfig,
-    quiet: bool,
-) -> Result<Vec<(Method, Vec<LearningCurve>, AggregatedCurve)>> {
-    let mut out = Vec::new();
-    for method in Method::all() {
-        if !quiet {
-            eprintln!("figure2: running {method} x{} seeds", cfg.train.n_seeds);
-        }
-        let curves = run_method_curves(cfg, method, quiet)?;
-        let agg = aggregate_curves(&curves).map_err(anyhow::Error::msg)?;
-        out.push((method, curves, agg));
-    }
-    Ok(out)
-}
-
-// ---------------------------------------------------------------------------
-// Figure 1 — assumption decay diagnostics
+// Result rows (one struct per table/figure)
 // ---------------------------------------------------------------------------
 
 /// Figure-1 output: per-level series + fitted decay exponents.
@@ -82,87 +50,6 @@ pub struct Figure1 {
     pub d_hat: f64,
 }
 
-/// Diagnostic chunks accumulated per (snapshot, level) — the per-sample
-/// second moments are heavy-tailed, so one 32-sample chunk is far too
-/// noisy for a slope fit (measured: b̂ swings 0.9 ↔ 1.4 at 32 vs 512
-/// samples). 4 chunks x diag batch is the accuracy/runtime sweet spot.
-const DIAG_CHUNKS: u32 = 4;
-
-/// Reproduce Figure 1: track the decay diagnostics at parameter snapshots
-/// taken along a (DMLMC) optimization trajectory.
-pub fn figure1(cfg: &ExperimentConfig, snapshots: usize, quiet: bool) -> Result<Figure1> {
-    let mut tr = Trainer::from_config(cfg, Method::Dmlmc, 0)?;
-    let lmax = cfg.problem.lmax;
-    let src = BrownianSource::new(0xF1);
-    let mut norm_samples: Vec<Vec<f64>> = vec![Vec::new(); lmax + 1];
-    let mut smooth_samples: Vec<Vec<f64>> = vec![Vec::new(); lmax + 1];
-
-    let snap_every = (cfg.train.steps / snapshots.max(1)).max(1) as u64;
-    for t in 0..cfg.train.steps as u64 {
-        let params_before = tr.params.clone();
-        tr.step(t)?;
-        if t % snap_every == 0 {
-            let params_after = tr.params.clone();
-            for level in 0..=lmax {
-                let batch = tr.backend().diag_chunk();
-                let n = cfg.problem.n_steps(level);
-                let mut w = Welford::new();
-                let mut ws = Welford::new();
-                for chunk in 0..DIAG_CHUNKS {
-                    let dw = src.increments_multi(
-                        Purpose::Diagnostic,
-                        t,
-                        level as u32,
-                        chunk,
-                        batch,
-                        n,
-                        cfg.problem.dt(level),
-                        tr.backend().n_factors(),
-                    );
-                    let norms =
-                        tr.backend()
-                            .grad_norms_chunk(level, &params_before, &dw)?;
-                    for v in &norms {
-                        w.push(*v as f64);
-                    }
-                    // pathwise smoothness between consecutive iterates
-                    let vals = tr.backend().smoothness_chunk(
-                        level,
-                        &params_before,
-                        &params_after,
-                        &dw,
-                    )?;
-                    for v in &vals {
-                        ws.push(*v as f64);
-                    }
-                }
-                norm_samples[level].push(w.mean());
-                smooth_samples[level].push(ws.mean());
-            }
-            if !quiet {
-                eprintln!("figure1: snapshot at step {t}");
-            }
-        }
-    }
-
-    let grad_norms = DecaySeries::from_samples(&norm_samples);
-    let smoothness = DecaySeries::from_samples(&smooth_samples);
-    // Assumption 2: E||grad Delta_l||^2 <= M 2^{-bl}  -> slope = b.
-    let b_hat = grad_norms.fitted_rate();
-    // Assumption 3: Lipschitz constant decays 2^{-dl}   -> slope = d.
-    let d_hat = smoothness.fitted_rate();
-    Ok(Figure1 {
-        grad_norms,
-        smoothness,
-        b_hat,
-        d_hat,
-    })
-}
-
-// ---------------------------------------------------------------------------
-// Table 1 — theory vs measured complexity accounting
-// ---------------------------------------------------------------------------
-
 /// One measured row of Table 1.
 #[derive(Debug, Clone)]
 pub struct MeasuredRow {
@@ -173,143 +60,6 @@ pub struct MeasuredRow {
     /// Average per-iteration parallel depth.
     pub avg_depth: f64,
 }
-
-/// Table 1: run each method for `cfg.train.steps` steps (single seed) and
-/// account costs; pair with the theory formulas.
-pub fn table1(cfg: &ExperimentConfig) -> Result<(Vec<TheoryRow>, Vec<MeasuredRow>)> {
-    let theory = TheoryRow::table(&TheoryParams {
-        t: cfg.train.steps as f64,
-        n: cfg.mlmc.n_effective as f64,
-        m: 1.0,
-        lmax: cfg.problem.lmax,
-        b: cfg.mlmc.b,
-        c: cfg.mlmc.c,
-        d: cfg.mlmc.d,
-    });
-    let mut measured = Vec::new();
-    for method in Method::all() {
-        let mut tr = Trainer::from_config(cfg, method, 0)?;
-        let curve = tr.run()?;
-        let cost = tr.cumulative_cost();
-        measured.push(MeasuredRow {
-            method,
-            final_loss: curve.final_loss().unwrap_or(f64::NAN),
-            std_cost: cost.work,
-            par_cost: cost.depth,
-            avg_depth: cost.depth / cfg.train.steps as f64,
-        });
-    }
-    Ok((theory, measured))
-}
-
-/// Render the combined table as text (CLI + EXPERIMENTS.md).
-pub fn render_table1(theory: &[TheoryRow], measured: &[MeasuredRow]) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "{:<28} {:>14} {:>14} {:>14} {:>14} {:>12}\n",
-        "method", "theory work", "meas. work", "theory depth", "meas. depth", "final loss"
-    ));
-    for (t, m) in theory.iter().zip(measured) {
-        out.push_str(&format!(
-            "{:<28} {:>14.3e} {:>14.3e} {:>14.3e} {:>14.3e} {:>12.4}\n",
-            t.method.name(),
-            t.complexity,
-            m.std_cost,
-            t.parallel,
-            m.par_cost,
-            m.final_loss
-        ));
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// Black–Scholes validation (geometric drift)
-// ---------------------------------------------------------------------------
-
-/// Train under the *martingale* GBM (`geometric` drift, `mu = 0`) and
-/// compare the learned price `p0` with the Black–Scholes closed form —
-/// the external correctness anchor for the whole stack.
-///
-/// Under `mu = 0`, `S` is a martingale, so `E[∫ H dS] = 0` for **any**
-/// strategy `H`; the optimal `p0` of the quadratic hedging objective is
-/// therefore exactly `E[max(S_T − K, 0)] = BS(s0, K, sigma, T)` whatever
-/// the MLP has learned — a sharp anchor that does not require the hedge
-/// itself to have converged.
-pub fn validate_bs(cfg: &ExperimentConfig) -> Result<(f64, f64)> {
-    use crate::engine::mlp::OFF_P0;
-    let mut cfg = cfg.clone();
-    cfg.problem.drift = crate::hedging::Drift::Geometric;
-    cfg.problem.mu = 0.0;
-    // The anchor is the Black–Scholes CALL closed form, so the scenario
-    // must be the default whatever the caller had configured.
-    cfg.scenario = crate::scenarios::DEFAULT_SCENARIO.to_string();
-    // The validation problem differs from the one the artifacts were
-    // lowered for (drift/mu), so it always runs on the native engine —
-    // which the cross-check tests pin to the HLO numerics anyway.
-    cfg.runtime.backend = crate::config::Backend::Native;
-    let mut tr = Trainer::from_config(&cfg, Method::Mlmc, 0)?;
-    tr.run()?;
-    let p0 = tr.params[OFF_P0] as f64;
-    let bs = bs_call_price(
-        cfg.problem.s0,
-        cfg.problem.strike,
-        cfg.problem.sigma,
-        cfg.problem.maturity,
-    );
-    Ok((p0, bs))
-}
-
-// ---------------------------------------------------------------------------
-// Delay-exponent ablation
-// ---------------------------------------------------------------------------
-
-/// Sweep the delay exponent `d`: per value, final loss and total costs.
-pub fn sweep_delay(
-    cfg: &ExperimentConfig,
-    ds: &[f64],
-) -> Result<Vec<(f64, MeasuredRow)>> {
-    let mut rows = Vec::new();
-    for &d in ds {
-        let mut c = cfg.clone();
-        c.mlmc.d = d;
-        let mut tr = Trainer::from_config(&c, Method::Dmlmc, 0)?;
-        let curve = tr.run()?;
-        let cost = tr.cumulative_cost();
-        rows.push((
-            d,
-            MeasuredRow {
-                method: Method::Dmlmc,
-                final_loss: curve.final_loss().unwrap_or(f64::NAN),
-                std_cost: cost.work,
-                par_cost: cost.depth,
-                avg_depth: cost.depth / c.train.steps as f64,
-            },
-        ));
-    }
-    Ok(rows)
-}
-
-/// Average per-step depth predicted by the cost model for a schedule —
-/// used to check measured against `sum_l 2^{(c-d)l}`.
-pub fn predicted_avg_depth(cfg: &ExperimentConfig, horizon: u64) -> f64 {
-    let sched = crate::coordinator::DelayedSchedule::new(cfg.problem.lmax, cfg.mlmc.d);
-    let model = CostModel::new(cfg.mlmc.c);
-    let mut total = 0.0;
-    for t in 0..horizon {
-        let depth = sched
-            .levels_due(t)
-            .into_iter()
-            .map(|l| model.sample_cost(l))
-            .fold(0.0, f64::max);
-        total += depth;
-    }
-    total / horizon as f64
-}
-
-// ---------------------------------------------------------------------------
-// Scenario sweep — per-scenario Assumption-2 fit + parallel-cost table
-// ---------------------------------------------------------------------------
 
 /// One row of the scenario sweep: the fitted variance-decay exponent and
 /// the measured MLMC vs delayed-MLMC parallel cost for one scenario.
@@ -331,13 +81,117 @@ pub struct ScenarioRow {
     pub final_loss: f64,
 }
 
+/// One (method, worker count) cell of the parallel sweep: what the pool
+/// *measured* on this machine next to what the PRAM model *predicts* for
+/// the same schedule at the same P. All wall-clock fields are seconds.
+#[derive(Debug, Clone)]
+pub struct ParallelCell {
+    pub method: Method,
+    pub workers: usize,
+    pub steps: usize,
+    /// Mean measured per-step makespan (seconds) over the training run.
+    pub measured_mean_s: f64,
+    /// Total measured makespan (seconds).
+    pub measured_total_s: f64,
+    /// Pool utilization: busy / (P x makespan), in [0, 1].
+    pub utilization: f64,
+    /// Mean per-step dispatch overhead (seconds): measured makespan minus
+    /// the busiest worker — the executor's fixed per-step cost, which the
+    /// resident pool amortizes relative to spawn-per-dispatch.
+    pub overhead_mean_s: f64,
+    /// Mean per-step makespan predicted by greedy LPT on the PRAM model
+    /// (`PramMachine::step_makespan`), in model work units.
+    pub pram_makespan: f64,
+    /// Mean per-step Brent lower bound (`max(work/P, depth)`), in model
+    /// work units.
+    pub brent_bound: f64,
+    pub final_loss: f64,
+}
+
+/// Resident-vs-scoped spawn-overhead comparison on a **light**
+/// (level-0-only) dispatch — the typical DMLMC step after warmup, where
+/// the refresh is one small job and per-step executor overhead dominates
+/// the measured makespan. This is the number that shows the resident
+/// pool's win directly instead of asserting it.
+#[derive(Debug, Clone)]
+pub struct ExecOverheadComparison {
+    pub workers: usize,
+    /// Measured dispatches per mode (one extra warmup dispatch per mode
+    /// is excluded from the means).
+    pub steps: usize,
+    pub resident_overhead_mean_s: f64,
+    pub scoped_overhead_mean_s: f64,
+    pub resident_makespan_mean_s: f64,
+    pub scoped_makespan_mean_s: f64,
+    /// OS threads spawned over the whole run: `workers` for the resident
+    /// pool, ~`(steps + 1) x min(workers, tasks)` for the scoped one.
+    pub resident_threads_spawned: usize,
+    pub scoped_threads_spawned: usize,
+}
+
+/// One (fleet size, worker count) cell of the fleet sweep: aggregate
+/// serving throughput of one resident pool multiplexing `fleet_size`
+/// independent DMLMC trainers.
+#[derive(Debug, Clone)]
+pub struct FleetCell {
+    pub fleet_size: usize,
+    pub workers: usize,
+    /// Scenario name of each submitted problem (round-robin over the
+    /// requested scenario list).
+    pub problems: Vec<String>,
+    pub steps_per_problem: usize,
+    /// `fleet_size x steps_per_problem`.
+    pub total_steps: usize,
+    /// Fleet ticks (multiplexed dispatches) it took to drain.
+    pub ticks: usize,
+    /// Wall-clock seconds from first submit to drained.
+    pub wall_s: f64,
+    /// Aggregate SGD steps per second across the whole fleet.
+    pub steps_per_sec: f64,
+    /// Completed problems per second.
+    pub problems_per_sec: f64,
+    /// Shared-pool utilization over the drain: busy / (P x makespan).
+    pub utilization: f64,
+    /// Mean makespan of one multiplexed dispatch (seconds).
+    pub mean_step_makespan_s: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Private helpers
+// ---------------------------------------------------------------------------
+
+/// Diagnostic chunks accumulated per (snapshot, level) — the per-sample
+/// second moments are heavy-tailed, so one 32-sample chunk is far too
+/// noisy for a slope fit (measured: b̂ swings 0.9 ↔ 1.4 at 32 vs 512
+/// samples). 4 chunks x diag batch is the accuracy/runtime sweet spot.
+const DIAG_CHUNKS: u32 = 4;
+
 /// Chunks averaged per (level) when fitting `b_hat` — same reasoning as
 /// [`DIAG_CHUNKS`]: per-sample second moments are heavy-tailed.
 const SWEEP_CHUNKS: u32 = 4;
 
+/// The PRAM jobs of step `t` under `method` — the same workload the pool
+/// executes, expressed in samples for the counting scheduler.
+fn pram_jobs(tr: &Trainer, method: Method, t: u64) -> Vec<LevelJob> {
+    match method {
+        Method::Naive => vec![LevelJob {
+            level: tr.cfg.problem.lmax,
+            n_samples: tr.naive_chunks() * tr.backend().naive_chunk(),
+        }],
+        _ => tr
+            .jobs_for_step(t)
+            .iter()
+            .map(|j| LevelJob {
+                level: j.level,
+                n_samples: j.n_chunks * tr.backend().grad_chunk(j.level),
+            })
+            .collect(),
+    }
+}
+
 /// Fit the variance-decay exponent `b` for one scenario backend at the
 /// given parameters (levels `1..=lmax`, the decay-constrained range).
-pub fn fit_b_hat(
+fn fit_b_hat(
     backend: &NativeBackend,
     cfg: &ExperimentConfig,
     params: &[f32],
@@ -368,343 +222,698 @@ pub fn fit_b_hat(
     Ok(fit_decay_rate(&level_means))
 }
 
-/// For every named scenario: fit `b_hat` (Assumption 2), then run one
-/// standard-MLMC and one delayed-MLMC training and compare total
-/// parallel cost — demonstrating the paper's parallel-complexity
-/// advantage is scenario-generic. Always runs on the native backend.
-pub fn scenario_sweep(
-    cfg: &ExperimentConfig,
-    names: &[String],
-    quiet: bool,
-) -> Result<Vec<ScenarioRow>> {
-    let mut rows = Vec::new();
-    for name in names {
-        let mut c = cfg.clone();
-        c.scenario = name.clone();
-        c.runtime.backend = Backend::Native;
-        let scenario = build_scenario_or_err(name, &c.problem)?;
-        let backend = NativeBackend::with_scenario(c.problem, scenario);
-        let params = crate::engine::mlp::init_params(0);
-        let b_hat = fit_b_hat(&backend, &c, &params)?;
+// ---------------------------------------------------------------------------
+// ExperimentRunner — the one front door
+// ---------------------------------------------------------------------------
 
-        let mut mlmc = Trainer::from_config(&c, Method::Mlmc, 0)?;
-        mlmc.run()?;
-        let mut dmlmc = Trainer::from_config(&c, Method::Dmlmc, 0)?;
-        let curve = dmlmc.run()?;
-        let mlmc_par = mlmc.cumulative_cost().depth;
-        let dmlmc_par = dmlmc.cumulative_cost().depth;
-        let row = ScenarioRow {
-            name: name.clone(),
-            b_hat,
-            assumption_ok: b_hat > c.mlmc.c,
-            mlmc_par,
-            dmlmc_par,
-            par_ratio: mlmc_par / dmlmc_par,
-            final_loss: curve.final_loss().unwrap_or(f64::NAN),
-        };
-        if !quiet {
-            eprintln!(
-                "scenario_sweep: {name:<14} b_hat {b_hat:>6.2}  par ratio {:.2}",
-                row.par_ratio
-            );
+/// The experiment front door: a configuration + output directory +
+/// verbosity, with one method per paper table/figure (and the serving
+/// benchmarks). Construct with [`new`](Self::new), adjust with the
+/// builder-style [`out_dir`](Self::out_dir) / [`quiet`](Self::quiet),
+/// then call the experiment you want; write its outputs through
+/// [`artifacts`](Self::artifacts).
+///
+/// ```no_run
+/// use dmlmc::config::ExperimentConfig;
+/// use dmlmc::experiments::ExperimentRunner;
+///
+/// let cfg = ExperimentConfig::smoke();
+/// let runner = ExperimentRunner::new(&cfg).quiet(true);
+/// let (theory, measured) = runner.table1()?;
+/// let arts = runner.artifacts("table1")?;
+/// arts.write_text(
+///     "table1.txt",
+///     &ExperimentRunner::render_table1(&theory, &measured),
+/// )?;
+/// # anyhow::Ok(())
+/// ```
+pub struct ExperimentRunner {
+    cfg: ExperimentConfig,
+    out_dir: PathBuf,
+    quiet: bool,
+}
+
+impl ExperimentRunner {
+    /// A runner over `cfg` writing under `artifacts/` (override with
+    /// [`out_dir`](Self::out_dir)), verbose by default.
+    pub fn new(cfg: &ExperimentConfig) -> ExperimentRunner {
+        ExperimentRunner {
+            cfg: cfg.clone(),
+            out_dir: PathBuf::from("artifacts"),
+            quiet: false,
         }
-        rows.push(row);
     }
-    Ok(rows)
-}
 
-/// Render the sweep as text (CLI + `examples/scenario_sweep.rs`).
-pub fn render_scenario_table(rows: &[ScenarioRow]) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "{:<16} {:>8} {:>8} {:>14} {:>14} {:>10} {:>12}\n",
-        "scenario", "b_hat", "A2 ok", "mlmc par", "dmlmc par", "ratio", "final loss"
-    ));
-    for r in rows {
-        out.push_str(&format!(
-            "{:<16} {:>8.2} {:>8} {:>14.0} {:>14.0} {:>10.2} {:>12.4}\n",
-            r.name,
-            r.b_hat,
-            if r.assumption_ok { "yes" } else { "NO" },
-            r.mlmc_par,
-            r.dmlmc_par,
-            r.par_ratio,
-            r.final_loss
-        ));
+    /// Root directory named runs land under (the CLI's `--out-dir`).
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> ExperimentRunner {
+        self.out_dir = dir.into();
+        self
     }
-    out
-}
 
-// ---------------------------------------------------------------------------
-// Parallel sweep — measured pool makespan vs the PRAM model's prediction
-// ---------------------------------------------------------------------------
-
-/// One (method, worker count) cell of the parallel sweep: what the pool
-/// *measured* on this machine next to what the PRAM model *predicts* for
-/// the same schedule at the same P.
-#[derive(Debug, Clone)]
-pub struct ParallelCell {
-    pub method: Method,
-    pub workers: usize,
-    pub steps: usize,
-    /// Mean measured per-step makespan (seconds) over the training run.
-    pub measured_mean_s: f64,
-    /// Total measured makespan (seconds).
-    pub measured_total_s: f64,
-    /// Pool utilization: busy / (P x makespan), in [0, 1].
-    pub utilization: f64,
-    /// Mean per-step dispatch overhead (seconds): measured makespan minus
-    /// the busiest worker — the executor's fixed per-step cost, which the
-    /// resident pool amortizes relative to spawn-per-dispatch.
-    pub overhead_mean_s: f64,
-    /// Mean per-step makespan predicted by greedy LPT on the PRAM model
-    /// (`PramMachine::step_makespan`), in model work units.
-    pub pram_makespan: f64,
-    /// Mean per-step Brent lower bound (`max(work/P, depth)`), in model
-    /// work units.
-    pub brent_bound: f64,
-    pub final_loss: f64,
-}
-
-/// The PRAM jobs of step `t` under `method` — the same workload the pool
-/// executes, expressed in samples for the counting scheduler.
-fn pram_jobs(tr: &Trainer, method: Method, t: u64) -> Vec<LevelJob> {
-    match method {
-        Method::Naive => vec![LevelJob {
-            level: tr.cfg.problem.lmax,
-            n_samples: tr.naive_chunks() * tr.backend().naive_chunk(),
-        }],
-        _ => tr
-            .jobs_for_step(t)
-            .iter()
-            .map(|j| LevelJob {
-                level: j.level,
-                n_samples: j.n_chunks * tr.backend().grad_chunk(j.level),
-            })
-            .collect(),
+    /// Suppress per-run progress on stderr.
+    pub fn quiet(mut self, quiet: bool) -> ExperimentRunner {
+        self.quiet = quiet;
+        self
     }
-}
 
-/// For every `P` in `workers` x every method: train on the native backend
-/// with a `P`-worker pool, and record the measured per-step makespan next
-/// to the PRAM-predicted one for the identical schedule. This is the
-/// experiment that turns the paper's parallel-complexity gap (DMLMC's
-/// per-iteration depth ~ O(1) vs MLMC's O(2^lmax)) into wall-clock
-/// numbers.
-pub fn parallel_sweep(
-    cfg: &ExperimentConfig,
-    workers: &[usize],
-    quiet: bool,
-) -> Result<Vec<ParallelCell>> {
-    anyhow::ensure!(!workers.is_empty(), "need at least one worker count");
-    let mut cells = Vec::new();
-    for &p in workers {
-        anyhow::ensure!(p > 0, "worker counts must be positive (got {p})");
-        for method in Method::all() {
-            let mut c = cfg.clone();
-            c.runtime.backend = Backend::Native;
-            c.execution.workers = p;
-            let mut tr = Trainer::from_config(&c, method, 0)?;
-            // Model predictions first: jobs_for_step is pure, so the
-            // schedule can be replayed without running anything.
-            let machine = PramMachine::new(p, CostModel::new(c.mlmc.c));
-            let mut pram_total = 0.0;
-            let mut brent_total = 0.0;
-            for t in 0..c.train.steps as u64 {
-                let jobs = pram_jobs(&tr, method, t);
-                pram_total += machine.step_makespan(&jobs);
-                brent_total += machine.brent_bound(&jobs);
-            }
+    /// The runner's configuration.
+    pub fn cfg(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The shared artifacts writer for a named run: everything one
+    /// experiment writes goes through this (into `<out_dir>/<run>/`).
+    pub fn artifacts(&self, run: &str) -> Result<RunArtifacts> {
+        RunArtifacts::create(&self.out_dir, run).map_err(|e| {
+            anyhow::anyhow!(
+                "create run dir {}/{run}: {e}",
+                self.out_dir.display()
+            )
+        })
+    }
+
+    // -- Figure 2: learning curves of the three methods -----------------
+
+    /// All runs for one method over `cfg.train.n_seeds` seeds.
+    pub fn method_curves(&self, method: Method) -> Result<Vec<LearningCurve>> {
+        let mut curves = Vec::new();
+        for seed in 0..self.cfg.train.n_seeds as u64 {
+            let mut tr = Trainer::from_config(&self.cfg, method, seed)?;
             let curve = tr.run()?;
-            let stats = tr
-                .exec_stats()
-                .expect("native backend always pools")
-                .clone();
-            let steps = c.train.steps as f64;
-            let cell = ParallelCell {
-                method,
-                workers: p,
-                steps: c.train.steps,
-                measured_mean_s: stats.mean_makespan(),
-                measured_total_s: stats.total_makespan(),
-                utilization: stats.utilization(),
-                overhead_mean_s: stats.mean_dispatch_overhead(),
-                pram_makespan: pram_total / steps,
-                brent_bound: brent_total / steps,
-                final_loss: curve.final_loss().unwrap_or(f64::NAN),
-            };
-            if !quiet {
+            if !self.quiet {
                 eprintln!(
-                    "parallel_sweep: {method:<6} P={p}  measured {:.3} ms/step  \
-                     ovh {:.3} ms  pram {:.0}  util {:.0}%",
-                    cell.measured_mean_s * 1e3,
-                    cell.overhead_mean_s * 1e3,
-                    cell.pram_makespan,
-                    cell.utilization * 100.0
+                    "  {method} seed {seed}: loss {:.4} -> {:.4} (par cost {:.0})",
+                    curve.points.first().map(|p| p.loss).unwrap_or(f64::NAN),
+                    curve.final_loss().unwrap_or(f64::NAN),
+                    curve.points.last().map(|p| p.par_cost).unwrap_or(0.0),
                 );
             }
-            cells.push(cell);
+            curves.push(curve);
         }
+        Ok(curves)
     }
-    Ok(cells)
-}
 
-/// Render the sweep as text. Speedups are relative to the same method's
-/// cell at the smallest swept worker count, for measured and predicted
-/// makespans alike — the unit-free comparison between the pool and the
-/// PRAM model.
-pub fn render_parallel_table(cells: &[ParallelCell]) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "{:<8} {:>4} {:>14} {:>10} {:>10} {:>12} {:>10} {:>8} {:>12}\n",
-        "method", "P", "meas ms/step", "meas spdup", "ovh ms", "pram pred",
-        "pram spdup", "util", "final loss"
-    ));
-    let baseline = |m: Method| {
-        cells
-            .iter()
-            .filter(|c| c.method == m)
-            .min_by_key(|c| c.workers)
-    };
-    for c in cells {
-        let (ms, ps) = baseline(c.method)
-            .map(|b| {
-                (
-                    b.measured_mean_s / c.measured_mean_s.max(1e-12),
-                    b.pram_makespan / c.pram_makespan.max(1e-12),
-                )
-            })
-            .unwrap_or((f64::NAN, f64::NAN));
+    /// The full Figure-2 experiment: 3 methods x n_seeds, aggregated.
+    pub fn figure2(
+        &self,
+    ) -> Result<Vec<(Method, Vec<LearningCurve>, AggregatedCurve)>> {
+        let mut out = Vec::new();
+        for method in Method::all() {
+            if !self.quiet {
+                eprintln!(
+                    "figure2: running {method} x{} seeds",
+                    self.cfg.train.n_seeds
+                );
+            }
+            let curves = self.method_curves(method)?;
+            let agg = aggregate_curves(&curves).map_err(anyhow::Error::msg)?;
+            out.push((method, curves, agg));
+        }
+        Ok(out)
+    }
+
+    // -- Figure 1: assumption decay diagnostics --------------------------
+
+    /// Reproduce Figure 1: track the decay diagnostics at parameter
+    /// snapshots taken along a (DMLMC) optimization trajectory.
+    pub fn figure1(&self, snapshots: usize) -> Result<Figure1> {
+        let cfg = &self.cfg;
+        let mut tr = Trainer::from_config(cfg, Method::Dmlmc, 0)?;
+        let lmax = cfg.problem.lmax;
+        let src = BrownianSource::new(0xF1);
+        let mut norm_samples: Vec<Vec<f64>> = vec![Vec::new(); lmax + 1];
+        let mut smooth_samples: Vec<Vec<f64>> = vec![Vec::new(); lmax + 1];
+
+        let snap_every = (cfg.train.steps / snapshots.max(1)).max(1) as u64;
+        for t in 0..cfg.train.steps as u64 {
+            let params_before = tr.params.clone();
+            tr.step(t)?;
+            if t % snap_every == 0 {
+                let params_after = tr.params.clone();
+                for level in 0..=lmax {
+                    let batch = tr.backend().diag_chunk();
+                    let n = cfg.problem.n_steps(level);
+                    let mut w = Welford::new();
+                    let mut ws = Welford::new();
+                    for chunk in 0..DIAG_CHUNKS {
+                        let dw = src.increments_multi(
+                            Purpose::Diagnostic,
+                            t,
+                            level as u32,
+                            chunk,
+                            batch,
+                            n,
+                            cfg.problem.dt(level),
+                            tr.backend().n_factors(),
+                        );
+                        let norms = tr.backend().grad_norms_chunk(
+                            level,
+                            &params_before,
+                            &dw,
+                        )?;
+                        for v in &norms {
+                            w.push(*v as f64);
+                        }
+                        // pathwise smoothness between consecutive iterates
+                        let vals = tr.backend().smoothness_chunk(
+                            level,
+                            &params_before,
+                            &params_after,
+                            &dw,
+                        )?;
+                        for v in &vals {
+                            ws.push(*v as f64);
+                        }
+                    }
+                    norm_samples[level].push(w.mean());
+                    smooth_samples[level].push(ws.mean());
+                }
+                if !self.quiet {
+                    eprintln!("figure1: snapshot at step {t}");
+                }
+            }
+        }
+
+        let grad_norms = DecaySeries::from_samples(&norm_samples);
+        let smoothness = DecaySeries::from_samples(&smooth_samples);
+        // Assumption 2: E||grad Delta_l||^2 <= M 2^{-bl}  -> slope = b.
+        let b_hat = grad_norms.fitted_rate();
+        // Assumption 3: Lipschitz constant decays 2^{-dl}   -> slope = d.
+        let d_hat = smoothness.fitted_rate();
+        Ok(Figure1 {
+            grad_norms,
+            smoothness,
+            b_hat,
+            d_hat,
+        })
+    }
+
+    // -- Table 1: theory vs measured complexity accounting ---------------
+
+    /// Table 1: run each method for `cfg.train.steps` steps (single seed)
+    /// and account costs; pair with the theory formulas.
+    pub fn table1(&self) -> Result<(Vec<TheoryRow>, Vec<MeasuredRow>)> {
+        let cfg = &self.cfg;
+        let theory = TheoryRow::table(&TheoryParams {
+            t: cfg.train.steps as f64,
+            n: cfg.mlmc.n_effective as f64,
+            m: 1.0,
+            lmax: cfg.problem.lmax,
+            b: cfg.mlmc.b,
+            c: cfg.mlmc.c,
+            d: cfg.mlmc.d,
+        });
+        let mut measured = Vec::new();
+        for method in Method::all() {
+            let mut tr = Trainer::from_config(cfg, method, 0)?;
+            let curve = tr.run()?;
+            let cost = tr.cumulative_cost();
+            measured.push(MeasuredRow {
+                method,
+                final_loss: curve.final_loss().unwrap_or(f64::NAN),
+                std_cost: cost.work,
+                par_cost: cost.depth,
+                avg_depth: cost.depth / cfg.train.steps as f64,
+            });
+        }
+        Ok((theory, measured))
+    }
+
+    // -- Black–Scholes validation (geometric drift) ----------------------
+
+    /// Train under the *martingale* GBM (`geometric` drift, `mu = 0`) and
+    /// compare the learned price `p0` with the Black–Scholes closed form —
+    /// the external correctness anchor for the whole stack.
+    ///
+    /// Under `mu = 0`, `S` is a martingale, so `E[∫ H dS] = 0` for **any**
+    /// strategy `H`; the optimal `p0` of the quadratic hedging objective
+    /// is therefore exactly `E[max(S_T − K, 0)] = BS(s0, K, sigma, T)`
+    /// whatever the MLP has learned — a sharp anchor that does not
+    /// require the hedge itself to have converged.
+    pub fn validate_bs(&self) -> Result<(f64, f64)> {
+        use crate::engine::mlp::OFF_P0;
+        let mut cfg = self.cfg.clone();
+        cfg.problem.drift = crate::hedging::Drift::Geometric;
+        cfg.problem.mu = 0.0;
+        // The anchor is the Black–Scholes CALL closed form, so the
+        // scenario must be the default whatever the caller configured.
+        cfg.scenario = crate::scenarios::DEFAULT_SCENARIO.to_string();
+        // The validation problem differs from the one the artifacts were
+        // lowered for (drift/mu), so it always runs on the native engine —
+        // which the cross-check tests pin to the HLO numerics anyway.
+        cfg.runtime.backend = crate::config::Backend::Native;
+        let mut tr = Trainer::from_config(&cfg, Method::Mlmc, 0)?;
+        tr.run()?;
+        let p0 = tr.params[OFF_P0] as f64;
+        let bs = bs_call_price(
+            cfg.problem.s0,
+            cfg.problem.strike,
+            cfg.problem.sigma,
+            cfg.problem.maturity,
+        );
+        Ok((p0, bs))
+    }
+
+    // -- Delay-exponent ablation -----------------------------------------
+
+    /// Sweep the delay exponent `d`: per value, final loss and total
+    /// costs.
+    pub fn sweep_delay(&self, ds: &[f64]) -> Result<Vec<(f64, MeasuredRow)>> {
+        let mut rows = Vec::new();
+        for &d in ds {
+            let mut c = self.cfg.clone();
+            c.mlmc.d = d;
+            let mut tr = Trainer::from_config(&c, Method::Dmlmc, 0)?;
+            let curve = tr.run()?;
+            let cost = tr.cumulative_cost();
+            rows.push((
+                d,
+                MeasuredRow {
+                    method: Method::Dmlmc,
+                    final_loss: curve.final_loss().unwrap_or(f64::NAN),
+                    std_cost: cost.work,
+                    par_cost: cost.depth,
+                    avg_depth: cost.depth / c.train.steps as f64,
+                },
+            ));
+        }
+        Ok(rows)
+    }
+
+    /// Average per-step depth predicted by the cost model for a schedule —
+    /// used to check measured against `sum_l 2^{(c-d)l}`.
+    pub fn predicted_avg_depth(&self, horizon: u64) -> f64 {
+        let cfg = &self.cfg;
+        let sched =
+            crate::coordinator::DelayedSchedule::new(cfg.problem.lmax, cfg.mlmc.d);
+        let model = CostModel::new(cfg.mlmc.c);
+        let mut total = 0.0;
+        for t in 0..horizon {
+            let depth = sched
+                .levels_due(t)
+                .into_iter()
+                .map(|l| model.sample_cost(l))
+                .fold(0.0, f64::max);
+            total += depth;
+        }
+        total / horizon as f64
+    }
+
+    // -- Scenario sweep ---------------------------------------------------
+
+    /// For every named scenario: fit `b_hat` (Assumption 2), then run one
+    /// standard-MLMC and one delayed-MLMC training and compare total
+    /// parallel cost — demonstrating the paper's parallel-complexity
+    /// advantage is scenario-generic. Always runs on the native backend.
+    pub fn scenario_sweep(&self, names: &[String]) -> Result<Vec<ScenarioRow>> {
+        let mut rows = Vec::new();
+        for name in names {
+            let mut c = self.cfg.clone();
+            c.scenario = name.clone();
+            c.runtime.backend = Backend::Native;
+            let scenario = build_scenario_or_err(name, &c.problem)?;
+            let backend = NativeBackend::with_scenario(c.problem, scenario);
+            let params = crate::engine::mlp::init_params(0);
+            let b_hat = fit_b_hat(&backend, &c, &params)?;
+
+            let mut mlmc = Trainer::from_config(&c, Method::Mlmc, 0)?;
+            mlmc.run()?;
+            let mut dmlmc = Trainer::from_config(&c, Method::Dmlmc, 0)?;
+            let curve = dmlmc.run()?;
+            let mlmc_par = mlmc.cumulative_cost().depth;
+            let dmlmc_par = dmlmc.cumulative_cost().depth;
+            let row = ScenarioRow {
+                name: name.clone(),
+                b_hat,
+                assumption_ok: b_hat > c.mlmc.c,
+                mlmc_par,
+                dmlmc_par,
+                par_ratio: mlmc_par / dmlmc_par,
+                final_loss: curve.final_loss().unwrap_or(f64::NAN),
+            };
+            if !self.quiet {
+                eprintln!(
+                    "scenario_sweep: {name:<14} b_hat {b_hat:>6.2}  par ratio {:.2}",
+                    row.par_ratio
+                );
+            }
+            rows.push(row);
+        }
+        Ok(rows)
+    }
+
+    // -- Parallel sweep: measured pool vs the PRAM model ------------------
+
+    /// For every `P` in `workers` x every method: train on the native
+    /// backend with a `P`-worker pool, and record the measured per-step
+    /// makespan next to the PRAM-predicted one for the identical
+    /// schedule. This is the experiment that turns the paper's
+    /// parallel-complexity gap (DMLMC's per-iteration depth ~ O(1) vs
+    /// MLMC's O(2^lmax)) into wall-clock numbers.
+    pub fn parallel_sweep(&self, workers: &[usize]) -> Result<Vec<ParallelCell>> {
+        anyhow::ensure!(!workers.is_empty(), "need at least one worker count");
+        let mut cells = Vec::new();
+        for &p in workers {
+            anyhow::ensure!(p > 0, "worker counts must be positive (got {p})");
+            for method in Method::all() {
+                let mut c = self.cfg.clone();
+                c.runtime.backend = Backend::Native;
+                c.execution.workers = p;
+                let mut tr = Trainer::from_config(&c, method, 0)?;
+                // Model predictions first: jobs_for_step is pure, so the
+                // schedule can be replayed without running anything.
+                let machine = PramMachine::new(p, CostModel::new(c.mlmc.c));
+                let mut pram_total = 0.0;
+                let mut brent_total = 0.0;
+                for t in 0..c.train.steps as u64 {
+                    let jobs = pram_jobs(&tr, method, t);
+                    pram_total += machine.step_makespan(&jobs);
+                    brent_total += machine.brent_bound(&jobs);
+                }
+                let curve = tr.run()?;
+                let stats = tr
+                    .exec_stats()
+                    .expect("native backend always pools")
+                    .clone();
+                let steps = c.train.steps as f64;
+                let cell = ParallelCell {
+                    method,
+                    workers: p,
+                    steps: c.train.steps,
+                    measured_mean_s: stats.mean_makespan(),
+                    measured_total_s: stats.total_makespan(),
+                    utilization: stats.utilization(),
+                    overhead_mean_s: stats.mean_dispatch_overhead(),
+                    pram_makespan: pram_total / steps,
+                    brent_bound: brent_total / steps,
+                    final_loss: curve.final_loss().unwrap_or(f64::NAN),
+                };
+                if !self.quiet {
+                    eprintln!(
+                        "parallel_sweep: {method:<6} P={p}  measured {:.6} s/step  \
+                         ovh {:.6} s  pram {:.0}  util {:.0}%",
+                        cell.measured_mean_s,
+                        cell.overhead_mean_s,
+                        cell.pram_makespan,
+                        cell.utilization * 100.0
+                    );
+                }
+                cells.push(cell);
+            }
+        }
+        Ok(cells)
+    }
+
+    // -- Exec bench: resident vs scoped spawn overhead --------------------
+
+    /// Run the same light (level-0-only) dispatch `steps` times through a
+    /// resident pool and through a scoped (spawn-per-dispatch) pool, and
+    /// report the mean per-step dispatch overhead and makespan of each.
+    /// Results of the two modes are bit-identical (same LPT queue, same
+    /// fixed-order reduction); only the executor's fixed cost differs.
+    pub fn exec_overhead_compare(
+        &self,
+        workers: usize,
+        steps: usize,
+    ) -> Result<ExecOverheadComparison> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(workers > 0, "need at least one worker");
+        anyhow::ensure!(steps > 0, "need at least one measured step");
+        let scenario = build_scenario_or_err(&cfg.scenario, &cfg.problem)?;
+        let backend: Arc<NativeBackend> =
+            Arc::new(NativeBackend::with_scenario(cfg.problem, scenario));
+        let src = BrownianSource::new(0);
+        let params = crate::engine::mlp::init_params(0);
+        // The DMLMC steady-state light step: refresh level 0 only.
+        let n_chunks = cfg
+            .mlmc
+            .n_effective
+            .div_ceil(backend.grad_chunk(0))
+            .max(1);
+        let jobs = vec![LevelJobSpec { level: 0, n_chunks }];
+        let measure = |pool: &mut WorkerPool| -> Result<(f64, f64)> {
+            // warmup dispatch: first-touch costs (page faults, thread starts)
+            run_jobs_pool_with_report(&backend, &src, 0, &params, &jobs, pool)?;
+            let mut overhead = 0.0;
+            let mut makespan = 0.0;
+            for t in 1..=steps as u64 {
+                let (_, report) = run_jobs_pool_with_report(
+                    &backend, &src, t, &params, &jobs, pool,
+                )?;
+                overhead += report.dispatch_overhead().as_secs_f64();
+                makespan += report.makespan.as_secs_f64();
+            }
+            Ok((overhead / steps as f64, makespan / steps as f64))
+        };
+        let mut resident = WorkerPool::new(workers);
+        let (resident_overhead_mean_s, resident_makespan_mean_s) =
+            measure(&mut resident)?;
+        let mut scoped = WorkerPool::new_scoped(workers);
+        let (scoped_overhead_mean_s, scoped_makespan_mean_s) =
+            measure(&mut scoped)?;
+        Ok(ExecOverheadComparison {
+            workers,
+            steps,
+            resident_overhead_mean_s,
+            scoped_overhead_mean_s,
+            resident_makespan_mean_s,
+            scoped_makespan_mean_s,
+            resident_threads_spawned: resident.threads_spawned(),
+            scoped_threads_spawned: scoped.threads_spawned(),
+        })
+    }
+
+    // -- Fleet sweep: serving throughput vs fleet size --------------------
+
+    /// For every fleet size `F` x every worker count `P`: build a fresh
+    /// [`FleetCoordinator`] over a `P`-worker pool, submit `F`
+    /// independent DMLMC problems (round-robin over `scenarios`, seeds
+    /// `0..F`, `steps` steps each, native backend), drain it, and record
+    /// aggregate serving throughput. This is the serving-layer companion
+    /// to [`parallel_sweep`](Self::parallel_sweep): the paper's freed
+    /// per-iteration depth only pays off if another problem's chunks can
+    /// fill the idle workers, and these cells measure exactly that.
+    pub fn fleet_sweep(
+        &self,
+        fleet_sizes: &[usize],
+        workers: &[usize],
+        scenarios: &[String],
+        steps: usize,
+    ) -> Result<Vec<FleetCell>> {
+        anyhow::ensure!(!fleet_sizes.is_empty(), "need at least one fleet size");
+        anyhow::ensure!(!workers.is_empty(), "need at least one worker count");
+        anyhow::ensure!(!scenarios.is_empty(), "need at least one scenario");
+        anyhow::ensure!(steps > 0, "need at least one step per problem");
+        let mut cells = Vec::new();
+        for &f in fleet_sizes {
+            anyhow::ensure!(f > 0, "fleet sizes must be positive (got {f})");
+            for &p in workers {
+                anyhow::ensure!(p > 0, "worker counts must be positive (got {p})");
+                let mut fleet = FleetCoordinator::new(p);
+                let t0 = Instant::now();
+                let mut problems = Vec::with_capacity(f);
+                for i in 0..f {
+                    let name = &scenarios[i % scenarios.len()];
+                    let mut c = self.cfg.clone();
+                    // Fleet sessions need a shareable (native) backend even
+                    // for the default scenario.
+                    c.runtime.backend = Backend::Native;
+                    fleet.submit(
+                        &format!("{name}#{i}"),
+                        TrainerBuilder::new(&c)
+                            .method(Method::Dmlmc)
+                            .seed(i as u64)
+                            .scenario(name)
+                            .steps(steps),
+                    )?;
+                    problems.push(name.clone());
+                }
+                let runs = fleet.drain()?;
+                let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+                let stats = fleet.exec_stats();
+                let total_steps = runs.len() * steps;
+                let cell = FleetCell {
+                    fleet_size: f,
+                    workers: p,
+                    problems,
+                    steps_per_problem: steps,
+                    total_steps,
+                    ticks: fleet.ticks(),
+                    wall_s,
+                    steps_per_sec: total_steps as f64 / wall_s,
+                    problems_per_sec: f as f64 / wall_s,
+                    utilization: stats.utilization(),
+                    mean_step_makespan_s: stats.mean_makespan(),
+                };
+                if !self.quiet {
+                    eprintln!(
+                        "fleet_sweep: F={f} P={p}  {:.1} steps/s  util {:.0}%  \
+                         ({} ticks)",
+                        cell.steps_per_sec,
+                        cell.utilization * 100.0,
+                        cell.ticks
+                    );
+                }
+                cells.push(cell);
+            }
+        }
+        Ok(cells)
+    }
+
+    // -- Renderers (all wall-clock columns in SECONDS) --------------------
+
+    /// Render the combined Table 1 as text (CLI + EXPERIMENTS.md).
+    pub fn render_table1(theory: &[TheoryRow], measured: &[MeasuredRow]) -> String {
+        let mut out = String::new();
         out.push_str(&format!(
-            "{:<8} {:>4} {:>14.3} {:>10.2} {:>10.3} {:>12.0} {:>10.2} {:>7.0}% \
-             {:>12.4}\n",
-            c.method.name(),
-            c.workers,
-            c.measured_mean_s * 1e3,
-            ms,
-            c.overhead_mean_s * 1e3,
-            c.pram_makespan,
-            ps,
-            c.utilization * 100.0,
-            c.final_loss
+            "{:<28} {:>14} {:>14} {:>14} {:>14} {:>12}\n",
+            "method", "theory work", "meas. work", "theory depth", "meas. depth",
+            "final loss"
         ));
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// Exec bench — resident vs scoped spawn overhead on light dispatches
-// ---------------------------------------------------------------------------
-
-/// Resident-vs-scoped spawn-overhead comparison on a **light**
-/// (level-0-only) dispatch — the typical DMLMC step after warmup, where
-/// the refresh is one small job and per-step executor overhead dominates
-/// the measured makespan. This is the number that shows the resident
-/// pool's win directly instead of asserting it.
-#[derive(Debug, Clone)]
-pub struct ExecOverheadComparison {
-    pub workers: usize,
-    /// Measured dispatches per mode (one extra warmup dispatch per mode
-    /// is excluded from the means).
-    pub steps: usize,
-    pub resident_overhead_mean_s: f64,
-    pub scoped_overhead_mean_s: f64,
-    pub resident_makespan_mean_s: f64,
-    pub scoped_makespan_mean_s: f64,
-    /// OS threads spawned over the whole run: `workers` for the resident
-    /// pool, ~`(steps + 1) x min(workers, tasks)` for the scoped one.
-    pub resident_threads_spawned: usize,
-    pub scoped_threads_spawned: usize,
-}
-
-/// Run the same light (level-0-only) dispatch `steps` times through a
-/// resident pool and through a scoped (spawn-per-dispatch) pool, and
-/// report the mean per-step dispatch overhead and makespan of each.
-/// Results of the two modes are bit-identical (same LPT queue, same
-/// fixed-order reduction); only the executor's fixed cost differs.
-pub fn exec_overhead_compare(
-    cfg: &ExperimentConfig,
-    workers: usize,
-    steps: usize,
-) -> Result<ExecOverheadComparison> {
-    anyhow::ensure!(workers > 0, "need at least one worker");
-    anyhow::ensure!(steps > 0, "need at least one measured step");
-    let scenario = build_scenario_or_err(&cfg.scenario, &cfg.problem)?;
-    let backend: Arc<NativeBackend> =
-        Arc::new(NativeBackend::with_scenario(cfg.problem, scenario));
-    let src = BrownianSource::new(0);
-    let params = crate::engine::mlp::init_params(0);
-    // The DMLMC steady-state light step: refresh level 0 only.
-    let n_chunks = cfg
-        .mlmc
-        .n_effective
-        .div_ceil(backend.grad_chunk(0))
-        .max(1);
-    let jobs = vec![LevelJobSpec { level: 0, n_chunks }];
-    let measure = |pool: &mut WorkerPool| -> Result<(f64, f64)> {
-        // warmup dispatch: first-touch costs (page faults, thread starts)
-        run_jobs_pool_with_report(&backend, &src, 0, &params, &jobs, pool)?;
-        let mut overhead = 0.0;
-        let mut makespan = 0.0;
-        for t in 1..=steps as u64 {
-            let (_, report) =
-                run_jobs_pool_with_report(&backend, &src, t, &params, &jobs, pool)?;
-            overhead += report.dispatch_overhead().as_secs_f64();
-            makespan += report.makespan.as_secs_f64();
+        for (t, m) in theory.iter().zip(measured) {
+            out.push_str(&format!(
+                "{:<28} {:>14.3e} {:>14.3e} {:>14.3e} {:>14.3e} {:>12.4}\n",
+                t.method.name(),
+                t.complexity,
+                m.std_cost,
+                t.parallel,
+                m.par_cost,
+                m.final_loss
+            ));
         }
-        Ok((overhead / steps as f64, makespan / steps as f64))
-    };
-    let mut resident = WorkerPool::new(workers);
-    let (resident_overhead_mean_s, resident_makespan_mean_s) =
-        measure(&mut resident)?;
-    let mut scoped = WorkerPool::new_scoped(workers);
-    let (scoped_overhead_mean_s, scoped_makespan_mean_s) = measure(&mut scoped)?;
-    Ok(ExecOverheadComparison {
-        workers,
-        steps,
-        resident_overhead_mean_s,
-        scoped_overhead_mean_s,
-        resident_makespan_mean_s,
-        scoped_makespan_mean_s,
-        resident_threads_spawned: resident.threads_spawned(),
-        scoped_threads_spawned: scoped.threads_spawned(),
-    })
-}
+        out
+    }
 
-/// Render the comparison as text (CLI `repro exec-bench`).
-pub fn render_exec_comparison(cmp: &ExecOverheadComparison) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "exec overhead, light (level-0-only) dispatch, P = {}, {} steps:\n",
-        cmp.workers, cmp.steps
-    ));
-    out.push_str(&format!(
-        "{:<10} {:>14} {:>14} {:>16}\n",
-        "mode", "ovh ms/step", "mksp ms/step", "threads spawned"
-    ));
-    out.push_str(&format!(
-        "{:<10} {:>14.4} {:>14.4} {:>16}\n",
-        "resident",
-        cmp.resident_overhead_mean_s * 1e3,
-        cmp.resident_makespan_mean_s * 1e3,
-        cmp.resident_threads_spawned
-    ));
-    out.push_str(&format!(
-        "{:<10} {:>14.4} {:>14.4} {:>16}\n",
-        "scoped",
-        cmp.scoped_overhead_mean_s * 1e3,
-        cmp.scoped_makespan_mean_s * 1e3,
-        cmp.scoped_threads_spawned
-    ));
-    let ratio = if cmp.resident_overhead_mean_s > 0.0 {
-        cmp.scoped_overhead_mean_s / cmp.resident_overhead_mean_s
-    } else {
-        f64::INFINITY
-    };
-    out.push_str(&format!(
-        "scoped / resident overhead ratio: {ratio:.2}x\n"
-    ));
-    out
+    /// Render the scenario sweep as text (CLI +
+    /// `examples/scenario_sweep.rs`).
+    pub fn render_scenario_table(rows: &[ScenarioRow]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>8} {:>14} {:>14} {:>10} {:>12}\n",
+            "scenario", "b_hat", "A2 ok", "mlmc par", "dmlmc par", "ratio",
+            "final loss"
+        ));
+        for r in rows {
+            out.push_str(&format!(
+                "{:<16} {:>8.2} {:>8} {:>14.0} {:>14.0} {:>10.2} {:>12.4}\n",
+                r.name,
+                r.b_hat,
+                if r.assumption_ok { "yes" } else { "NO" },
+                r.mlmc_par,
+                r.dmlmc_par,
+                r.par_ratio,
+                r.final_loss
+            ));
+        }
+        out
+    }
+
+    /// Render the parallel sweep as text. Wall-clock columns are seconds
+    /// (same unit as the `ParallelCell` fields — pinned by a golden
+    /// test). Speedups are relative to the same method's cell at the
+    /// smallest swept worker count, for measured and predicted makespans
+    /// alike — the unit-free comparison between the pool and the PRAM
+    /// model.
+    pub fn render_parallel_table(cells: &[ParallelCell]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<8} {:>4} {:>14} {:>10} {:>10} {:>12} {:>10} {:>8} {:>12}\n",
+            "method", "P", "meas s/step", "meas spdup", "ovh s", "pram pred",
+            "pram spdup", "util", "final loss"
+        ));
+        let baseline = |m: Method| {
+            cells
+                .iter()
+                .filter(|c| c.method == m)
+                .min_by_key(|c| c.workers)
+        };
+        for c in cells {
+            let (ms, ps) = baseline(c.method)
+                .map(|b| {
+                    (
+                        b.measured_mean_s / c.measured_mean_s.max(1e-12),
+                        b.pram_makespan / c.pram_makespan.max(1e-12),
+                    )
+                })
+                .unwrap_or((f64::NAN, f64::NAN));
+            out.push_str(&format!(
+                "{:<8} {:>4} {:>14.6} {:>10.2} {:>10.6} {:>12.0} {:>10.2} \
+                 {:>7.0}% {:>12.4}\n",
+                c.method.name(),
+                c.workers,
+                c.measured_mean_s,
+                ms,
+                c.overhead_mean_s,
+                c.pram_makespan,
+                ps,
+                c.utilization * 100.0,
+                c.final_loss
+            ));
+        }
+        out
+    }
+
+    /// Render the resident-vs-scoped comparison as text (CLI
+    /// `repro exec-bench`). Wall-clock columns are seconds (pinned by a
+    /// golden test).
+    pub fn render_exec_comparison(cmp: &ExecOverheadComparison) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "exec overhead, light (level-0-only) dispatch, P = {}, {} steps:\n",
+            cmp.workers, cmp.steps
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>14} {:>14} {:>16}\n",
+            "mode", "ovh s/step", "mksp s/step", "threads spawned"
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>14.6} {:>14.6} {:>16}\n",
+            "resident",
+            cmp.resident_overhead_mean_s,
+            cmp.resident_makespan_mean_s,
+            cmp.resident_threads_spawned
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>14.6} {:>14.6} {:>16}\n",
+            "scoped",
+            cmp.scoped_overhead_mean_s,
+            cmp.scoped_makespan_mean_s,
+            cmp.scoped_threads_spawned
+        ));
+        let ratio = if cmp.resident_overhead_mean_s > 0.0 {
+            cmp.scoped_overhead_mean_s / cmp.resident_overhead_mean_s
+        } else {
+            f64::INFINITY
+        };
+        out.push_str(&format!(
+            "scoped / resident overhead ratio: {ratio:.2}x\n"
+        ));
+        out
+    }
+
+    /// Render the fleet sweep as text (CLI `repro fleet-sweep`).
+    pub fn render_fleet_table(cells: &[FleetCell]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<6} {:>4} {:>8} {:>12} {:>12} {:>14} {:>8} {:>8}\n",
+            "fleet", "P", "steps", "steps/s", "problems/s", "mksp s/step",
+            "util", "ticks"
+        ));
+        for c in cells {
+            out.push_str(&format!(
+                "{:<6} {:>4} {:>8} {:>12.1} {:>12.2} {:>14.6} {:>7.0}% {:>8}\n",
+                c.fleet_size,
+                c.workers,
+                c.total_steps,
+                c.steps_per_sec,
+                c.problems_per_sec,
+                c.mean_step_makespan_s,
+                c.utilization * 100.0,
+                c.ticks
+            ));
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -720,9 +929,13 @@ mod tests {
         cfg
     }
 
+    fn runner() -> ExperimentRunner {
+        ExperimentRunner::new(&cfg()).quiet(true)
+    }
+
     #[test]
     fn figure2_produces_all_methods() {
-        let out = figure2(&cfg(), true).unwrap();
+        let out = runner().figure2().unwrap();
         assert_eq!(out.len(), 3);
         for (_, curves, agg) in &out {
             assert_eq!(curves.len(), 2);
@@ -747,13 +960,14 @@ mod tests {
     fn table1_measured_matches_theory_shape() {
         let mut c = cfg();
         c.train.steps = 16;
-        let (theory, measured) = table1(&c).unwrap();
+        let (theory, measured) =
+            ExperimentRunner::new(&c).quiet(true).table1().unwrap();
         assert_eq!(theory.len(), 3);
         assert_eq!(measured.len(), 3);
         // naive work >> mlmc work; mlmc depth > dmlmc depth.
         assert!(measured[0].std_cost > measured[1].std_cost);
         assert!(measured[1].par_cost > measured[2].par_cost);
-        let txt = render_table1(&theory, &measured);
+        let txt = ExperimentRunner::render_table1(&theory, &measured);
         assert!(txt.contains("Naive"));
         assert!(txt.lines().count() >= 4);
     }
@@ -761,7 +975,9 @@ mod tests {
     #[test]
     fn predicted_avg_depth_matches_geom_sum_scale() {
         let c = cfg();
-        let pred = predicted_avg_depth(&c, 1 << 12);
+        let pred = ExperimentRunner::new(&c)
+            .quiet(true)
+            .predicted_avg_depth(1 << 12);
         // With c = d = 1 the exact average of max-due-level costs is
         // sum over l of 2^l * P(max due level = l) — bounded by lmax+1
         // and far below 2^lmax.
@@ -782,7 +998,10 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
-        let rows = scenario_sweep(&c, &names, true).unwrap();
+        let rows = ExperimentRunner::new(&c)
+            .quiet(true)
+            .scenario_sweep(&names)
+            .unwrap();
         assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.b_hat.is_finite(), "{}: b_hat {}", r.name, r.b_hat);
@@ -797,7 +1016,7 @@ mod tests {
         }
         // smooth default scenario must show clear variance decay
         assert!(rows[0].b_hat > 0.5, "bs-call b_hat {}", rows[0].b_hat);
-        let txt = render_scenario_table(&rows);
+        let txt = ExperimentRunner::render_scenario_table(&rows);
         assert!(txt.contains("ou-asian"));
         assert!(txt.lines().count() >= 4);
     }
@@ -805,7 +1024,7 @@ mod tests {
     #[test]
     fn scenario_sweep_rejects_unknown_names() {
         let names = vec!["nope-call".to_string()];
-        assert!(scenario_sweep(&cfg(), &names, true).is_err());
+        assert!(runner().scenario_sweep(&names).is_err());
     }
 
     #[test]
@@ -814,7 +1033,10 @@ mod tests {
         c.train.steps = 6;
         c.train.eval_every = 6;
         c.train.dmlmc_warmup = 0;
-        let cells = parallel_sweep(&c, &[1, 2], true).unwrap();
+        let cells = ExperimentRunner::new(&c)
+            .quiet(true)
+            .parallel_sweep(&[1, 2])
+            .unwrap();
         assert_eq!(cells.len(), 6); // 2 worker counts x 3 methods
         for cell in &cells {
             assert!(cell.measured_mean_s >= 0.0);
@@ -850,16 +1072,54 @@ mod tests {
                 pram(Method::Mlmc, p)
             );
         }
-        let txt = render_parallel_table(&cells);
+        let txt = ExperimentRunner::render_parallel_table(&cells);
         assert!(txt.contains("dmlmc"));
-        assert!(txt.contains("ovh ms"));
+        assert!(txt.contains("ovh s"));
         assert!(txt.lines().count() >= 7);
     }
 
     #[test]
     fn parallel_sweep_rejects_bad_worker_lists() {
-        assert!(parallel_sweep(&cfg(), &[], true).is_err());
-        assert!(parallel_sweep(&cfg(), &[0], true).is_err());
+        assert!(runner().parallel_sweep(&[]).is_err());
+        assert!(runner().parallel_sweep(&[0]).is_err());
+    }
+
+    #[test]
+    fn render_parallel_table_golden_seconds() {
+        // Pins the seconds-everywhere contract: values land in the table
+        // exactly as the ParallelCell fields (no unit rescaling).
+        let cells = vec![
+            ParallelCell {
+                method: Method::Mlmc,
+                workers: 1,
+                steps: 8,
+                measured_mean_s: 0.002,
+                measured_total_s: 0.016,
+                utilization: 1.0,
+                overhead_mean_s: 0.0005,
+                pram_makespan: 128.0,
+                brent_bound: 100.0,
+                final_loss: 0.5,
+            },
+            ParallelCell {
+                method: Method::Mlmc,
+                workers: 2,
+                steps: 8,
+                measured_mean_s: 0.001,
+                measured_total_s: 0.008,
+                utilization: 0.75,
+                overhead_mean_s: 0.00025,
+                pram_makespan: 64.0,
+                brent_bound: 50.0,
+                final_loss: 0.25,
+            },
+        ];
+        let expected = "\
+method      P    meas s/step meas spdup      ovh s    pram pred pram spdup     util   final loss
+mlmc        1       0.002000       1.00   0.000500          128       1.00     100%       0.5000
+mlmc        2       0.001000       2.00   0.000250           64       2.00      75%       0.2500
+";
+        assert_eq!(ExperimentRunner::render_parallel_table(&cells), expected);
     }
 
     #[test]
@@ -874,25 +1134,116 @@ mod tests {
             resident_threads_spawned: 4,
             scoped_threads_spawned: 68,
         };
-        let txt = render_exec_comparison(&cmp);
+        let txt = ExperimentRunner::render_exec_comparison(&cmp);
         assert!(txt.contains("resident"));
         assert!(txt.contains("scoped"));
         assert!(txt.contains("6.00x"), "{txt}");
     }
 
     #[test]
+    fn render_exec_comparison_golden_seconds() {
+        let cmp = ExecOverheadComparison {
+            workers: 4,
+            steps: 16,
+            resident_overhead_mean_s: 10e-6,
+            scoped_overhead_mean_s: 60e-6,
+            resident_makespan_mean_s: 1e-3,
+            scoped_makespan_mean_s: 1.05e-3,
+            resident_threads_spawned: 4,
+            scoped_threads_spawned: 68,
+        };
+        let expected = "\
+exec overhead, light (level-0-only) dispatch, P = 4, 16 steps:
+mode           ovh s/step    mksp s/step  threads spawned
+resident         0.000010       0.001000                4
+scoped           0.000060       0.001050               68
+scoped / resident overhead ratio: 6.00x
+";
+        assert_eq!(ExperimentRunner::render_exec_comparison(&cmp), expected);
+    }
+
+    #[test]
     fn exec_overhead_compare_rejects_degenerate_inputs() {
-        assert!(exec_overhead_compare(&cfg(), 0, 4).is_err());
-        assert!(exec_overhead_compare(&cfg(), 2, 0).is_err());
+        assert!(runner().exec_overhead_compare(0, 4).is_err());
+        assert!(runner().exec_overhead_compare(2, 0).is_err());
     }
 
     #[test]
     fn sweep_delay_monotone_depth() {
-        let c = cfg();
-        let rows = sweep_delay(&c, &[0.5, 1.0, 2.0]).unwrap();
+        let rows = runner().sweep_delay(&[0.5, 1.0, 2.0]).unwrap();
         assert_eq!(rows.len(), 3);
         // larger d => fewer refreshes => lower parallel cost.
         assert!(rows[0].1.par_cost >= rows[1].1.par_cost);
         assert!(rows[1].1.par_cost >= rows[2].1.par_cost);
+    }
+
+    #[test]
+    fn fleet_sweep_reports_throughput_cells() {
+        let mut c = cfg();
+        c.train.eval_every = 4;
+        let scenarios: Vec<String> = ["bs-call", "heston-uo-call"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let cells = ExperimentRunner::new(&c)
+            .quiet(true)
+            .fleet_sweep(&[1, 2], &[2], &scenarios, 4)
+            .unwrap();
+        assert_eq!(cells.len(), 2);
+        for cell in &cells {
+            assert_eq!(cell.total_steps, cell.fleet_size * 4);
+            assert_eq!(cell.problems.len(), cell.fleet_size);
+            assert!(cell.wall_s > 0.0);
+            assert!(cell.steps_per_sec > 0.0);
+            assert!(cell.problems_per_sec > 0.0);
+            assert!((0.0..=1.0).contains(&cell.utilization));
+            assert!(cell.mean_step_makespan_s >= 0.0);
+            // one multiplexed dispatch per step when all sessions share
+            // the same horizon
+            assert_eq!(cell.ticks, 4);
+        }
+        // round-robin scenario assignment
+        assert_eq!(cells[1].problems, scenarios);
+        let txt = ExperimentRunner::render_fleet_table(&cells);
+        assert!(txt.contains("steps/s"));
+        assert!(txt.contains("mksp s/step"));
+        assert!(txt.lines().count() >= 3);
+    }
+
+    #[test]
+    fn fleet_sweep_rejects_degenerate_inputs() {
+        let sc = vec!["bs-call".to_string()];
+        let r = runner();
+        assert!(r.fleet_sweep(&[], &[1], &sc, 4).is_err());
+        assert!(r.fleet_sweep(&[1], &[], &sc, 4).is_err());
+        assert!(r.fleet_sweep(&[0], &[1], &sc, 4).is_err());
+        assert!(r.fleet_sweep(&[1], &[0], &sc, 4).is_err());
+        assert!(r.fleet_sweep(&[1], &[1], &[], 4).is_err());
+        assert!(r.fleet_sweep(&[1], &[1], &sc, 0).is_err());
+    }
+
+    #[test]
+    fn runner_hands_out_run_scoped_artifacts() {
+        let tmp = std::env::temp_dir()
+            .join(format!("dmlmc_runner_{}", std::process::id()));
+        let r = ExperimentRunner::new(&cfg()).quiet(true).out_dir(&tmp);
+        let arts = r.artifacts("unit").unwrap();
+        assert_eq!(arts.dir(), tmp.join("unit"));
+        assert_eq!(arts.run(), "unit");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn no_top_level_pub_fn_bypasses_the_runner() {
+        // The deny-list contract (also enforced by a CI grep): every
+        // experiment entry point lives on ExperimentRunner, so this
+        // module's top level exports types only.
+        let src = include_str!("experiments.rs");
+        let offenders: Vec<&str> =
+            src.lines().filter(|l| l.starts_with("pub fn ")).collect();
+        assert!(
+            offenders.is_empty(),
+            "top-level pub fns bypass ExperimentRunner: {offenders:?}"
+        );
     }
 }

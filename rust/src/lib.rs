@@ -72,6 +72,42 @@
 //! bench-exec`) that prices the executor's fixed cost on DMLMC's light
 //! level-0-only steps.
 //!
+//! ## Serving fleet
+//!
+//! One resident pool can serve **many** trainers:
+//! [`coordinator::FleetCoordinator`] multiplexes N independent sessions
+//! over a single `P`-worker pool, batching every running session's due
+//! chunk tasks into **one dispatch per fleet tick** (fair-share: each
+//! tick advances every running session by one SGD step) with
+//! backpressure when oversubscribed. Per-problem bit-exactness survives
+//! the sharing — each session's gradient is reduced from its own task
+//! group in fixed chunk order, so its whole trajectory is bit-identical
+//! to a solo run at every fleet size and worker count. Sessions are
+//! submitted as configured [`coordinator::TrainerBuilder`]s and observed
+//! through `submit` / `poll` / `tick` / `drain`:
+//!
+//! ```no_run
+//! use dmlmc::config::{Backend, ExperimentConfig};
+//! use dmlmc::coordinator::{FleetCoordinator, Method, TrainerBuilder};
+//!
+//! let mut cfg = ExperimentConfig::default_paper();
+//! cfg.runtime.backend = Backend::Native;
+//! let mut fleet = FleetCoordinator::new(4);
+//! let a = fleet.submit("bs", TrainerBuilder::new(&cfg).method(Method::Dmlmc)).unwrap();
+//! let b = fleet
+//!     .submit("heston", TrainerBuilder::new(&cfg).scenario("heston-uo-call"))
+//!     .unwrap();
+//! let runs = fleet.drain().unwrap(); // tick() until every session is Done
+//! assert_eq!(runs.len(), 2);
+//! let _ = (a, b, fleet.poll(a));
+//! ```
+//!
+//! `repro fleet-sweep` (`make bench-fleet`) sweeps fleet size x workers
+//! and writes aggregate throughput (steps/sec, problems/sec, pool
+//! utilization) to `BENCH_fleet.json`. Experiment entry points live on
+//! [`experiments::ExperimentRunner`], whose named runs write under a
+//! common `--out-dir` via [`metrics::RunArtifacts`].
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -112,5 +148,7 @@ pub mod testkit;
 pub mod util;
 
 pub use config::ExperimentConfig;
-pub use coordinator::{Method, Trainer};
+pub use coordinator::{FleetCoordinator, Method, Trainer, TrainerBuilder};
+pub use experiments::ExperimentRunner;
+pub use metrics::RunArtifacts;
 pub use scenarios::Scenario;

@@ -1,5 +1,10 @@
 //! `repro` — the leader binary: training runs, figure/table reproduction,
 //! validation and sweeps. See `repro --help`.
+//!
+//! Every subcommand drives [`ExperimentRunner`] and writes its outputs
+//! through the runner's named-run [`RunArtifacts`] directories under
+//! `--out-dir` (default `artifacts/`); bench JSONs keep a top-level
+//! alias (`./BENCH_*.json`) for CI and `make bench-*`.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -7,8 +12,7 @@ use std::process::ExitCode;
 use anyhow::{anyhow, Result};
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
-use dmlmc::experiments;
-use dmlmc::metrics::writer::{write_csv, write_jsonl_exec};
+use dmlmc::experiments::ExperimentRunner;
 use dmlmc::util::cli::{Args, Command, Opt};
 
 fn root_command() -> Command {
@@ -32,10 +36,14 @@ fn root_command() -> Command {
                 "pool worker threads (execution.workers): 0 = auto (one \
                  per core), 1 = single pooled worker, n = n workers; \
                  results are bit-identical for every value. For \
-                 parallel-sweep this is the comma-separated list of worker \
-                 counts to sweep",
+                 parallel-sweep and fleet-sweep this is the comma-separated \
+                 list of worker counts to sweep",
             ))
-            .opt(Opt::value("out-dir", "output directory"))
+            .opt(Opt::with_default(
+                "out-dir",
+                "root directory for named experiment runs",
+                "artifacts",
+            ))
             .opt(Opt::switch("quiet", "suppress progress output"))
     };
     Command::new("repro", "Delayed MLMC for SGD — paper reproduction driver")
@@ -93,6 +101,26 @@ fn root_command() -> Command {
                  default 64)",
             ),
         ))
+        .subcommand(common(
+            Command::new(
+                "fleet-sweep",
+                "serving-fleet throughput: one resident pool multiplexing N \
+                 DMLMC trainers, swept over fleet size x workers (emits \
+                 BENCH_fleet.json with aggregate steps/sec, problems/sec \
+                 and pool utilization per cell; defaults to 16 steps per \
+                 problem unless --steps is given)",
+            )
+            .opt(Opt::with_default(
+                "fleet-sizes",
+                "comma-separated fleet sizes (problems per cell)",
+                "1,2,4",
+            ))
+            .opt(Opt::with_default(
+                "scenarios",
+                "comma-separated scenario keys cycled over the fleet",
+                "bs-call,heston-uo-call",
+            )),
+        ))
         .subcommand(Command::new(
             "scenarios",
             "list the registered scenario keys",
@@ -106,22 +134,25 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     load_config_with(args, false)
 }
 
-/// `workers_list_ok`: only `parallel-sweep` accepts the comma-list form
-/// of `--workers` (and parses it itself); everywhere else a list is a
-/// user error and must not silently fall back to the default.
+/// `workers_list_ok`: only `parallel-sweep` and `fleet-sweep` accept the
+/// comma-list form of `--workers` (and parse it themselves); everywhere
+/// else a list is a user error and must not silently fall back to the
+/// default.
 fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConfig> {
-    // Whether the TOML itself pins `runtime.backend` (a config file that
-    // stays silent about the backend is not a pin). Costs a second parse
-    // of a sub-kilobyte file at startup; parse errors are left for
+    // Whether the TOML itself pins `runtime.backend` / `runtime.out_dir`
+    // (a config file that stays silent is not a pin). Costs a second
+    // parse of a sub-kilobyte file at startup; parse errors are left for
     // from_toml to report.
     let mut toml_pins_backend = false;
+    let mut toml_pins_out_dir = false;
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(Path::new(path))
                 .map_err(|e| anyhow!("{path}: {e}"))?;
-            toml_pins_backend = dmlmc::util::toml::TomlDoc::parse(&text)
-                .map(|doc| doc.get("runtime.backend").is_some())
-                .unwrap_or(false);
+            if let Ok(doc) = dmlmc::util::toml::TomlDoc::parse(&text) {
+                toml_pins_backend = doc.get("runtime.backend").is_some();
+                toml_pins_out_dir = doc.get("runtime.out_dir").is_some();
+            }
             ExperimentConfig::from_toml(&text).map_err(|e| anyhow!("{e}"))?
         }
         None => ExperimentConfig::default_paper(),
@@ -160,22 +191,46 @@ fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConf
         cfg.mlmc.d = v;
     }
     // `--workers` is a single count for training commands and a comma
-    // list for parallel-sweep (which parses the list itself).
+    // list for parallel-sweep / fleet-sweep (which parse the list
+    // themselves).
     if let Some(v) = args.get("workers") {
         if !v.contains(',') {
             cfg.execution.workers = args.parse_usize("workers")?.unwrap_or(0);
         } else if !workers_list_ok {
             return Err(anyhow!(
                 "--workers takes a single integer here (got `{v}`); the \
-                 comma-list form is only for `parallel-sweep`"
+                 comma-list form is only for `parallel-sweep` and \
+                 `fleet-sweep`"
             ));
         }
     }
+    // `--out-dir` defaults to `artifacts`; a TOML `runtime.out_dir` pin
+    // wins over that default (but not over an explicit non-default flag).
     if let Some(v) = args.get("out-dir") {
-        cfg.runtime.out_dir = PathBuf::from(v);
+        if v != "artifacts" || !toml_pins_out_dir {
+            cfg.runtime.out_dir = PathBuf::from(v);
+        }
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
+}
+
+/// The runner every subcommand drives: configured output root + quiet.
+fn runner_for(cfg: &ExperimentConfig, args: &Args) -> ExperimentRunner {
+    ExperimentRunner::new(cfg)
+        .out_dir(cfg.runtime.out_dir.clone())
+        .quiet(args.flag("quiet"))
+}
+
+/// Comma-separated positive-integer list (`--workers`, `--fleet-sizes`).
+fn parse_usize_list(raw: &str, what: &str) -> Result<Vec<usize>> {
+    raw.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad {what} `{s}`"))
+        })
+        .collect()
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -202,41 +257,26 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     }
-    let out = cfg.runtime.out_dir.join(format!(
-        "curve_{}_seed{}.csv",
-        method.name(),
-        seed
-    ));
-    write_csv(&out, &curve)?;
+    let runner = runner_for(&cfg, args);
+    let arts = runner.artifacts(&format!("train_{}_seed{seed}", method.name()))?;
+    let out = arts.write_curve_csv(&curve)?;
     // Manifest rows carry pool telemetry keyed by stable worker indices.
-    write_jsonl_exec(
-        &cfg.runtime.out_dir.join("runs.jsonl"),
-        &curve,
-        tr.exec_stats(),
-    )?;
+    arts.append_run_jsonl(&curve, tr.exec_stats())?;
     eprintln!("wrote {}", out.display());
     Ok(())
 }
 
 fn cmd_figure2(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let quiet = args.flag("quiet");
-    let results = experiments::figure2(&cfg, quiet)?;
-    std::fs::create_dir_all(&cfg.runtime.out_dir)?;
+    let runner = runner_for(&cfg, args);
+    let results = runner.figure2()?;
+    let arts = runner.artifacts("figure2")?;
     for (method, curves, agg) in &results {
         for curve in curves {
-            let path = cfg.runtime.out_dir.join(format!(
-                "curve_{}_seed{}.csv",
-                method.name(),
-                curve.seed
-            ));
-            write_csv(&path, curve)?;
+            arts.write_curve_csv(curve)?;
         }
-        let agg_path = cfg
-            .runtime
-            .out_dir
-            .join(format!("figure2_{}.csv", method.name()));
-        std::fs::write(&agg_path, agg.to_csv())?;
+        let agg_path =
+            arts.write_text(&format!("figure2_{}.csv", method.name()), &agg.to_csv())?;
         eprintln!("wrote {}", agg_path.display());
     }
     // Headline summary: cost to reach the worst method's best loss.
@@ -257,7 +297,8 @@ fn cmd_figure2(args: &Args) -> Result<()> {
 fn cmd_assumptions(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let snapshots = args.parse_usize("snapshots")?.unwrap_or(6);
-    let fig = experiments::figure1(&cfg, snapshots, args.flag("quiet"))?;
+    let runner = runner_for(&cfg, args);
+    let fig = runner.figure1(snapshots)?;
     println!("Figure 1 — assumption decay (levels 0..={}):", cfg.problem.lmax);
     println!(
         "{:<6} {:>16} {:>16} {:>16} {:>16}",
@@ -273,33 +314,36 @@ fn cmd_assumptions(args: &Args) -> Result<()> {
         fig.b_hat, fig.d_hat
     );
 
-    std::fs::create_dir_all(&cfg.runtime.out_dir)?;
     let mut csv = String::from("level,grad_norm_mean,grad_norm_std,smooth_mean,smooth_std\n");
     for l in 0..fig.grad_norms.per_level.len() {
         let (gm, gs) = fig.grad_norms.per_level[l];
         let (sm, ss) = fig.smoothness.per_level[l];
         csv.push_str(&format!("{l},{gm},{gs},{sm},{ss}\n"));
     }
-    let path = cfg.runtime.out_dir.join("figure1.csv");
-    std::fs::write(&path, csv)?;
+    let arts = runner.artifacts("assumptions")?;
+    let path = arts.write_text("figure1.csv", &csv)?;
     eprintln!("wrote {}", path.display());
     Ok(())
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let (theory, measured) = experiments::table1(&cfg)?;
-    println!("{}", experiments::render_table1(&theory, &measured));
+    let runner = runner_for(&cfg, args);
+    let (theory, measured) = runner.table1()?;
+    let table = ExperimentRunner::render_table1(&theory, &measured);
+    println!("{table}");
     println!(
         "predicted avg per-step depth (schedule sim): {:.2}",
-        experiments::predicted_avg_depth(&cfg, 1 << 12)
+        runner.predicted_avg_depth(1 << 12)
     );
+    let arts = runner.artifacts("table1")?;
+    arts.write_text("table1.txt", &table)?;
     Ok(())
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let (p0, bs) = experiments::validate_bs(&cfg)?;
+    let (p0, bs) = runner_for(&cfg, args).validate_bs()?;
     println!("learned p0        = {p0:.4}");
     println!("Black-Scholes     = {bs:.4}");
     println!("relative error    = {:.2}%", 100.0 * (p0 - bs).abs() / bs);
@@ -313,7 +357,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.trim().parse::<f64>().map_err(|_| anyhow!("bad d `{s}`")))
         .collect::<Result<_>>()?;
-    let rows = experiments::sweep_delay(&cfg, &ds)?;
+    let rows = runner_for(&cfg, args).sweep_delay(&ds)?;
     println!(
         "{:<6} {:>12} {:>14} {:>14} {:>12}",
         "d", "final loss", "std cost", "par cost", "avg depth"
@@ -349,41 +393,39 @@ fn cmd_scenario_sweep(args: &Args) -> Result<()> {
         "all" => dmlmc::scenarios::all_scenario_names(),
         list => list.split(',').map(|s| s.trim().to_string()).collect(),
     };
-    let rows = experiments::scenario_sweep(&cfg, &names, args.flag("quiet"))?;
-    println!("{}", experiments::render_scenario_table(&rows));
+    let runner = runner_for(&cfg, args);
+    let rows = runner.scenario_sweep(&names)?;
+    let table = ExperimentRunner::render_scenario_table(&rows);
+    println!("{table}");
+    runner
+        .artifacts("scenario-sweep")?
+        .write_text("scenario_sweep.txt", &table)?;
     Ok(())
+}
+
+/// Whether an explicit `train.steps` appears in the `--config` TOML (same
+/// pin-detection convention as `runtime.backend` in `load_config_with`:
+/// a config file silent about steps is not a pin).
+fn toml_pins_steps(args: &Args) -> bool {
+    args.get("config")
+        .and_then(|p| std::fs::read_to_string(p).ok())
+        .and_then(|t| dmlmc::util::toml::TomlDoc::parse(&t).ok())
+        .map(|doc| doc.get("train.steps").is_some())
+        .unwrap_or(false)
 }
 
 fn cmd_parallel_sweep(args: &Args) -> Result<()> {
     use dmlmc::util::json::{obj, Json};
     let mut cfg = load_config_with(args, true)?;
     // The paper-scale default (400 steps x 10 seeds) is a figure budget,
-    // not a sweep budget; default to a short horizon unless the step
-    // count is pinned by --steps or an explicit `train.steps` in the
-    // --config TOML (same pin-detection convention as runtime.backend in
-    // load_config: a config file silent about steps is not a pin).
-    if args.get("steps").is_none() {
-        let toml_pins_steps = args
-            .get("config")
-            .and_then(|p| std::fs::read_to_string(p).ok())
-            .and_then(|t| dmlmc::util::toml::TomlDoc::parse(&t).ok())
-            .map(|doc| doc.get("train.steps").is_some())
-            .unwrap_or(false);
-        if !toml_pins_steps {
-            cfg.train.steps = 48;
-        }
+    // not a sweep budget; default to a short horizon unless pinned.
+    if args.get("steps").is_none() && !toml_pins_steps(args) {
+        cfg.train.steps = 48;
     }
-    let workers: Vec<usize> = args
-        .get_or("workers", "1,2,4,8")
-        .split(',')
-        .map(|s| {
-            s.trim()
-                .parse::<usize>()
-                .map_err(|_| anyhow!("bad worker count `{s}`"))
-        })
-        .collect::<Result<_>>()?;
-    let cells = experiments::parallel_sweep(&cfg, &workers, args.flag("quiet"))?;
-    println!("{}", experiments::render_parallel_table(&cells));
+    let workers = parse_usize_list(args.get_or("workers", "1,2,4,8"), "worker count")?;
+    let runner = runner_for(&cfg, args);
+    let cells = runner.parallel_sweep(&workers)?;
+    println!("{}", ExperimentRunner::render_parallel_table(&cells));
 
     let rows: Vec<Json> = cells
         .iter()
@@ -405,10 +447,9 @@ fn cmd_parallel_sweep(args: &Args) -> Result<()> {
     // Resident-vs-scoped spawn-overhead comparison at P = 4 on the light
     // (level-0-only) DMLMC-style dispatch — the regime where per-step
     // executor overhead dominates and the resident pool's win shows.
-    let cmp =
-        experiments::exec_overhead_compare(&cfg, 4, cfg.train.steps.max(8))?;
+    let cmp = runner.exec_overhead_compare(4, cfg.train.steps.max(8))?;
     if !args.flag("quiet") {
-        eprint!("{}", experiments::render_exec_comparison(&cmp));
+        eprint!("{}", ExperimentRunner::render_exec_comparison(&cmp));
     }
     let doc = obj(vec![
         ("bench", Json::Str("parallel-sweep".to_string())),
@@ -448,10 +489,75 @@ fn cmd_parallel_sweep(args: &Args) -> Result<()> {
             ]),
         ),
     ]);
-    let path = "BENCH_parallel.json";
-    std::fs::write(path, format!("{doc}\n"))
-        .map_err(|e| anyhow!("could not write {path}: {e}"))?;
-    eprintln!("wrote {path}");
+    let path = runner
+        .artifacts("parallel-sweep")?
+        .write_bench_json("BENCH_parallel", &doc)?;
+    eprintln!("wrote {} (+ ./BENCH_parallel.json)", path.display());
+    Ok(())
+}
+
+fn cmd_fleet_sweep(args: &Args) -> Result<()> {
+    use dmlmc::util::json::{obj, Json};
+    let mut cfg = load_config_with(args, true)?;
+    // Like parallel-sweep: a short serving horizon by default.
+    if args.get("steps").is_none() && !toml_pins_steps(args) {
+        cfg.train.steps = 16;
+    }
+    let steps = cfg.train.steps;
+    let fleet_sizes =
+        parse_usize_list(args.get_or("fleet-sizes", "1,2,4"), "fleet size")?;
+    let workers = parse_usize_list(args.get_or("workers", "2"), "worker count")?;
+    let scenarios: Vec<String> = args
+        .get_or("scenarios", "bs-call,heston-uo-call")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let runner = runner_for(&cfg, args);
+    let cells = runner.fleet_sweep(&fleet_sizes, &workers, &scenarios, steps)?;
+    println!("{}", ExperimentRunner::render_fleet_table(&cells));
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("fleet_size", Json::Num(c.fleet_size as f64)),
+                ("workers", Json::Num(c.workers as f64)),
+                (
+                    "problems",
+                    Json::Arr(
+                        c.problems
+                            .iter()
+                            .map(|p| Json::Str(p.clone()))
+                            .collect(),
+                    ),
+                ),
+                ("steps_per_problem", Json::Num(c.steps_per_problem as f64)),
+                ("total_steps", Json::Num(c.total_steps as f64)),
+                ("ticks", Json::Num(c.ticks as f64)),
+                ("wall_s", Json::Num(c.wall_s)),
+                ("steps_per_sec", Json::Num(c.steps_per_sec)),
+                ("problems_per_sec", Json::Num(c.problems_per_sec)),
+                ("utilization", Json::Num(c.utilization)),
+                (
+                    "mean_step_makespan_s",
+                    Json::Num(c.mean_step_makespan_s),
+                ),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("fleet-sweep".to_string())),
+        (
+            "scenarios",
+            Json::Arr(scenarios.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        ("steps_per_problem", Json::Num(steps as f64)),
+        ("cells", Json::Arr(rows)),
+    ]);
+    let path = runner
+        .artifacts("fleet-sweep")?
+        .write_bench_json("BENCH_fleet", &doc)?;
+    eprintln!("wrote {} (+ ./BENCH_fleet.json)", path.display());
     Ok(())
 }
 
@@ -469,8 +575,8 @@ fn cmd_exec_bench(args: &Args) -> Result<()> {
         4
     };
     let steps = args.parse_usize("steps")?.unwrap_or(64);
-    let cmp = experiments::exec_overhead_compare(&cfg, workers, steps)?;
-    print!("{}", experiments::render_exec_comparison(&cmp));
+    let cmp = runner_for(&cfg, args).exec_overhead_compare(workers, steps)?;
+    print!("{}", ExperimentRunner::render_exec_comparison(&cmp));
     Ok(())
 }
 
@@ -515,6 +621,7 @@ fn main() -> ExitCode {
         "scenario-sweep" => cmd_scenario_sweep(&args),
         "parallel-sweep" => cmd_parallel_sweep(&args),
         "exec-bench" => cmd_exec_bench(&args),
+        "fleet-sweep" => cmd_fleet_sweep(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {

@@ -9,4 +9,4 @@ pub mod writer;
 pub use aggregate::aggregate_curves;
 pub use recorder::{CurvePoint, LearningCurve};
 pub use welford::Welford;
-pub use writer::{write_csv, write_jsonl, write_jsonl_exec};
+pub use writer::{write_csv, write_jsonl, write_jsonl_exec, RunArtifacts};

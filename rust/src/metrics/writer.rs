@@ -106,6 +106,84 @@ pub fn write_jsonl_exec(
     writeln!(w, "{summary}")
 }
 
+/// The single policy for WHERE experiment output lands: a named run
+/// directory `<out_dir>/<run>/` that every artifact of one experiment
+/// run shares. [`crate::experiments::ExperimentRunner`] hands one of
+/// these to each experiment — no experiment hand-rolls its own output
+/// path anymore.
+///
+/// Bench JSONs ([`Self::write_bench_json`]) are additionally aliased at
+/// the historical top-level location `./<stem>.json` (the path `make
+/// bench-*` and CI schema checks key on), so moving the canonical copy
+/// under the run directory broke nothing downstream.
+#[derive(Debug, Clone)]
+pub struct RunArtifacts {
+    dir: std::path::PathBuf,
+    run: String,
+}
+
+impl RunArtifacts {
+    /// Create (or reuse) the run directory `<out_dir>/<run>/`.
+    pub fn create(out_dir: &Path, run: &str) -> std::io::Result<RunArtifacts> {
+        let dir = out_dir.join(run);
+        fs::create_dir_all(&dir)?;
+        Ok(RunArtifacts { dir, run: run.to_string() })
+    }
+
+    /// The run's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The run's name.
+    pub fn run(&self) -> &str {
+        &self.run
+    }
+
+    /// A path inside the run directory.
+    pub fn path(&self, file: &str) -> std::path::PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Write a text artifact (tables, CSV strings); returns its path.
+    pub fn write_text(&self, file: &str, text: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = self.path(file);
+        fs::write(&path, text)?;
+        Ok(path)
+    }
+
+    /// Write one curve as `curve_<method>_seed<k>.csv` in the run dir.
+    pub fn write_curve_csv(&self, curve: &LearningCurve) -> std::io::Result<std::path::PathBuf> {
+        let path = self.path(&format!("curve_{}_seed{}.csv", curve.method, curve.seed));
+        write_csv(&path, curve)?;
+        Ok(path)
+    }
+
+    /// Append a run summary (plus optional execution telemetry) to the
+    /// run's `runs.jsonl`.
+    pub fn append_run_jsonl(
+        &self,
+        curve: &LearningCurve,
+        exec: Option<&ExecStats>,
+    ) -> std::io::Result<std::path::PathBuf> {
+        let path = self.path("runs.jsonl");
+        write_jsonl_exec(&path, curve, exec)?;
+        Ok(path)
+    }
+
+    /// Write a bench document as `<stem>.json` in the run dir AND at the
+    /// historical top-level alias `./<stem>.json` (what `make bench-*`
+    /// and the CI schema checks read). Returns the canonical (run-dir)
+    /// path.
+    pub fn write_bench_json(&self, stem: &str, doc: &Json) -> std::io::Result<std::path::PathBuf> {
+        let text = format!("{doc}\n");
+        let path = self.path(&format!("{stem}.json"));
+        fs::write(&path, &text)?;
+        fs::write(format!("{stem}.json"), &text)?;
+        Ok(path)
+    }
+}
+
 /// Read a CSV produced by [`write_csv`] back into a curve (used by the
 /// aggregation tooling and round-trip tests).
 pub fn read_csv(path: &Path) -> std::io::Result<LearningCurve> {
@@ -226,6 +304,7 @@ mod tests {
             ],
             makespan: Duration::from_millis(40),
             n_tasks: 4,
+            per_task: Vec::new(),
         });
         write_jsonl_exec(&path, &curve(), Some(&stats)).unwrap();
         let text = fs::read_to_string(&path).unwrap();
@@ -254,6 +333,33 @@ mod tests {
         let text = fs::read_to_string(&path).unwrap();
         let j2 = Json::parse(text.lines().nth(1).unwrap()).unwrap();
         assert_eq!(j2.get("exec"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn run_artifacts_share_one_directory_and_alias_bench_json() {
+        let out = tempdir();
+        let arts = RunArtifacts::create(&out, "smoke").unwrap();
+        assert_eq!(arts.run(), "smoke");
+        assert_eq!(arts.dir(), out.join("smoke"));
+        // text + curve + jsonl all land inside the run directory
+        let t = arts.write_text("table.txt", "hello\n").unwrap();
+        assert_eq!(fs::read_to_string(&t).unwrap(), "hello\n");
+        let c = arts.write_curve_csv(&curve()).unwrap();
+        assert_eq!(c, arts.path("curve_mlmc_seed3.csv"));
+        assert_eq!(read_csv(&c).unwrap().points, curve().points);
+        let j = arts.append_run_jsonl(&curve(), None).unwrap();
+        assert_eq!(j, arts.path("runs.jsonl"));
+        assert!(Json::parse(fs::read_to_string(&j).unwrap().trim()).is_ok());
+        // bench json: canonical copy in the run dir, alias at the
+        // historical top-level path, identical bytes
+        let doc = obj(vec![("bench", Json::Str("unit".into()))]);
+        let b = arts.write_bench_json("BENCH_unit_test", &doc).unwrap();
+        assert_eq!(b, arts.path("BENCH_unit_test.json"));
+        let canonical = fs::read_to_string(&b).unwrap();
+        let alias = fs::read_to_string("BENCH_unit_test.json").unwrap();
+        assert_eq!(canonical, alias);
+        assert!(canonical.contains("\"bench\""));
+        let _ = fs::remove_file("BENCH_unit_test.json");
     }
 
     #[test]

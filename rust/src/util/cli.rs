@@ -65,6 +65,46 @@
 //! repro parallel-sweep --workers 1,2,4,8 --steps 48 --n-effective 256
 //! repro exec-bench --workers 4 --steps 64
 //! ```
+//!
+//! # Serving fleet (`repro fleet-sweep`)
+//!
+//! One resident pool can serve many trainers at once
+//! ([`crate::coordinator::FleetCoordinator`]): sessions are submitted as
+//! configured [`crate::coordinator::TrainerBuilder`]s, every fleet tick
+//! batches all running sessions' chunk tasks into a single pool dispatch
+//! (fair-share, one SGD step per session per tick), and each session's
+//! gradient stays **bit-identical to its solo run** because its task
+//! group reduces independently in fixed chunk order. In code:
+//!
+//! ```no_run
+//! use dmlmc::config::{Backend, ExperimentConfig};
+//! use dmlmc::coordinator::{FleetCoordinator, TrainerBuilder};
+//!
+//! let mut cfg = ExperimentConfig::default_paper();
+//! cfg.runtime.backend = Backend::Native;
+//! let mut fleet = FleetCoordinator::new(2);
+//! let id = fleet.submit("bs", TrainerBuilder::new(&cfg)).unwrap();
+//! while !fleet.poll(id).unwrap().is_done() {
+//!     fleet.tick().unwrap();
+//! }
+//! let runs = fleet.drain().unwrap();
+//! assert_eq!(runs[0].name, "bs");
+//! ```
+//!
+//! `repro fleet-sweep` sweeps fleet size (`--fleet-sizes`, default
+//! `1,2,4`; sessions cycle over `--scenarios`, default
+//! `bs-call,heston-uo-call`) against `--workers` (comma list, default
+//! `2`; like `parallel-sweep`, the list form is accepted here), prints
+//! aggregate throughput per cell and writes `BENCH_fleet.json`
+//! (steps/sec, problems/sec, pool utilization, mean per-step makespan).
+//! Named experiment runs — this one included — land under
+//! `--out-dir` (default `artifacts/`) in per-run directories managed by
+//! [`crate::metrics::RunArtifacts`]; bench JSONs additionally keep a
+//! top-level `./BENCH_*.json` alias for CI and `make bench-*`. Example:
+//!
+//! ```text
+//! repro fleet-sweep --fleet-sizes 1,2,4 --workers 2,4 --steps 16
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;

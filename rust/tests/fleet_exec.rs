@@ -1,0 +1,189 @@
+//! Serving-fleet bit-exactness: a [`FleetCoordinator`] multiplexing N
+//! trainers over one resident pool must leave every problem's trajectory
+//! **bit-identical to its solo run** — at every fleet size, every worker
+//! count, for mixed scenarios and mixed methods, and under injected
+//! chaos delays. The counter-based RNG makes each chunk a pure function
+//! of its `(step, level, chunk)` address and each session's group
+//! reduces in fixed chunk order, so sharing the pool must not move a
+//! single bit.
+
+use dmlmc::config::{Backend, ExperimentConfig};
+use dmlmc::coordinator::{FleetCoordinator, FleetRun, Method, TrainerBuilder};
+use dmlmc::metrics::LearningCurve;
+
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.runtime.backend = Backend::Native;
+    cfg.train.steps = 4;
+    cfg.train.eval_every = 2;
+    cfg.mlmc.n_effective = 64;
+    cfg
+}
+
+/// The two scenarios fleet sessions cycle over: the default engine and
+/// the 2-factor stochastic-vol barrier case (distinct dynamics, payoff
+/// and dimension — if cross-problem batching leaked state anywhere,
+/// these would diverge differently).
+const SCENARIOS: [&str; 2] = ["bs-call", "heston-uo-call"];
+
+fn builder(scenario: &str, method: Method, seed: u64) -> TrainerBuilder {
+    TrainerBuilder::new(&cfg())
+        .method(method)
+        .seed(seed)
+        .scenario(scenario)
+}
+
+/// Solo reference trajectory: same builder, run start-to-finish on its
+/// own (with its own local pool).
+fn solo(scenario: &str, method: Method, seed: u64) -> (LearningCurve, Vec<f32>) {
+    let mut tr = builder(scenario, method, seed).build().unwrap();
+    let curve = tr.run().unwrap();
+    let params = tr.params.clone();
+    (curve, params)
+}
+
+fn assert_curves_identical(ctx: &str, fleet: &LearningCurve, solo: &LearningCurve) {
+    assert_eq!(fleet.method, solo.method, "{ctx}: method");
+    assert_eq!(fleet.seed, solo.seed, "{ctx}: seed");
+    assert_eq!(fleet.points.len(), solo.points.len(), "{ctx}: eval grid");
+    for (a, b) in fleet.points.iter().zip(&solo.points) {
+        assert_eq!(a.step, b.step, "{ctx}: eval step");
+        // Bitwise, not approximate: the fleet reduction order is pinned.
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "{ctx}: loss at step {} ({} vs {})",
+            a.step,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(a.std_cost.to_bits(), b.std_cost.to_bits(), "{ctx}: std cost");
+        assert_eq!(a.par_cost.to_bits(), b.par_cost.to_bits(), "{ctx}: par cost");
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "{ctx}: grad norm at step {}",
+            a.step
+        );
+    }
+}
+
+fn assert_run_matches_solo(ctx: &str, run: &FleetRun) {
+    let scenario = SCENARIOS[run.seed as usize % SCENARIOS.len()];
+    let (ref_curve, ref_params) = solo(scenario, run.method, run.seed);
+    assert_curves_identical(ctx, &run.curve, &ref_curve);
+    assert_eq!(
+        run.final_params.len(),
+        ref_params.len(),
+        "{ctx}: param count"
+    );
+    for (i, (a, b)) in run.final_params.iter().zip(&ref_params).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: param {i} differs ({a} vs {b})"
+        );
+    }
+}
+
+/// Submit `fleet_size` DMLMC sessions cycling over [`SCENARIOS`], seed
+/// `i`, and drain.
+fn run_fleet(fleet: &mut FleetCoordinator, fleet_size: usize) -> Vec<FleetRun> {
+    for i in 0..fleet_size {
+        let scenario = SCENARIOS[i % SCENARIOS.len()];
+        fleet
+            .submit(
+                &format!("{scenario}#{i}"),
+                builder(scenario, Method::Dmlmc, i as u64),
+            )
+            .unwrap();
+    }
+    let runs = fleet.drain().unwrap();
+    assert_eq!(runs.len(), fleet_size);
+    runs
+}
+
+#[test]
+fn every_fleet_size_and_worker_count_is_bit_identical_to_solo() {
+    // The ISSUE's acceptance grid: fleet sizes {1, 2, 4} x workers
+    // {1, 4}, mixed bs-call + heston-uo-call sessions throughout.
+    for fleet_size in [1usize, 2, 4] {
+        for workers in [1usize, 4] {
+            let mut fleet = FleetCoordinator::new(workers);
+            let runs = run_fleet(&mut fleet, fleet_size);
+            assert_eq!(fleet.ticks(), cfg().train.steps, "fair-share: one step/tick");
+            for run in &runs {
+                let ctx = format!(
+                    "fleet={fleet_size} workers={workers} session={}",
+                    run.name
+                );
+                assert_run_matches_solo(&ctx, run);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_delays_do_not_move_a_bit() {
+    // Random per-task stalls reorder completion arbitrarily; the fixed
+    // chunk-order reduction must make that invisible in the numbers.
+    for chaos_seed in [0xA5u64, 0x5A, 0x77] {
+        let mut fleet = FleetCoordinator::new(4);
+        fleet.set_chaos_delays(chaos_seed, 400);
+        let runs = run_fleet(&mut fleet, 4);
+        for run in &runs {
+            let ctx = format!("chaos_seed={chaos_seed:#x} session={}", run.name);
+            assert_run_matches_solo(&ctx, run);
+        }
+    }
+}
+
+#[test]
+fn mixed_method_fleet_matches_each_solo() {
+    // Naive (one finest-grid group) and MLMC/DMLMC (one group per due
+    // level) sessions batched into the same dispatches: per-problem
+    // slices must still reduce exactly as their solo counterparts.
+    let mut fleet = FleetCoordinator::new(4);
+    let methods = [Method::Naive, Method::Mlmc, Method::Dmlmc];
+    for (i, method) in methods.iter().enumerate() {
+        let scenario = SCENARIOS[i % SCENARIOS.len()];
+        fleet
+            .submit(
+                &format!("{}-{}", method.name(), scenario),
+                builder(scenario, *method, i as u64),
+            )
+            .unwrap();
+    }
+    let runs = fleet.drain().unwrap();
+    assert_eq!(runs.len(), methods.len());
+    for run in &runs {
+        assert_run_matches_solo(&format!("mixed session={}", run.name), run);
+    }
+}
+
+#[test]
+fn fleet_reports_slice_per_problem_work() {
+    // Telemetry sanity on the shared dispatches: each session gets one
+    // report per step, reports only ever cover that session's groups,
+    // and a 2-session fleet's per-step task counts sum to the tick's.
+    let mut fleet = FleetCoordinator::new(2);
+    let runs = run_fleet(&mut fleet, 2);
+    let steps = cfg().train.steps;
+    for run in &runs {
+        assert_eq!(run.reports.len(), steps, "one report per step");
+        for rep in &run.reports {
+            assert!(rep.n_tasks > 0, "a step always dispatches work");
+            assert_eq!(
+                rep.per_task.len(),
+                rep.n_tasks,
+                "per-task records cover the slice"
+            );
+        }
+    }
+    let stats = fleet.exec_stats();
+    let sliced: usize = runs
+        .iter()
+        .flat_map(|r| r.reports.iter().map(|rep| rep.n_tasks))
+        .sum();
+    assert_eq!(sliced, stats.tasks, "slices partition the shared dispatches");
+}

@@ -6,7 +6,7 @@ mod common;
 
 use dmlmc::config::{Backend, ExperimentConfig};
 use dmlmc::coordinator::{Method, Trainer};
-use dmlmc::experiments;
+use dmlmc::experiments::ExperimentRunner;
 
 fn small_cfg(backend: Backend) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::smoke();
@@ -92,7 +92,7 @@ fn xla_and_native_trajectories_agree() {
 fn figure2_native_smoke_produces_ordered_parallel_costs() {
     let mut cfg = small_cfg(Backend::Native);
     cfg.train.n_seeds = 2;
-    let results = experiments::figure2(&cfg, true).unwrap();
+    let results = ExperimentRunner::new(&cfg).quiet(true).figure2().unwrap();
     let get = |m: Method| {
         results
             .iter()
@@ -107,13 +107,13 @@ fn figure2_native_smoke_produces_ordered_parallel_costs() {
 #[test]
 fn validate_bs_converges_roughly() {
     // Martingale GBM (mu = 0): the optimal p0 is exactly the BS price
-    // regardless of hedge quality (see experiments::validate_bs docs).
+    // regardless of hedge quality (see ExperimentRunner::validate_bs docs).
     let mut cfg = small_cfg(Backend::Native);
     cfg.train.steps = 300;
     cfg.train.eval_every = 300;
     cfg.train.lr = 0.1;
     cfg.mlmc.n_effective = 128;
-    let (p0, bs) = experiments::validate_bs(&cfg).unwrap();
+    let (p0, bs) = ExperimentRunner::new(&cfg).quiet(true).validate_bs().unwrap();
     assert!(bs > 1.0 && bs < 1.3, "BS anchor sanity: {bs}");
     assert!(
         (p0 - bs).abs() / bs < 0.15,
@@ -126,7 +126,7 @@ fn figure1_native_fits_positive_decay_rates() {
     let mut cfg = small_cfg(Backend::Native);
     cfg.train.steps = 6;
     cfg.problem.lmax = 4; // keep runtime small; slopes only need 5 levels
-    let fig = experiments::figure1(&cfg, 3, true).unwrap();
+    let fig = ExperimentRunner::new(&cfg).quiet(true).figure1(3).unwrap();
     assert!(
         fig.b_hat > 0.5,
         "variance decay rate should be clearly positive: {}",

@@ -340,8 +340,10 @@ fn parallel_sweep_end_to_end_smoke() {
     cfg.train.steps = 4;
     cfg.train.eval_every = 4;
     cfg.mlmc.n_effective = 32;
-    let cells =
-        dmlmc::experiments::parallel_sweep(&cfg, &[2], true).unwrap();
+    let cells = dmlmc::experiments::ExperimentRunner::new(&cfg)
+        .quiet(true)
+        .parallel_sweep(&[2])
+        .unwrap();
     assert_eq!(cells.len(), 3); // one P, three methods
     for cell in &cells {
         assert_eq!(cell.workers, 2);
@@ -371,7 +373,10 @@ fn exec_overhead_compare_smoke() {
     // accounting are.
     let mut cfg = ExperimentConfig::smoke();
     cfg.mlmc.n_effective = 64;
-    let cmp = dmlmc::experiments::exec_overhead_compare(&cfg, 2, 3).unwrap();
+    let cmp = dmlmc::experiments::ExperimentRunner::new(&cfg)
+        .quiet(true)
+        .exec_overhead_compare(2, 3)
+        .unwrap();
     assert_eq!(cmp.workers, 2);
     assert_eq!(cmp.steps, 3);
     assert!(cmp.resident_overhead_mean_s >= 0.0);
