@@ -12,7 +12,7 @@
 ARTIFACTS_DIR := rust/artifacts
 
 .PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec \
-	bench-fleet clean
+	bench-fleet trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -47,6 +47,13 @@ bench-exec:
 # `repro fleet-sweep --help`).
 bench-fleet:
 	cd rust && cargo run --release --bin repro -- fleet-sweep --quiet
+
+# Overhead-bounded tracing bench: the same DMLMC training traced and
+# untraced (bit-identical parameters asserted), exporting trace.json
+# (Perfetto-loadable) + metrics.prom and emitting rust/BENCH_obs.json
+# (see `repro trace --help`).
+trace:
+	cd rust && cargo run --release --bin repro -- trace --quiet
 
 clean:
 	rm -rf $(ARTIFACTS_DIR)

@@ -124,6 +124,31 @@ impl ExecutionConfig {
     }
 }
 
+/// Observability settings ([`crate::obs`]): span tracing + metrics.
+/// Off by default — the execution path records exactly the telemetry it
+/// always did unless tracing is enabled (`--trace` on the CLI, or
+/// `[observability] trace = true` in TOML). Enabling tracing never
+/// changes a gradient (pinned bitwise in `tests/obs_trace.rs`);
+/// `repro trace` measures the makespan overhead it does cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Record spans + metrics and write `trace.json` / `metrics.prom`
+    /// into the run directory.
+    pub trace: bool,
+    /// Per-track span ring capacity; older spans are evicted (and
+    /// counted as dropped) beyond it.
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: false,
+            ring_capacity: crate::obs::DEFAULT_RING_CAPACITY,
+        }
+    }
+}
+
 /// Runtime / IO settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -150,6 +175,7 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub runtime: RuntimeConfig,
     pub execution: ExecutionConfig,
+    pub observability: ObsConfig,
     /// Scenario registry key (`scenario.name` in TOML, `--scenario` on
     /// the CLI). The default `"bs-call"` is the seed behavior; anything
     /// else requires the native backend.
@@ -164,6 +190,7 @@ impl Default for ExperimentConfig {
             train: TrainConfig::default(),
             runtime: RuntimeConfig::default(),
             execution: ExecutionConfig::default(),
+            observability: ObsConfig::default(),
             scenario: DEFAULT_SCENARIO.to_string(),
         }
     }
@@ -286,6 +313,19 @@ impl ExperimentConfig {
             cfg.execution.workers = v;
         }
 
+        // [observability]
+        if let Some(v) = doc.get("observability.trace").and_then(|v| v.as_bool()) {
+            cfg.observability.trace = v;
+        }
+        if let Some(v) = getu("observability.ring_capacity") {
+            if v == 0 {
+                return Err(TomlError(
+                    "observability.ring_capacity must be positive".into(),
+                ));
+            }
+            cfg.observability.ring_capacity = v;
+        }
+
         // [runtime]
         if let Some(s) = gets("runtime.backend") {
             cfg.runtime.backend = Backend::parse(s)
@@ -373,6 +413,8 @@ const KNOWN_KEYS: &[&str] = &[
     "train.dmlmc_warmup",
     "scenario.name",
     "execution.workers",
+    "observability.trace",
+    "observability.ring_capacity",
     "runtime.backend",
     "runtime.artifacts_dir",
     "runtime.out_dir",
@@ -496,6 +538,30 @@ backend = "native"
 
         // typo'd key still rejected
         assert!(ExperimentConfig::from_toml("[execution]\nworkerz = 2").is_err());
+    }
+
+    #[test]
+    fn observability_defaults_off_and_parses() {
+        let cfg = ExperimentConfig::default();
+        assert!(!cfg.observability.trace);
+        assert_eq!(
+            cfg.observability.ring_capacity,
+            crate::obs::DEFAULT_RING_CAPACITY
+        );
+
+        let cfg = ExperimentConfig::from_toml(
+            "[observability]\ntrace = true\nring_capacity = 128",
+        )
+        .unwrap();
+        assert!(cfg.observability.trace);
+        assert_eq!(cfg.observability.ring_capacity, 128);
+
+        assert!(
+            ExperimentConfig::from_toml("[observability]\nring_capacity = 0")
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[observability]\ntracing = true")
+            .is_err());
     }
 
     #[test]

@@ -61,6 +61,7 @@
 
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -70,6 +71,7 @@ use super::trainer::{Trainer, TrainerBuilder};
 use crate::exec::{ChunkTask, ExecStats, StepExecReport, WorkerPool};
 use crate::hedging::Problem;
 use crate::metrics::{CurvePoint, LearningCurve};
+use crate::obs::{GroupMeta, Recorder};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::SharedBackend;
 
@@ -170,6 +172,9 @@ struct Session {
     curve: LearningCurve,
     reports: Vec<StepExecReport>,
     state: SessionState,
+    /// Recorder-epoch offset at which the session was admitted — `Some`
+    /// only under tracing; closes the `session` span at `Done`.
+    admitted_at: Option<Duration>,
 }
 
 /// The serving fleet: one resident [`WorkerPool`] shared by N trainers.
@@ -181,6 +186,10 @@ pub struct FleetCoordinator {
     max_active: usize,
     max_pending: usize,
     ticks: usize,
+    /// Span recorder + metrics registry — `Some` only after
+    /// [`enable_tracing`](Self::enable_tracing). Ingestion happens
+    /// coordinator-side after each multiplexed dispatch returns.
+    recorder: Option<Recorder>,
 }
 
 impl FleetCoordinator {
@@ -203,7 +212,32 @@ impl FleetCoordinator {
             max_active: max_active.max(1),
             max_pending: max_pending.max(1),
             ticks: 0,
+            recorder: None,
         }
+    }
+
+    /// Enable span tracing: subsequent ticks record `tick`, `dispatch`
+    /// and `session` spans plus per-task spans on the shared pool's
+    /// worker tracks, each attributed to its owning session. Idempotent;
+    /// retrieve the trace with [`take_recorder`](Self::take_recorder).
+    pub fn enable_tracing(&mut self) {
+        if self.recorder.is_none() {
+            let mut rec = Recorder::new(self.pool.workers());
+            rec.metrics_mut()
+                .set_gauge("dmlmc_pool_workers", self.pool.workers() as f64);
+            self.recorder = Some(rec);
+        }
+    }
+
+    /// The span recorder — `Some` only after
+    /// [`enable_tracing`](Self::enable_tracing).
+    pub fn recorder(&self) -> Option<&Recorder> {
+        self.recorder.as_ref()
+    }
+
+    /// Detach the recorder for export; subsequent ticks record nothing.
+    pub fn take_recorder(&mut self) -> Option<Recorder> {
+        self.recorder.take()
     }
 
     /// The shared pool's worker count.
@@ -244,6 +278,9 @@ impl FleetCoordinator {
     pub fn submit(&mut self, name: &str, builder: TrainerBuilder) -> Result<SessionId> {
         let pending = self.pending_sessions();
         if pending >= self.max_pending {
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.metrics_mut().inc("dmlmc_sessions_rejected_total", 1);
+            }
             bail!(
                 "fleet oversubscribed: {pending} sessions queued/running >= \
                  max_pending {}; drain (or poll to completion) before \
@@ -275,6 +312,7 @@ impl FleetCoordinator {
             curve,
             reports: Vec::new(),
             state: SessionState::Queued,
+            admitted_at: None,
         });
         Ok(id)
     }
@@ -295,6 +333,7 @@ impl FleetCoordinator {
     /// `max_active` slot free; each admission records the step-0 eval
     /// point, exactly like [`Trainer::run`]'s preamble.
     fn admit(&mut self) -> Result<()> {
+        let now = self.recorder.as_ref().map(|r| r.now());
         let mut running = self
             .sessions
             .iter()
@@ -316,11 +355,25 @@ impl FleetCoordinator {
                 par_cost: 0.0,
                 grad_norm: 0.0,
             });
+            let sid = s.id.0 as f64;
             if s.steps == 0 {
                 s.state = SessionState::Done;
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.metrics_mut().inc("dmlmc_sessions_admitted_total", 1);
+                    rec.record_span(
+                        "session",
+                        now.unwrap_or_default(),
+                        Duration::ZERO,
+                        vec![("session", sid), ("steps", 0.0)],
+                    );
+                }
                 continue;
             }
             s.state = SessionState::Running;
+            s.admitted_at = now;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.metrics_mut().inc("dmlmc_sessions_admitted_total", 1);
+            }
             running += 1;
         }
         Ok(())
@@ -335,12 +388,14 @@ impl FleetCoordinator {
     /// On error (a failing chunk task) no session is advanced.
     pub fn tick(&mut self) -> Result<usize> {
         self.admit()?;
+        let tick_start = self.recorder.as_ref().map(|r| r.now());
 
         // Plan: shard every running session's due work, rebasing group
         // indices so the multiplexed dispatch reduces each problem's
         // groups independently (the bit-exactness invariant).
         let mut tasks: Vec<ChunkTask> = Vec::new();
         let mut ctxs: Vec<GroupCtx> = Vec::new();
+        let mut metas: Vec<GroupMeta> = Vec::new();
         let mut plans: Vec<Plan> = Vec::new();
         for (idx, s) in self.sessions.iter().enumerate() {
             if s.state != SessionState::Running {
@@ -376,6 +431,10 @@ impl FleetCoordinator {
                             dt: problem.dt(problem.lmax),
                         },
                     });
+                    metas.push(GroupMeta {
+                        level: problem.lmax,
+                        session: Some(s.id.0 as u64),
+                    });
                     plans.push(Plan { sess: idx, groups: base..base + 1, jobs: None });
                 }
                 Method::Mlmc | Method::Dmlmc => {
@@ -385,7 +444,7 @@ impl FleetCoordinator {
                         task.group += base;
                     }
                     tasks.extend(local);
-                    for _ in &jobs {
+                    for job in &jobs {
                         ctxs.push(GroupCtx {
                             backend: s.backend.clone(),
                             problem,
@@ -393,6 +452,10 @@ impl FleetCoordinator {
                             step: t,
                             params: params.clone(),
                             kind: GroupKind::Coupled,
+                        });
+                        metas.push(GroupMeta {
+                            level: job.level,
+                            session: Some(s.id.0 as u64),
                         });
                     }
                     plans.push(Plan {
@@ -439,6 +502,9 @@ impl FleetCoordinator {
                     }
                 }
             })?;
+        if let (Some(rec), Some(start)) = (self.recorder.as_mut(), tick_start) {
+            rec.ingest_dispatch(&report, start, &metas);
+        }
         let mut reduced: Vec<Option<(f64, Vec<f32>)>> =
             reduced.into_iter().map(Some).collect();
 
@@ -494,7 +560,30 @@ impl FleetCoordinator {
             }
             if next >= s.steps {
                 s.state = SessionState::Done;
+                let sid = s.id.0 as f64;
+                let total = s.steps as f64;
+                let admitted = s.admitted_at.take();
+                if let Some(rec) = self.recorder.as_mut() {
+                    // Session span: admission to completion, closed now.
+                    let start = admitted.unwrap_or_default();
+                    let dur = rec.now().saturating_sub(start);
+                    rec.record_span(
+                        "session",
+                        start,
+                        dur,
+                        vec![("session", sid), ("steps", total)],
+                    );
+                }
             }
+        }
+        let tick_idx = self.ticks as f64;
+        if let (Some(rec), Some(start)) = (self.recorder.as_mut(), tick_start) {
+            rec.metrics_mut().inc("dmlmc_ticks_total", 1);
+            rec.record(
+                "tick",
+                start,
+                vec![("tick", tick_idx), ("sessions", stepped as f64)],
+            );
         }
         self.ticks += 1;
         Ok(stepped)
@@ -636,6 +725,65 @@ mod tests {
         let runs = fleet.drain().unwrap();
         assert_eq!(runs.len(), 2);
         assert_eq!(runs[1].curve.points.first().unwrap().step, 0);
+    }
+
+    #[test]
+    fn traced_fleet_records_tick_and_session_spans() {
+        let cfg = cfg();
+        let mut fleet = FleetCoordinator::with_limits(2, 1, 2);
+        fleet.enable_tracing();
+        fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(1))
+            .unwrap();
+        fleet
+            .submit("b", TrainerBuilder::new(&cfg).method(Method::Naive).seed(2))
+            .unwrap();
+        let err = fleet
+            .submit("c", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("oversubscribed"));
+        let runs = fleet.drain().unwrap();
+        assert_eq!(runs.len(), 2);
+        let ticks = fleet.ticks();
+        let rec = fleet.take_recorder().unwrap();
+        assert_eq!(rec.metrics().counter("dmlmc_sessions_admitted_total"), 2);
+        assert_eq!(rec.metrics().counter("dmlmc_sessions_rejected_total"), 1);
+        assert_eq!(rec.metrics().counter("dmlmc_ticks_total") as usize, ticks);
+        let names: Vec<&str> =
+            rec.coordinator_spans().iter().map(|s| s.name).collect();
+        // max_active = 1: a runs ticks 0..4, b ticks 4..8 — serial.
+        assert_eq!(names.iter().filter(|n| **n == "tick").count(), 8);
+        assert_eq!(names.iter().filter(|n| **n == "dispatch").count(), 8);
+        assert_eq!(names.iter().filter(|n| **n == "session").count(), 2);
+        // task spans carry their owning session's id
+        let attributed = (0..rec.workers()).any(|w| {
+            rec.worker_spans(w)
+                .iter()
+                .any(|s| s.args.iter().any(|&(k, _)| k == "session"))
+        });
+        assert!(attributed, "no task span attributed to a session");
+    }
+
+    #[test]
+    fn tracing_leaves_fleet_trajectories_bitwise_unchanged() {
+        let cfg = cfg();
+        let run = |trace: bool| {
+            let mut fleet = FleetCoordinator::new(3);
+            if trace {
+                fleet.enable_tracing();
+            }
+            fleet
+                .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(1))
+                .unwrap();
+            fleet.drain().unwrap().remove(0)
+        };
+        let plain = run(false);
+        let traced = run(true);
+        assert_eq!(plain.final_params, traced.final_params);
+        for (p, q) in plain.curve.points.iter().zip(&traced.curve.points) {
+            assert_eq!(p.loss, q.loss);
+            assert_eq!(p.grad_norm, q.grad_norm);
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!    learning-curve y-axis of Figure 2).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -26,6 +27,7 @@ use crate::exec::{ChunkTask, ExecStats, WorkerPool};
 use crate::metrics::{CurvePoint, LearningCurve};
 use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
 use crate::mlmc::LevelAllocation;
+use crate::obs::{GroupMeta, Recorder};
 use crate::optim::{self, Optimizer};
 use crate::parallel::{CostModel, StepCost};
 use crate::rng::{brownian::Purpose, BrownianSource};
@@ -78,6 +80,11 @@ pub struct Trainer {
     /// always dispatch sequentially. The pool's worker threads are
     /// spawned once here and live until the trainer drops.
     pool: Option<WorkerPool>,
+    /// Span recorder + metrics registry — `Some` only when tracing is
+    /// enabled ([`crate::config::ObsConfig::trace`]). All ingestion is
+    /// coordinator-side, after a dispatch returns: the worker hot path
+    /// never sees this field.
+    recorder: Option<Recorder>,
     pub params: Vec<f32>,
     cumulative: StepCost,
     steps_done: u64,
@@ -178,6 +185,14 @@ impl TrainerBuilder {
         self
     }
 
+    /// Enable span tracing (equivalent to `--trace` or
+    /// `[observability] trace = true`): the built trainer owns a
+    /// [`Recorder`] and ingests every pooled dispatch into it.
+    pub fn trace(mut self, enabled: bool) -> Self {
+        self.cfg.observability.trace = enabled;
+        self
+    }
+
     /// Validate and build. Errors on an invalid config, an unknown
     /// optimizer/scenario, a non-default scenario pinned to the XLA
     /// backend, or an engine/backend parameter-count mismatch.
@@ -258,6 +273,15 @@ impl TrainerBuilder {
             None
         };
         let cost_model = CostModel::new(cfg.mlmc.c);
+        let recorder = if cfg.observability.trace {
+            let workers = pool.as_ref().map(|p| p.workers()).unwrap_or(0);
+            let mut rec =
+                Recorder::with_capacity(workers, cfg.observability.ring_capacity);
+            rec.metrics_mut().set_gauge("dmlmc_pool_workers", workers as f64);
+            Some(rec)
+        } else {
+            None
+        };
 
         Ok(Trainer {
             cfg,
@@ -271,6 +295,7 @@ impl TrainerBuilder {
             src: BrownianSource::new(seed),
             cost_model,
             pool,
+            recorder,
             backend,
             params,
             cumulative: StepCost::default(),
@@ -324,18 +349,21 @@ impl Trainer {
     /// the same apply half after its own multiplexed dispatch, so solo
     /// and fleet execution share one numeric path by construction.
     pub fn step(&mut self, t: u64) -> Result<(StepCost, f64)> {
+        let step_start = self.recorder.as_ref().map(|r| r.now());
         match self.method {
             Method::Naive => {
                 let (loss_est, grad) = self.naive_gradient(t)?;
                 let _ = loss_est; // estimator value; eval uses held-out loss
-                Ok(self.apply_naive_result(t, grad))
+                let out = self.apply_naive_result(t, grad);
+                self.record_step_span(t, step_start);
+                Ok(out)
             }
             Method::Mlmc | Method::Dmlmc => {
                 let jobs = self.jobs_for_step(t);
-                let results = if let (Some(shared), Some(pool)) =
+                let (results, report) = if let (Some(shared), Some(pool)) =
                     (self.backend.shared(), self.pool.as_mut())
                 {
-                    let (results, _report) = run_jobs_pool_with_report(
+                    let (results, report) = run_jobs_pool_with_report(
                         shared,
                         &self.src,
                         t,
@@ -343,18 +371,43 @@ impl Trainer {
                         &jobs,
                         pool,
                     )?;
-                    results
+                    (results, Some(report))
                 } else {
-                    run_jobs(
+                    let results = run_jobs(
                         self.backend.as_dyn(),
                         &self.src,
                         t,
                         &self.params,
                         &jobs,
-                    )?
+                    )?;
+                    (results, None)
                 };
-                Ok(self.apply_level_results(t, results))
+                if let (Some(rec), Some(report)) =
+                    (self.recorder.as_mut(), report.as_ref())
+                {
+                    let groups: Vec<GroupMeta> = jobs
+                        .iter()
+                        .map(|j| GroupMeta { level: j.level, session: None })
+                        .collect();
+                    rec.ingest_dispatch(
+                        report,
+                        step_start.unwrap_or_default(),
+                        &groups,
+                    );
+                }
+                let out = self.apply_level_results(t, results);
+                self.record_step_span(t, step_start);
+                Ok(out)
             }
+        }
+    }
+
+    /// Close the coordinator `step` span (started at `start`) and bump
+    /// the step counter. No-op when tracing is off.
+    fn record_step_span(&mut self, t: u64, start: Option<Duration>) {
+        if let (Some(rec), Some(start)) = (self.recorder.as_mut(), start) {
+            rec.metrics_mut().inc("dmlmc_steps_total", 1);
+            rec.record("step", start, vec![("step", t as f64)]);
         }
     }
 
@@ -440,7 +493,8 @@ impl Trainer {
             // and snapshot the parameters for this dispatch.
             let backend = shared.clone();
             let params_snap: Arc<[f32]> = Arc::from(self.params.as_slice());
-            let (mut reduced, _report) =
+            let dispatch_start = self.recorder.as_ref().map(|r| r.now());
+            let (mut reduced, report) =
                 pool.execute(&tasks, 1, move |task: &ChunkTask| {
                     let dw = src.increments_multi(
                         Purpose::Grad,
@@ -454,6 +508,15 @@ impl Trainer {
                     );
                     backend.grad_naive_chunk(&params_snap, &dw)
                 })?;
+            if let (Some(rec), Some(start)) =
+                (self.recorder.as_mut(), dispatch_start)
+            {
+                rec.ingest_dispatch(
+                    &report,
+                    start,
+                    &[GroupMeta { level: lmax, session: None }],
+                );
+            }
             let (loss, grad) = reduced.pop().expect("one reduction group");
             return Ok((loss, grad));
         }
@@ -565,6 +628,23 @@ impl Trainer {
     /// The pool's worker count, when pooled dispatch is active.
     pub fn exec_workers(&self) -> Option<usize> {
         self.pool.as_ref().map(|p| p.workers())
+    }
+
+    /// The span recorder — `Some` only when tracing is enabled.
+    pub fn recorder(&self) -> Option<&Recorder> {
+        self.recorder.as_ref()
+    }
+
+    /// Mutable recorder access, for drivers that add their own
+    /// coordinator spans or metrics around the training loop.
+    pub fn recorder_mut(&mut self) -> Option<&mut Recorder> {
+        self.recorder.as_mut()
+    }
+
+    /// Detach the recorder, e.g. to export its trace after the trainer
+    /// (and its pool) is gone. Subsequent steps record nothing.
+    pub fn take_recorder(&mut self) -> Option<Recorder> {
+        self.recorder.take()
     }
 
     /// Co-ownable backend handle (`None` for `!Send` backends). The
@@ -917,6 +997,79 @@ mod tests {
         // still steps fine through the sequential path
         tr.step(0).unwrap();
         assert!(tr.cumulative_cost().depth > 0.0);
+    }
+
+    #[test]
+    fn tracing_records_spans_without_changing_the_trajectory() {
+        let run = |trace: bool| {
+            let mut cfg = smoke_cfg();
+            cfg.train.steps = 4;
+            cfg.execution.workers = 2;
+            cfg.observability.trace = trace;
+            let mut tr = Trainer::from_config(&cfg, Method::Dmlmc, 1).unwrap();
+            let curve = tr.run().unwrap();
+            let rec = tr.take_recorder();
+            (curve, tr.params.clone(), rec)
+        };
+        let (c_off, p_off, rec_off) = run(false);
+        let (c_on, p_on, rec_on) = run(true);
+        assert!(rec_off.is_none(), "tracing is off by default");
+        let rec = rec_on.expect("tracing enabled builds a recorder");
+        // bitwise: enabling tracing never changes a gradient
+        assert_eq!(p_on, p_off, "tracing changed the parameters");
+        for (a, b) in c_on.points.iter().zip(&c_off.points) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.grad_norm, b.grad_norm);
+        }
+        // 4 steps => 4 `step` + 4 `dispatch` spans on the coordinator track
+        let names: Vec<&str> =
+            rec.coordinator_spans().iter().map(|s| s.name).collect();
+        assert_eq!(names.iter().filter(|n| **n == "step").count(), 4);
+        assert_eq!(names.iter().filter(|n| **n == "dispatch").count(), 4);
+        assert_eq!(rec.metrics().counter("dmlmc_steps_total"), 4);
+        assert!(rec.metrics().counter("dmlmc_tasks_dispatched_total") > 0);
+        assert_eq!(rec.metrics().gauge("dmlmc_pool_workers"), Some(2.0));
+        let task_spans: usize = rec.worker_span_counts().iter().sum();
+        assert!(task_spans > 0, "worker tracks must carry task spans");
+    }
+
+    #[test]
+    fn tracing_ingests_naive_pooled_dispatches() {
+        let mut cfg = smoke_cfg();
+        cfg.train.steps = 2;
+        cfg.execution.workers = 2;
+        cfg.observability.trace = true;
+        let mut tr = Trainer::from_config(&cfg, Method::Naive, 0).unwrap();
+        for t in 0..2 {
+            tr.step(t).unwrap();
+        }
+        let chunks = tr.naive_chunks();
+        let rec = tr.take_recorder().unwrap();
+        assert_eq!(rec.metrics().counter("dmlmc_dispatches_total"), 2);
+        assert_eq!(
+            rec.metrics().counter("dmlmc_tasks_dispatched_total") as usize,
+            2 * chunks
+        );
+        assert_eq!(rec.metrics().counter("dmlmc_steps_total"), 2);
+    }
+
+    #[test]
+    fn builder_trace_setter_enables_the_recorder() {
+        let mut tr = TrainerBuilder::new(&smoke_cfg())
+            .method(Method::Mlmc)
+            .steps(1)
+            .workers(2)
+            .trace(true)
+            .build()
+            .unwrap();
+        assert!(tr.recorder().is_some());
+        tr.step(0).unwrap();
+        assert_eq!(
+            tr.recorder().unwrap().metrics().counter("dmlmc_steps_total"),
+            1
+        );
+        assert!(tr.take_recorder().is_some());
+        assert!(tr.recorder().is_none(), "take_recorder detaches");
     }
 
     #[test]

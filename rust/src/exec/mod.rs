@@ -45,9 +45,12 @@
 //! * **Observability** — each dispatch returns a [`StepExecReport`]:
 //!   measured makespan, per-worker busy time and task counts keyed by
 //!   *stable worker indices* `0..P` (not thread ids, which change across
-//!   runs), per-task [`TaskStat`] records (so a multiplexed dispatch can
-//!   be re-attributed per reduction group — the fleet's per-problem
-//!   reports, [`StepExecReport::slice_groups`]), and the **dispatch
+//!   runs), per-task [`TaskStat`] records carrying both a `start` offset
+//!   from the dispatch epoch and a busy duration (so a multiplexed
+//!   dispatch can be re-attributed per reduction group — the fleet's
+//!   per-problem reports, [`StepExecReport::slice_groups`] — and so
+//!   [`crate::obs::Recorder`] can materialize a span timeline without
+//!   adding anything to the worker hot path), and the **dispatch
 //!   overhead** (makespan minus max worker busy — the executor's fixed
 //!   per-step cost); [`ExecStats`] accumulates them over a training run.
 //! * **Multiplexing** — nothing in the pool is per-trainer: a dispatch

@@ -70,10 +70,12 @@ impl ChaosDelays {
 struct WorkerOut {
     worker: usize,
     busy: Duration,
-    /// `(task index, task execution time, result)` — the per-task time
-    /// feeds [`TaskStat`], which the fleet needs to re-attribute one
-    /// multiplexed dispatch back to its constituent problems.
-    results: Vec<(usize, Duration, Result<(f64, Vec<f32>)>)>,
+    /// `(task index, start offset from the dispatch epoch, execution
+    /// time, result)` — the per-task timings feed [`TaskStat`], which
+    /// the fleet needs to re-attribute one multiplexed dispatch back to
+    /// its constituent problems and the observability layer renders as
+    /// timeline spans.
+    results: Vec<(usize, Duration, Duration, Result<(f64, Vec<f32>)>)>,
 }
 
 /// Everything the workers need for one dispatch, shared by `Arc` so it
@@ -84,6 +86,11 @@ struct Dispatch {
     order: Vec<usize>,
     cursor: AtomicUsize,
     chaos: Option<ChaosDelays>,
+    /// The dispatch epoch: the instant `execute` began. Task start
+    /// offsets are measured against it, so per-task records line up on
+    /// one monotonic timeline per dispatch (comparable across runs —
+    /// no absolute wall-clock leaks into reports).
+    epoch: Instant,
     run: Job,
     /// Worker deposits `execute` waits for before reducing.
     expected: usize,
@@ -123,6 +130,7 @@ fn drain(worker: usize, d: &Dispatch) -> WorkerOut {
             std::thread::sleep(c.delay(idx as u64, worker as u64));
         }
         let t0 = Instant::now();
+        let start = t0.saturating_duration_since(d.epoch);
         let run = &*d.run;
         let task = &d.tasks[idx];
         let result = match catch_unwind(AssertUnwindSafe(|| run(task))) {
@@ -134,7 +142,7 @@ fn drain(worker: usize, d: &Dispatch) -> WorkerOut {
         };
         let took = t0.elapsed();
         out.busy += took;
-        out.results.push((idx, took, result));
+        out.results.push((idx, start, took, result));
     }
     out
 }
@@ -349,6 +357,7 @@ impl WorkerPool {
                 order: lpt_order(tasks),
                 cursor: AtomicUsize::new(0),
                 chaos: self.chaos,
+                epoch: started,
                 run,
                 expected,
                 outs: Mutex::new(Vec::with_capacity(expected)),
@@ -431,11 +440,12 @@ impl WorkerPool {
                 busy: out.busy,
                 tasks: out.results.len(),
             });
-            for (idx, took, result) in out.results {
+            for (idx, start, took, result) in out.results {
                 per_task.push(TaskStat {
                     task: idx,
                     group: tasks[idx].group,
                     worker: out.worker,
+                    start,
                     busy: took,
                 });
                 match result {
@@ -676,6 +686,71 @@ mod tests {
                 .map(|g| report.slice_groups(g..g + 1).n_tasks)
                 .sum();
             assert_eq!(sliced, ts.len());
+        }
+    }
+
+    #[test]
+    fn task_spans_nest_inside_the_dispatch_makespan() {
+        // `start` is measured from the dispatch epoch and the makespan
+        // is measured from the same epoch *after* the last deposit, so
+        // every span must satisfy start + busy <= makespan — including
+        // the spans a group slice carries through.
+        let groups = [3usize, 2, 2, 1];
+        for workers in [1usize, 4] {
+            let mut pool = WorkerPool::new(workers);
+            let (_, report) =
+                pool.execute(&tasks(&groups), groups.len(), run_synthetic).unwrap();
+            assert_eq!(report.per_task.len(), 8);
+            for t in &report.per_task {
+                assert!(
+                    t.start + t.busy <= report.makespan,
+                    "P={workers} task {} span [{:?} + {:?}] exceeds makespan {:?}",
+                    t.task,
+                    t.start,
+                    t.busy,
+                    report.makespan,
+                );
+            }
+            // sliced spans keep their offsets and still nest
+            let slice = report.slice_groups(1..3);
+            assert_eq!(slice.per_task.len(), 4);
+            for t in &slice.per_task {
+                assert!(t.start + t.busy <= slice.makespan);
+                let full = report.per_task.iter().find(|f| f.task == t.task).unwrap();
+                assert_eq!(t.start, full.start);
+            }
+        }
+    }
+
+    #[test]
+    fn task_spans_reconcile_with_worker_busy_bitwise() {
+        // Trace/metric reconciliation: the summed `task` span durations
+        // per worker must equal the WorkerStat::busy rollup bit-for-bit
+        // in the same dispatch — across P in {1, 4}, with and without
+        // chaos-perturbed schedules.
+        let groups = [4usize, 3, 2, 1];
+        for workers in [1usize, 4] {
+            for chaos in [None, Some((7u64, 200u64))] {
+                let mut pool = WorkerPool::new(workers);
+                if let Some((seed, max_micros)) = chaos {
+                    pool.set_chaos_delays(seed, max_micros);
+                }
+                let (_, report) =
+                    pool.execute(&tasks(&groups), groups.len(), run_synthetic).unwrap();
+                for w in &report.workers {
+                    let span_sum: Duration = report
+                        .per_task
+                        .iter()
+                        .filter(|t| t.worker == w.worker)
+                        .map(|t| t.busy)
+                        .sum();
+                    assert_eq!(
+                        span_sum, w.busy,
+                        "P={workers} chaos={chaos:?} worker {} rollup drifted",
+                        w.worker
+                    );
+                }
+            }
         }
     }
 

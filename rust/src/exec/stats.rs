@@ -29,6 +29,12 @@ pub struct TaskStat {
     pub group: usize,
     /// Stable worker index that executed it.
     pub worker: usize,
+    /// Offset of this task's execution start from the **dispatch epoch**
+    /// (the instant `execute` began). With `busy` this makes each record
+    /// a real timeline span — `start + busy` never exceeds the dispatch
+    /// makespan — which is what the observability layer
+    /// ([`crate::obs`]) renders as one Chrome-trace slice per task.
+    pub start: Duration,
     /// Execution time of this single task (excludes queue waits).
     pub busy: Duration,
 }
@@ -144,10 +150,19 @@ impl ExecStats {
         }
     }
 
+    /// Fold one dispatch report into the running totals. A report may
+    /// carry worker indices beyond this accumulator's current capacity
+    /// (a pool and a pre-sized `ExecStats` can legitimately disagree —
+    /// e.g. stats created before a pool was resized, or fed from a
+    /// differently-sized pool); the per-worker table grows to fit
+    /// instead of panicking on the index.
     pub fn record(&mut self, report: &StepExecReport) {
         self.steps += 1;
         self.tasks += report.n_tasks;
         for w in &report.workers {
+            if w.worker >= self.busy_per_worker.len() {
+                self.busy_per_worker.resize(w.worker + 1, Duration::ZERO);
+            }
             self.busy_per_worker[w.worker] += w.busy;
         }
         self.makespans.push(report.makespan.as_secs_f64());
@@ -178,6 +193,27 @@ impl ExecStats {
         }
     }
 
+    /// Nearest-rank percentile of the per-dispatch makespans (seconds).
+    /// `q` in `[0, 1]`; 0 before any dispatch.
+    pub fn makespan_percentile(&self, q: f64) -> f64 {
+        percentile(&self.makespans, q)
+    }
+
+    /// Largest per-dispatch makespan (seconds); 0 before any dispatch.
+    pub fn max_makespan(&self) -> f64 {
+        self.makespans.iter().fold(0.0, f64::max)
+    }
+
+    /// Nearest-rank percentile of the per-dispatch overheads (seconds).
+    pub fn overhead_percentile(&self, q: f64) -> f64 {
+        percentile(&self.overheads, q)
+    }
+
+    /// Largest per-dispatch overhead (seconds); 0 before any dispatch.
+    pub fn max_overhead(&self) -> f64 {
+        self.overheads.iter().fold(0.0, f64::max)
+    }
+
     /// Run-level utilization: total busy / (P x total makespan).
     pub fn utilization(&self) -> f64 {
         let span = self.total_makespan() * self.busy_per_worker.len() as f64;
@@ -192,6 +228,22 @@ impl ExecStats {
             0.0
         }
     }
+}
+
+/// Nearest-rank percentile: the smallest element such that at least
+/// `q x len` elements are `<=` it. `q` is clamped to `[0, 1]`; the
+/// empty input yields 0. One definition shared by the run-manifest
+/// writer and the [`crate::obs`] histogram summaries so "p95" always
+/// means the same thing on disk.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 #[cfg(test)]
@@ -218,6 +270,7 @@ mod tests {
                     task: worker,
                     group: worker,
                     worker,
+                    start: Duration::ZERO,
                     busy: Duration::from_millis(ms),
                 })
                 .collect(),
@@ -285,10 +338,10 @@ mod tests {
             makespan: Duration::from_millis(40),
             n_tasks: 4,
             per_task: vec![
-                TaskStat { task: 0, group: 0, worker: 0, busy: Duration::from_millis(10) },
-                TaskStat { task: 1, group: 1, worker: 0, busy: Duration::from_millis(10) },
-                TaskStat { task: 2, group: 2, worker: 1, busy: Duration::from_millis(10) },
-                TaskStat { task: 3, group: 3, worker: 0, busy: Duration::from_millis(10) },
+                TaskStat { task: 0, group: 0, worker: 0, start: Duration::ZERO, busy: Duration::from_millis(10) },
+                TaskStat { task: 1, group: 1, worker: 0, start: Duration::from_millis(10), busy: Duration::from_millis(10) },
+                TaskStat { task: 2, group: 2, worker: 1, start: Duration::from_millis(5), busy: Duration::from_millis(10) },
+                TaskStat { task: 3, group: 3, worker: 0, start: Duration::from_millis(20), busy: Duration::from_millis(10) },
             ],
         };
         let slice = full.slice_groups(1..3);
@@ -299,6 +352,13 @@ mod tests {
         assert_eq!(slice.workers[0].busy, Duration::from_millis(10));
         assert_eq!(slice.workers[1].tasks, 1);
         assert_eq!(slice.per_task.len(), 2);
+        // the timeline offsets ride along through the slice untouched,
+        // and sliced spans still nest inside the shared dispatch makespan
+        assert_eq!(slice.per_task[0].start, Duration::from_millis(10));
+        assert_eq!(slice.per_task[1].start, Duration::from_millis(5));
+        for t in &slice.per_task {
+            assert!(t.start + t.busy <= slice.makespan);
+        }
         // utilization of a slice = problem busy / (P x shared makespan)
         assert!((slice.utilization() - 20.0 / 80.0).abs() < 1e-9);
         // slices over all groups partition the task records
@@ -315,5 +375,47 @@ mod tests {
         assert_eq!(s.mean_makespan(), 0.0);
         assert_eq!(s.utilization(), 0.0);
         assert_eq!(s.busy_per_worker.len(), 3);
+    }
+
+    #[test]
+    fn record_grows_for_worker_indices_beyond_capacity() {
+        // Regression: a report carrying worker indices >= the stats'
+        // capacity used to panic on `busy_per_worker[w.worker]`.
+        let mut s = ExecStats::new(1);
+        s.record(&report(&[5, 7, 3], 9));
+        assert_eq!(s.busy_per_worker.len(), 3);
+        assert_eq!(s.busy_per_worker[0], Duration::from_millis(5));
+        assert_eq!(s.busy_per_worker[2], Duration::from_millis(3));
+        // further records keep accumulating into the grown table
+        s.record(&report(&[1, 1], 2));
+        assert_eq!(s.busy_per_worker.len(), 3);
+        assert_eq!(s.busy_per_worker[0], Duration::from_millis(6));
+        assert_eq!(s.busy_per_worker[1], Duration::from_millis(8));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [4.0, 1.0, 3.0, 2.0, 5.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.95), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn stats_expose_makespan_and_overhead_percentiles() {
+        let mut s = ExecStats::new(2);
+        s.record(&report(&[10, 4], 13)); // makespan 13ms, overhead 3ms
+        s.record(&report(&[4, 8], 9)); // makespan 9ms, overhead 1ms
+        s.record(&report(&[2, 2], 4)); // makespan 4ms, overhead 2ms
+        assert!((s.makespan_percentile(0.5) - 0.009).abs() < 1e-12);
+        assert!((s.max_makespan() - 0.013).abs() < 1e-12);
+        assert!((s.overhead_percentile(0.5) - 0.002).abs() < 1e-12);
+        assert!((s.max_overhead() - 0.003).abs() < 1e-12);
+        let empty = ExecStats::new(2);
+        assert_eq!(empty.makespan_percentile(0.95), 0.0);
+        assert_eq!(empty.max_overhead(), 0.0);
     }
 }

@@ -28,6 +28,7 @@ use crate::metrics::aggregate::AggregatedCurve;
 use crate::metrics::{aggregate_curves, LearningCurve, RunArtifacts, Welford};
 use crate::mlmc::theory::{TheoryParams, TheoryRow};
 use crate::mlmc::{fit_decay_rate, DecaySeries};
+use crate::obs::TraceSink;
 use crate::parallel::{CostModel, LevelJob, PramMachine};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::{GradBackend, NativeBackend};
@@ -156,6 +157,33 @@ pub struct FleetCell {
     pub mean_step_makespan_s: f64,
 }
 
+/// Output of the overhead-bounded tracing benchmark (`repro trace`):
+/// the same DMLMC training run with tracing off and on, plus the shape
+/// of the exported trace. Wall-clock fields are seconds.
+#[derive(Debug, Clone)]
+pub struct TraceBench {
+    pub workers: usize,
+    pub steps: usize,
+    pub repeats: usize,
+    /// Best (min over repeats) mean per-step makespan, tracing off.
+    pub untraced_mean_makespan_s: f64,
+    /// Best (min over repeats) mean per-step makespan, tracing on.
+    pub traced_mean_makespan_s: f64,
+    /// `traced / untraced` of the two best means — the bounded-overhead
+    /// headline (min-of-means is robust to scheduler noise).
+    pub overhead_ratio: f64,
+    /// Retained `task` spans per worker track in the exported trace.
+    pub spans_per_worker: Vec<usize>,
+    /// Coordinator-track spans (`step` + `dispatch`).
+    pub coordinator_spans: usize,
+    /// Spans evicted by ring capacity (0 at bench sizes).
+    pub dropped_spans: usize,
+    /// Where `trace.json` landed.
+    pub trace_path: PathBuf,
+    /// Where `metrics.prom` landed.
+    pub metrics_path: PathBuf,
+}
+
 // ---------------------------------------------------------------------------
 // Private helpers
 // ---------------------------------------------------------------------------
@@ -169,6 +197,15 @@ const DIAG_CHUNKS: u32 = 4;
 /// Chunks averaged per (level) when fitting `b_hat` — same reasoning as
 /// [`DIAG_CHUNKS`]: per-sample second moments are heavy-tailed.
 const SWEEP_CHUNKS: u32 = 4;
+
+/// Overhead bound `trace_bench` asserts: the traced run's best mean
+/// makespan must stay within `factor x untraced + floor`. The factor is
+/// generous and the floor absorbs scheduler noise at sub-millisecond
+/// step sizes — the point is catching *pathological* overhead (the
+/// recorder accidentally landing on the worker hot path), not winning a
+/// microbenchmark.
+const TRACE_OVERHEAD_FACTOR: f64 = 2.0;
+const TRACE_OVERHEAD_FLOOR_S: f64 = 0.002;
 
 /// The PRAM jobs of step `t` under `method` — the same workload the pool
 /// executes, expressed in samples for the counting scheduler.
@@ -760,6 +797,101 @@ impl ExperimentRunner {
         Ok(cells)
     }
 
+    // -- Trace bench: traced-vs-untraced overhead + trace export ----------
+
+    /// Run the same DMLMC training `repeats` times with tracing off and
+    /// on. Per repeat, assert — bitwise — that tracing never changed the
+    /// trained parameters; across repeats, compare the best mean per-step
+    /// makespans and assert the traced one stays within
+    /// `2x untraced + 2 ms` (see [`TRACE_OVERHEAD_FACTOR`] /
+    /// [`TRACE_OVERHEAD_FLOOR_S`] — the recorder only runs
+    /// coordinator-side, so anything worse means it leaked onto the
+    /// worker hot path). The last traced run's trace is exported through
+    /// [`TraceSink`] into the `trace` run directory.
+    pub fn trace_bench(&self, workers: usize, repeats: usize) -> Result<TraceBench> {
+        anyhow::ensure!(workers > 0, "need at least one worker");
+        anyhow::ensure!(repeats > 0, "need at least one repeat");
+        let mut c = self.cfg.clone();
+        c.runtime.backend = Backend::Native;
+        c.execution.workers = workers;
+        let steps = c.train.steps;
+        let run = |trace: bool| -> Result<(f64, Vec<f32>, Trainer)> {
+            let mut tr = TrainerBuilder::new(&c)
+                .method(Method::Dmlmc)
+                .seed(0)
+                .trace(trace)
+                .build()?;
+            tr.run()?;
+            let mean = tr
+                .exec_stats()
+                .expect("native backend always pools")
+                .mean_makespan();
+            let params = tr.params.clone();
+            Ok((mean, params, tr))
+        };
+        let mut untraced_best = f64::INFINITY;
+        let mut traced_best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..repeats {
+            let (plain_mean, plain_params, _) = run(false)?;
+            let (traced_mean, traced_params, tr) = run(true)?;
+            anyhow::ensure!(
+                plain_params == traced_params,
+                "tracing changed the trained parameters"
+            );
+            untraced_best = untraced_best.min(plain_mean);
+            traced_best = traced_best.min(traced_mean);
+            last = Some(tr);
+            if !self.quiet {
+                eprintln!(
+                    "trace: untraced {plain_mean:.6} s/step  traced \
+                     {traced_mean:.6} s/step"
+                );
+            }
+        }
+        let mut tr = last.expect("repeats >= 1");
+        // Every worker track must carry at least one task span before
+        // the export claims per-worker coverage; top up with extra steps
+        // if the LPT queue starved a worker over the measured horizon
+        // (the params comparison already happened above, so these steps
+        // only fatten the trace).
+        let mut t = steps as u64;
+        while tr
+            .recorder()
+            .is_some_and(|r| r.worker_span_counts().iter().any(|&n| n == 0))
+            && t < steps as u64 + 64
+        {
+            tr.step(t)?;
+            t += 1;
+        }
+        let rec = tr.take_recorder().expect("traced trainer has a recorder");
+        let arts = self.artifacts("trace")?;
+        let (trace_path, metrics_path) = TraceSink::new(&arts)
+            .write(&rec)
+            .map_err(|e| anyhow::anyhow!("write trace artifacts: {e}"))?;
+        let overhead_ratio = traced_best / untraced_best.max(1e-12);
+        anyhow::ensure!(
+            traced_best
+                <= untraced_best * TRACE_OVERHEAD_FACTOR + TRACE_OVERHEAD_FLOOR_S,
+            "tracing overhead out of bounds: traced {traced_best:.6} s/step vs \
+             untraced {untraced_best:.6} s/step (bound: {TRACE_OVERHEAD_FACTOR}x \
+             + {TRACE_OVERHEAD_FLOOR_S}s)"
+        );
+        Ok(TraceBench {
+            workers,
+            steps,
+            repeats,
+            untraced_mean_makespan_s: untraced_best,
+            traced_mean_makespan_s: traced_best,
+            overhead_ratio,
+            spans_per_worker: rec.worker_span_counts(),
+            coordinator_spans: rec.coordinator_spans().len(),
+            dropped_spans: rec.dropped_total(),
+            trace_path,
+            metrics_path,
+        })
+    }
+
     // -- Renderers (all wall-clock columns in SECONDS) --------------------
 
     /// Render the combined Table 1 as text (CLI + EXPERIMENTS.md).
@@ -887,6 +1019,42 @@ impl ExperimentRunner {
         };
         out.push_str(&format!(
             "scoped / resident overhead ratio: {ratio:.2}x\n"
+        ));
+        out
+    }
+
+    /// Render the trace bench as text (CLI `repro trace`). Wall-clock
+    /// columns are seconds.
+    pub fn render_trace_bench(b: &TraceBench) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace bench, P = {}, {} steps x {} repeats:\n",
+            b.workers, b.steps, b.repeats
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>16}\n",
+            "mode", "mksp s/step"
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>16.6}\n",
+            "untraced", b.untraced_mean_makespan_s
+        ));
+        out.push_str(&format!(
+            "{:<10} {:>16.6}\n",
+            "traced", b.traced_mean_makespan_s
+        ));
+        out.push_str(&format!(
+            "traced / untraced overhead ratio: {:.2}x\n",
+            b.overhead_ratio
+        ));
+        out.push_str(&format!(
+            "spans: coordinator {}, per worker {:?}, dropped {}\n",
+            b.coordinator_spans, b.spans_per_worker, b.dropped_spans
+        ));
+        out.push_str(&format!(
+            "trace:   {}\nmetrics: {}\n",
+            b.trace_path.display(),
+            b.metrics_path.display()
         ));
         out
     }
@@ -1220,6 +1388,48 @@ scoped / resident overhead ratio: 6.00x
         assert!(r.fleet_sweep(&[1], &[0], &sc, 4).is_err());
         assert!(r.fleet_sweep(&[1], &[1], &[], 4).is_err());
         assert!(r.fleet_sweep(&[1], &[1], &sc, 0).is_err());
+    }
+
+    #[test]
+    fn trace_bench_exports_a_parseable_trace_with_full_coverage() {
+        use crate::util::json::Json;
+        let tmp = std::env::temp_dir()
+            .join(format!("dmlmc_trace_bench_{}", std::process::id()));
+        let mut c = cfg();
+        c.train.steps = 6;
+        c.train.eval_every = 6;
+        let b = ExperimentRunner::new(&c)
+            .quiet(true)
+            .out_dir(&tmp)
+            .trace_bench(2, 1)
+            .unwrap();
+        assert_eq!(b.workers, 2);
+        assert_eq!(b.steps, 6);
+        assert!(b.untraced_mean_makespan_s >= 0.0);
+        assert!(b.traced_mean_makespan_s >= 0.0);
+        assert!(b.overhead_ratio.is_finite());
+        // >= 1 span per worker track (the top-up loop guarantees it)
+        assert_eq!(b.spans_per_worker.len(), 2);
+        assert!(b.spans_per_worker.iter().all(|&n| n > 0), "{:?}", b.spans_per_worker);
+        // 6 steps x (step + dispatch) at minimum
+        assert!(b.coordinator_spans >= 12);
+        assert_eq!(b.dropped_spans, 0);
+        // the exported trace round-trips through the strict parser
+        let text = std::fs::read_to_string(&b.trace_path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > 12);
+        let prom = std::fs::read_to_string(&b.metrics_path).unwrap();
+        assert!(prom.contains("dmlmc_steps_total"));
+        let txt = ExperimentRunner::render_trace_bench(&b);
+        assert!(txt.contains("untraced"));
+        assert!(txt.contains("overhead ratio"));
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn trace_bench_rejects_degenerate_inputs() {
+        assert!(runner().trace_bench(0, 1).is_err());
+        assert!(runner().trace_bench(2, 0).is_err());
     }
 
     #[test]

@@ -108,6 +108,26 @@
 //! [`experiments::ExperimentRunner`], whose named runs write under a
 //! common `--out-dir` via [`metrics::RunArtifacts`].
 //!
+//! ## Observability
+//!
+//! The execution stack is traceable end to end ([`obs`]): with
+//! `--trace` (or `[observability] trace = true` in the TOML) the trainer
+//! and fleet coordinator carry an [`obs::Recorder`] that materializes
+//! per-task `task` spans (level / group / chunk / session attrs) and
+//! coordinator `dispatch` / `step` / `tick` / `session` spans into
+//! bounded per-track rings, alongside an [`obs::Registry`] of counters,
+//! gauges and latency histograms. Everything is ingested
+//! **coordinator-side** from the [`exec::StepExecReport`] telemetry each
+//! dispatch already returns — the worker hot path records nothing new —
+//! and tracing is off by default, so an untraced run pays zero cost.
+//! [`obs::TraceSink`] exports a run's timeline as Chrome trace-event
+//! JSON (`trace.json`, loadable in Perfetto / `chrome://tracing`, one
+//! track per stable worker index plus a coordinator track) and the
+//! metrics as Prometheus text exposition (`metrics.prom`). `repro
+//! trace` (`make trace`) runs the same DMLMC training traced and
+//! untraced, asserts the trajectories are bit-identical and the
+//! makespan overhead bounded, and emits `BENCH_obs.json`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -139,6 +159,7 @@ pub mod experiments;
 pub mod hedging;
 pub mod metrics;
 pub mod mlmc;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod rng;

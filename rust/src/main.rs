@@ -44,6 +44,12 @@ fn root_command() -> Command {
                 "root directory for named experiment runs",
                 "artifacts",
             ))
+            .opt(Opt::switch(
+                "trace",
+                "enable span tracing (observability.trace; off by default — \
+                 training commands then export trace.json + metrics.prom \
+                 into their run dir)",
+            ))
             .opt(Opt::switch("quiet", "suppress progress output"))
     };
     Command::new("repro", "Delayed MLMC for SGD — paper reproduction driver")
@@ -100,6 +106,22 @@ fn root_command() -> Command {
                  0 = one per core; --steps measured dispatches per mode, \
                  default 64)",
             ),
+        ))
+        .subcommand(common(
+            Command::new(
+                "trace",
+                "overhead-bounded tracing bench: the same DMLMC training \
+                 with tracing off and on (bit-identical parameters \
+                 asserted), exporting trace.json (Chrome trace-event JSON, \
+                 Perfetto-loadable) + metrics.prom and emitting \
+                 BENCH_obs.json (defaults to 24 steps unless --steps is \
+                 given)",
+            )
+            .opt(Opt::with_default(
+                "repeats",
+                "traced/untraced run pairs (best-of means compared)",
+                "2",
+            )),
         ))
         .subcommand(common(
             Command::new(
@@ -211,6 +233,11 @@ fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConf
             cfg.runtime.out_dir = PathBuf::from(v);
         }
     }
+    // `--trace` can only enable tracing; `[observability]` in the TOML
+    // remains authoritative when the switch is absent.
+    if args.flag("trace") {
+        cfg.observability.trace = true;
+    }
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
 }
@@ -262,6 +289,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = arts.write_curve_csv(&curve)?;
     // Manifest rows carry pool telemetry keyed by stable worker indices.
     arts.append_run_jsonl(&curve, tr.exec_stats())?;
+    // Under --trace the run additionally exports its span timeline and
+    // metrics snapshot next to the curve.
+    if let Some(rec) = tr.take_recorder() {
+        let (trace_path, prom_path) = dmlmc::obs::TraceSink::new(&arts).write(&rec)?;
+        eprintln!("wrote {} and {}", trace_path.display(), prom_path.display());
+    }
     eprintln!("wrote {}", out.display());
     Ok(())
 }
@@ -580,6 +613,71 @@ fn cmd_exec_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_trace(args: &Args) -> Result<()> {
+    use dmlmc::util::json::{obj, Json};
+    let mut cfg = load_config(args)?;
+    // Like parallel-sweep: the overhead bound is about per-step cost, not
+    // figure-scale horizons; default short unless pinned.
+    if args.get("steps").is_none() && !toml_pins_steps(args) {
+        cfg.train.steps = 24;
+    }
+    // Same worker-resolution convention as exec-bench, with a smaller
+    // representative default (the bench runs each horizon twice per
+    // repeat).
+    let workers = if args.get("workers").is_some() || cfg.execution.workers != 0
+    {
+        cfg.execution.resolved_workers()
+    } else {
+        2
+    };
+    let repeats = args.parse_usize("repeats")?.unwrap_or(2);
+    let runner = runner_for(&cfg, args);
+    let bench = runner.trace_bench(workers, repeats)?;
+    print!("{}", ExperimentRunner::render_trace_bench(&bench));
+
+    let doc = obj(vec![
+        ("bench", Json::Str("trace".to_string())),
+        ("scenario", Json::Str(cfg.scenario.clone())),
+        ("workers", Json::Num(bench.workers as f64)),
+        ("steps", Json::Num(bench.steps as f64)),
+        ("repeats", Json::Num(bench.repeats as f64)),
+        (
+            "untraced_mean_makespan_s",
+            Json::Num(bench.untraced_mean_makespan_s),
+        ),
+        (
+            "traced_mean_makespan_s",
+            Json::Num(bench.traced_mean_makespan_s),
+        ),
+        ("overhead_ratio", Json::Num(bench.overhead_ratio)),
+        (
+            "spans_per_worker",
+            Json::Arr(
+                bench
+                    .spans_per_worker
+                    .iter()
+                    .map(|&n| Json::Num(n as f64))
+                    .collect(),
+            ),
+        ),
+        ("coordinator_spans", Json::Num(bench.coordinator_spans as f64)),
+        ("dropped_spans", Json::Num(bench.dropped_spans as f64)),
+        (
+            "trace_path",
+            Json::Str(bench.trace_path.display().to_string()),
+        ),
+        (
+            "metrics_path",
+            Json::Str(bench.metrics_path.display().to_string()),
+        ),
+    ]);
+    let path = runner
+        .artifacts("trace")?
+        .write_bench_json("BENCH_obs", &doc)?;
+    eprintln!("wrote {} (+ ./BENCH_obs.json)", path.display());
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     use dmlmc::runtime::Manifest;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -621,6 +719,7 @@ fn main() -> ExitCode {
         "scenario-sweep" => cmd_scenario_sweep(&args),
         "parallel-sweep" => cmd_parallel_sweep(&args),
         "exec-bench" => cmd_exec_bench(&args),
+        "trace" => cmd_trace(&args),
         "fleet-sweep" => cmd_fleet_sweep(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),

@@ -40,7 +40,9 @@ pub fn write_jsonl(path: &Path, curve: &LearningCurve) -> std::io::Result<()> {
 
 /// The manifest's execution block: per-worker busy seconds indexed by the
 /// pool's stable worker id (array position == worker index), plus the
-/// run's makespan/utilization aggregates.
+/// run's makespan/utilization aggregates and the per-dispatch
+/// makespan/overhead distribution tails (nearest-rank p50/p95 and max —
+/// a mean alone hides stragglers).
 fn exec_json(stats: &ExecStats) -> Json {
     let busy: Vec<Json> = stats
         .busy_per_worker
@@ -53,10 +55,22 @@ fn exec_json(stats: &ExecStats) -> Json {
         ("tasks", Json::Num(stats.tasks as f64)),
         ("total_makespan_s", Json::Num(stats.total_makespan())),
         ("mean_step_makespan_s", Json::Num(stats.mean_makespan())),
+        ("p50_step_makespan_s", Json::Num(stats.makespan_percentile(0.5))),
+        ("p95_step_makespan_s", Json::Num(stats.makespan_percentile(0.95))),
+        ("max_step_makespan_s", Json::Num(stats.max_makespan())),
         (
             "mean_dispatch_overhead_s",
             Json::Num(stats.mean_dispatch_overhead()),
         ),
+        (
+            "p50_dispatch_overhead_s",
+            Json::Num(stats.overhead_percentile(0.5)),
+        ),
+        (
+            "p95_dispatch_overhead_s",
+            Json::Num(stats.overhead_percentile(0.95)),
+        ),
+        ("max_dispatch_overhead_s", Json::Num(stats.max_overhead())),
         ("utilization", Json::Num(stats.utilization())),
         ("per_worker_busy_s", Json::Arr(busy)),
     ])
@@ -328,6 +342,28 @@ mod tests {
         assert_eq!(busy.len(), 2);
         assert!((busy[0].as_f64().unwrap() - 0.03).abs() < 1e-9);
         assert!((busy[1].as_f64().unwrap() - 0.01).abs() < 1e-9);
+        // distribution tails survive to disk (single dispatch: every
+        // percentile collapses onto the one observation)
+        for key in [
+            "p50_step_makespan_s",
+            "p95_step_makespan_s",
+            "max_step_makespan_s",
+        ] {
+            assert!(
+                (exec.get(key).unwrap().as_f64().unwrap() - 0.04).abs() < 1e-9,
+                "{key}"
+            );
+        }
+        for key in [
+            "p50_dispatch_overhead_s",
+            "p95_dispatch_overhead_s",
+            "max_dispatch_overhead_s",
+        ] {
+            assert!(
+                (exec.get(key).unwrap().as_f64().unwrap() - 0.01).abs() < 1e-9,
+                "{key}"
+            );
+        }
         // no exec stats -> explicit null, row still parses
         write_jsonl(&path, &curve()).unwrap();
         let text = fs::read_to_string(&path).unwrap();

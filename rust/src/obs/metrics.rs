@@ -1,0 +1,174 @@
+//! The metrics registry: named counters, gauges and histograms with a
+//! Prometheus text exposition — the scrape surface a future daemon mode
+//! (`repro serve`) will expose over HTTP; today it is dumped per run as
+//! `metrics.prom` next to `trace.json`.
+//!
+//! Histogram summaries (p50/p95/max) use the same nearest-rank
+//! [`percentile`](crate::exec::stats::percentile) definition as the
+//! `runs.jsonl` exec block, so "p95 makespan" means the same thing in
+//! both artifacts.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::exec::stats::percentile;
+
+/// A recording histogram: keeps raw observations (bounded use cases —
+/// one observation per dispatch/step), summarized at exposition time.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    values: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    /// Nearest-rank percentile, `q` in `[0, 1]`; 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile(&self.values, q)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().fold(0.0, |a: f64, &b| a.max(b))
+    }
+}
+
+/// Named counters / gauges / histograms. Metric names follow Prometheus
+/// conventions (`dmlmc_tasks_dispatched_total`,
+/// `dmlmc_step_makespan_seconds`); the registry itself is
+/// convention-free.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `by` to the named counter (created at 0 on first touch).
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Record one observation into the named histogram.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.histograms.entry(name).or_default().observe(v);
+    }
+
+    /// Current counter value (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Prometheus text exposition (format version 0.0.4): counters and
+    /// gauges verbatim, histograms as `summary` families with
+    /// p50/p95/max quantiles plus `_sum`/`_count`. Keys render in
+    /// BTreeMap order, so the dump is deterministic.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(out, "# TYPE {name} summary");
+            let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {}", h.quantile(0.5));
+            let _ = writeln!(out, "{name}{{quantile=\"0.95\"}} {}", h.quantile(0.95));
+            let _ = writeln!(out, "{name}{{quantile=\"1\"}} {}", h.max());
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut r = Registry::new();
+        assert_eq!(r.counter("dmlmc_tasks_dispatched_total"), 0);
+        r.inc("dmlmc_tasks_dispatched_total", 4);
+        r.inc("dmlmc_tasks_dispatched_total", 3);
+        assert_eq!(r.counter("dmlmc_tasks_dispatched_total"), 7);
+    }
+
+    #[test]
+    fn gauges_take_last_write() {
+        let mut r = Registry::new();
+        assert_eq!(r.gauge("dmlmc_pool_workers"), None);
+        r.set_gauge("dmlmc_pool_workers", 4.0);
+        r.set_gauge("dmlmc_pool_workers", 2.0);
+        assert_eq!(r.gauge("dmlmc_pool_workers"), Some(2.0));
+    }
+
+    #[test]
+    fn histogram_summaries_match_nearest_rank() {
+        let mut r = Registry::new();
+        for v in [4.0, 1.0, 3.0, 2.0, 5.0] {
+            r.observe("dmlmc_step_makespan_seconds", v);
+        }
+        let h = r.histogram("dmlmc_step_makespan_seconds").unwrap();
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 15.0);
+        assert_eq!(h.quantile(0.5), 3.0);
+        assert_eq!(h.quantile(0.95), 5.0);
+        assert_eq!(h.max(), 5.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_every_family() {
+        let mut r = Registry::new();
+        r.inc("dmlmc_steps_total", 2);
+        r.set_gauge("dmlmc_pool_workers", 4.0);
+        r.observe("dmlmc_step_makespan_seconds", 0.25);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE dmlmc_steps_total counter"));
+        assert!(text.contains("dmlmc_steps_total 2"));
+        assert!(text.contains("# TYPE dmlmc_pool_workers gauge"));
+        assert!(text.contains("dmlmc_pool_workers 4"));
+        assert!(text.contains("# TYPE dmlmc_step_makespan_seconds summary"));
+        assert!(text.contains("dmlmc_step_makespan_seconds{quantile=\"0.5\"} 0.25"));
+        assert!(text.contains("dmlmc_step_makespan_seconds_count 1"));
+        // every line is `# ...` or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.split_whitespace().count() == 2,
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability: span-level execution tracing + a metrics registry,
+//! wired through the whole execution stack.
+//!
+//! The paper's claims are about *parallel complexity*, but post-hoc
+//! averages (`ExecStats::mean_makespan`, utilization) cannot show *why*
+//! a step was fast or a fleet tick stalled — which worker idled, which
+//! level's chunk straggled, where the dispatch overhead went. This
+//! module turns the telemetry the executor already measures into:
+//!
+//! * **Spans** ([`Span`], [`SpanRing`]) — timestamped slices of work on
+//!   per-track bounded ring buffers: one track per stable worker index
+//!   (`task` spans, with level/group/chunk/session attrs) plus a
+//!   coordinator track (`dispatch`, `step`, `tick`, `session` spans).
+//!   All offsets are monotonic from the run epoch, so traces are
+//!   comparable across runs.
+//! * **Metrics** ([`Registry`]) — named counters / gauges / histograms
+//!   (tasks dispatched, steps ticked, sessions admitted/rejected,
+//!   makespan and overhead distributions) with a Prometheus text
+//!   exposition — the scrape surface for the future daemon mode.
+//! * **Export** ([`Recorder`], [`TraceSink`]) — the recorder ingests
+//!   [`StepExecReport`](crate::exec::StepExecReport)s coordinator-side
+//!   (the worker hot path records nothing it didn't already); the sink
+//!   drains it into a run directory as `trace.json` (Chrome trace-event
+//!   JSON, loadable in Perfetto / `chrome://tracing`) and
+//!   `metrics.prom`.
+//!
+//! Tracing is **off by default**: enable with `--trace` (or
+//! `[observability] trace = true`), and see `repro trace` for the
+//! overhead-bounded traced-vs-untraced comparison (`BENCH_obs.json`) —
+//! enabling tracing never changes a gradient (pinned bitwise in
+//! `tests/obs_trace.rs`).
+
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{Histogram, Registry};
+pub use span::{Span, SpanRing, Track};
+pub use trace::{GroupMeta, Recorder, TraceSink, DEFAULT_RING_CAPACITY};

@@ -1,0 +1,130 @@
+//! Span primitives: a timestamped slice of work on one track, and the
+//! bounded ring buffer that holds them.
+//!
+//! Offsets are measured from the recorder's **run epoch** (one
+//! `Instant` captured at recorder construction), never absolute wall
+//! clock — traces from different runs line up at t = 0 and contain no
+//! machine-local timestamps.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Which timeline a span belongs to. Worker tracks are keyed by the
+/// pool's **stable worker indices** (0..P, never thread ids), matching
+/// every other piece of execution telemetry; the coordinator track
+/// carries the dispatch/step/tick/session spans recorded outside the
+/// pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// The coordinator timeline (dispatcher / trainer / fleet layers).
+    Coordinator,
+    /// One pool worker's timeline, by stable worker index.
+    Worker(usize),
+}
+
+/// One completed span: `[start, start + dur)` on `track`, with a small
+/// set of numeric attributes (level, group, chunk, session, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Span kind: `"task"`, `"dispatch"`, `"step"`, `"tick"`,
+    /// `"session"`.
+    pub name: &'static str,
+    pub track: Track,
+    /// Offset from the recorder's run epoch.
+    pub start: Duration,
+    pub dur: Duration,
+    /// Numeric attributes, rendered into the Chrome-trace `args` object.
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// A bounded span buffer: pushing beyond capacity evicts the **oldest**
+/// span and counts it as dropped, so a long run's memory stays bounded
+/// while the trace keeps its most recent window (and is honest about
+/// what it lost).
+#[derive(Debug, Clone)]
+pub struct SpanRing {
+    cap: usize,
+    spans: VecDeque<Span>,
+    dropped: usize,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "span ring needs capacity >= 1");
+        SpanRing { cap, spans: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans evicted so far (0 while the ring has never overflowed).
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest-to-newest iteration over the retained spans.
+    pub fn iter(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(ms: u64) -> Span {
+        Span {
+            name: "task",
+            track: Track::Worker(0),
+            start: Duration::from_millis(ms),
+            dur: Duration::from_millis(1),
+            args: vec![("level", 0.0)],
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut ring = SpanRing::new(3);
+        for ms in 0..5 {
+            ring.push(span(ms));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let starts: Vec<u64> = ring.iter().map(|s| s.start.as_millis() as u64).collect();
+        assert_eq!(starts, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_below_capacity_drops_nothing() {
+        let mut ring = SpanRing::new(8);
+        ring.push(span(0));
+        ring.push(span(1));
+        assert_eq!(ring.len(), 2);
+        assert_eq!(ring.dropped(), 0);
+        assert!(!ring.is_empty());
+        assert_eq!(ring.capacity(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_panics() {
+        SpanRing::new(0);
+    }
+}

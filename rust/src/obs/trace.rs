@@ -1,0 +1,467 @@
+//! The [`Recorder`]: one run's span rings + metrics registry, and the
+//! [`TraceSink`] that drains them into a run directory as Chrome
+//! trace-event JSON (`trace.json`) and a Prometheus text dump
+//! (`metrics.prom`).
+//!
+//! # Cost model
+//!
+//! The pool's hot path records **nothing new** when tracing is on: the
+//! two `Instant` reads per task that become span endpoints already
+//! existed as [`TaskStat`] telemetry (every worker deposits its
+//! per-task timings whether or not anyone looks). The recorder
+//! materializes spans *coordinator-side*, after the dispatch returns,
+//! by ingesting the [`StepExecReport`] into per-worker rings — no
+//! locks, allocation or I/O are added to the worker threads, which is
+//! why `repro trace` can assert a tight traced-vs-untraced makespan
+//! bound.
+
+use std::time::{Duration, Instant};
+
+use crate::exec::{StepExecReport, TaskStat};
+use crate::metrics::RunArtifacts;
+use crate::util::json::{obj, Json};
+
+use super::metrics::Registry;
+use super::span::{Span, SpanRing, Track};
+
+/// Default per-track ring capacity: enough for every span of any bench
+/// or CI run; long daemon-style runs wrap and count drops instead of
+/// growing without bound.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// Per-reduction-group metadata for one dispatch ingest: the MLMC level
+/// the group ran at and, for a multiplexed fleet dispatch, the session
+/// that owns it.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupMeta {
+    pub level: usize,
+    pub session: Option<u64>,
+}
+
+/// One run's trace + metrics state: a span ring per stable worker index,
+/// a coordinator ring, and the metrics [`Registry`]. All offsets are
+/// measured from the run epoch captured at construction.
+#[derive(Debug)]
+pub struct Recorder {
+    epoch: Instant,
+    worker_rings: Vec<SpanRing>,
+    coord_ring: SpanRing,
+    registry: Registry,
+}
+
+impl Recorder {
+    pub fn new(workers: usize) -> Self {
+        Self::with_capacity(workers, DEFAULT_RING_CAPACITY)
+    }
+
+    pub fn with_capacity(workers: usize, cap: usize) -> Self {
+        Recorder {
+            epoch: Instant::now(),
+            worker_rings: (0..workers).map(|_| SpanRing::new(cap)).collect(),
+            coord_ring: SpanRing::new(cap),
+            registry: Registry::new(),
+        }
+    }
+
+    /// Offset of "now" from the run epoch — capture one before a phase
+    /// to use as that phase's span start.
+    pub fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_rings.len()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    /// Record a coordinator-track span that started at `start` and ends
+    /// now (`step`, `tick` — phases bracketed by the caller).
+    pub fn record(
+        &mut self,
+        name: &'static str,
+        start: Duration,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        let dur = self.now().saturating_sub(start);
+        self.record_span(name, start, dur, args);
+    }
+
+    /// Record a coordinator-track span with an explicit duration
+    /// (`session` spans reconstructed at session end).
+    pub fn record_span(
+        &mut self,
+        name: &'static str,
+        start: Duration,
+        dur: Duration,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.coord_ring.push(Span {
+            name,
+            track: Track::Coordinator,
+            start,
+            dur,
+            args,
+        });
+    }
+
+    /// Ingest one dispatch: a `dispatch` span on the coordinator track
+    /// (spanning the measured makespan), one `task` span per executed
+    /// task on its worker's track, and the dispatch counters/histograms.
+    ///
+    /// `start` is the coordinator-track offset at which the dispatch
+    /// began (capture [`Self::now`] right before calling the pool);
+    /// per-task offsets from the report's dispatch epoch are rebased
+    /// onto it. `groups[g]` describes reduction group `g`. The chunk
+    /// attribute is recovered from task order: within a group, global
+    /// task indices ascend with chunk index (how the dispatcher and the
+    /// fleet build task slices).
+    pub fn ingest_dispatch(
+        &mut self,
+        report: &StepExecReport,
+        start: Duration,
+        groups: &[GroupMeta],
+    ) {
+        self.registry.inc("dmlmc_dispatches_total", 1);
+        self.registry
+            .inc("dmlmc_tasks_dispatched_total", report.n_tasks as u64);
+        self.registry
+            .observe("dmlmc_step_makespan_seconds", report.makespan.as_secs_f64());
+        self.registry.observe(
+            "dmlmc_dispatch_overhead_seconds",
+            report.dispatch_overhead().as_secs_f64(),
+        );
+        self.record_span(
+            "dispatch",
+            start,
+            report.makespan,
+            vec![
+                ("n_tasks", report.n_tasks as f64),
+                ("n_groups", groups.len() as f64),
+                ("workers", report.workers.len() as f64),
+            ],
+        );
+        let mut chunk_within_group = vec![0usize; groups.len()];
+        for t in &report.per_task {
+            let span = self.task_span(t, start, groups, &mut chunk_within_group);
+            if t.worker >= self.worker_rings.len() {
+                // A report from a wider pool than the recorder was sized
+                // for: grow, mirroring ExecStats::record.
+                let cap = self.coord_ring.capacity();
+                self.worker_rings
+                    .resize_with(t.worker + 1, || SpanRing::new(cap));
+            }
+            self.worker_rings[t.worker].push(span);
+        }
+    }
+
+    fn task_span(
+        &self,
+        t: &TaskStat,
+        dispatch_start: Duration,
+        groups: &[GroupMeta],
+        chunk_within_group: &mut [usize],
+    ) -> Span {
+        let mut args = vec![("group", t.group as f64)];
+        if let Some(meta) = groups.get(t.group) {
+            args.push(("level", meta.level as f64));
+            if let Some(session) = meta.session {
+                args.push(("session", session as f64));
+            }
+        }
+        if let Some(c) = chunk_within_group.get_mut(t.group) {
+            args.push(("chunk", *c as f64));
+            *c += 1;
+        }
+        Span {
+            name: "task",
+            track: Track::Worker(t.worker),
+            start: dispatch_start + t.start,
+            dur: t.busy,
+            args,
+        }
+    }
+
+    pub fn coordinator_spans(&self) -> &SpanRing {
+        &self.coord_ring
+    }
+
+    /// The ring of one worker track (empty ring reference semantics:
+    /// panics for an index the recorder never saw — check
+    /// [`Self::workers`] first).
+    pub fn worker_spans(&self, worker: usize) -> &SpanRing {
+        &self.worker_rings[worker]
+    }
+
+    /// Retained span count per worker track (index == worker).
+    pub fn worker_span_counts(&self) -> Vec<usize> {
+        self.worker_rings.iter().map(|r| r.len()).collect()
+    }
+
+    /// Spans evicted across all rings (0 unless a ring overflowed).
+    pub fn dropped_total(&self) -> usize {
+        self.coord_ring.dropped()
+            + self.worker_rings.iter().map(|r| r.dropped()).sum::<usize>()
+    }
+
+    /// The whole trace as a Chrome trace-event JSON document (the
+    /// object form: `{"traceEvents": [...]}`), loadable in Perfetto /
+    /// `chrome://tracing`. Complete (`ph: "X"`) events, timestamps in
+    /// microseconds from the run epoch; `tid` 0 is the coordinator
+    /// track, `tid` w+1 is worker w — named via `thread_name` metadata
+    /// events.
+    pub fn chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(0.0)),
+            ("args", obj(vec![("name", Json::Str("dmlmc".into()))])),
+        ]));
+        let thread_name = |tid: usize, name: String| {
+            obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", obj(vec![("name", Json::Str(name))])),
+            ])
+        };
+        events.push(thread_name(0, "coordinator".into()));
+        for worker in 0..self.worker_rings.len() {
+            events.push(thread_name(worker + 1, format!("worker-{worker}")));
+        }
+        let spans = self
+            .coord_ring
+            .iter()
+            .chain(self.worker_rings.iter().flat_map(|r| r.iter()));
+        for span in spans {
+            let tid = match span.track {
+                Track::Coordinator => 0,
+                Track::Worker(w) => w + 1,
+            };
+            let args: Vec<(&str, Json)> = span
+                .args
+                .iter()
+                .map(|&(k, v)| (k, Json::Num(v)))
+                .collect();
+            events.push(obj(vec![
+                ("name", Json::Str(span.name.into())),
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(tid as f64)),
+                ("ts", Json::Num(span.start.as_secs_f64() * 1e6)),
+                ("dur", Json::Num(span.dur.as_secs_f64() * 1e6)),
+                ("args", obj(args)),
+            ]));
+        }
+        obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("droppedSpans", Json::Num(self.dropped_total() as f64)),
+        ])
+    }
+}
+
+/// Drains a [`Recorder`] into a run directory: `trace.json` (Chrome
+/// trace-event JSON) and `metrics.prom` (Prometheus text exposition).
+#[derive(Debug)]
+pub struct TraceSink<'a> {
+    artifacts: &'a RunArtifacts,
+}
+
+impl<'a> TraceSink<'a> {
+    pub fn new(artifacts: &'a RunArtifacts) -> Self {
+        TraceSink { artifacts }
+    }
+
+    /// Write both artifacts; returns `(trace.json path, metrics.prom
+    /// path)`.
+    pub fn write(
+        &self,
+        recorder: &Recorder,
+    ) -> std::io::Result<(std::path::PathBuf, std::path::PathBuf)> {
+        let trace = self
+            .artifacts
+            .write_text("trace.json", &format!("{}\n", recorder.chrome_trace()))?;
+        let prom = self
+            .artifacts
+            .write_text("metrics.prom", &recorder.metrics().render_prometheus())?;
+        Ok((trace, prom))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::WorkerStat;
+
+    fn report() -> StepExecReport {
+        StepExecReport {
+            workers: vec![
+                WorkerStat { worker: 0, busy: Duration::from_millis(20), tasks: 2 },
+                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1 },
+            ],
+            makespan: Duration::from_millis(25),
+            n_tasks: 3,
+            per_task: vec![
+                TaskStat {
+                    task: 0,
+                    group: 0,
+                    worker: 0,
+                    start: Duration::ZERO,
+                    busy: Duration::from_millis(10),
+                },
+                TaskStat {
+                    task: 1,
+                    group: 0,
+                    worker: 1,
+                    start: Duration::from_millis(2),
+                    busy: Duration::from_millis(10),
+                },
+                TaskStat {
+                    task: 2,
+                    group: 1,
+                    worker: 0,
+                    start: Duration::from_millis(12),
+                    busy: Duration::from_millis(10),
+                },
+            ],
+        }
+    }
+
+    fn groups() -> Vec<GroupMeta> {
+        vec![
+            GroupMeta { level: 0, session: Some(7) },
+            GroupMeta { level: 2, session: Some(7) },
+        ]
+    }
+
+    #[test]
+    fn ingest_fans_tasks_out_to_worker_tracks() {
+        let mut rec = Recorder::new(2);
+        rec.ingest_dispatch(&report(), Duration::from_millis(100), &groups());
+        assert_eq!(rec.worker_span_counts(), vec![2, 1]);
+        assert_eq!(rec.coordinator_spans().len(), 1);
+        let dispatch = rec.coordinator_spans().iter().next().unwrap();
+        assert_eq!(dispatch.name, "dispatch");
+        assert_eq!(dispatch.start, Duration::from_millis(100));
+        assert_eq!(dispatch.dur, Duration::from_millis(25));
+        // task spans rebased onto the dispatch start, attrs in place
+        let w0: Vec<&Span> = rec.worker_spans(0).iter().collect();
+        assert_eq!(w0[0].start, Duration::from_millis(100));
+        assert_eq!(w0[1].start, Duration::from_millis(112));
+        let attr = |s: &Span, k: &str| {
+            s.args.iter().find(|(n, _)| *n == k).map(|&(_, v)| v)
+        };
+        assert_eq!(attr(w0[0], "level"), Some(0.0));
+        assert_eq!(attr(w0[0], "chunk"), Some(0.0));
+        assert_eq!(attr(w0[1], "level"), Some(2.0));
+        assert_eq!(attr(w0[1], "chunk"), Some(0.0));
+        assert_eq!(attr(w0[1], "session"), Some(7.0));
+        // second task of group 0 (on worker 1) is chunk 1
+        let w1: Vec<&Span> = rec.worker_spans(1).iter().collect();
+        assert_eq!(attr(w1[0], "chunk"), Some(1.0));
+        // counters + histograms filled
+        assert_eq!(rec.metrics().counter("dmlmc_dispatches_total"), 1);
+        assert_eq!(rec.metrics().counter("dmlmc_tasks_dispatched_total"), 3);
+        let h = rec.metrics().histogram("dmlmc_step_makespan_seconds").unwrap();
+        assert_eq!(h.count(), 1);
+        assert!((h.max() - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ingest_reconciles_span_durations_with_worker_busy() {
+        let mut rec = Recorder::new(2);
+        let r = report();
+        rec.ingest_dispatch(&r, Duration::ZERO, &groups());
+        for w in &r.workers {
+            let span_sum: Duration =
+                rec.worker_spans(w.worker).iter().map(|s| s.dur).sum();
+            assert_eq!(span_sum, w.busy, "worker {} rollup drifted", w.worker);
+        }
+    }
+
+    #[test]
+    fn ingest_grows_for_unknown_worker_index() {
+        let mut rec = Recorder::new(1);
+        rec.ingest_dispatch(&report(), Duration::ZERO, &groups());
+        assert_eq!(rec.workers(), 2);
+        assert_eq!(rec.worker_span_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_tracks_are_named() {
+        let mut rec = Recorder::new(2);
+        let step_start = rec.now();
+        rec.ingest_dispatch(&report(), step_start, &groups());
+        rec.record("step", step_start, vec![("step", 0.0)]);
+        let doc = rec.chrome_trace();
+        // round-trips through the strict parser
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata (process + coordinator + 2 workers = 4) ...
+        let metas: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 4);
+        let names: Vec<&str> = metas
+            .iter()
+            .filter_map(|e| e.get("args").unwrap().get("name").unwrap().as_str())
+            .collect();
+        assert!(names.contains(&"coordinator"));
+        assert!(names.contains(&"worker-0"));
+        assert!(names.contains(&"worker-1"));
+        // ... plus complete spans: 1 dispatch + 3 tasks + 1 step
+        let complete: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(complete.len(), 5);
+        for e in &complete {
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("tid").unwrap().as_usize().is_some());
+        }
+        // every worker track carries at least one task span
+        for tid in [1usize, 2] {
+            assert!(
+                complete.iter().any(|e| {
+                    e.get("tid").unwrap().as_usize() == Some(tid)
+                        && e.get("name").unwrap().as_str() == Some("task")
+                }),
+                "no task span on worker track tid={tid}"
+            );
+        }
+        assert_eq!(back.get("droppedSpans").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn sink_writes_trace_and_metrics() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let out = std::env::temp_dir().join(format!(
+            "dmlmc_obs_test_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let arts = RunArtifacts::create(&out, "obs").unwrap();
+        let mut rec = Recorder::new(1);
+        rec.ingest_dispatch(&report(), Duration::ZERO, &groups());
+        let (trace, prom) = TraceSink::new(&arts).write(&rec).unwrap();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        assert!(Json::parse(text.trim()).is_ok());
+        let prom_text = std::fs::read_to_string(&prom).unwrap();
+        assert!(prom_text.contains("dmlmc_tasks_dispatched_total 3"));
+        std::fs::remove_dir_all(&out).unwrap();
+    }
+}

@@ -105,6 +105,36 @@
 //! ```text
 //! repro fleet-sweep --fleet-sizes 1,2,4 --workers 2,4 --steps 16
 //! ```
+//!
+//! # Observability (`--trace`, `repro trace`)
+//!
+//! Every training/experiment subcommand accepts the `--trace` switch
+//! (TOML: `[observability] trace = true`; `ring_capacity` bounds the
+//! per-track span rings). Tracing is **off by default** — an untraced
+//! run carries no recorder at all — and when enabled it is ingested
+//! coordinator-side from the per-dispatch
+//! [`crate::exec::StepExecReport`] telemetry, so the worker hot path
+//! records nothing new and the trained parameters stay bit-identical
+//! (pinned by test). A traced `repro train` exports two extra artifacts
+//! into its run directory: `trace.json` — Chrome trace-event JSON
+//! (load in Perfetto or `chrome://tracing`; one track per stable worker
+//! index plus a coordinator track; `task` spans carry level / group /
+//! chunk / session attrs, the coordinator track carries `dispatch` /
+//! `step` / `tick` / `session` spans) — and `metrics.prom`, a
+//! Prometheus text-exposition snapshot of the run's counters, gauges
+//! and latency histograms ([`crate::obs::Registry`]).
+//!
+//! `repro trace` (`make trace`) is the overhead bench: it runs the same
+//! DMLMC training with tracing off and on (`--repeats` pairs,
+//! best-of-means compared), asserts the trajectories are bit-identical
+//! and the traced makespan within a bounded factor of untraced, exports
+//! the traced run's `trace.json` / `metrics.prom`, and writes
+//! `BENCH_obs.json`. Examples:
+//!
+//! ```text
+//! repro train --method dmlmc --trace
+//! repro trace --workers 2 --steps 24 --repeats 2
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;

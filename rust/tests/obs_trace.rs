@@ -1,0 +1,234 @@
+//! Integration suite for the observability layer (`dmlmc::obs`): span
+//! ingestion reconciles bit-for-bit with the pool's busy telemetry even
+//! under chaos scheduling, tracing never perturbs a training or fleet
+//! trajectory, and the exported `trace.json` / `metrics.prom` artifacts
+//! parse with the expected tracks and phases.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dmlmc::config::ExperimentConfig;
+use dmlmc::coordinator::{
+    run_jobs_pool_with_report, FleetCoordinator, LevelJobSpec, Method,
+    TrainerBuilder,
+};
+use dmlmc::engine::mlp::init_params;
+use dmlmc::exec::WorkerPool;
+use dmlmc::hedging::Problem;
+use dmlmc::metrics::RunArtifacts;
+use dmlmc::obs::{GroupMeta, Recorder, TraceSink};
+use dmlmc::rng::BrownianSource;
+use dmlmc::runtime::NativeBackend;
+use dmlmc::util::json::Json;
+
+fn smoke_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.train.steps = 6;
+    cfg.train.eval_every = 2;
+    cfg.mlmc.n_effective = 64;
+    cfg
+}
+
+/// Satellite contract: per worker track, the summed `task` span
+/// durations must equal the pool's `WorkerStat::busy` rollup
+/// bit-for-bit — on a REAL dispatch, with chaos sleeps scrambling the
+/// schedule, at P = 1 and P = 4. The spans are re-materialized from the
+/// same `TaskStat` telemetry the rollup was built from, so any drift
+/// means the recorder invented or lost time.
+#[test]
+fn chaos_dispatch_spans_reconcile_with_worker_busy_bitwise() {
+    let backend = Arc::new(NativeBackend::new(Problem::default()));
+    let src = BrownianSource::new(11);
+    let params = init_params(0);
+    let jobs = vec![
+        LevelJobSpec { level: 0, n_chunks: 4 },
+        LevelJobSpec { level: 2, n_chunks: 3 },
+        LevelJobSpec { level: 5, n_chunks: 2 },
+    ];
+    let metas: Vec<GroupMeta> = jobs
+        .iter()
+        .map(|j| GroupMeta { level: j.level, session: None })
+        .collect();
+    for workers in [1usize, 4] {
+        let mut pool = WorkerPool::new(workers);
+        pool.set_chaos_delays(0x5A, 400);
+        let (_, report) =
+            run_jobs_pool_with_report(&backend, &src, 7, &params, &jobs, &mut pool)
+                .unwrap();
+        let mut rec = Recorder::new(workers);
+        let start = Duration::from_millis(3);
+        rec.ingest_dispatch(&report, start, &metas);
+        for w in &report.workers {
+            let span_sum: Duration =
+                rec.worker_spans(w.worker).iter().map(|s| s.dur).sum();
+            assert_eq!(
+                span_sum, w.busy,
+                "P={workers}: worker {} span rollup drifted from busy",
+                w.worker
+            );
+        }
+        let total_spans: usize = rec.worker_span_counts().iter().sum();
+        assert_eq!(total_spans, report.n_tasks, "P={workers}: span count");
+        assert_eq!(rec.coordinator_spans().len(), 1, "P={workers}");
+        // every task span sits inside the dispatch window
+        let dispatch_end = start + report.makespan;
+        for w in 0..rec.workers() {
+            for s in rec.worker_spans(w).iter() {
+                assert!(s.start >= start, "P={workers}: span before dispatch");
+                assert!(
+                    s.start + s.dur <= dispatch_end,
+                    "P={workers}: span past makespan"
+                );
+            }
+        }
+    }
+}
+
+/// Tracing must be invisible to the computation: identical final
+/// parameters and learning curves with the recorder on and off, at
+/// P = 1 and P = 4.
+#[test]
+fn tracing_never_changes_trained_parameters_across_worker_counts() {
+    for workers in [1usize, 4] {
+        let mut cfg = smoke_cfg();
+        cfg.execution.workers = workers;
+        let run = |trace: bool| {
+            let mut tr = TrainerBuilder::new(&cfg)
+                .method(Method::Dmlmc)
+                .seed(5)
+                .trace(trace)
+                .build()
+                .unwrap();
+            let curve = tr.run().unwrap();
+            (curve, tr.params.clone())
+        };
+        let (plain_curve, plain_params) = run(false);
+        let (traced_curve, traced_params) = run(true);
+        assert_eq!(plain_params.len(), traced_params.len());
+        for (a, b) in plain_params.iter().zip(&traced_params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "P={workers}: params diverged");
+        }
+        for (a, b) in plain_curve.points.iter().zip(&traced_curve.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "P={workers}: curve");
+        }
+    }
+}
+
+/// End-to-end export: a traced training run drains through `TraceSink`
+/// into artifacts that round-trip the strict JSON parser with named
+/// coordinator/worker tracks, `task`/`dispatch`/`step` phases, and a
+/// Prometheus dump carrying the run's counters.
+#[test]
+fn traced_train_exports_parseable_tracks_and_phases() {
+    let mut cfg = smoke_cfg();
+    cfg.execution.workers = 2;
+    let mut tr = TrainerBuilder::new(&cfg)
+        .method(Method::Dmlmc)
+        .seed(0)
+        .trace(true)
+        .build()
+        .unwrap();
+    tr.run().unwrap();
+    let rec = tr.take_recorder().expect("traced trainer has a recorder");
+
+    let out = std::env::temp_dir()
+        .join(format!("dmlmc_obs_trace_it_{}", std::process::id()));
+    let arts = RunArtifacts::create(&out, "trace").unwrap();
+    let (trace_path, prom_path) = TraceSink::new(&arts).write(&rec).unwrap();
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let doc = Json::parse(text.trim()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let track_names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+        .filter_map(|e| e.get("args").unwrap().get("name").unwrap().as_str())
+        .collect();
+    assert!(track_names.contains(&"coordinator"), "{track_names:?}");
+    assert!(track_names.contains(&"worker-0"), "{track_names:?}");
+    assert!(track_names.contains(&"worker-1"), "{track_names:?}");
+    let phase_of = |name: &str| {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str() == Some("X")
+                    && e.get("name").unwrap().as_str() == Some(name)
+            })
+            .count()
+    };
+    // 6 steps => 6 step spans bracketing 6 dispatch spans, with task
+    // spans underneath them
+    assert_eq!(phase_of("step"), 6);
+    assert_eq!(phase_of("dispatch"), 6);
+    assert!(phase_of("task") > 0);
+    assert_eq!(doc.get("droppedSpans").unwrap().as_usize(), Some(0));
+
+    let prom = std::fs::read_to_string(&prom_path).unwrap();
+    assert!(prom.contains("dmlmc_steps_total 6"), "{prom}");
+    assert!(prom.contains("dmlmc_dispatches_total 6"), "{prom}");
+    assert!(prom.contains("dmlmc_pool_workers 2"), "{prom}");
+    assert!(prom.contains("dmlmc_step_makespan_seconds_count"), "{prom}");
+    std::fs::remove_dir_all(&out).unwrap();
+}
+
+/// A traced fleet run stays bitwise identical to an untraced one and
+/// records the serving-layer span vocabulary: `tick` spans on the
+/// coordinator track, one `session` span per completed session, and
+/// `task` spans carrying the owning session attr.
+#[test]
+fn traced_fleet_matches_untraced_and_records_session_spans() {
+    let cfg = smoke_cfg();
+    let run = |trace: bool| {
+        let mut fleet = FleetCoordinator::new(2);
+        if trace {
+            fleet.enable_tracing();
+        }
+        fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(1))
+            .unwrap();
+        fleet
+            .submit("b", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(2))
+            .unwrap();
+        let runs = fleet.drain().unwrap();
+        (runs, fleet.take_recorder())
+    };
+    let (plain, no_rec) = run(false);
+    let (traced, rec) = run(true);
+    assert!(no_rec.is_none());
+    let rec = rec.expect("traced fleet has a recorder");
+
+    assert_eq!(plain.len(), traced.len());
+    for (p, t) in plain.iter().zip(&traced) {
+        assert_eq!(p.name, t.name);
+        for (a, b) in p.final_params.iter().zip(&t.final_params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: params diverged", p.name);
+        }
+        for (a, b) in p.curve.points.iter().zip(&t.curve.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{}: curve", p.name);
+        }
+    }
+
+    let coord = |name: &str| {
+        rec.coordinator_spans().iter().filter(|s| s.name == name).count()
+    };
+    // both sessions run concurrently: 6 ticks, one dispatch each
+    assert_eq!(coord("tick"), 6);
+    assert_eq!(coord("dispatch"), 6);
+    assert_eq!(coord("session"), 2);
+    assert_eq!(rec.metrics().counter("dmlmc_sessions_admitted_total"), 2);
+    assert_eq!(rec.metrics().counter("dmlmc_ticks_total"), 6);
+    // task spans are attributed to their owning session
+    let mut session_attrs: Vec<f64> = (0..rec.workers())
+        .flat_map(|w| {
+            rec.worker_spans(w)
+                .iter()
+                .filter_map(|s| {
+                    s.args.iter().find(|(k, _)| *k == "session").map(|&(_, v)| v)
+                })
+                .collect::<Vec<f64>>()
+        })
+        .collect();
+    session_attrs.sort_by(f64::total_cmp);
+    session_attrs.dedup();
+    assert_eq!(session_attrs, vec![0.0, 1.0], "both sessions attributed");
+}
