@@ -12,7 +12,7 @@
 ARTIFACTS_DIR := rust/artifacts
 
 .PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec \
-	bench-fleet trace clean
+	bench-fleet bench-hotpath trace clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -47,6 +47,12 @@ bench-exec:
 # `repro fleet-sweep --help`).
 bench-fleet:
 	cd rust && cargo run --release --bin repro -- fleet-sweep --quiet
+
+# Scalar vs lane-blocked (SIMD) kernel throughput per scenario; emits
+# rust/BENCH_hotpath.json with paths_per_sec and speedup per cell (see
+# `repro hotpath-bench --help`).
+bench-hotpath:
+	cd rust && cargo run --release --bin repro -- hotpath-bench --quiet
 
 # Overhead-bounded tracing bench: the same DMLMC training traced and
 # untraced (bit-identical parameters asserted), exporting trace.json

@@ -9,6 +9,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::exec::stats::percentile;
+
 /// One benchmark runner with fixed warmup/measure budgets.
 #[derive(Debug, Clone, Copy)]
 pub struct Harness {
@@ -49,6 +51,28 @@ impl Summary {
     }
 }
 
+/// Fold raw per-iteration wall times into a [`Summary`] using the
+/// crate's ONE percentile definition ([`percentile`], nearest-rank) —
+/// the same "p90" the run manifests ([`crate::metrics`]) and the obs
+/// histogram summaries report, so a number labeled p90 means the same
+/// thing in `BENCH` lines and on disk. Panics on an empty sample set
+/// (a bench that measured nothing is a harness bug, not a statistic).
+pub fn summarize(name: &str, samples: &[Duration]) -> Summary {
+    assert!(!samples.is_empty(), "no samples to summarize");
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let iters = samples.len();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let pct = |q: f64| Duration::from_secs_f64(percentile(&secs, q));
+    Summary {
+        name: name.to_string(),
+        iters,
+        median: pct(0.5),
+        mean,
+        p10: pct(0.1),
+        p90: pct(0.9),
+    }
+}
+
 impl Harness {
     /// Quick preset for expensive end-to-end benches.
     pub fn quick() -> Self {
@@ -77,18 +101,7 @@ impl Harness {
             f();
             samples.push(t0.elapsed());
         }
-        samples.sort();
-        let iters = samples.len();
-        let pct = |p: f64| samples[((iters - 1) as f64 * p) as usize];
-        let mean = samples.iter().sum::<Duration>() / iters as u32;
-        let s = Summary {
-            name: name.to_string(),
-            iters,
-            median: pct(0.5),
-            mean,
-            p10: pct(0.1),
-            p90: pct(0.9),
-        };
+        let s = summarize(name, &samples);
         println!("{}", s.report());
         s
     }
@@ -138,6 +151,33 @@ mod tests {
             black_box(v);
         });
         assert!(expensive.median > cheap.median);
+    }
+
+    #[test]
+    fn summary_percentiles_pin_to_the_shared_definition() {
+        // Regression pin for the dedupe: bench summaries must keep using
+        // exec::stats::percentile (nearest-rank), not a private variant.
+        let samples: Vec<Duration> = [4u64, 1, 3, 2, 5]
+            .iter()
+            .map(|&ms| Duration::from_millis(ms))
+            .collect();
+        let s = summarize("pin", &samples);
+        let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        for (got, q) in [(s.median, 0.5), (s.p10, 0.1), (s.p90, 0.9)] {
+            assert_eq!(got, Duration::from_secs_f64(percentile(&secs, q)));
+        }
+        assert_eq!(s.median, Duration::from_millis(3));
+        // nearest-rank: p10 of 5 samples is the smallest element
+        assert_eq!(s.p10, Duration::from_millis(1));
+        assert_eq!(s.p90, Duration::from_millis(5));
+        assert_eq!(s.mean, Duration::from_millis(3));
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn summarize_rejects_empty_input() {
+        summarize("empty", &[]);
     }
 
     #[test]

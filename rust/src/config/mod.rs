@@ -109,6 +109,19 @@ pub struct ExecutionConfig {
     /// always dispatch sequentially regardless of this setting.
     /// Gradients are bit-identical for every value (tested).
     pub workers: usize,
+    /// Route the native hot path through the lane-blocked SIMD kernels
+    /// (`--simd` on the CLI): the scenario key gains a `-simd` suffix and
+    /// dispatches through [`crate::scenarios::kernels`]' lane variants.
+    /// SIMD kernels reassociate f32 reductions, so results match the
+    /// scalar reference to relative tolerance instead of bitwise —
+    /// which is why this is opt-in and rejected on the XLA backend.
+    pub simd: bool,
+    /// Pin each resident pool worker to a CPU core
+    /// (`sched_setaffinity` on Linux, silent no-op elsewhere — see
+    /// [`crate::exec::affinity`]). Worker `i` goes to core
+    /// `i % available_cores`; the realized mapping is reported per
+    /// worker in [`crate::exec::StepExecReport`].
+    pub pin_cores: bool,
 }
 
 impl ExecutionConfig {
@@ -312,6 +325,12 @@ impl ExperimentConfig {
         if let Some(v) = getu("execution.workers") {
             cfg.execution.workers = v;
         }
+        if let Some(v) = doc.get("execution.simd").and_then(|v| v.as_bool()) {
+            cfg.execution.simd = v;
+        }
+        if let Some(v) = doc.get("execution.pin_cores").and_then(|v| v.as_bool()) {
+            cfg.execution.pin_cores = v;
+        }
 
         // [observability]
         if let Some(v) = doc.get("observability.trace").and_then(|v| v.as_bool()) {
@@ -357,7 +376,27 @@ impl ExperimentConfig {
                 self.scenario
             ));
         }
+        if self.execution.simd && self.runtime.backend == Backend::Xla {
+            return Err(
+                "`[execution] simd` requires `runtime.backend = \"native\"` \
+                 (the lane-blocked kernels live in the native engine)"
+                    .into(),
+            );
+        }
         Ok(())
+    }
+
+    /// The scenario key the native backend should actually run:
+    /// `scenario`, suffixed with `-simd` when `[execution] simd` asks for
+    /// the lane-blocked kernels (idempotent if the key already carries
+    /// the suffix). The `-simd` variant of every registered key resolves
+    /// by construction, so this never invalidates a validated config.
+    pub fn effective_scenario(&self) -> String {
+        if self.execution.simd && !self.scenario.ends_with("-simd") {
+            format!("{}-simd", self.scenario)
+        } else {
+            self.scenario.clone()
+        }
     }
 
     /// Sanity constraints (paper requirements and practical limits) that
@@ -413,6 +452,8 @@ const KNOWN_KEYS: &[&str] = &[
     "train.dmlmc_warmup",
     "scenario.name",
     "execution.workers",
+    "execution.simd",
+    "execution.pin_cores",
     "observability.trace",
     "observability.ring_capacity",
     "runtime.backend",
@@ -533,11 +574,57 @@ backend = "native"
         assert_eq!(cfg.execution.resolved_workers(), 4);
 
         // explicit single worker stays single
-        let one = ExecutionConfig { workers: 1 };
+        let one = ExecutionConfig {
+            workers: 1,
+            ..Default::default()
+        };
         assert_eq!(one.resolved_workers(), 1);
 
         // typo'd key still rejected
         assert!(ExperimentConfig::from_toml("[execution]\nworkerz = 2").is_err());
+    }
+
+    #[test]
+    fn execution_simd_and_pin_cores_parse_and_validate() {
+        let cfg = ExperimentConfig::default();
+        assert!(!cfg.execution.simd && !cfg.execution.pin_cores);
+        assert_eq!(cfg.effective_scenario(), DEFAULT_SCENARIO);
+
+        let cfg = ExperimentConfig::from_toml(
+            "[execution]\nsimd = true\npin_cores = true\n\n\
+             [runtime]\nbackend = \"native\"",
+        )
+        .unwrap();
+        assert!(cfg.execution.simd && cfg.execution.pin_cores);
+        assert_eq!(cfg.effective_scenario(), "bs-call-simd");
+        assert!(cfg.validate().is_ok());
+
+        // -simd suffixing is idempotent
+        let mut simd = cfg.clone();
+        simd.scenario = "heston-uo-call-simd".to_string();
+        assert_eq!(simd.effective_scenario(), "heston-uo-call-simd");
+
+        // simd on the XLA backend is rejected after overrides
+        let mut bad = cfg;
+        bad.runtime.backend = Backend::Xla;
+        let e = bad.validate().unwrap_err();
+        assert!(e.contains("simd"), "{e}");
+    }
+
+    #[test]
+    fn simd_scenario_keys_validate_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            "[scenario]\nname = \"cir-digital-simd\"\n\n\
+             [runtime]\nbackend = \"native\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario, "cir-digital-simd");
+        assert!(cfg.validate().is_ok());
+        // junk around the suffix still rejected
+        assert!(ExperimentConfig::from_toml(
+            "[scenario]\nname = \"bs-simd\"\n\n[runtime]\nbackend = \"native\"",
+        )
+        .is_err());
     }
 
     #[test]

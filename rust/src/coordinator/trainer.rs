@@ -23,7 +23,7 @@ use super::method::Method;
 use super::scheduler::DelayedSchedule;
 use crate::config::{Backend, ExperimentConfig};
 use crate::engine;
-use crate::exec::{ChunkTask, ExecStats, WorkerPool};
+use crate::exec::{ChunkTask, ExecStats, SpawnMode, WorkerPool};
 use crate::metrics::{CurvePoint, LearningCurve};
 use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
 use crate::mlmc::LevelAllocation;
@@ -163,6 +163,23 @@ impl TrainerBuilder {
         self
     }
 
+    /// Route the native hot path through the lane-blocked SIMD kernels
+    /// (equivalent to `--simd` / `[execution] simd = true`): the
+    /// backend is built for the scenario's `-simd` registry key.
+    /// Reassociates f32 reductions — tolerance-validated, not bitwise.
+    pub fn simd(mut self, enabled: bool) -> Self {
+        self.cfg.execution.simd = enabled;
+        self
+    }
+
+    /// Pin the pool's workers round-robin to CPU cores (equivalent to
+    /// `--pin-cores` / `[execution] pin_cores = true`). Best-effort and
+    /// numerics-neutral; placement lands in `StepExecReport`.
+    pub fn pin_cores(mut self, enabled: bool) -> Self {
+        self.cfg.execution.pin_cores = enabled;
+        self
+    }
+
     /// Inject an explicit backend (dependency injection for tests)
     /// instead of building one from the config.
     pub fn backend(mut self, backend: Box<dyn GradBackend>) -> Self {
@@ -203,8 +220,11 @@ impl TrainerBuilder {
             Some(b) => b,
             None => match cfg.runtime.backend {
                 Backend::Native => {
+                    // `[execution] simd` appends the `-simd` key suffix,
+                    // routing the backend onto the lane-blocked kernels
+                    // (see `NativeBackend::is_simd`).
                     let scenario = crate::scenarios::build_scenario_or_err(
-                        &cfg.scenario,
+                        &cfg.effective_scenario(),
                         &cfg.problem,
                     )?;
                     Box::new(NativeBackend::with_scenario(cfg.problem, scenario))
@@ -266,9 +286,13 @@ impl TrainerBuilder {
             params.len()
         );
         let pool = if local_pool {
-            backend
-                .shared()
-                .map(|_| WorkerPool::new(cfg.execution.resolved_workers()))
+            backend.shared().map(|_| {
+                WorkerPool::with_options(
+                    cfg.execution.resolved_workers(),
+                    SpawnMode::Resident,
+                    cfg.execution.pin_cores,
+                )
+            })
         } else {
             None
         };
@@ -1070,6 +1094,58 @@ mod tests {
         );
         assert!(tr.take_recorder().is_some());
         assert!(tr.recorder().is_none(), "take_recorder detaches");
+    }
+
+    #[test]
+    fn simd_execution_trains_and_tracks_the_scalar_trajectory() {
+        // `[execution] simd` must route the SAME scenario through the
+        // lane kernels: the trajectory is tolerance-close (lane kernels
+        // reassociate f32 reductions), finite throughout, and actually
+        // produced under the `-simd` registry key.
+        let mut cfg = smoke_cfg();
+        cfg.scenario = "heston-uo-call".to_string();
+        cfg.train.steps = 4;
+        cfg.train.eval_every = 2;
+        let mut scalar = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        let c_scalar = scalar.run().unwrap();
+        let mut simd = TrainerBuilder::new(&cfg)
+            .method(Method::Dmlmc)
+            .simd(true)
+            .build()
+            .unwrap();
+        assert_eq!(simd.cfg.effective_scenario(), "heston-uo-call-simd");
+        let c_simd = simd.run().unwrap();
+        assert_eq!(c_simd.points.len(), c_scalar.points.len());
+        for (a, b) in c_simd.points.iter().zip(&c_scalar.points) {
+            assert!(a.loss.is_finite());
+            let tol = 5e-2 * b.loss.abs().max(1.0);
+            assert!(
+                (a.loss - b.loss).abs() <= tol,
+                "step {}: simd loss {} vs scalar {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+        }
+    }
+
+    #[test]
+    fn pin_cores_is_bitwise_invariant_and_reported() {
+        // Pinning touches thread placement only — the trajectory must be
+        // bit-identical with it on or off.
+        let run = |pin: bool| {
+            let mut cfg = smoke_cfg();
+            cfg.train.steps = 4;
+            cfg.execution.workers = 2;
+            let mut tr = TrainerBuilder::new(&cfg)
+                .method(Method::Dmlmc)
+                .pin_cores(pin)
+                .build()
+                .unwrap();
+            tr.run().unwrap();
+            tr.params.clone()
+        };
+        assert_eq!(run(true), run(false), "pin_cores changed the numbers");
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Lane-blocked objective hot path: [`LANES`] paths integrated
+//! simultaneously through explicit `[f32; LANES]` arrays (no nightly
+//! `std::simd`), with the hedging MLP forwarded/backpropagated
+//! [`LANES`] residual rows per call ([`super::mlp::forward_rows8`] /
+//! [`super::mlp::backward_rows8`]).
+//!
+//! # Layout
+//!
+//! The batch is cut into `batch / LANES` blocks of consecutive paths.
+//! Per block, [`crate::rng::BrownianSource::lane_block`] transposes the
+//! factor-major increments into step-major lane rows
+//! (`dw[(k * n_steps + t) * LANES + l]`), so the integrator, the gains
+//! accumulation and the streaming payoff observers all sweep contiguous
+//! 8-wide vectors in their inner loops. The `batch % LANES` remainder
+//! paths fold through the **scalar** body
+//! ([`super::objective::accumulate_range`]) — no duplicated arithmetic.
+//!
+//! # Numerical contract
+//!
+//! Per lane, the SDE recurrence performs the *same f32 operations in the
+//! same order* as the scalar [`super::milstein::fold_path`], so path
+//! states — and with them every payoff observation, including barrier
+//! hits and digital indicator flips — are **bit-identical** to the
+//! scalar reference. What differs: the MLP uses the branchless polynomial
+//! `exp` (relative error ~1e-6) and the parameter gradients are
+//! lane-summed (f32 reassociation). That is why these kernels register
+//! under `*-simd` scenario keys with tolerance-based validation
+//! ([`crate::scenarios::kernels`]) instead of joining the bitwise
+//! anchors.
+//!
+//! Entry points are generic over **concrete** `S: Sde, P: Payoff` so the
+//! static kernel registry monomorphizes one instantiation per scenario —
+//! no virtual call anywhere in the per-step loop.
+
+use super::mlp::{
+    backward_rows8, forward_rows8, MlpParams, RowTape8, LANES, N_PARAMS, OFF_P0,
+};
+use super::objective::accumulate_range;
+use crate::hedging::Problem;
+use crate::rng::BrownianSource;
+use crate::scenarios::payoff::PathAccum;
+use crate::scenarios::sde::{State, MAX_DIM};
+use crate::scenarios::{Payoff, Sde};
+
+/// Loss + gradient of the mean objective on one grid — lane-blocked
+/// mirror of [`super::objective::value_and_grad_scenario`] over concrete
+/// scenario components.
+pub fn value_and_grad<S: Sde, P: Payoff>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> (f64, Vec<f32>) {
+    let mut grad = vec![0.0f32; N_PARAMS];
+    let total = accumulate_lanes(
+        params, dw, batch, n_steps, problem, sde, payoff, 1.0, &mut grad,
+    );
+    (total / batch as f64, grad)
+}
+
+/// Coupled `Delta_l` loss + gradient from fine-grid increments —
+/// lane-blocked mirror of
+/// [`super::objective::coupled_value_and_grad_scenario`].
+pub fn coupled_value_and_grad<S: Sde, P: Payoff>(
+    params: &[f32],
+    dw_fine: &[f32],
+    batch: usize,
+    level: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> (f64, Vec<f32>) {
+    let n_fine = problem.n_steps(level);
+    let mut grad = vec![0.0f32; N_PARAMS];
+    let mut loss = accumulate_lanes(
+        params, dw_fine, batch, n_fine, problem, sde, payoff, 1.0, &mut grad,
+    ) / batch as f64;
+    if level > 0 {
+        let dw_coarse =
+            BrownianSource::coarsen_multi(dw_fine, sde.dim(), batch, n_fine);
+        loss -= accumulate_lanes(
+            params, &dw_coarse, batch, n_fine / 2, problem, sde, payoff, -1.0,
+            &mut grad,
+        ) / batch as f64;
+    }
+    (loss, grad)
+}
+
+/// Loss only — lane-blocked mirror of
+/// [`super::objective::loss_only_scenario`]. Integration and MLP forward
+/// run lane-blocked; the remainder reuses the scalar gradient body with a
+/// scratch gradient (at most `LANES - 1` paths, negligible).
+pub fn loss_only<S: Sde, P: Payoff>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+) -> f64 {
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
+    let p = MlpParams::new(params);
+    let dt = (problem.maturity / n_steps as f64) as f32;
+    let dt_grid = problem.maturity as f32 / n_steps as f32;
+    let n_blocks = batch / LANES;
+    let mut lane_dw = vec![0.0f32; dim * n_steps * LANES];
+    let mut total = 0.0f64;
+    for blk in 0..n_blocks {
+        BrownianSource::lane_block(
+            dw, dim, batch, n_steps, blk * LANES, LANES, &mut lane_dw,
+        );
+        let r = integrate_block(
+            &p, &lane_dw, n_steps, dt, dt_grid, sde, payoff, &mut NoTapes,
+        );
+        for l in 0..LANES {
+            total += (r[l] as f64) * (r[l] as f64);
+        }
+    }
+    let rem_start = n_blocks * LANES;
+    if rem_start < batch {
+        let mut scratch = vec![0.0f32; N_PARAMS];
+        total += accumulate_range(
+            params, dw, batch, n_steps, problem, sde, payoff, 1.0,
+            &mut scratch, rem_start, batch,
+        );
+    }
+    total / batch as f64
+}
+
+/// Shared lane-blocked fwd+bwd, the mirror of the scalar
+/// [`accumulate_range`] over the whole batch: returns the raw `sum r^2`
+/// and accumulates `sign * grad` into `grad`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_lanes<S: Sde, P: Payoff>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+    sign: f32,
+    grad: &mut [f32],
+) -> f64 {
+    let dim = sde.dim();
+    assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
+    let p = MlpParams::new(params);
+    let dt = (problem.maturity / n_steps as f64) as f32;
+    let dt_grid = problem.maturity as f32 / n_steps as f32;
+    let inv_b = 1.0f32 / batch as f32;
+
+    let n_blocks = batch / LANES;
+    let mut lane_dw = vec![0.0f32; dim * n_steps * LANES];
+    let mut rec = TapeRecorder {
+        tapes: Vec::with_capacity(n_steps),
+        ds: vec![[0.0f32; LANES]; n_steps],
+    };
+    let mut total = 0.0f64;
+    for blk in 0..n_blocks {
+        BrownianSource::lane_block(
+            dw, dim, batch, n_steps, blk * LANES, LANES, &mut lane_dw,
+        );
+        rec.tapes.clear();
+        let r = integrate_block(
+            &p, &lane_dw, n_steps, dt, dt_grid, sde, payoff, &mut rec,
+        );
+        let mut dr = [0.0f32; LANES];
+        for l in 0..LANES {
+            total += (r[l] as f64) * (r[l] as f64);
+            dr[l] = sign * 2.0 * r[l] * inv_b;
+            grad[OFF_P0] += -dr[l];
+        }
+        for n in 0..n_steps {
+            let mut g = [0.0f32; LANES];
+            for l in 0..LANES {
+                g[l] = -dr[l] * rec.ds[n][l];
+            }
+            backward_rows8(&p, &rec.tapes[n], &g, grad);
+        }
+    }
+
+    let rem_start = n_blocks * LANES;
+    if rem_start < batch {
+        total += accumulate_range(
+            params, dw, batch, n_steps, problem, sde, payoff, sign, grad,
+            rem_start, batch,
+        );
+    }
+    total
+}
+
+/// What [`integrate_block`] records per step: the gradient path keeps the
+/// MLP tapes + price increments, the loss-only path keeps nothing.
+trait StepSink {
+    fn record(&mut self, t: usize, ds: &[f32; LANES], tape: Option<RowTape8>);
+}
+
+struct TapeRecorder {
+    tapes: Vec<RowTape8>,
+    ds: Vec<[f32; LANES]>,
+}
+
+impl StepSink for TapeRecorder {
+    #[inline]
+    fn record(&mut self, t: usize, ds: &[f32; LANES], tape: Option<RowTape8>) {
+        self.ds[t - 1] = *ds;
+        if let Some(tape) = tape {
+            self.tapes.push(tape);
+        }
+    }
+}
+
+struct NoTapes;
+
+impl StepSink for NoTapes {
+    #[inline]
+    fn record(&mut self, _t: usize, _ds: &[f32; LANES], _tape: Option<RowTape8>) {}
+}
+
+/// Integrate one block of [`LANES`] paths from step-major lane increments
+/// (`lane_dw[(k * n_steps + t) * LANES + l]`), streaming the MLP forward
+/// pass, gains and payoff observers exactly like the scalar fold, and
+/// returning the per-lane residuals `r = payoff - gains - p0`.
+///
+/// The tape for step `t < n_steps` (and the price increment of step
+/// `t >= 1`) goes to `sink` — the forward tape of the last state is never
+/// produced, mirroring the scalar `t < n_steps` guard.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn integrate_block<S: Sde, P: Payoff, K: StepSink>(
+    p: &MlpParams,
+    lane_dw: &[f32],
+    n_steps: usize,
+    dt: f32,
+    dt_grid: f32,
+    sde: &S,
+    payoff: &P,
+    sink: &mut K,
+) -> [f32; LANES] {
+    let dim = sde.dim();
+    let s0 = sde.s0_state();
+    // Current state, factor-major lane vectors.
+    let mut x = [[0.0f32; LANES]; MAX_DIM];
+    for k in 0..dim {
+        for l in 0..LANES {
+            x[k][l] = s0[k];
+        }
+    }
+    let mut acc = [PathAccum::default(); LANES];
+    for a in acc.iter_mut() {
+        *a = payoff.init(&s0);
+    }
+    let mut gains = [0.0f32; LANES];
+    let mut prev = x[0];
+    let (mut pending_h, tape) = forward_rows8(p, 0.0, &x[0]);
+    let mut pending_tape = Some(tape);
+
+    let (rho, orth) = if dim > 1 {
+        let rho = sde.correlation();
+        (rho, (1.0 - rho * rho).max(0.0).sqrt())
+    } else {
+        (0.0, 0.0)
+    };
+
+    for t in 1..=n_steps {
+        let row0 = &lane_dw[(t - 1) * LANES..t * LANES];
+        if dim == 1 {
+            // Per lane: the scalar fold's exact recurrence and f32
+            // operation order — lane states stay bit-identical to the
+            // scalar reference.
+            for l in 0..LANES {
+                let xv = x[0][l];
+                let dwt = row0[l];
+                let drift = sde.drift(xv);
+                let diff = sde.diffusion(xv);
+                let corr = sde.milstein_term(xv);
+                x[0][l] = sde.clamp(
+                    xv + drift * dt + diff * dwt + corr * (dwt * dwt - dt),
+                );
+            }
+        } else {
+            for l in 0..LANES {
+                let mut st: State = [0.0; MAX_DIM];
+                for k in 0..dim {
+                    st[k] = x[k][l];
+                }
+                for k in 0..dim {
+                    let dwt = if k == 0 {
+                        row0[l]
+                    } else {
+                        let raw = lane_dw[(k * n_steps + t - 1) * LANES + l];
+                        rho * row0[l] + orth * raw
+                    };
+                    let a = sde.drift_factor(&st, k);
+                    let b = sde.diffusion_factor(&st, k);
+                    let m = sde.milstein_factor(&st, k);
+                    x[k][l] = sde.clamp_factor(
+                        st[k] + a * dt + b * dwt + m * (dwt * dwt - dt),
+                        k,
+                    );
+                }
+            }
+        }
+
+        let mut ds = [0.0f32; LANES];
+        for l in 0..LANES {
+            let s_t = x[0][l];
+            let d = s_t - prev[l];
+            ds[l] = d;
+            gains[l] += pending_h[l] * d;
+            let mut st: State = [0.0; MAX_DIM];
+            st[0] = s_t;
+            for k in 1..dim {
+                st[k] = x[k][l];
+            }
+            payoff.observe(&mut acc[l], t, n_steps, &st);
+            prev[l] = s_t;
+        }
+        let tape = if t < n_steps {
+            let (h, tape) = forward_rows8(p, t as f32 * dt_grid, &x[0]);
+            pending_h = h;
+            Some(tape)
+        } else {
+            None
+        };
+        sink.record(t, &ds, pending_tape.take());
+        pending_tape = tape;
+    }
+
+    let mut r = [0.0f32; LANES];
+    for l in 0..LANES {
+        r[l] = payoff.finish(&acc[l], n_steps) - gains[l] - p.p0();
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mlp::init_params;
+    use crate::engine::objective::{
+        coupled_value_and_grad_scenario, loss_only_scenario,
+        value_and_grad_scenario,
+    };
+    use crate::rng::{brownian::Purpose, BrownianSource};
+    use crate::scenarios::build_scenario;
+    use crate::scenarios::payoff::{EuropeanCall, UpAndOutCall};
+    use crate::scenarios::sde::{BlackScholes, Heston};
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    fn grads_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * x.abs().max(y.abs()).max(1.0),
+                "grad[{i}]: lane {x} vs scalar {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_bs_call_matches_scalar_within_tolerance() {
+        // batch = 19 exercises two full blocks + a 3-path remainder.
+        let prob = Problem::default();
+        let params = init_params(0);
+        let sde = BlackScholes::from_problem(&prob);
+        let payoff = EuropeanCall {
+            strike: prob.strike as f32,
+        };
+        let sc = build_scenario("bs-call", &prob).unwrap();
+        let batch = 19;
+        let n = prob.n_steps(2);
+        let dw = BrownianSource::new(7)
+            .increments(Purpose::Grad, 0, 2, 0, batch, n, prob.dt(2));
+        let (ll, gl) =
+            value_and_grad(&params, &dw, batch, n, &prob, &sde, &payoff);
+        let (ls, gs) = value_and_grad_scenario(&params, &dw, batch, n, &prob, &sc);
+        assert!(rel_close(ll, ls, 1e-4), "loss {ll} vs {ls}");
+        grads_close(&gl, &gs, 1e-3);
+        let lo = loss_only(&params, &dw, batch, n, &prob, &sde, &payoff);
+        assert!(rel_close(lo, ll, 1e-9), "loss_only {lo} vs {ll}");
+    }
+
+    #[test]
+    fn lane_coupled_heston_barrier_matches_scalar_within_tolerance() {
+        let prob = Problem::default();
+        let params = init_params(3);
+        let sde = Heston::from_problem(&prob);
+        let payoff = UpAndOutCall {
+            strike: prob.strike as f32,
+            barrier: (prob.s0 * crate::scenarios::registry::UP_BARRIER_MULT) as f32,
+        };
+        let sc = build_scenario("heston-uo-call", &prob).unwrap();
+        let batch = 27;
+        for level in [0usize, 2] {
+            let n = prob.n_steps(level);
+            let dw = BrownianSource::new(13).increments_multi(
+                Purpose::Grad, 0, level as u32, 0, batch, n, prob.dt(level), 2,
+            );
+            let (ll, gl) = coupled_value_and_grad(
+                &params, &dw, batch, level, &prob, &sde, &payoff,
+            );
+            let (ls, gs) = coupled_value_and_grad_scenario(
+                &params, &dw, batch, level, &prob, &sc,
+            );
+            assert!(rel_close(ll, ls, 1e-3), "l{level}: loss {ll} vs {ls}");
+            grads_close(&gl, &gs, 5e-3);
+        }
+    }
+
+    #[test]
+    fn lane_batch_smaller_than_block_is_pure_scalar_fallback() {
+        // batch < LANES: the whole batch is remainder, which routes
+        // through the scalar body — results must be bit-identical.
+        let prob = Problem::default();
+        let params = init_params(1);
+        let sde = BlackScholes::from_problem(&prob);
+        let payoff = EuropeanCall {
+            strike: prob.strike as f32,
+        };
+        let sc = build_scenario("bs-call", &prob).unwrap();
+        let batch = LANES - 1;
+        let n = prob.n_steps(1);
+        let dw = BrownianSource::new(3)
+            .increments(Purpose::Grad, 0, 1, 0, batch, n, prob.dt(1));
+        let (ll, gl) =
+            value_and_grad(&params, &dw, batch, n, &prob, &sde, &payoff);
+        let (ls, gs) = value_and_grad_scenario(&params, &dw, batch, n, &prob, &sc);
+        assert_eq!(ll, ls);
+        assert_eq!(gl, gs);
+    }
+}

@@ -226,6 +226,211 @@ pub fn backward_row(p: &MlpParams, tape: &RowTape, g: f32, grad: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lane-blocked kernels: LANES residual rows per call
+// ---------------------------------------------------------------------------
+
+/// Paths integrated per lane block by the SIMD hot path
+/// ([`crate::engine::lanes`]). 8 f32 lanes = one AVX2 register; on
+/// narrower ISAs LLVM splits the lane loops into two 4-wide halves.
+pub const LANES: usize = 8;
+
+/// Branchless polynomial `exp` for the lane kernels: `exp(x) = 2^f *
+/// exp2(r)` with `t = x log2(e)`, `f = floor(t)`, `r = t - f in [0, 1)`,
+/// `exp2(r)` a degree-7 Taylor polynomial (coefficients `ln(2)^i / i!`)
+/// and the `2^f` scale assembled directly in the exponent bits. Relative
+/// error ~1e-6 over the clamped range — far inside the lane kernels'
+/// validation tolerance, and (unlike libm's `exp`) fully unrollable and
+/// auto-vectorizable because it has no branches or table loads.
+///
+/// Only the `*-simd` kernel variants use this; the scalar kernels keep
+/// libm `exp` so the bitwise anchors never move.
+#[inline(always)]
+fn fast_exp(x: f32) -> f32 {
+    let t = x.clamp(-87.0, 88.0) * std::f32::consts::LOG2_E;
+    let f = t.floor();
+    let r = t - f;
+    const C1: f32 = 0.693_147_2;
+    const C2: f32 = 0.240_226_5;
+    const C3: f32 = 0.055_504_1;
+    const C4: f32 = 0.009_618_13;
+    const C5: f32 = 0.001_333_355_8;
+    const C6: f32 = 1.540_353e-4;
+    const C7: f32 = 1.525_273e-5;
+    let p = 1.0
+        + r * (C1 + r * (C2 + r * (C3 + r * (C4 + r * (C5 + r * (C6 + r * C7))))));
+    // 2^f via the IEEE-754 exponent field: f in [-126, 127] after clamp.
+    let scale = f32::from_bits((((f as i32) + 127) << 23) as u32);
+    p * scale
+}
+
+#[inline(always)]
+fn fast_sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + fast_exp(-x))
+}
+
+#[inline(always)]
+fn fast_silu(x: f32) -> f32 {
+    x * fast_sigmoid(x)
+}
+
+/// Saved forward state for one lane block of [`LANES`] rows, laid out
+/// **lane-major** (`[hidden][lane]`) so every backward inner loop is an
+/// 8-wide contiguous sweep. The time feature is shared by construction —
+/// all lanes of a block sit on the same grid step — so only the price
+/// lane vector is stored per row.
+#[derive(Debug, Clone)]
+pub struct RowTape8 {
+    /// Shared time feature `t` of the block (`x[0]` of every lane).
+    pub t: f32,
+    /// Per-lane price feature (`x[1]`).
+    pub s: [f32; LANES],
+    pub z1: [[f32; LANES]; HIDDEN],
+    pub z2: [[f32; LANES]; HIDDEN],
+    pub z3: [f32; LANES],
+}
+
+/// Forward [`LANES`] feature rows at once (shared time `t`, per-lane
+/// price `s`), returning the holdings and the lane-major tape. Uses
+/// [`fast_exp`]-based activations and reassociates the layer reductions
+/// across lanes, so outputs agree with [`forward_row`] only to relative
+/// tolerance — this is the `*-simd` kernel path, never the scalar one.
+#[inline]
+pub fn forward_rows8(p: &MlpParams, t: f32, s: &[f32; LANES]) -> ([f32; LANES], RowTape8) {
+    let (w1_0, w1_1, b1) = (p.w1_row(0), p.w1_row(1), p.b1_row());
+    let mut z1 = [[0.0f32; LANES]; HIDDEN];
+    for j in 0..HIDDEN {
+        let base = t * w1_0[j] + b1[j];
+        let w = w1_1[j];
+        for l in 0..LANES {
+            z1[j][l] = base + s[l] * w;
+        }
+    }
+    let mut h1 = [[0.0f32; LANES]; HIDDEN];
+    for j in 0..HIDDEN {
+        for l in 0..LANES {
+            h1[j][l] = fast_silu(z1[j][l]);
+        }
+    }
+    // z2 = b2 + h1 @ w2, j-outer / k-mid / lane-inner: the innermost loop
+    // is a contiguous 8-wide FMA with both operands broadcast or linear.
+    let b2 = p.b2_row();
+    let mut z2 = [[0.0f32; LANES]; HIDDEN];
+    for k in 0..HIDDEN {
+        for l in 0..LANES {
+            z2[k][l] = b2[k];
+        }
+    }
+    for j in 0..HIDDEN {
+        let row = p.w2_row(j);
+        let hj = h1[j];
+        for k in 0..HIDDEN {
+            let w = row[k];
+            for l in 0..LANES {
+                z2[k][l] += hj[l] * w;
+            }
+        }
+    }
+    let w3 = p.w3_col();
+    let mut z3 = [p.b3(); LANES];
+    for k in 0..HIDDEN {
+        let w = w3[k];
+        for l in 0..LANES {
+            z3[l] += fast_silu(z2[k][l]) * w;
+        }
+    }
+    let mut y = [0.0f32; LANES];
+    for l in 0..LANES {
+        y[l] = fast_sigmoid(z3[l]);
+    }
+    (y, RowTape8 { t, s: *s, z1, z2, z3 })
+}
+
+/// Backpropagate per-lane upstream gradients `g = dL/dH` through one lane
+/// block, accumulating the **lane-summed** parameter gradient into
+/// `grad`. Mirrors [`backward_row`]'s structure with the lane dimension
+/// innermost; parameter accumulation order across lanes differs from
+/// running [`backward_row`] 8 times, which is exactly the f32
+/// reassociation the `*-simd` kernel keys declare.
+pub fn backward_rows8(p: &MlpParams, tape: &RowTape8, g: &[f32; LANES], grad: &mut [f32]) {
+    debug_assert_eq!(grad.len(), N_PARAMS);
+    let mut dz3 = [0.0f32; LANES];
+    for l in 0..LANES {
+        let y = fast_sigmoid(tape.z3[l]);
+        dz3[l] = g[l] * y * (1.0 - y);
+    }
+
+    // layer 3: silu(z2) and dsilu(z2) share one sigmoid per lane.
+    let w3 = p.w3_col();
+    let mut dz2 = [[0.0f32; LANES]; HIDDEN];
+    for k in 0..HIDDEN {
+        let w = w3[k];
+        let mut gw3 = 0.0f32;
+        for l in 0..LANES {
+            let z = tape.z2[k][l];
+            let s = fast_sigmoid(z);
+            gw3 += z * s * dz3[l]; // silu(z2) * dz3
+            dz2[k][l] = w * dz3[l] * (s * (1.0 + z * (1.0 - s)));
+        }
+        grad[OFF_W3 + k] += gw3;
+    }
+    let mut db3 = 0.0f32;
+    for l in 0..LANES {
+        db3 += dz3[l];
+    }
+    grad[OFF_B3] += db3;
+
+    // layer 2: h1/sig1 once (shared with the layer-1 pass below).
+    let mut h1 = [[0.0f32; LANES]; HIDDEN];
+    let mut sig1 = [[0.0f32; LANES]; HIDDEN];
+    for j in 0..HIDDEN {
+        for l in 0..LANES {
+            let s = fast_sigmoid(tape.z1[j][l]);
+            sig1[j][l] = s;
+            h1[j][l] = tape.z1[j][l] * s;
+        }
+    }
+    let mut dh1 = [[0.0f32; LANES]; HIDDEN];
+    for j in 0..HIDDEN {
+        let w2 = p.w2_row(j);
+        let hj = h1[j];
+        let grow = &mut grad[OFF_W2 + j * HIDDEN..OFF_W2 + (j + 1) * HIDDEN];
+        for k in 0..HIDDEN {
+            let w = w2[k];
+            let mut gw = 0.0f32;
+            for l in 0..LANES {
+                gw += hj[l] * dz2[k][l];
+                dh1[j][l] += w * dz2[k][l];
+            }
+            grow[k] += gw;
+        }
+    }
+    for k in 0..HIDDEN {
+        let mut gb = 0.0f32;
+        for l in 0..LANES {
+            gb += dz2[k][l];
+        }
+        grad[OFF_B2 + k] += gb;
+    }
+
+    // layer 1: the shared time feature factors out of the lane sum.
+    for j in 0..HIDDEN {
+        let mut gw0 = 0.0f32;
+        let mut gw1 = 0.0f32;
+        let mut gb = 0.0f32;
+        for l in 0..LANES {
+            let (z, s) = (tape.z1[j][l], sig1[j][l]);
+            let dz1 = dh1[j][l] * s * (1.0 + z * (1.0 - s));
+            gw0 += dz1;
+            gw1 += tape.s[l] * dz1;
+            gb += dz1;
+        }
+        grad[OFF_W1 + j] += tape.t * gw0; // w1[0][j]
+        grad[OFF_W1 + HIDDEN + j] += gw1; // w1[1][j]
+        grad[OFF_B1 + j] += gb;
+    }
+}
+
 /// He-style initialisation identical to `python/compile/model.py` in
 /// *layout* (weights ~ N(0, 2/fan_in), biases and p0 zero) but using the
 /// native Philox stream. For bit-identical starts across backends, load

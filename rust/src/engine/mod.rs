@@ -17,7 +17,12 @@
 //! observers; the hot path never materializes a path buffer). The plain
 //! entry points run the problem's default Black–Scholes-call scenario
 //! bit-identically to the seed engine.
+//!
+//! [`lanes`] is the SIMD-friendly twin of [`objective`]: 8 paths per
+//! lane block, MLP rows forwarded/backpropagated 8 at a time, selected
+//! via `*-simd` scenario keys (see [`crate::scenarios::kernels`]).
 
+pub mod lanes;
 pub mod milstein;
 pub mod mlp;
 pub mod objective;

@@ -79,7 +79,7 @@ pub fn value_and_grad_scenario(
     )
 }
 
-fn value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+pub(crate) fn value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
     params: &[f32],
     dw: &[f32],
     batch: usize,
@@ -134,7 +134,7 @@ pub fn coupled_value_and_grad_scenario(
     )
 }
 
-fn coupled_value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+pub(crate) fn coupled_value_and_grad_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
     params: &[f32],
     dw_fine: &[f32],
     batch: usize,
@@ -194,7 +194,7 @@ pub fn loss_only_scenario(
     )
 }
 
-fn loss_only_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
+pub(crate) fn loss_only_impl<S: Sde + ?Sized, P: Payoff + ?Sized>(
     params: &[f32],
     dw: &[f32],
     batch: usize,
@@ -257,8 +257,39 @@ fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
     sign: f32,
     grad: &mut [f32],
 ) -> f64 {
+    let total = accumulate_range(
+        params, dw, batch, n_steps, problem, sde, payoff, sign, grad, 0, batch,
+    );
+    sign as f64 * total / batch as f64
+}
+
+/// The inner body of [`accumulate_value_and_grad`] over the path range
+/// `b_start..b_end` of the batch, returning the **raw** `sum r^2` over
+/// that range (unsigned, unnormalized — the caller owns the
+/// `sign / batch` scaling so partial-range callers compose). `batch`
+/// still names the full batch: it fixes the `dw` stride and the
+/// `1 / batch` gradient scale.
+///
+/// `pub(crate)` so the lane-blocked kernels ([`super::lanes`]) can fold
+/// the `batch % LANES` remainder paths through the *scalar* body — one
+/// residual loop, no duplicated arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accumulate_range<S: Sde + ?Sized, P: Payoff + ?Sized>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+    sde: &S,
+    payoff: &P,
+    sign: f32,
+    grad: &mut [f32],
+    b_start: usize,
+    b_end: usize,
+) -> f64 {
     let dim = sde.dim();
     assert_eq!(dw.len(), dim * batch * n_steps, "dw shape mismatch");
+    debug_assert!(b_start <= b_end && b_end <= batch);
     let p = MlpParams::new(params);
     let dt = (problem.maturity / n_steps as f64) as f32;
     let dt_grid = problem.maturity as f32 / n_steps as f32;
@@ -268,7 +299,7 @@ fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
     let mut tapes = Vec::with_capacity(n_steps);
     let mut ds = vec![0.0f32; n_steps];
     let mut total = 0.0f64;
-    for b in 0..batch {
+    for b in b_start..b_end {
         let rows = factor_rows(dw, dim, batch, n_steps, b);
         tapes.clear();
         let mut gains = 0.0f32;
@@ -304,7 +335,7 @@ fn accumulate_value_and_grad<S: Sde + ?Sized, P: Payoff + ?Sized>(
             backward_row(&p, &tapes[n], g_h, grad);
         }
     }
-    sign as f64 * total / batch as f64
+    total
 }
 
 #[cfg(test)]

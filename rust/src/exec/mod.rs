@@ -60,8 +60,16 @@
 //!   fixed-order per-group reduction keeps every problem's gradient
 //!   bit-identical to its solo run.
 //!
-//! Core pinning / NUMA placement remain follow-ups (see ROADMAP).
+//! * **Placement** — behind `[execution] pin_cores` (`--pin-cores`),
+//!   each resident worker pins itself to core `i % available_cores()`
+//!   at spawn via [`affinity::pin_current_thread`]
+//!   (`sched_setaffinity(2)` on Linux, a no-op elsewhere), keeping the
+//!   lane-blocked hot loops' cache working set resident across
+//!   dispatches. Pinning is best-effort — a refused mask degrades to
+//!   unpinned — and the achieved worker→core map is reported through
+//!   [`WorkerStat::core`] in every [`StepExecReport`].
 
+pub mod affinity;
 pub mod pool;
 pub mod stats;
 pub mod task;

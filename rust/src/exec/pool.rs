@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::affinity;
 use super::stats::{ExecStats, StepExecReport, TaskStat, WorkerStat};
 use super::task::{lpt_order, ChunkTask};
 use crate::mlmc::estimator::ChunkAccumulator;
@@ -171,9 +172,24 @@ struct Registry {
     work: Condvar,
 }
 
-/// A resident worker's whole life: wait for a new epoch, drain the
-/// dispatch, deposit, repeat — until shutdown.
-fn worker_main(worker: usize, registry: Arc<Registry>) {
+/// Shared worker→core map: slot `i` holds the core worker `i` actually
+/// pinned to (`None` = unpinned — pinning off, refused, or unsupported).
+type CoreMap = Arc<Mutex<Vec<Option<usize>>>>;
+
+/// Pin the calling worker thread to its round-robin core and record the
+/// outcome. Best-effort by contract: a refused mask leaves the slot
+/// `None` and the worker running unpinned.
+fn pin_worker(worker: usize, cores: &CoreMap) {
+    let got = affinity::pin_current_thread(worker % affinity::available_cores());
+    cores.lock().expect("pool mutex poisoned")[worker] = got;
+}
+
+/// A resident worker's whole life: pin (if asked), then wait for a new
+/// epoch, drain the dispatch, deposit, repeat — until shutdown.
+fn worker_main(worker: usize, registry: Arc<Registry>, pin: Option<CoreMap>) {
+    if let Some(cores) = pin {
+        pin_worker(worker, &cores);
+    }
     let mut seen = 0u64;
     loop {
         let dispatch = {
@@ -204,6 +220,13 @@ fn worker_main(worker: usize, registry: Arc<Registry>) {
 pub struct WorkerPool {
     workers: usize,
     mode: SpawnMode,
+    /// Pin worker `i` to core `i % available_cores()` (`[execution]
+    /// pin_cores`): at spawn for resident workers, per-dispatch for
+    /// scoped ones. Best-effort — see [`affinity::pin_current_thread`].
+    pin_cores: bool,
+    /// Achieved worker→core placement, copied into every
+    /// [`WorkerStat::core`] the pool reports.
+    core_map: CoreMap,
     chaos: Option<ChaosDelays>,
     stats: ExecStats,
     /// OS threads spawned over the pool's lifetime: `P` once for
@@ -242,10 +265,23 @@ impl WorkerPool {
     }
 
     pub fn with_mode(workers: usize, mode: SpawnMode) -> Self {
+        Self::with_options(workers, mode, false)
+    }
+
+    /// The fully-general constructor: spawn mode plus core pinning.
+    /// `pin_cores` pins worker `i` to core `i % available_cores()` —
+    /// once at spawn for [`SpawnMode::Resident`], per dispatched thread
+    /// for [`SpawnMode::Scoped`] — and the achieved placement surfaces
+    /// as [`WorkerStat::core`] in every report. Pinning never changes
+    /// results (the fixed-order reduction doesn't care where a chunk
+    /// ran); it only steadies the per-core cache working set.
+    pub fn with_options(workers: usize, mode: SpawnMode, pin_cores: bool) -> Self {
         assert!(workers > 0, "need at least one worker");
         let mut pool = WorkerPool {
             workers,
             mode,
+            pin_cores,
+            core_map: Arc::new(Mutex::new(vec![None; workers])),
             chaos: None,
             stats: ExecStats::new(workers),
             threads_spawned: 0,
@@ -263,9 +299,10 @@ impl WorkerPool {
             });
             for worker in 0..workers {
                 let reg = registry.clone();
+                let pin = pin_cores.then(|| pool.core_map.clone());
                 let handle = std::thread::Builder::new()
                     .name(format!("dmlmc-pool-{worker}"))
-                    .spawn(move || worker_main(worker, reg))
+                    .spawn(move || worker_main(worker, reg, pin))
                     .expect("failed to spawn pool worker");
                 pool.handles.push(handle);
             }
@@ -281,6 +318,11 @@ impl WorkerPool {
 
     pub fn mode(&self) -> SpawnMode {
         self.mode
+    }
+
+    /// Whether this pool round-robin-pins its workers to cores.
+    pub fn pin_cores(&self) -> bool {
+        self.pin_cores
     }
 
     /// OS threads spawned so far (lifetime total; constant == `workers`
@@ -397,10 +439,18 @@ impl WorkerPool {
                 }
                 SpawnMode::Scoped => {
                     self.threads_spawned += expected;
+                    let pin = self.pin_cores;
+                    let cores = &self.core_map;
                     std::thread::scope(|scope| {
                         for worker in 0..expected {
                             let d = dispatch.clone();
-                            scope.spawn(move || deposit(&d, drain(worker, &d)));
+                            let cores = cores.clone();
+                            scope.spawn(move || {
+                                if pin {
+                                    pin_worker(worker, &cores);
+                                }
+                                deposit(&d, drain(worker, &d))
+                            });
                         }
                     });
                     let mut outs =
@@ -430,6 +480,16 @@ impl WorkerPool {
         // Scatter every task result into its pre-addressed slot; remember
         // the lowest-indexed error (deterministic across schedules).
         worker_outs.sort_by_key(|o| o.worker);
+        // Snapshot the achieved placement once per dispatch. Taken after
+        // every expected worker deposited, so resident workers' one-time
+        // spawn pins are recorded by now; an *empty* dispatch right
+        // after construction may race the spawn pins and report `None` —
+        // consistent with pinning being best-effort metadata.
+        let core_map = self
+            .core_map
+            .lock()
+            .expect("pool mutex poisoned")
+            .clone();
         let mut slots: Vec<Option<(f64, Vec<f32>)>> = vec![None; tasks.len()];
         let mut first_err: Option<(usize, anyhow::Error)> = None;
         let mut worker_stats = Vec::with_capacity(self.workers);
@@ -439,6 +499,7 @@ impl WorkerPool {
                 worker: out.worker,
                 busy: out.busy,
                 tasks: out.results.len(),
+                core: core_map.get(out.worker).copied().flatten(),
             });
             for (idx, start, took, result) in out.results {
                 per_task.push(TaskStat {
@@ -801,6 +862,41 @@ mod tests {
         let (got, _) = pool.execute(&tasks(&[2usize]), 1, run_synthetic).unwrap();
         assert_eq!(got[0].0, want[0].0);
         assert_eq!(got[0].1, want[0].1);
+    }
+
+    #[test]
+    fn unpinned_pool_reports_no_cores() {
+        let mut pool = WorkerPool::new(2);
+        assert!(!pool.pin_cores());
+        let (_, report) = pool.execute(&tasks(&[2usize]), 1, run_synthetic).unwrap();
+        assert!(report.workers.iter().all(|w| w.core.is_none()));
+    }
+
+    #[test]
+    fn pinned_pool_reports_round_robin_cores_and_stays_bitwise() {
+        // Pinning must never perturb results, and whatever placement the
+        // kernel granted must be the round-robin target. Success itself
+        // is not asserted — a restricted cpuset (CI containers) may
+        // refuse the mask, which legitimately degrades to `core: None`.
+        let groups = [3usize, 2];
+        let want = sequential(&groups);
+        let spread = affinity::available_cores();
+        for mode in [SpawnMode::Resident, SpawnMode::Scoped] {
+            let mut pool = WorkerPool::with_options(2, mode, true);
+            assert!(pool.pin_cores());
+            let (got, report) = pool
+                .execute(&tasks(&groups), groups.len(), run_synthetic)
+                .unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.0, b.0, "{mode:?} loss drifted under pinning");
+                assert_eq!(a.1, b.1, "{mode:?} grad drifted under pinning");
+            }
+            for w in &report.workers {
+                if let Some(core) = w.core {
+                    assert_eq!(core, w.worker % spread, "{mode:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,12 @@ pub struct WorkerStat {
     pub busy: Duration,
     /// Tasks this worker executed.
     pub tasks: usize,
+    /// CPU core this worker is pinned to (`[execution] pin_cores`):
+    /// `Some(core)` when `sched_setaffinity` accepted the mask, `None`
+    /// when pinning is off, refused, or unsupported on this platform.
+    /// Stable across the dispatches of one pool — pinning happens once
+    /// at worker spawn.
+    pub core: Option<usize>,
 }
 
 /// One task's execution record within a dispatch. Kept alongside the
@@ -106,7 +112,12 @@ impl StepExecReport {
         let mut workers: Vec<WorkerStat> = self
             .workers
             .iter()
-            .map(|w| WorkerStat { worker: w.worker, busy: Duration::ZERO, tasks: 0 })
+            .map(|w| WorkerStat {
+                worker: w.worker,
+                busy: Duration::ZERO,
+                tasks: 0,
+                core: w.core,
+            })
             .collect();
         for t in &per_task {
             if let Some(w) = workers.iter_mut().find(|w| w.worker == t.worker) {
@@ -259,6 +270,7 @@ mod tests {
                     worker,
                     busy: Duration::from_millis(ms),
                     tasks: 1,
+                    core: None,
                 })
                 .collect(),
             makespan: Duration::from_millis(makespan_ms),
@@ -332,8 +344,8 @@ mod tests {
         // task per group). Slice out groups 1..3 and check the rollup.
         let full = StepExecReport {
             workers: vec![
-                WorkerStat { worker: 0, busy: Duration::from_millis(30), tasks: 3 },
-                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1 },
+                WorkerStat { worker: 0, busy: Duration::from_millis(30), tasks: 3, core: Some(0) },
+                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1, core: None },
             ],
             makespan: Duration::from_millis(40),
             n_tasks: 4,
@@ -351,6 +363,9 @@ mod tests {
         assert_eq!(slice.workers[0].tasks, 1);
         assert_eq!(slice.workers[0].busy, Duration::from_millis(10));
         assert_eq!(slice.workers[1].tasks, 1);
+        // pinning metadata rides through the per-problem slice untouched
+        assert_eq!(slice.workers[0].core, Some(0));
+        assert_eq!(slice.workers[1].core, None);
         assert_eq!(slice.per_task.len(), 2);
         // the timeline offsets ride along through the slice untouched,
         // and sliced spans still nest inside the shared dispatch makespan

@@ -13,7 +13,7 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -182,6 +182,25 @@ pub struct TraceBench {
     pub trace_path: PathBuf,
     /// Where `metrics.prom` landed.
     pub metrics_path: PathBuf,
+}
+
+/// One scenario cell of the hot-path bench (`repro hotpath-bench`):
+/// the scalar monomorphized kernel vs its 8-wide lane-blocked twin, on
+/// identical Brownian inputs through `value_and_grad` — the per-chunk
+/// unit of work the trainer's hot loop is made of.
+#[derive(Debug, Clone)]
+pub struct HotpathCell {
+    pub scenario: String,
+    /// Paths per kernel invocation (the timed unit).
+    pub batch: usize,
+    /// Fine-grid steps per path at the benched level.
+    pub n_steps: usize,
+    /// Median throughput of the scalar kernel (paths/second).
+    pub scalar_paths_per_sec: f64,
+    /// Median throughput of the lane-blocked kernel (paths/second).
+    pub lanes_paths_per_sec: f64,
+    /// `lanes_paths_per_sec / scalar_paths_per_sec`.
+    pub speedup: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -720,6 +739,97 @@ impl ExperimentRunner {
         })
     }
 
+    // -- Hot-path bench: scalar vs lane-blocked kernels -------------------
+
+    /// Benchmark the statically dispatched scalar kernel against its
+    /// lane-blocked SIMD twin for each named scenario: one
+    /// `value_and_grad` invocation over a `batch`-path Brownian batch is
+    /// the timed unit, identical inputs for both kernels (same
+    /// counter-addressed increments, so the comparison is pure kernel
+    /// cost). Reports median paths/second per side and the speedup —
+    /// the artifact behind `BENCH_hotpath.json`.
+    pub fn hotpath_bench(
+        &self,
+        scenarios: &[String],
+        batch: usize,
+    ) -> Result<Vec<HotpathCell>> {
+        anyhow::ensure!(!scenarios.is_empty(), "need at least one scenario");
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        let cfg = &self.cfg;
+        // A mid-depth grid: long enough that the per-step lane math (not
+        // per-call setup) dominates, short enough to iterate quickly.
+        let level = cfg.problem.lmax.min(2);
+        let n_steps = cfg.problem.n_steps(level);
+        let dt = cfg.problem.dt(level);
+        let src = BrownianSource::new(0xB2);
+        let params = crate::engine::mlp::init_params(0);
+        // Short windows: ~35 scenarios x 2 kernels must stay benchable;
+        // medians over many short iterations are stable enough here.
+        let harness = crate::bench::Harness {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+            max_iters: 100_000,
+        };
+        let mut cells = Vec::new();
+        for name in scenarios {
+            let kernel = crate::scenarios::kernel_for(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario `{name}` (repro scenarios lists the keys)"
+                )
+            })?;
+            let dw = src.increments_multi(
+                Purpose::Diagnostic,
+                0,
+                level as u32,
+                0,
+                batch,
+                n_steps,
+                dt,
+                kernel.dim,
+            );
+            let side = |label: &str, f: fn(
+                &[f32],
+                &[f32],
+                usize,
+                usize,
+                &crate::hedging::Problem,
+            )
+                -> (f64, Vec<f32>)|
+             -> f64 {
+                let s = harness.run(&format!("hotpath/{name}/{label}"), || {
+                    crate::bench::black_box(f(
+                        &params,
+                        &dw,
+                        batch,
+                        n_steps,
+                        &cfg.problem,
+                    ));
+                });
+                batch as f64 / s.median.as_secs_f64().max(1e-12)
+            };
+            let scalar_paths_per_sec = side("scalar", kernel.scalar.value_and_grad);
+            let lanes_paths_per_sec = side("lanes", kernel.lanes.value_and_grad);
+            let cell = HotpathCell {
+                scenario: name.clone(),
+                batch,
+                n_steps,
+                scalar_paths_per_sec,
+                lanes_paths_per_sec,
+                speedup: lanes_paths_per_sec / scalar_paths_per_sec.max(1e-12),
+            };
+            if !self.quiet {
+                eprintln!(
+                    "hotpath_bench: {name:<22} scalar {:>12.0} p/s  lanes {:>12.0} p/s  \
+                     x{:.2}",
+                    cell.scalar_paths_per_sec, cell.lanes_paths_per_sec, cell.speedup
+                );
+            }
+            cells.push(cell);
+        }
+        Ok(cells)
+    }
+
     // -- Fleet sweep: serving throughput vs fleet size --------------------
 
     /// For every fleet size `F` x every worker count `P`: build a fresh
@@ -1056,6 +1166,31 @@ impl ExperimentRunner {
             b.trace_path.display(),
             b.metrics_path.display()
         ));
+        out
+    }
+
+    /// Render the hot-path bench as text (CLI `repro hotpath-bench`).
+    /// Throughput columns are paths/second.
+    pub fn render_hotpath_table(cells: &[HotpathCell]) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "hot path: scalar vs lane-blocked kernels (value_and_grad)\n",
+        );
+        out.push_str(&format!(
+            "{:<22} {:>6} {:>6} {:>14} {:>14} {:>8}\n",
+            "scenario", "batch", "steps", "scalar p/s", "lanes p/s", "speedup"
+        ));
+        for c in cells {
+            out.push_str(&format!(
+                "{:<22} {:>6} {:>6} {:>14.0} {:>14.0} {:>7.2}x\n",
+                c.scenario,
+                c.batch,
+                c.n_steps,
+                c.scalar_paths_per_sec,
+                c.lanes_paths_per_sec,
+                c.speedup
+            ));
+        }
         out
     }
 
@@ -1441,6 +1576,34 @@ scoped / resident overhead ratio: 6.00x
         assert_eq!(arts.dir(), tmp.join("unit"));
         assert_eq!(arts.run(), "unit");
         let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn hotpath_bench_produces_speedup_cells_and_rejects_junk() {
+        let r = runner();
+        let names = vec!["bs-call".to_string(), "heston-uo-call".to_string()];
+        let cells = r.hotpath_bench(&names, 64).unwrap();
+        assert_eq!(cells.len(), 2);
+        for (c, name) in cells.iter().zip(&names) {
+            assert_eq!(&c.scenario, name);
+            assert_eq!(c.batch, 64);
+            assert!(c.n_steps > 0);
+            assert!(c.scalar_paths_per_sec > 0.0, "{name}");
+            assert!(c.lanes_paths_per_sec > 0.0, "{name}");
+            assert!(c.speedup.is_finite() && c.speedup > 0.0, "{name}");
+            let ratio = c.lanes_paths_per_sec / c.scalar_paths_per_sec;
+            assert!((c.speedup - ratio).abs() < 1e-9 * ratio.max(1.0));
+        }
+        let table = ExperimentRunner::render_hotpath_table(&cells);
+        assert!(table.contains("heston-uo-call"));
+        assert!(table.contains("speedup"));
+        assert!(table.contains('x'));
+        // degenerate inputs rejected
+        assert!(r.hotpath_bench(&[], 64).is_err());
+        assert!(r.hotpath_bench(&names, 0).is_err());
+        assert!(r
+            .hotpath_bench(&["sabr-call".to_string()], 64)
+            .is_err());
     }
 
     #[test]

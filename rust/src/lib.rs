@@ -47,6 +47,40 @@
 //! variance-decay exponent `b` (Assumption 2) and tabulates the MLMC vs
 //! delayed-MLMC parallel cost.
 //!
+//! ## Performance
+//!
+//! The native hot path is **statically dispatched**: every registry key
+//! owns a monomorphized `value_and_grad` / `coupled_value_and_grad` /
+//! `loss_only` triple in a flat table ([`scenarios::kernels::KERNELS`]),
+//! selected once per dispatch — non-default scenarios pay zero `dyn
+//! Sde`/`dyn Payoff` virtual calls per step. Each entry carries two
+//! kernel sets:
+//!
+//! * **scalar** — the streaming reference body. Monomorphizing the same
+//!   generic code performs identical f32 operations in identical order,
+//!   so scalar kernels are *bit-identical* to dynamic dispatch and the
+//!   seed's `bs-call` bitwise anchors hold through the rerouted backend.
+//! * **lanes** — the lane-blocked SIMD body ([`engine::lanes`]):
+//!   `LANES = 8` paths integrate simultaneously over `[f32; 8]` blocks
+//!   (Brownian increments transposed lane-major by
+//!   [`rng::brownian::lane_block`]; MLP rows forwarded/backpropagated 8
+//!   at a time), which the autovectorizer maps onto AVX/NEON. Lane
+//!   kernels **reassociate** f32 reductions and use a polynomial `exp`,
+//!   so they register under the scenario's `-simd` variant key
+//!   (`"heston-uo-call-simd"`; `--simd` / `[execution] simd` selects it)
+//!   and are *tolerance-validated* against the scalar reference per
+//!   scenario (`tests/kernel_suite.rs`: relative 1e-3 on loss, 5e-3 on
+//!   gradient components) instead of claiming bitwise equality they
+//!   cannot have.
+//!
+//! `repro hotpath-bench` (`make bench-hotpath`) times scalar vs lane
+//! kernels per scenario and writes paths/sec + speedup per cell to
+//! `BENCH_hotpath.json`. `--pin-cores` / `[execution] pin_cores`
+//! additionally pins pool workers round-robin to CPU cores
+//! ([`exec::affinity`], Linux `sched_setaffinity`, best-effort no-op
+//! elsewhere) with the worker→core map reported per dispatch in
+//! [`exec::StepExecReport`]; pinning never changes results.
+//!
 //! ## Parallel execution
 //!
 //! Beyond *modeling* parallel cost ([`parallel`]), the crate *executes*

@@ -50,6 +50,19 @@ fn root_command() -> Command {
                  training commands then export trace.json + metrics.prom \
                  into their run dir)",
             ))
+            .opt(Opt::switch(
+                "simd",
+                "route the native hot path through the 8-wide lane-blocked \
+                 SIMD kernels (execution.simd; selects the scenario's \
+                 `-simd` registry key — reassociates f32 reductions, \
+                 tolerance-validated against scalar, native backend only)",
+            ))
+            .opt(Opt::switch(
+                "pin-cores",
+                "pin pool workers round-robin to CPU cores \
+                 (execution.pin_cores; sched_setaffinity on Linux, no-op \
+                 elsewhere; best-effort and bit-identical results)",
+            ))
             .opt(Opt::switch("quiet", "suppress progress output"))
     };
     Command::new("repro", "Delayed MLMC for SGD — paper reproduction driver")
@@ -143,6 +156,25 @@ fn root_command() -> Command {
                 "bs-call,heston-uo-call",
             )),
         ))
+        .subcommand(common(
+            Command::new(
+                "hotpath-bench",
+                "scalar vs lane-blocked (SIMD) kernel throughput per \
+                 scenario: one value_and_grad chunk is the timed unit \
+                 (emits BENCH_hotpath.json with paths_per_sec and speedup \
+                 per cell)",
+            )
+            .opt(Opt::with_default(
+                "scenarios",
+                "comma-separated scenario keys, or `all`",
+                "bs-call,heston-uo-call",
+            ))
+            .opt(Opt::with_default(
+                "batch",
+                "paths per kernel invocation",
+                "512",
+            )),
+        ))
         .subcommand(Command::new(
             "scenarios",
             "list the registered scenario keys",
@@ -233,10 +265,17 @@ fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConf
             cfg.runtime.out_dir = PathBuf::from(v);
         }
     }
-    // `--trace` can only enable tracing; `[observability]` in the TOML
-    // remains authoritative when the switch is absent.
+    // `--trace` / `--simd` / `--pin-cores` can only enable their knob;
+    // the TOML (`[observability]` / `[execution]`) remains authoritative
+    // when a switch is absent.
     if args.flag("trace") {
         cfg.observability.trace = true;
+    }
+    if args.flag("simd") {
+        cfg.execution.simd = true;
+    }
+    if args.flag("pin-cores") {
+        cfg.execution.pin_cores = true;
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
@@ -270,7 +309,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     eprintln!(
         "train: method={method} seed={seed} backend={} scenario={} steps={} N={}",
         cfg.runtime.backend.name(),
-        cfg.scenario,
+        cfg.effective_scenario(),
         cfg.train.steps,
         cfg.mlmc.n_effective
     );
@@ -678,6 +717,44 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_hotpath_bench(args: &Args) -> Result<()> {
+    use dmlmc::util::json::{obj, Json};
+    let cfg = load_config(args)?;
+    let names: Vec<String> = match args.get_or("scenarios", "bs-call,heston-uo-call")
+    {
+        "all" => dmlmc::scenarios::all_scenario_names(),
+        list => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let batch = args.parse_usize("batch")?.unwrap_or(512);
+    let runner = runner_for(&cfg, args);
+    let cells = runner.hotpath_bench(&names, batch)?;
+    println!("{}", ExperimentRunner::render_hotpath_table(&cells));
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("scenario", Json::Str(c.scenario.clone())),
+                ("batch", Json::Num(c.batch as f64)),
+                ("n_steps", Json::Num(c.n_steps as f64)),
+                ("scalar_paths_per_sec", Json::Num(c.scalar_paths_per_sec)),
+                ("lanes_paths_per_sec", Json::Num(c.lanes_paths_per_sec)),
+                ("speedup", Json::Num(c.speedup)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("hotpath".to_string())),
+        ("batch", Json::Num(batch as f64)),
+        ("cells", Json::Arr(rows)),
+    ]);
+    let path = runner
+        .artifacts("hotpath-bench")?
+        .write_bench_json("BENCH_hotpath", &doc)?;
+    eprintln!("wrote {} (+ ./BENCH_hotpath.json)", path.display());
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     use dmlmc::runtime::Manifest;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -721,6 +798,7 @@ fn main() -> ExitCode {
         "exec-bench" => cmd_exec_bench(&args),
         "trace" => cmd_trace(&args),
         "fleet-sweep" => cmd_fleet_sweep(&args),
+        "hotpath-bench" => cmd_hotpath_bench(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {

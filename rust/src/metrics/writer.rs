@@ -309,11 +309,13 @@ mod tests {
                     worker: 0,
                     busy: Duration::from_millis(30),
                     tasks: 3,
+                    core: None,
                 },
                 crate::exec::WorkerStat {
                     worker: 1,
                     busy: Duration::from_millis(10),
                     tasks: 1,
+                    core: None,
                 },
             ],
             makespan: Duration::from_millis(40),

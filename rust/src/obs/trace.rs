@@ -306,8 +306,8 @@ mod tests {
     fn report() -> StepExecReport {
         StepExecReport {
             workers: vec![
-                WorkerStat { worker: 0, busy: Duration::from_millis(20), tasks: 2 },
-                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1 },
+                WorkerStat { worker: 0, busy: Duration::from_millis(20), tasks: 2, core: None },
+                WorkerStat { worker: 1, busy: Duration::from_millis(10), tasks: 1, core: None },
             ],
             makespan: Duration::from_millis(25),
             n_tasks: 3,

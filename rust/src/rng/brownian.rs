@@ -124,6 +124,39 @@ impl BrownianSource {
         out
     }
 
+    /// Transpose `lanes` consecutive paths (starting at `b0`) of a
+    /// factor-major batch `dw[n_factors, batch, n_steps]` into the
+    /// **lane-blocked** layout the SIMD hot path consumes:
+    /// `out[(k * n_steps + t) * lanes + l]` is the factor-`k`, step-`t`
+    /// increment of path `b0 + l`. Each (factor, step) pair's lane vector
+    /// is contiguous, so the lane integrator ([`crate::engine::lanes`])
+    /// loads one `lanes`-wide row per factor per step instead of striding
+    /// across `n_steps`-long path rows.
+    ///
+    /// Pure reshuffle — every f32 is copied untouched, so lane kernels see
+    /// bit-identical increments to the scalar path they shadow.
+    pub fn lane_block(
+        dw: &[f32],
+        n_factors: usize,
+        batch: usize,
+        n_steps: usize,
+        b0: usize,
+        lanes: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(dw.len(), n_factors * batch * n_steps, "shape mismatch");
+        assert!(b0 + lanes <= batch, "lane block out of range");
+        assert_eq!(out.len(), n_factors * n_steps * lanes, "out shape mismatch");
+        for k in 0..n_factors {
+            for l in 0..lanes {
+                let row = &dw[(k * batch + b0 + l) * n_steps..][..n_steps];
+                for (t, &v) in row.iter().enumerate() {
+                    out[(k * n_steps + t) * lanes + l] = v;
+                }
+            }
+        }
+    }
+
     /// Pairwise-sum fine increments onto the next-coarser grid
     /// (row-major `[batch, n]` -> `[batch, n/2]`) — the MLMC coupling,
     /// mirrored from `python/compile/kernels/ref.py::coarsen_increments`.
@@ -269,6 +302,35 @@ mod tests {
             .sum::<f64>()
             / (a.len() as f64 * dt);
         assert!(corr.abs() < 0.05, "raw factor correlation {corr}");
+    }
+
+    #[test]
+    fn lane_block_is_a_pure_transpose() {
+        // out[(k*n + t)*L + l] == dw[(k*batch + b0 + l)*n + t], bit for bit.
+        let src = BrownianSource::new(21);
+        let (batch, n, lanes, b0) = (11usize, 6usize, 4usize, 5usize);
+        let dw = src.increments_multi(Purpose::Grad, 2, 1, 0, batch, n, 0.1, 2);
+        let mut out = vec![0.0f32; 2 * n * lanes];
+        BrownianSource::lane_block(&dw, 2, batch, n, b0, lanes, &mut out);
+        for k in 0..2 {
+            for t in 0..n {
+                for l in 0..lanes {
+                    assert_eq!(
+                        out[(k * n + t) * lanes + l],
+                        dw[(k * batch + b0 + l) * n + t],
+                        "factor {k} step {t} lane {l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn lane_block_rejects_out_of_range_block() {
+        let dw = vec![0.0f32; 8 * 4];
+        let mut out = vec![0.0f32; 4 * 4];
+        BrownianSource::lane_block(&dw, 1, 8, 4, 5, 4, &mut out);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::engine;
 use crate::hedging::Problem;
+use crate::scenarios::kernels::{self, KernelFns, ScenarioKernel};
 use crate::scenarios::Scenario;
 
 /// A thread-safe backend handle the resident pool's `'static` dispatch
@@ -117,24 +118,64 @@ pub fn default_grad_chunk(level: usize) -> usize {
 /// [`NativeBackend::with_scenario`]). This is the only backend that can
 /// run non-default scenarios — the XLA artifacts are lowered for the
 /// default scenario alone.
+///
+/// The hot chunk methods (`grad_coupled_chunk`, `grad_naive_chunk`,
+/// `loss_eval_chunk`) dispatch through the **static kernel registry**
+/// ([`crate::scenarios::kernels`]): the scenario key is resolved once at
+/// construction to a monomorphized kernel (lane-blocked when the key
+/// carries the `-simd` suffix), so the per-step loop pays no virtual
+/// calls. Static dispatch of the same generic body performs identical
+/// f32 operations in identical order, keeping the `bs-call` bitwise
+/// anchors intact. The per-sample diagnostics keep the `dyn` scenario
+/// path — they are not on the training hot path.
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
     problem: Problem,
     scenario: Scenario,
+    kernel: Option<&'static ScenarioKernel>,
+    simd: bool,
 }
 
 impl NativeBackend {
     pub fn new(problem: Problem) -> Self {
         let scenario = Scenario::from_problem(&problem);
-        NativeBackend { problem, scenario }
+        Self::with_scenario(problem, scenario)
     }
 
     pub fn with_scenario(problem: Problem, scenario: Scenario) -> Self {
-        NativeBackend { problem, scenario }
+        let (kernel, simd) = match kernels::resolve(&scenario.name) {
+            Some((k, simd)) => (Some(k), simd),
+            None => (None, false),
+        };
+        NativeBackend {
+            problem,
+            scenario,
+            kernel,
+            simd,
+        }
     }
 
     pub fn scenario(&self) -> &Scenario {
         &self.scenario
+    }
+
+    /// Whether the hot path runs a monomorphized kernel from the static
+    /// registry (true for every registry-built scenario; false only for
+    /// hand-assembled [`Scenario`] values with unregistered names, which
+    /// fall back to `dyn` dispatch).
+    pub fn has_static_kernel(&self) -> bool {
+        self.kernel.is_some()
+    }
+
+    /// Whether the lane-blocked (`-simd` key) kernel variant is selected.
+    pub fn is_simd(&self) -> bool {
+        self.simd
+    }
+
+    /// The kernel set the hot chunk methods dispatch through.
+    fn kernel_fns(&self) -> Option<&'static KernelFns> {
+        self.kernel
+            .map(|k| if self.simd { &k.lanes } else { &k.scalar })
     }
 
     /// The increments of sample `b` from a factor-major `dw[dim, batch,
@@ -204,6 +245,15 @@ impl GradBackend for NativeBackend {
         dw: &[f32],
     ) -> Result<(f64, Vec<f32>)> {
         let batch = self.grad_chunk(level);
+        if let Some(fns) = self.kernel_fns() {
+            return Ok((fns.coupled_value_and_grad)(
+                params,
+                dw,
+                batch,
+                level,
+                &self.problem,
+            ));
+        }
         Ok(engine::coupled_value_and_grad_scenario(
             params,
             dw,
@@ -216,6 +266,15 @@ impl GradBackend for NativeBackend {
 
     fn grad_naive_chunk(&self, params: &[f32], dw: &[f32]) -> Result<(f64, Vec<f32>)> {
         let n = self.problem.n_steps(self.problem.lmax);
+        if let Some(fns) = self.kernel_fns() {
+            return Ok((fns.value_and_grad)(
+                params,
+                dw,
+                self.naive_chunk(),
+                n,
+                &self.problem,
+            ));
+        }
         Ok(engine::value_and_grad_scenario(
             params,
             dw,
@@ -228,6 +287,15 @@ impl GradBackend for NativeBackend {
 
     fn loss_eval_chunk(&self, params: &[f32], dw: &[f32]) -> Result<f64> {
         let n = self.problem.n_steps(self.problem.lmax);
+        if let Some(fns) = self.kernel_fns() {
+            return Ok((fns.loss_only)(
+                params,
+                dw,
+                self.eval_chunk(),
+                n,
+                &self.problem,
+            ));
+        }
         Ok(engine::loss_only_scenario(
             params,
             dw,
@@ -447,6 +515,64 @@ mod tests {
             crate::scenarios::build_scenario("heston-call", &Problem::default()).unwrap(),
         ));
         assert!(h.into_shared().is_ok());
+    }
+
+    #[test]
+    fn registry_scenarios_resolve_static_kernels_and_custom_names_fall_back() {
+        use crate::scenarios::build_scenario;
+        let problem = Problem::default();
+        for name in ["bs-call", "heston-uo-call", "cir-digital-simd"] {
+            let b = NativeBackend::with_scenario(
+                problem,
+                build_scenario(name, &problem).unwrap(),
+            );
+            assert!(b.has_static_kernel(), "{name} should hit the table");
+            assert_eq!(b.is_simd(), name.ends_with("-simd"), "{name}");
+        }
+        // hand-assembled scenario with an unregistered name: dyn fallback
+        let mut sc = Scenario::from_problem(&problem);
+        sc.name = "custom-thing".to_string();
+        let b = NativeBackend::with_scenario(problem, sc);
+        assert!(!b.has_static_kernel());
+        let params = init_params(0);
+        let dw = dw_for(&b, 1, b.grad_chunk(1));
+        let (loss, _) = b.grad_coupled_chunk(1, &params, &dw).unwrap();
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn simd_backend_matches_scalar_backend_within_tolerance() {
+        use crate::scenarios::build_scenario;
+        let problem = Problem::default();
+        let scalar = NativeBackend::with_scenario(
+            problem,
+            build_scenario("heston-uo-call", &problem).unwrap(),
+        );
+        let simd = NativeBackend::with_scenario(
+            problem,
+            build_scenario("heston-uo-call-simd", &problem).unwrap(),
+        );
+        assert!(simd.is_simd() && !scalar.is_simd());
+        assert_eq!(simd.n_factors(), 2);
+        let params = init_params(0);
+        let level = 2;
+        let n = problem.n_steps(level);
+        let dw = BrownianSource::new(4).increments_multi(
+            Purpose::Grad, 0, level as u32, 0, scalar.grad_chunk(level), n,
+            problem.dt(level), 2,
+        );
+        let (l1, g1) = scalar.grad_coupled_chunk(level, &params, &dw).unwrap();
+        let (l2, g2) = simd.grad_coupled_chunk(level, &params, &dw).unwrap();
+        assert!(
+            (l1 - l2).abs() <= 1e-3 * l1.abs().max(1.0),
+            "loss {l1} vs {l2}"
+        );
+        for (i, (&a, &b)) in g1.iter().zip(&g2).enumerate() {
+            assert!(
+                (a - b).abs() <= 5e-3 * a.abs().max(b.abs()).max(1.0),
+                "grad[{i}]: {a} vs {b}"
+            );
+        }
     }
 
     #[test]

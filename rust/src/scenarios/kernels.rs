@@ -1,0 +1,410 @@
+//! Statically dispatched scenario kernels: one **monomorphized**
+//! `value_and_grad` / `coupled_value_and_grad` / `loss_only`
+//! instantiation per registered `SDE_KEYS x PAYOFF_KEYS` combination,
+//! selected **once per dispatch** by string key instead of paying a
+//! `dyn Sde` / `dyn Payoff` virtual call per step per path.
+//!
+//! Construction: zero-sized *ctor marker* types ([`SdeCtor`] /
+//! [`PayoffCtor`]) encode how the registry builds each component from the
+//! [`Problem`] (`bs` and `gbm` are both [`BlackScholes`], differing only
+//! in their constructor — a plain type parameter could not distinguish
+//! them). The `entry!` macro instantiates the generic kernel bodies for
+//! every pair and coerces the resulting fn items into plain fn pointers,
+//! so [`KERNELS`] is a flat `static` table with no allocation, no
+//! `dyn`, and no lazy initialization.
+//!
+//! Each entry carries **two** kernel sets:
+//!
+//! * `scalar` — the streaming scalar body
+//!   ([`crate::engine::objective`]). Static dispatch of the *same*
+//!   generic body performs the identical f32 operations in identical
+//!   order as the `dyn` path (rustc has no fast-math), so scalar kernels
+//!   are **bit-identical** to the dynamic reference — the `bs-call`
+//!   bitwise anchors hold through the rerouted backend.
+//! * `lanes` — the lane-blocked SIMD body ([`crate::engine::lanes`]),
+//!   8 paths per block. It reassociates f32 reductions and uses a
+//!   polynomial `exp`, so it is selected only under the scenario's
+//!   `*-simd` variant key ([`resolve`]) and validated against the scalar
+//!   reference with relative tolerances (`tests/kernel_suite.rs`).
+
+use crate::hedging::Problem;
+
+use super::payoff::{
+    AsianCall, DigitalCall, DownAndInPut, EuropeanCall, EuropeanPut,
+    LookbackCall, Payoff, UpAndOutCall,
+};
+use super::registry::{DOWN_BARRIER_MULT, UP_BARRIER_MULT};
+use super::sde::{BlackScholes, CoxIngersollRoss, Heston, OrnsteinUhlenbeck, Sde};
+use crate::engine::{lanes, objective};
+
+/// How a registry SDE key builds its concrete dynamics. Implemented by
+/// zero-sized marker types so `bs` and `gbm` (same concrete type,
+/// different constructor) monomorphize distinct kernels.
+pub trait SdeCtor {
+    type S: Sde;
+    const DIM: usize;
+    fn build(p: &Problem) -> Self::S;
+}
+
+/// How a registry payoff key builds its concrete payoff — strike and
+/// barrier placement exactly as [`super::registry::build_scenario`].
+pub trait PayoffCtor {
+    type P: Payoff;
+    fn build(p: &Problem) -> Self::P;
+}
+
+/// `bs`: the problem's own drift form.
+pub struct BsKey;
+/// `gbm`: forced geometric drift.
+pub struct GbmKey;
+/// `ou`: Ornstein–Uhlenbeck.
+pub struct OuKey;
+/// `cir`: Cox–Ingersoll–Ross.
+pub struct CirKey;
+/// `heston`: 2-factor stochastic vol.
+pub struct HestonKey;
+
+impl SdeCtor for BsKey {
+    type S = BlackScholes;
+    const DIM: usize = 1;
+    fn build(p: &Problem) -> BlackScholes {
+        BlackScholes::from_problem(p)
+    }
+}
+impl SdeCtor for GbmKey {
+    type S = BlackScholes;
+    const DIM: usize = 1;
+    fn build(p: &Problem) -> BlackScholes {
+        BlackScholes::geometric(p)
+    }
+}
+impl SdeCtor for OuKey {
+    type S = OrnsteinUhlenbeck;
+    const DIM: usize = 1;
+    fn build(p: &Problem) -> OrnsteinUhlenbeck {
+        OrnsteinUhlenbeck::from_problem(p)
+    }
+}
+impl SdeCtor for CirKey {
+    type S = CoxIngersollRoss;
+    const DIM: usize = 1;
+    fn build(p: &Problem) -> CoxIngersollRoss {
+        CoxIngersollRoss::from_problem(p)
+    }
+}
+impl SdeCtor for HestonKey {
+    type S = Heston;
+    const DIM: usize = 2;
+    fn build(p: &Problem) -> Heston {
+        Heston::from_problem(p)
+    }
+}
+
+/// `call`.
+pub struct CallKey;
+/// `put`.
+pub struct PutKey;
+/// `asian`.
+pub struct AsianKey;
+/// `lookback`.
+pub struct LookbackKey;
+/// `digital`.
+pub struct DigitalKey;
+/// `uo-call`.
+pub struct UoCallKey;
+/// `di-put`.
+pub struct DiPutKey;
+
+impl PayoffCtor for CallKey {
+    type P = EuropeanCall;
+    fn build(p: &Problem) -> EuropeanCall {
+        EuropeanCall {
+            strike: p.strike as f32,
+        }
+    }
+}
+impl PayoffCtor for PutKey {
+    type P = EuropeanPut;
+    fn build(p: &Problem) -> EuropeanPut {
+        EuropeanPut {
+            strike: p.strike as f32,
+        }
+    }
+}
+impl PayoffCtor for AsianKey {
+    type P = AsianCall;
+    fn build(p: &Problem) -> AsianCall {
+        AsianCall {
+            strike: p.strike as f32,
+        }
+    }
+}
+impl PayoffCtor for LookbackKey {
+    type P = LookbackCall;
+    fn build(_p: &Problem) -> LookbackCall {
+        LookbackCall
+    }
+}
+impl PayoffCtor for DigitalKey {
+    type P = DigitalCall;
+    fn build(p: &Problem) -> DigitalCall {
+        DigitalCall {
+            strike: p.strike as f32,
+        }
+    }
+}
+impl PayoffCtor for UoCallKey {
+    type P = UpAndOutCall;
+    fn build(p: &Problem) -> UpAndOutCall {
+        UpAndOutCall {
+            strike: p.strike as f32,
+            barrier: (p.s0 * UP_BARRIER_MULT) as f32,
+        }
+    }
+}
+impl PayoffCtor for DiPutKey {
+    type P = DownAndInPut;
+    fn build(p: &Problem) -> DownAndInPut {
+        DownAndInPut {
+            strike: p.strike as f32,
+            barrier: (p.s0 * DOWN_BARRIER_MULT) as f32,
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Generic kernel bodies — one monomorphization per (SdeCtor, PayoffCtor).
+// -------------------------------------------------------------------------
+
+fn scalar_vg<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> (f64, Vec<f32>) {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    objective::value_and_grad_impl(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+fn scalar_cvg<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw_fine: &[f32],
+    batch: usize,
+    level: usize,
+    problem: &Problem,
+) -> (f64, Vec<f32>) {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    objective::coupled_value_and_grad_impl(
+        params, dw_fine, batch, level, problem, &sde, &payoff,
+    )
+}
+
+fn scalar_loss<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> f64 {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    objective::loss_only_impl(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+fn lanes_vg<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> (f64, Vec<f32>) {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    lanes::value_and_grad(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+fn lanes_cvg<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw_fine: &[f32],
+    batch: usize,
+    level: usize,
+    problem: &Problem,
+) -> (f64, Vec<f32>) {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    lanes::coupled_value_and_grad(
+        params, dw_fine, batch, level, problem, &sde, &payoff,
+    )
+}
+
+fn lanes_loss<SK: SdeCtor, PK: PayoffCtor>(
+    params: &[f32],
+    dw: &[f32],
+    batch: usize,
+    n_steps: usize,
+    problem: &Problem,
+) -> f64 {
+    let sde = SK::build(problem);
+    let payoff = PK::build(problem);
+    lanes::loss_only(params, dw, batch, n_steps, problem, &sde, &payoff)
+}
+
+// -------------------------------------------------------------------------
+// The flat kernel table.
+// -------------------------------------------------------------------------
+
+/// The three objective entry points of one kernel variant, as plain fn
+/// pointers. `value_and_grad` / `loss_only` take
+/// `(params, dw, batch, n_steps, problem)`; `coupled_value_and_grad`
+/// takes `(params, dw_fine, batch, level, problem)` — the signatures of
+/// the [`crate::engine::objective`] entry points minus the scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelFns {
+    pub value_and_grad: fn(&[f32], &[f32], usize, usize, &Problem) -> (f64, Vec<f32>),
+    pub coupled_value_and_grad:
+        fn(&[f32], &[f32], usize, usize, &Problem) -> (f64, Vec<f32>),
+    pub loss_only: fn(&[f32], &[f32], usize, usize, &Problem) -> f64,
+}
+
+/// One registered scenario's monomorphized kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioKernel {
+    /// Base registry key (never `-simd`-suffixed).
+    pub name: &'static str,
+    /// Brownian factor count of the dynamics.
+    pub dim: usize,
+    /// Bit-identical scalar kernels (streaming reference body).
+    pub scalar: KernelFns,
+    /// Lane-blocked SIMD kernels (tolerance-validated, `*-simd` keys).
+    pub lanes: KernelFns,
+}
+
+macro_rules! entry {
+    ($name:expr, $sde:ty, $payoff:ty) => {
+        ScenarioKernel {
+            name: $name,
+            dim: <$sde as SdeCtor>::DIM,
+            scalar: KernelFns {
+                value_and_grad: scalar_vg::<$sde, $payoff>,
+                coupled_value_and_grad: scalar_cvg::<$sde, $payoff>,
+                loss_only: scalar_loss::<$sde, $payoff>,
+            },
+            lanes: KernelFns {
+                value_and_grad: lanes_vg::<$sde, $payoff>,
+                coupled_value_and_grad: lanes_cvg::<$sde, $payoff>,
+                loss_only: lanes_loss::<$sde, $payoff>,
+            },
+        }
+    };
+}
+
+macro_rules! sde_row {
+    ($sde_key:literal, $sde:ty) => {
+        [
+            entry!(concat!($sde_key, "-call"), $sde, CallKey),
+            entry!(concat!($sde_key, "-put"), $sde, PutKey),
+            entry!(concat!($sde_key, "-asian"), $sde, AsianKey),
+            entry!(concat!($sde_key, "-lookback"), $sde, LookbackKey),
+            entry!(concat!($sde_key, "-digital"), $sde, DigitalKey),
+            entry!(concat!($sde_key, "-uo-call"), $sde, UoCallKey),
+            entry!(concat!($sde_key, "-di-put"), $sde, DiPutKey),
+        ]
+    };
+}
+
+/// Every registered scenario's static kernels, in
+/// [`super::registry::all_scenario_names`] order (SDE-major). 5 SDE
+/// ctors x 7 payoff ctors = 35 monomorphized kernel pairs.
+pub static KERNELS: [[ScenarioKernel; 7]; 5] = [
+    sde_row!("bs", BsKey),
+    sde_row!("gbm", GbmKey),
+    sde_row!("ou", OuKey),
+    sde_row!("cir", CirKey),
+    sde_row!("heston", HestonKey),
+];
+
+/// The static kernel registered under base key `name`; `None` for
+/// unknown (or `-simd`-suffixed) keys.
+pub fn kernel_for(name: &str) -> Option<&'static ScenarioKernel> {
+    KERNELS
+        .iter()
+        .flat_map(|row| row.iter())
+        .find(|k| k.name == name)
+}
+
+/// Resolve a scenario key — base (`"heston-uo-call"`) or SIMD variant
+/// (`"heston-uo-call-simd"`) — to its static kernel and whether the
+/// lane-blocked variant was requested.
+pub fn resolve(name: &str) -> Option<(&'static ScenarioKernel, bool)> {
+    match name.strip_suffix("-simd") {
+        Some(base) => kernel_for(base).map(|k| (k, true)),
+        None => kernel_for(name).map(|k| (k, false)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenarios::{all_scenario_names, build_scenario};
+
+    #[test]
+    fn kernel_table_matches_registry_exactly() {
+        let names = all_scenario_names();
+        let flat: Vec<&ScenarioKernel> =
+            KERNELS.iter().flat_map(|row| row.iter()).collect();
+        assert_eq!(flat.len(), names.len(), "one kernel per registry key");
+        let p = Problem::default();
+        for (k, name) in flat.iter().zip(&names) {
+            assert_eq!(k.name, name.as_str(), "table order drifted");
+            let sc = build_scenario(name, &p).unwrap();
+            assert_eq!(k.dim, sc.sde.dim(), "{name}: dim mismatch");
+        }
+    }
+
+    #[test]
+    fn resolve_handles_simd_suffix_and_rejects_junk() {
+        let (k, simd) = resolve("heston-uo-call").unwrap();
+        assert_eq!((k.name, simd), ("heston-uo-call", false));
+        let (k, simd) = resolve("heston-uo-call-simd").unwrap();
+        assert_eq!((k.name, simd), ("heston-uo-call", true));
+        for bad in ["bs-simd", "bs-call-simd-simd", "sabr-call", "", "-simd"] {
+            assert!(resolve(bad).is_none(), "`{bad}` must not resolve");
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_is_bitwise_identical_to_dynamic_reference() {
+        use crate::engine::objective::{
+            coupled_value_and_grad_scenario, loss_only_scenario,
+        };
+        use crate::engine::mlp::init_params;
+        use crate::rng::{brownian::Purpose, BrownianSource};
+
+        let p = Problem::default();
+        let params = init_params(0);
+        for name in ["bs-call", "ou-asian", "heston-uo-call"] {
+            let k = kernel_for(name).unwrap();
+            let sc = build_scenario(name, &p).unwrap();
+            let batch = 12;
+            let level = 2;
+            let n = p.n_steps(level);
+            let dw = BrownianSource::new(5).increments_multi(
+                Purpose::Grad, 0, level as u32, 0, batch, n, p.dt(level), k.dim,
+            );
+            let (l1, g1) =
+                (k.scalar.coupled_value_and_grad)(&params, &dw, batch, level, &p);
+            let (l2, g2) =
+                coupled_value_and_grad_scenario(&params, &dw, batch, level, &p, &sc);
+            assert_eq!(l1, l2, "{name}: coupled loss drifted");
+            assert_eq!(g1, g2, "{name}: coupled grad drifted");
+            assert_eq!(
+                (k.scalar.loss_only)(&params, &dw, batch, n, &p),
+                loss_only_scenario(&params, &dw, batch, n, &p, &sc),
+                "{name}: loss drifted"
+            );
+        }
+    }
+}

@@ -20,7 +20,11 @@
 //!   registered;
 //! * [`Scenario`] — one (SDE, payoff) pair; [`registry`] builds them from
 //!   string keys like `"ou-asian"` or `"heston-uo-call"` (see
-//!   `--scenario` on the `repro` CLI and the `scenario.name` TOML key).
+//!   `--scenario` on the `repro` CLI and the `scenario.name` TOML key);
+//! * [`kernels`] — a static table of **monomorphized** objective kernels,
+//!   one per registry key (plus a lane-blocked SIMD variant behind the
+//!   `-simd` key suffix), so non-default scenarios pay zero dynamic
+//!   dispatch in the per-step hot loop.
 //!
 //! The default [`DEFAULT_SCENARIO`] (`"bs-call"`) reproduces the seed
 //! engine bit-for-bit — including through the D-generic + streaming
@@ -30,11 +34,13 @@
 //! backend only — the AOT/XLA artifacts are lowered for the default
 //! scenario.
 
+pub mod kernels;
 pub mod payoff;
 pub mod registry;
 pub mod scenario;
 pub mod sde;
 
+pub use kernels::{kernel_for, resolve as resolve_kernel, KernelFns, ScenarioKernel};
 pub use payoff::{PathAccum, Payoff};
 pub use registry::{
     all_scenario_names, build_scenario, build_scenario_or_err, PAYOFF_KEYS, SDE_KEYS,

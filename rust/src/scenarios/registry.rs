@@ -81,8 +81,16 @@ pub fn build_scenario_or_err(name: &str, problem: &Problem) -> anyhow::Result<Sc
 
 /// Build the scenario registered under `name` for `problem`; `None` for
 /// unknown keys.
+///
+/// Every base key also registers a `-simd` variant (`"heston-uo-call-simd"`)
+/// selecting the lane-blocked kernels (see [`super::kernels::resolve`]):
+/// same dynamics and payoff — the returned [`Scenario`] components are
+/// identical — but the native backend routes its hot path through the
+/// 8-wide lane engine, which reassociates f32 reductions and is therefore
+/// validated by tolerance rather than bitwise.
 pub fn build_scenario(name: &str, problem: &Problem) -> Option<Scenario> {
-    let (sde_key, payoff_key) = name.split_once('-')?;
+    let base = name.strip_suffix("-simd").unwrap_or(name);
+    let (sde_key, payoff_key) = base.split_once('-')?;
     let sde: Arc<dyn Sde> = match sde_key {
         "bs" => Arc::new(BlackScholes::from_problem(problem)),
         "gbm" => Arc::new(BlackScholes::geometric(problem)),

@@ -106,6 +106,36 @@
 //! repro fleet-sweep --fleet-sizes 1,2,4 --workers 2,4 --steps 16
 //! ```
 //!
+//! # Performance (`--simd`, `--pin-cores`, `repro hotpath-bench`)
+//!
+//! Every training/experiment subcommand accepts two hot-path knobs
+//! (native backend only):
+//!
+//! * `--simd` (TOML: `[execution] simd = true`) routes the scenario
+//!   through its lane-blocked SIMD kernel by selecting the `-simd`
+//!   registry variant key (`heston-uo-call` → `heston-uo-call-simd`):
+//!   8 paths integrate per `[f32; 8]` lane block and MLP rows run 8 at a
+//!   time ([`crate::engine::lanes`]). Lane kernels reassociate f32
+//!   reductions, so they are tolerance-validated against the scalar
+//!   reference rather than bitwise; scalar runs (the default) stay
+//!   bit-identical to the seed. Rejected loudly with `--backend xla`.
+//! * `--pin-cores` (TOML: `[execution] pin_cores = true`) pins the pool's
+//!   resident workers round-robin to CPU cores
+//!   ([`crate::exec::affinity`]; Linux `sched_setaffinity`, best-effort
+//!   no-op elsewhere or when the cpuset refuses). The worker→core map is
+//!   reported per dispatch ([`crate::exec::StepExecReport`]) and pinning
+//!   never changes numerics.
+//!
+//! `repro hotpath-bench` (`make bench-hotpath`) times one
+//! `value_and_grad` chunk per scenario through both kernel variants and
+//! writes `BENCH_hotpath.json` (paths/sec per variant + speedup per
+//! cell; `--scenarios` comma list or `all`, `--batch` paths per call):
+//!
+//! ```text
+//! repro train --scenario heston-uo-call --simd --pin-cores
+//! repro hotpath-bench --scenarios all --batch 512
+//! ```
+//!
 //! # Observability (`--trace`, `repro trace`)
 //!
 //! Every training/experiment subcommand accepts the `--trace` switch

@@ -1,0 +1,163 @@
+//! Static-dispatch kernel registry invariants, across the full
+//! `SDE_KEYS x PAYOFF_KEYS` cross product:
+//!
+//! * **no dyn fallback reachable from the trainer** — every registry key
+//!   (and its `-simd` variant) resolves to a monomorphized
+//!   [`ScenarioKernel`], and a [`NativeBackend`] built from any registry
+//!   scenario reports a static kernel;
+//! * **lane-vs-scalar golden tolerances** — the 8-wide lane-blocked
+//!   kernels track the scalar reference within per-scenario relative
+//!   tolerances for loss and every gradient component, including
+//!   remainder batches that exercise the scalar tail path;
+//! * **bitwise seed anchor** — the `bs-call` *scalar* static kernel is
+//!   bit-identical to the seed engine entry points, so routing the
+//!   backend through the kernel table cannot move the default scenario.
+
+use dmlmc::engine::mlp::init_params;
+use dmlmc::engine::{coupled_value_and_grad, loss_only, value_and_grad};
+use dmlmc::hedging::Problem;
+use dmlmc::rng::{brownian::Purpose, BrownianSource};
+use dmlmc::runtime::NativeBackend;
+use dmlmc::scenarios::{
+    all_scenario_names, build_scenario, kernel_for, resolve_kernel,
+};
+
+/// Relative closeness with an absolute floor of 1: lane kernels
+/// reassociate f32 reductions and use a polynomial `exp` in the MLP, so
+/// exact equality is off the table by design.
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn every_registry_key_resolves_to_a_static_kernel() {
+    let names = all_scenario_names();
+    assert_eq!(names.len(), 35, "registry size drifted");
+    for name in &names {
+        let k = kernel_for(name)
+            .unwrap_or_else(|| panic!("`{name}` has no static kernel"));
+        assert_eq!(k.name, name.as_str());
+        let (base, simd) = resolve_kernel(name).unwrap();
+        assert!(!simd, "`{name}` is not a SIMD key");
+        assert_eq!(base.name, name.as_str());
+        let variant = format!("{name}-simd");
+        let (lane, simd) = resolve_kernel(&variant)
+            .unwrap_or_else(|| panic!("`{variant}` must resolve"));
+        assert!(simd, "`{variant}` selects the lane kernels");
+        assert_eq!(lane.name, name.as_str());
+    }
+    for bad in ["sabr-call", "bs-call-simd-simd", "bs", "", "-simd"] {
+        assert!(resolve_kernel(bad).is_none(), "`{bad}` must not resolve");
+    }
+}
+
+#[test]
+fn native_backend_never_falls_back_to_dyn_for_registry_scenarios() {
+    let p = Problem::default();
+    for name in all_scenario_names() {
+        for (key, want_simd) in [(name.clone(), false), (format!("{name}-simd"), true)]
+        {
+            let sc = build_scenario(&key, &p).unwrap();
+            assert_eq!(sc.name, key, "registry must keep the full key as name");
+            let backend = NativeBackend::with_scenario(p, sc);
+            assert!(
+                backend.has_static_kernel(),
+                "`{key}`: trainer-reachable backend fell back to dyn dispatch"
+            );
+            assert_eq!(backend.is_simd(), want_simd, "`{key}`: wrong variant");
+        }
+    }
+}
+
+#[test]
+fn lane_kernels_track_the_scalar_reference_for_every_scenario() {
+    let p = Problem::default();
+    let params = init_params(0);
+    let src = BrownianSource::new(0xA11);
+    let level = 2;
+    let n = p.n_steps(level);
+    // Remainder batches on purpose: 19 = 2 full lane blocks + 3 tail
+    // paths through the scalar fallback, 27 = 3 blocks + 3.
+    for (pass, batch) in [(0u64, 19usize), (1, 27)] {
+        for name in all_scenario_names() {
+            let k = kernel_for(&name).unwrap();
+            let dw = src.increments_multi(
+                Purpose::Grad,
+                pass,
+                level as u32,
+                0,
+                batch,
+                n,
+                p.dt(level),
+                k.dim,
+            );
+            let (ls, gs) = (k.scalar.value_and_grad)(&params, &dw, batch, n, &p);
+            let (ll, gl) = (k.lanes.value_and_grad)(&params, &dw, batch, n, &p);
+            assert!(
+                close(ll as f32, ls as f32, 1e-3),
+                "{name}: lane loss {ll} vs scalar {ls}"
+            );
+            for (i, (a, b)) in gl.iter().zip(&gs).enumerate() {
+                assert!(
+                    close(*a, *b, 5e-3),
+                    "{name}: grad[{i}] lane {a} vs scalar {b}"
+                );
+            }
+            let (lcs, gcs) =
+                (k.scalar.coupled_value_and_grad)(&params, &dw, batch, level, &p);
+            let (lcl, gcl) =
+                (k.lanes.coupled_value_and_grad)(&params, &dw, batch, level, &p);
+            assert!(
+                close(lcl as f32, lcs as f32, 1e-3),
+                "{name}: lane coupled loss {lcl} vs scalar {lcs}"
+            );
+            for (i, (a, b)) in gcl.iter().zip(&gcs).enumerate() {
+                assert!(
+                    close(*a, *b, 5e-3),
+                    "{name}: coupled grad[{i}] lane {a} vs scalar {b}"
+                );
+            }
+            let es = (k.scalar.loss_only)(&params, &dw, batch, n, &p);
+            let el = (k.lanes.loss_only)(&params, &dw, batch, n, &p);
+            assert!(
+                close(el as f32, es as f32, 1e-3),
+                "{name}: lane eval loss {el} vs scalar {es}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bs_call_scalar_kernel_is_bitwise_identical_to_the_seed_engine() {
+    let p = Problem::default();
+    let params = init_params(3);
+    let k = kernel_for("bs-call").unwrap();
+    let src = BrownianSource::new(7);
+    for level in 0..=2usize {
+        let batch = 33;
+        let n = p.n_steps(level);
+        let dw = src.increments_multi(
+            Purpose::Grad,
+            0,
+            level as u32,
+            0,
+            batch,
+            n,
+            p.dt(level),
+            1,
+        );
+        let (l1, g1) = (k.scalar.value_and_grad)(&params, &dw, batch, n, &p);
+        let (l2, g2) = value_and_grad(&params, &dw, batch, n, &p);
+        assert_eq!(l1, l2, "level {level}: value_and_grad loss drifted");
+        assert_eq!(g1, g2, "level {level}: value_and_grad grad drifted");
+        let (l1, g1) = (k.scalar.coupled_value_and_grad)(&params, &dw, batch, level, &p);
+        let (l2, g2) = coupled_value_and_grad(&params, &dw, batch, level, &p);
+        assert_eq!(l1, l2, "level {level}: coupled loss drifted");
+        assert_eq!(g1, g2, "level {level}: coupled grad drifted");
+        assert_eq!(
+            (k.scalar.loss_only)(&params, &dw, batch, n, &p),
+            loss_only(&params, &dw, batch, n, &p),
+            "level {level}: loss_only drifted"
+        );
+    }
+}
