@@ -12,7 +12,7 @@
 ARTIFACTS_DIR := rust/artifacts
 
 .PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec \
-	bench-fleet bench-hotpath trace clean
+	bench-fleet bench-hotpath trace serve-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -60,6 +60,15 @@ bench-hotpath:
 # (see `repro trace --help`).
 trace:
 	cd rust && cargo run --release --bin repro -- trace --quiet
+
+# Self-terminating serve smoke: a resident traced fleet behind the live
+# HTTP scrape surface (GET /metrics | /status | /sessions/<id>), here
+# bounded by --max-ticks so it exits on its own once the sessions drain
+# (the daemon form is `repro serve --config configs/serve.toml`, SIGINT
+# to stop; see `repro serve --help`).
+serve-smoke:
+	cd rust && cargo run --release --bin repro -- serve \
+		--config ../configs/serve.toml --port 0 --steps 16 --max-ticks 64 --quiet
 
 clean:
 	rm -rf $(ARTIFACTS_DIR)

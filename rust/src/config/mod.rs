@@ -151,6 +151,10 @@ pub struct ObsConfig {
     /// Per-track span ring capacity; older spans are evicted (and
     /// counted as dropped) beyond it.
     pub ring_capacity: usize,
+    /// TCP port for the `repro serve` scrape endpoint (`--port` on the
+    /// CLI). `0` (the default) binds an ephemeral port, reported on
+    /// startup; ignored by every other subcommand.
+    pub serve_port: u16,
 }
 
 impl Default for ObsConfig {
@@ -158,6 +162,26 @@ impl Default for ObsConfig {
         ObsConfig {
             trace: false,
             ring_capacity: crate::obs::DEFAULT_RING_CAPACITY,
+            serve_port: 0,
+        }
+    }
+}
+
+/// `repro serve` fleet composition: how many DMLMC sessions the daemon
+/// submits to its [`FleetCoordinator`](crate::coordinator::FleetCoordinator)
+/// and the seed of the first one (session `i` gets `seed0 + i`, so the
+/// fleet reproduces `sessions` independent solo runs bit-identically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    pub sessions: usize,
+    pub seed0: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            sessions: 2,
+            seed0: 1,
         }
     }
 }
@@ -189,6 +213,7 @@ pub struct ExperimentConfig {
     pub runtime: RuntimeConfig,
     pub execution: ExecutionConfig,
     pub observability: ObsConfig,
+    pub serve: ServeConfig,
     /// Scenario registry key (`scenario.name` in TOML, `--scenario` on
     /// the CLI). The default `"bs-call"` is the seed behavior; anything
     /// else requires the native backend.
@@ -204,6 +229,7 @@ impl Default for ExperimentConfig {
             runtime: RuntimeConfig::default(),
             execution: ExecutionConfig::default(),
             observability: ObsConfig::default(),
+            serve: ServeConfig::default(),
             scenario: DEFAULT_SCENARIO.to_string(),
         }
     }
@@ -344,6 +370,25 @@ impl ExperimentConfig {
             }
             cfg.observability.ring_capacity = v;
         }
+        if let Some(v) = getu("observability.serve_port") {
+            if v > u16::MAX as usize {
+                return Err(TomlError(format!(
+                    "observability.serve_port must fit in a u16 (got {v})"
+                )));
+            }
+            cfg.observability.serve_port = v as u16;
+        }
+
+        // [serve]
+        if let Some(v) = getu("serve.sessions") {
+            if v == 0 {
+                return Err(TomlError("serve.sessions must be positive".into()));
+            }
+            cfg.serve.sessions = v;
+        }
+        if let Some(v) = getu("serve.seed0") {
+            cfg.serve.seed0 = v as u64;
+        }
 
         // [runtime]
         if let Some(s) = gets("runtime.backend") {
@@ -456,6 +501,9 @@ const KNOWN_KEYS: &[&str] = &[
     "execution.pin_cores",
     "observability.trace",
     "observability.ring_capacity",
+    "observability.serve_port",
+    "serve.sessions",
+    "serve.seed0",
     "runtime.backend",
     "runtime.artifacts_dir",
     "runtime.out_dir",
@@ -649,6 +697,29 @@ backend = "native"
         );
         assert!(ExperimentConfig::from_toml("[observability]\ntracing = true")
             .is_err());
+    }
+
+    #[test]
+    fn serve_settings_parse_and_validate() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.observability.serve_port, 0);
+        assert_eq!(cfg.serve.sessions, 2);
+        assert_eq!(cfg.serve.seed0, 1);
+
+        let cfg = ExperimentConfig::from_toml(
+            "[observability]\nserve_port = 9184\n\n[serve]\nsessions = 3\nseed0 = 7",
+        )
+        .unwrap();
+        assert_eq!(cfg.observability.serve_port, 9184);
+        assert_eq!(cfg.serve.sessions, 3);
+        assert_eq!(cfg.serve.seed0, 7);
+
+        assert!(
+            ExperimentConfig::from_toml("[observability]\nserve_port = 70000")
+                .is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[serve]\nsessions = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nseedz = 1").is_err());
     }
 
     #[test]

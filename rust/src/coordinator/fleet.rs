@@ -71,7 +71,7 @@ use super::trainer::{Trainer, TrainerBuilder};
 use crate::exec::{ChunkTask, ExecStats, StepExecReport, WorkerPool};
 use crate::hedging::Problem;
 use crate::metrics::{CurvePoint, LearningCurve};
-use crate::obs::{GroupMeta, Recorder};
+use crate::obs::{GroupMeta, LevelSnapshot, Recorder};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::SharedBackend;
 
@@ -107,6 +107,25 @@ impl SessionStatus {
     pub fn is_done(&self) -> bool {
         self.state == SessionState::Done
     }
+}
+
+/// Deep per-session snapshot for the serving surface
+/// ([`FleetCoordinator::session_detail`], rendered as
+/// `GET /sessions/<id>` by `repro serve`): progress, last evaluated
+/// loss, the per-level chunk layout, and the live estimator statistics.
+#[derive(Debug, Clone)]
+pub struct SessionDetail {
+    pub status: SessionStatus,
+    pub method: Method,
+    pub seed: u64,
+    /// Effective scenario key (with any `-simd` suffix applied).
+    pub scenario: String,
+    /// Loss at the most recent eval point (`None` before admission).
+    pub last_loss: Option<f64>,
+    /// Chunks per level refresh (the level layout).
+    pub chunks_per_level: Vec<usize>,
+    /// Per-level estimator statistics at the session's current step.
+    pub levels: Vec<LevelSnapshot>,
 }
 
 /// One finished session's results, handed out by
@@ -223,8 +242,12 @@ impl FleetCoordinator {
     pub fn enable_tracing(&mut self) {
         if self.recorder.is_none() {
             let mut rec = Recorder::new(self.pool.workers());
-            rec.metrics_mut()
-                .set_gauge("dmlmc_pool_workers", self.pool.workers() as f64);
+            {
+                let mut m = rec.metrics_mut();
+                m.set_gauge("dmlmc_pool_workers", self.pool.workers() as f64);
+                // Fleet gauges exist (at rest) from the first scrape.
+                Self::publish_fleet_gauges(&mut m, &self.sessions, None);
+            }
             self.recorder = Some(rec);
         }
     }
@@ -317,15 +340,42 @@ impl FleetCoordinator {
         Ok(id)
     }
 
-    /// Progress snapshot for a session; `None` once drained (or never
-    /// submitted).
-    pub fn poll(&self, id: SessionId) -> Option<SessionStatus> {
-        self.sessions.iter().find(|s| s.id == id).map(|s| SessionStatus {
+    fn status_of(s: &Session) -> SessionStatus {
+        SessionStatus {
             id: s.id,
             name: s.name.clone(),
             state: s.state,
             steps_done: s.t,
             steps_total: s.steps,
+        }
+    }
+
+    /// Progress snapshot for a session; `None` once drained (or never
+    /// submitted).
+    pub fn poll(&self, id: SessionId) -> Option<SessionStatus> {
+        self.sessions
+            .iter()
+            .find(|s| s.id == id)
+            .map(Self::status_of)
+    }
+
+    /// Progress snapshots for every session still held by the fleet
+    /// (submission order) — the `/status` listing of `repro serve`.
+    pub fn statuses(&self) -> Vec<SessionStatus> {
+        self.sessions.iter().map(Self::status_of).collect()
+    }
+
+    /// Deep snapshot of one session (progress + level layout + live
+    /// estimator statistics); `None` once drained or never submitted.
+    pub fn session_detail(&self, id: SessionId) -> Option<SessionDetail> {
+        self.sessions.iter().find(|s| s.id == id).map(|s| SessionDetail {
+            status: Self::status_of(s),
+            method: s.trainer.method,
+            seed: s.trainer.seed,
+            scenario: s.trainer.cfg.effective_scenario(),
+            last_loss: s.curve.points.last().map(|p| p.loss),
+            chunks_per_level: s.trainer.chunks_per_level().to_vec(),
+            levels: s.trainer.estimator().snapshot(s.t.saturating_sub(1)),
         })
     }
 
@@ -397,6 +447,10 @@ impl FleetCoordinator {
         let mut ctxs: Vec<GroupCtx> = Vec::new();
         let mut metas: Vec<GroupMeta> = Vec::new();
         let mut plans: Vec<Plan> = Vec::new();
+        // Per group: (owning session index, Some(level) for a coupled
+        // level job / None for naive) — routes measured per-task cost
+        // back to the owning session's estimator statistics.
+        let mut group_owner: Vec<(usize, Option<usize>)> = Vec::new();
         for (idx, s) in self.sessions.iter().enumerate() {
             if s.state != SessionState::Running {
                 continue;
@@ -435,6 +489,7 @@ impl FleetCoordinator {
                         level: problem.lmax,
                         session: Some(s.id.0 as u64),
                     });
+                    group_owner.push((idx, None));
                     plans.push(Plan { sess: idx, groups: base..base + 1, jobs: None });
                 }
                 Method::Mlmc | Method::Dmlmc => {
@@ -457,6 +512,7 @@ impl FleetCoordinator {
                             level: job.level,
                             session: Some(s.id.0 as u64),
                         });
+                        group_owner.push((idx, Some(job.level)));
                     }
                     plans.push(Plan {
                         sess: idx,
@@ -504,6 +560,18 @@ impl FleetCoordinator {
             })?;
         if let (Some(rec), Some(start)) = (self.recorder.as_mut(), tick_start) {
             rec.ingest_dispatch(&report, start, &metas);
+        }
+        // Attribute measured per-task cost to each owning session's
+        // estimator statistics (coupled level jobs only, mirroring the
+        // solo trainer path: naive finest-grid tasks carry no
+        // level-difference meaning).
+        for stat in &report.per_task {
+            if let (sess, Some(level)) = group_owner[stat.group] {
+                self.sessions[sess]
+                    .trainer
+                    .estimator_mut()
+                    .record_cost(level, stat.busy.as_secs_f64());
+            }
         }
         let mut reduced: Vec<Option<(f64, Vec<f32>)>> =
             reduced.into_iter().map(Some).collect();
@@ -578,7 +646,22 @@ impl FleetCoordinator {
         }
         let tick_idx = self.ticks as f64;
         if let (Some(rec), Some(start)) = (self.recorder.as_mut(), tick_start) {
-            rec.metrics_mut().inc("dmlmc_ticks_total", 1);
+            {
+                let mut m = rec.metrics_mut();
+                m.inc("dmlmc_ticks_total", 1);
+                Self::publish_fleet_gauges(&mut m, &self.sessions, Some(&report));
+                // Per-session estimator statistics, attributed by a
+                // `session="<id>"` label so N sessions share one scrape.
+                for s in &self.sessions {
+                    if s.state == SessionState::Queued {
+                        continue;
+                    }
+                    let sid = s.id.0.to_string();
+                    s.trainer
+                        .estimator()
+                        .publish(&mut m, Some(&sid), s.t.saturating_sub(1));
+                }
+            }
             rec.record(
                 "tick",
                 start,
@@ -587,6 +670,36 @@ impl FleetCoordinator {
         }
         self.ticks += 1;
         Ok(stepped)
+    }
+
+    /// Fleet-level gauges: session states and, when a dispatch report is
+    /// in hand, the pool utilization of the last tick (sum of worker
+    /// busy over makespan x workers).
+    fn publish_fleet_gauges(
+        m: &mut crate::obs::Registry,
+        sessions: &[Session],
+        report: Option<&StepExecReport>,
+    ) {
+        m.describe("fleet_sessions_active", "Sessions currently stepping.");
+        m.describe("fleet_sessions_pending", "Sessions queued for admission.");
+        m.describe("fleet_sessions_done", "Sessions completed and awaiting drain.");
+        m.describe(
+            "fleet_pool_utilization",
+            "Worker busy fraction of the last tick's shared dispatch.",
+        );
+        let count = |state: SessionState| {
+            sessions.iter().filter(|s| s.state == state).count() as f64
+        };
+        m.set_gauge("fleet_sessions_active", count(SessionState::Running));
+        m.set_gauge("fleet_sessions_pending", count(SessionState::Queued));
+        m.set_gauge("fleet_sessions_done", count(SessionState::Done));
+        if let Some(report) = report {
+            let busy: f64 = report.workers.iter().map(|w| w.busy.as_secs_f64()).sum();
+            let denom =
+                report.makespan.as_secs_f64() * report.workers.len().max(1) as f64;
+            let util = if denom > 0.0 { (busy / denom).min(1.0) } else { 0.0 };
+            m.set_gauge("fleet_pool_utilization", util);
+        }
     }
 
     /// Tick until every session is done, then hand out all results (the

@@ -31,7 +31,9 @@ pub use dispatcher::{
     run_jobs, run_jobs_pool, run_jobs_pool_with_report, run_jobs_threaded,
     LevelJobSpec, LevelResult,
 };
-pub use fleet::{FleetCoordinator, FleetRun, SessionId, SessionState, SessionStatus};
+pub use fleet::{
+    FleetCoordinator, FleetRun, SessionDetail, SessionId, SessionState, SessionStatus,
+};
 pub use method::Method;
 pub use scheduler::DelayedSchedule;
 pub use trainer::{Trainer, TrainerBuilder};

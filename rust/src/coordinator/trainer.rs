@@ -27,7 +27,7 @@ use crate::exec::{ChunkTask, ExecStats, SpawnMode, WorkerPool};
 use crate::metrics::{CurvePoint, LearningCurve};
 use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
 use crate::mlmc::LevelAllocation;
-use crate::obs::{GroupMeta, Recorder};
+use crate::obs::{EstimatorStats, GroupMeta, Recorder};
 use crate::optim::{self, Optimizer};
 use crate::parallel::{CostModel, StepCost};
 use crate::rng::{brownian::Purpose, BrownianSource};
@@ -85,6 +85,12 @@ pub struct Trainer {
     /// coordinator-side, after a dispatch returns: the worker hot path
     /// never sees this field.
     recorder: Option<Recorder>,
+    /// Live per-level estimator statistics (variance / cost / staleness
+    /// Welfords) — always on: a handful of float updates per refresh,
+    /// fed from [`Self::apply_level_results`] so solo and fleet steps
+    /// record through the same funnel. Published as labeled gauges when
+    /// a recorder is present; queryable either way.
+    estimator: EstimatorStats,
     pub params: Vec<f32>,
     cumulative: StepCost,
     steps_done: u64,
@@ -311,6 +317,7 @@ impl TrainerBuilder {
             cfg,
             method,
             seed,
+            estimator: EstimatorStats::new(lmax + 1),
             cache: GradientCache::new(lmax, n_params),
             chunks_per_level,
             naive_chunks,
@@ -419,6 +426,16 @@ impl Trainer {
                         &groups,
                     );
                 }
+                if let Some(report) = report.as_ref() {
+                    // Measured per-task cost per level (group g ran
+                    // jobs[g]) — estimator telemetry, traced or not.
+                    for stat in &report.per_task {
+                        if let Some(job) = jobs.get(stat.group) {
+                            self.estimator
+                                .record_cost(job.level, stat.busy.as_secs_f64());
+                        }
+                    }
+                }
                 let out = self.apply_level_results(t, results);
                 self.record_step_span(t, step_start);
                 Ok(out)
@@ -430,7 +447,11 @@ impl Trainer {
     /// the step counter. No-op when tracing is off.
     fn record_step_span(&mut self, t: u64, start: Option<Duration>) {
         if let (Some(rec), Some(start)) = (self.recorder.as_mut(), start) {
-            rec.metrics_mut().inc("dmlmc_steps_total", 1);
+            {
+                let mut m = rec.metrics_mut();
+                m.inc("dmlmc_steps_total", 1);
+                self.estimator.publish(&mut m, None, t);
+            }
             rec.record("step", start, vec![("step", t as f64)]);
         }
     }
@@ -448,6 +469,10 @@ impl Trainer {
         let cost_jobs: Vec<(usize, usize)> =
             results.iter().map(|r| (r.level, r.n_samples)).collect();
         let cost = StepCost::from_jobs(&self.cost_model, &cost_jobs);
+        for r in &results {
+            self.estimator
+                .record_refresh(r.level, t, r.n_samples, &r.grad);
+        }
         self.install(t, results);
         let (_loss_est, grad) = self.cache.assemble();
         self.finish_step(t, cost, grad)
@@ -652,6 +677,19 @@ impl Trainer {
     /// The pool's worker count, when pooled dispatch is active.
     pub fn exec_workers(&self) -> Option<usize> {
         self.pool.as_ref().map(|p| p.workers())
+    }
+
+    /// Live per-level estimator statistics (variance / cost / staleness
+    /// accumulated from every `apply_level_results`). Always available,
+    /// traced or not.
+    pub fn estimator(&self) -> &EstimatorStats {
+        &self.estimator
+    }
+
+    /// Mutable estimator access — the fleet feeds measured per-task
+    /// cost from its multiplexed dispatch report here.
+    pub(crate) fn estimator_mut(&mut self) -> &mut EstimatorStats {
+        &mut self.estimator
     }
 
     /// The span recorder — `Some` only when tracing is enabled.

@@ -28,7 +28,7 @@ use crate::metrics::aggregate::AggregatedCurve;
 use crate::metrics::{aggregate_curves, LearningCurve, RunArtifacts, Welford};
 use crate::mlmc::theory::{TheoryParams, TheoryRow};
 use crate::mlmc::{fit_decay_rate, DecaySeries};
-use crate::obs::TraceSink;
+use crate::obs::{MetricsServer, ServeState, TraceSink};
 use crate::parallel::{CostModel, LevelJob, PramMachine};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::{GradBackend, NativeBackend};
@@ -172,6 +172,15 @@ pub struct TraceBench {
     /// `traced / untraced` of the two best means — the bounded-overhead
     /// headline (min-of-means is robust to scheduler noise).
     pub overhead_ratio: f64,
+    /// Best (min over repeats) mean per-step makespan with tracing on
+    /// AND a concurrent `/metrics` poller scraping the live registry
+    /// over HTTP for the whole run (the scrape-under-load row).
+    pub scraped_mean_makespan_s: f64,
+    /// `scraped / untraced` of the two best means.
+    pub scrape_overhead_ratio: f64,
+    /// Successful `/metrics` fetches across the scraped repeats (>= 1
+    /// by construction: a final fetch happens after each run).
+    pub scrapes_total: usize,
     /// Retained `task` spans per worker track in the exported trace.
     pub spans_per_worker: Vec<usize>,
     /// Coordinator-track spans (`step` + `dispatch`).
@@ -225,6 +234,26 @@ const SWEEP_CHUNKS: u32 = 4;
 /// microbenchmark.
 const TRACE_OVERHEAD_FACTOR: f64 = 2.0;
 const TRACE_OVERHEAD_FLOOR_S: f64 = 0.002;
+
+/// Overhead bound for the scrape-under-load row: a concurrent `/metrics`
+/// poller adds a reader thread and registry read-locks, so the bound is
+/// looser than plain tracing — but still tight enough to catch a scrape
+/// that blocks the coordinator's publishes (a write-starved `RwLock`
+/// would blow straight through it).
+const SCRAPE_OVERHEAD_FACTOR: f64 = 3.0;
+const SCRAPE_OVERHEAD_FLOOR_S: f64 = 0.005;
+
+/// One blocking `/metrics` fetch against a [`MetricsServer`]; `Some`
+/// (with the whole response) only on a 200.
+fn scrape_metrics(addr: std::net::SocketAddr) -> Option<String> {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr).ok()?;
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n")
+        .ok()?;
+    let mut text = String::new();
+    conn.read_to_string(&mut text).ok()?;
+    text.starts_with("HTTP/1.1 200").then_some(text)
+}
 
 /// The PRAM jobs of step `t` under `method` — the same workload the pool
 /// executes, expressed in samples for the counting scheduler.
@@ -939,8 +968,60 @@ impl ExperimentRunner {
             let params = tr.params.clone();
             Ok((mean, params, tr))
         };
+        // Scrape-under-load: the same traced run with an ephemeral
+        // MetricsServer attached to the live registry and a poller
+        // thread fetching /metrics for the whole run.
+        let run_scraped = || -> Result<(f64, Vec<f32>, usize)> {
+            use std::sync::atomic::{AtomicBool, Ordering};
+            let mut tr = TrainerBuilder::new(&c)
+                .method(Method::Dmlmc)
+                .seed(0)
+                .trace(true)
+                .build()?;
+            let registry = tr
+                .recorder()
+                .expect("traced trainer has a recorder")
+                .shared_metrics();
+            let mut server = MetricsServer::start(
+                Arc::new(ServeState::new(registry)),
+                0,
+            )?;
+            let addr = server.addr();
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop_poll = stop.clone();
+            let poller = std::thread::spawn(move || -> usize {
+                let mut n = 0;
+                while !stop_poll.load(Ordering::SeqCst) {
+                    if scrape_metrics(addr).is_some() {
+                        n += 1;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                n
+            });
+            tr.run()?;
+            let mean = tr
+                .exec_stats()
+                .expect("native backend always pools")
+                .mean_makespan();
+            // A guaranteed post-run scrape: the estimator gauges the
+            // traced steps published must be live on the HTTP surface.
+            let text = scrape_metrics(addr)
+                .ok_or_else(|| anyhow::anyhow!("post-run /metrics scrape failed"))?;
+            anyhow::ensure!(
+                text.contains("dmlmc_level_variance")
+                    && text.contains("obs_spans_dropped_total"),
+                "live scrape is missing estimator/drop gauge families"
+            );
+            stop.store(true, Ordering::SeqCst);
+            let scrapes = 1 + poller.join().unwrap_or(0);
+            server.shutdown();
+            Ok((mean, tr.params.clone(), scrapes))
+        };
         let mut untraced_best = f64::INFINITY;
         let mut traced_best = f64::INFINITY;
+        let mut scraped_best = f64::INFINITY;
+        let mut scrapes_total = 0;
         let mut last = None;
         for _ in 0..repeats {
             let (plain_mean, plain_params, _) = run(false)?;
@@ -949,13 +1030,21 @@ impl ExperimentRunner {
                 plain_params == traced_params,
                 "tracing changed the trained parameters"
             );
+            let (scraped_mean, scraped_params, scrapes) = run_scraped()?;
+            anyhow::ensure!(
+                plain_params == scraped_params,
+                "concurrent scraping changed the trained parameters"
+            );
             untraced_best = untraced_best.min(plain_mean);
             traced_best = traced_best.min(traced_mean);
+            scraped_best = scraped_best.min(scraped_mean);
+            scrapes_total += scrapes;
             last = Some(tr);
             if !self.quiet {
                 eprintln!(
                     "trace: untraced {plain_mean:.6} s/step  traced \
-                     {traced_mean:.6} s/step"
+                     {traced_mean:.6} s/step  scraped {scraped_mean:.6} \
+                     s/step ({scrapes} fetches)"
                 );
             }
         }
@@ -987,6 +1076,14 @@ impl ExperimentRunner {
              untraced {untraced_best:.6} s/step (bound: {TRACE_OVERHEAD_FACTOR}x \
              + {TRACE_OVERHEAD_FLOOR_S}s)"
         );
+        let scrape_overhead_ratio = scraped_best / untraced_best.max(1e-12);
+        anyhow::ensure!(
+            scraped_best
+                <= untraced_best * SCRAPE_OVERHEAD_FACTOR + SCRAPE_OVERHEAD_FLOOR_S,
+            "scrape-under-load overhead out of bounds: scraped \
+             {scraped_best:.6} s/step vs untraced {untraced_best:.6} s/step \
+             (bound: {SCRAPE_OVERHEAD_FACTOR}x + {SCRAPE_OVERHEAD_FLOOR_S}s)"
+        );
         Ok(TraceBench {
             workers,
             steps,
@@ -994,6 +1091,9 @@ impl ExperimentRunner {
             untraced_mean_makespan_s: untraced_best,
             traced_mean_makespan_s: traced_best,
             overhead_ratio,
+            scraped_mean_makespan_s: scraped_best,
+            scrape_overhead_ratio,
+            scrapes_total,
             spans_per_worker: rec.worker_span_counts(),
             coordinator_spans: rec.coordinator_spans().len(),
             dropped_spans: rec.dropped_total(),
@@ -1154,8 +1254,16 @@ impl ExperimentRunner {
             "traced", b.traced_mean_makespan_s
         ));
         out.push_str(&format!(
+            "{:<10} {:>16.6}\n",
+            "scraped", b.scraped_mean_makespan_s
+        ));
+        out.push_str(&format!(
             "traced / untraced overhead ratio: {:.2}x\n",
             b.overhead_ratio
+        ));
+        out.push_str(&format!(
+            "scraped / untraced overhead ratio: {:.2}x ({} /metrics fetches)\n",
+            b.scrape_overhead_ratio, b.scrapes_total
         ));
         out.push_str(&format!(
             "spans: coordinator {}, per worker {:?}, dropped {}\n",
@@ -1543,6 +1651,11 @@ scoped / resident overhead ratio: 6.00x
         assert!(b.untraced_mean_makespan_s >= 0.0);
         assert!(b.traced_mean_makespan_s >= 0.0);
         assert!(b.overhead_ratio.is_finite());
+        // scrape-under-load row: at least the guaranteed post-run fetch
+        // per repeat, finite bounded overhead
+        assert!(b.scraped_mean_makespan_s >= 0.0);
+        assert!(b.scrape_overhead_ratio.is_finite());
+        assert!(b.scrapes_total >= 1, "{}", b.scrapes_total);
         // >= 1 span per worker track (the top-up loop guarantees it)
         assert_eq!(b.spans_per_worker.len(), 2);
         assert!(b.spans_per_worker.iter().all(|&n| n > 0), "{:?}", b.spans_per_worker);
@@ -1558,6 +1671,8 @@ scoped / resident overhead ratio: 6.00x
         let txt = ExperimentRunner::render_trace_bench(&b);
         assert!(txt.contains("untraced"));
         assert!(txt.contains("overhead ratio"));
+        assert!(txt.contains("scraped"));
+        assert!(txt.contains("/metrics fetches"));
         let _ = std::fs::remove_dir_all(&tmp);
     }
 

@@ -159,8 +159,47 @@
 //! track per stable worker index plus a coordinator track) and the
 //! metrics as Prometheus text exposition (`metrics.prom`). `repro
 //! trace` (`make trace`) runs the same DMLMC training traced and
-//! untraced, asserts the trajectories are bit-identical and the
-//! makespan overhead bounded, and emits `BENCH_obs.json`.
+//! untraced — plus a third run scraped concurrently over HTTP — asserts
+//! all trajectories are bit-identical and the makespan overheads
+//! bounded, and emits `BENCH_obs.json`.
+//!
+//! ### Live scraping: `repro serve`
+//!
+//! `repro serve` (`make serve-smoke`) keeps a traced
+//! [`coordinator::FleetCoordinator`] resident and exposes it over a
+//! dependency-free `std::net::TcpListener` HTTP/1.1 server
+//! ([`obs::MetricsServer`], `--port` / `[observability] serve_port`,
+//! port 0 picks an ephemeral one):
+//!
+//! * `GET /metrics` — Prometheus text exposition straight from the live
+//!   [`obs::SharedRegistry`], rendered by the *same* code that writes
+//!   `metrics.prom`. Alongside the execution counters it carries the
+//!   estimator-statistics gauges ([`obs::EstimatorStats`]) — per-level
+//!   gradient-difference variance (`dmlmc_level_variance`), measured
+//!   cost, staleness / refresh age, sample and refresh counts — each
+//!   labeled `level="l"` and `session="<id>"`, plus fleet gauges
+//!   (`fleet_sessions_active`, `fleet_pool_utilization`) and the
+//!   span-ring drop counters (`obs_spans_dropped_total`).
+//! * `GET /status` — fleet-level JSON: tick count, worker count,
+//!   active/pending/done sessions and per-session progress.
+//! * `GET /sessions/<id>` — one session's JSON: step progress, last
+//!   loss, and the per-level layout with live estimator statistics.
+//!
+//! Sessions come from `[serve]` in the TOML (`sessions` trainers seeded
+//! `seed0 + i`, see `configs/serve.toml`); SIGINT (or `--max-ticks`)
+//! shuts down gracefully, writing `status.json`, `trace.json` and
+//! `metrics.prom` through [`metrics::RunArtifacts`]. Serving is pure
+//! observation: the scrape thread only ever reads the shared registry,
+//! so every session's trajectory stays bit-identical to its solo run
+//! (pinned in `tests/obs_serve.rs`, with the scraped gauges checked
+//! against a directly computed Welford).
+//!
+//! ```sh
+//! repro serve --config configs/serve.toml --port 9184 &
+//! curl -s localhost:9184/metrics | grep dmlmc_level_variance
+//! curl -s localhost:9184/status
+//! kill -INT %1   # graceful: final artifacts land in the run dir
+//! ```
 //!
 //! ## Quickstart
 //!

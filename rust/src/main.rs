@@ -11,9 +11,13 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, Result};
 use dmlmc::config::{Backend, ExperimentConfig};
-use dmlmc::coordinator::{Method, Trainer};
+use dmlmc::coordinator::{
+    FleetCoordinator, Method, SessionDetail, SessionState, Trainer, TrainerBuilder,
+};
 use dmlmc::experiments::ExperimentRunner;
+use dmlmc::obs::{MetricsServer, ServeState};
 use dmlmc::util::cli::{Args, Command, Opt};
+use dmlmc::util::json::Json;
 
 fn root_command() -> Command {
     let common = |c: Command| {
@@ -154,6 +158,39 @@ fn root_command() -> Command {
                 "scenarios",
                 "comma-separated scenario keys cycled over the fleet",
                 "bs-call,heston-uo-call",
+            )),
+        ))
+        .subcommand(common(
+            Command::new(
+                "serve",
+                "long-lived telemetry daemon: a FleetCoordinator tick loop \
+                 over a config-listed set of DMLMC sessions ([serve] \
+                 sessions/seed0) with a dependency-free HTTP/1.1 scrape \
+                 surface on 127.0.0.1 — GET /metrics (Prometheus text), \
+                 GET /status (fleet JSON), GET /sessions/<id> (per-session \
+                 estimator statistics); serves until SIGINT, then writes \
+                 trace.json + metrics.prom + status.json into its run dir \
+                 (defaults to 64 steps per session unless --steps is given)",
+            )
+            .opt(Opt::value(
+                "port",
+                "scrape port (overrides observability.serve_port; 0/unset \
+                 = ephemeral, printed on startup)",
+            ))
+            .opt(Opt::value(
+                "sessions",
+                "DMLMC sessions to submit (overrides serve.sessions); \
+                 session i runs seed seed0+i",
+            ))
+            .opt(Opt::value(
+                "seed0",
+                "seed of the first session (overrides serve.seed0)",
+            ))
+            .opt(Opt::with_default(
+                "max-ticks",
+                "stop after this many fleet ticks or once drained, without \
+                 waiting for SIGINT (0 = keep serving until SIGINT)",
+                "0",
             )),
         ))
         .subcommand(common(
@@ -690,6 +727,15 @@ fn cmd_trace(args: &Args) -> Result<()> {
         ),
         ("overhead_ratio", Json::Num(bench.overhead_ratio)),
         (
+            "scraped_mean_makespan_s",
+            Json::Num(bench.scraped_mean_makespan_s),
+        ),
+        (
+            "scrape_overhead_ratio",
+            Json::Num(bench.scrape_overhead_ratio),
+        ),
+        ("scrapes_total", Json::Num(bench.scrapes_total as f64)),
+        (
             "spans_per_worker",
             Json::Arr(
                 bench
@@ -714,6 +760,253 @@ fn cmd_trace(args: &Args) -> Result<()> {
         .artifacts("trace")?
         .write_bench_json("BENCH_obs", &doc)?;
     eprintln!("wrote {} (+ ./BENCH_obs.json)", path.display());
+    Ok(())
+}
+
+/// SIGINT latch for the `serve` daemon: a raw `signal(2)` registration
+/// on Linux (the same no-new-dependencies idiom as [`dmlmc::exec`]'s
+/// affinity syscall), a no-op elsewhere — the daemon then runs until
+/// `--max-ticks` (or an external kill).
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(target_os = "linux")]
+    pub fn install() {
+        // Async-signal-safe by construction: the handler does one atomic
+        // store and returns; the serve loop polls the latch.
+        extern "C" fn on_sigint(_sig: i32) {
+            INTERRUPTED.store(true, Ordering::Relaxed);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, on_sigint as usize);
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn install() {}
+
+    pub fn interrupted() -> bool {
+        INTERRUPTED.load(Ordering::Relaxed)
+    }
+}
+
+fn session_state_name(s: SessionState) -> &'static str {
+    match s {
+        SessionState::Queued => "queued",
+        SessionState::Running => "running",
+        SessionState::Done => "done",
+    }
+}
+
+/// The `/status` document: fleet-level progress + the last tick's pool
+/// utilization (read back from the registry gauge so the JSON and the
+/// scrape can never disagree).
+fn serve_status_doc(fleet: &FleetCoordinator, uptime: std::time::Duration) -> Json {
+    use dmlmc::util::json::obj;
+    let statuses = fleet.statuses();
+    let count = |st: SessionState| {
+        statuses.iter().filter(|s| s.state == st).count() as f64
+    };
+    let util = fleet
+        .recorder()
+        .and_then(|r| r.metrics().gauge("fleet_pool_utilization"))
+        .unwrap_or(0.0);
+    let sessions: Vec<Json> = statuses
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("id", Json::Num(s.id.0 as f64)),
+                ("name", Json::Str(s.name.clone())),
+                ("state", Json::Str(session_state_name(s.state).to_string())),
+                ("steps_done", Json::Num(s.steps_done as f64)),
+                ("steps_total", Json::Num(s.steps_total as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("uptime_s", Json::Num(uptime.as_secs_f64())),
+        ("ticks", Json::Num(fleet.ticks() as f64)),
+        ("workers", Json::Num(fleet.workers() as f64)),
+        ("sessions_active", Json::Num(count(SessionState::Running))),
+        ("sessions_pending", Json::Num(count(SessionState::Queued))),
+        ("sessions_done", Json::Num(count(SessionState::Done))),
+        ("pool_utilization", Json::Num(util)),
+        ("sessions", Json::Arr(sessions)),
+    ])
+}
+
+/// One `/sessions/<id>` document: progress, last evaluated loss, level
+/// layout, and the live per-level estimator statistics.
+fn serve_session_doc(d: &SessionDetail) -> Json {
+    use dmlmc::util::json::obj;
+    let levels: Vec<Json> = d
+        .levels
+        .iter()
+        .map(|l| {
+            obj(vec![
+                ("level", Json::Num(l.level as f64)),
+                ("refreshes_total", Json::Num(l.refreshes_total as f64)),
+                ("samples_total", Json::Num(l.samples_total as f64)),
+                ("variance", Json::Num(l.variance)),
+                ("grad_norm2_mean", Json::Num(l.mean_norm2)),
+                ("cost_mean_s", Json::Num(l.cost_mean_s)),
+                ("staleness_steps", Json::Num(l.staleness as f64)),
+                ("last_refresh_step", Json::Num(l.last_refresh_step as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("id", Json::Num(d.status.id.0 as f64)),
+        ("name", Json::Str(d.status.name.clone())),
+        (
+            "state",
+            Json::Str(session_state_name(d.status.state).to_string()),
+        ),
+        ("method", Json::Str(d.method.name().to_string())),
+        ("seed", Json::Num(d.seed as f64)),
+        ("scenario", Json::Str(d.scenario.clone())),
+        ("step", Json::Num(d.status.steps_done as f64)),
+        ("steps_total", Json::Num(d.status.steps_total as f64)),
+        ("last_loss", d.last_loss.map(Json::Num).unwrap_or(Json::Null)),
+        (
+            "chunks_per_level",
+            Json::Arr(
+                d.chunks_per_level
+                    .iter()
+                    .map(|&c| Json::Num(c as f64))
+                    .collect(),
+            ),
+        ),
+        ("levels", Json::Arr(levels)),
+    ])
+}
+
+/// Refresh everything the HTTP endpoints answer from (called once per
+/// tick — the registry itself is live and needs no republishing here).
+fn publish_serve_state(
+    state: &ServeState,
+    fleet: &FleetCoordinator,
+    uptime: std::time::Duration,
+) {
+    state.set_status(serve_status_doc(fleet, uptime));
+    for st in fleet.statuses() {
+        if let Some(d) = fleet.session_detail(st.id) {
+            state.set_session(st.id.0 as u64, serve_session_doc(&d));
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let mut cfg = load_config(args)?;
+    // A serving daemon wants a short per-session horizon unless pinned —
+    // the figure-scale 400-step default is a batch budget, and the
+    // daemon keeps answering scrapes after the fleet drains anyway.
+    if args.get("steps").is_none() && !toml_pins_steps(args) {
+        cfg.train.steps = 64;
+    }
+    // Fleet sessions need a shareable (native) backend even for the
+    // default scenario (same forcing as fleet-sweep).
+    cfg.runtime.backend = Backend::Native;
+    if let Some(v) = args.parse_usize("sessions")? {
+        if v == 0 {
+            return Err(anyhow!("--sessions must be positive"));
+        }
+        cfg.serve.sessions = v;
+    }
+    if let Some(v) = args.parse_usize("seed0")? {
+        cfg.serve.seed0 = v as u64;
+    }
+    let port = match args.parse_usize("port")? {
+        Some(p) => u16::try_from(p)
+            .map_err(|_| anyhow!("--port must fit in a u16 (got {p})"))?,
+        None => cfg.observability.serve_port,
+    };
+    let max_ticks = args.parse_usize("max-ticks")?.unwrap_or(0);
+    let quiet = args.flag("quiet");
+
+    let workers = cfg.execution.resolved_workers();
+    let mut fleet = FleetCoordinator::new(workers);
+    fleet.enable_tracing(); // serving IS telemetry: always record
+    let state = Arc::new(ServeState::new(
+        fleet
+            .recorder()
+            .expect("tracing just enabled")
+            .shared_metrics(),
+    ));
+    for i in 0..cfg.serve.sessions {
+        let seed = cfg.serve.seed0 + i as u64;
+        let name = format!("{}-seed{seed}", cfg.effective_scenario());
+        fleet.submit(
+            &name,
+            TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(seed),
+        )?;
+    }
+    let mut server = MetricsServer::start(state.clone(), port)?;
+    sigint::install();
+    eprintln!(
+        "serve: {} DMLMC sessions x {} steps on {workers} workers — scrape \
+         http://{} (GET /metrics | /status | /sessions/<id>), SIGINT to stop",
+        cfg.serve.sessions,
+        cfg.train.steps,
+        server.addr()
+    );
+
+    let start = Instant::now();
+    let mut drained_said = false;
+    publish_serve_state(&state, &fleet, start.elapsed());
+    loop {
+        if sigint::interrupted() {
+            break;
+        }
+        if max_ticks > 0 && fleet.ticks() >= max_ticks {
+            break;
+        }
+        let stepped = fleet.tick()?;
+        publish_serve_state(&state, &fleet, start.elapsed());
+        if stepped == 0 {
+            // Fleet drained: stay resident for scrapes until SIGINT (or
+            // exit right away under a --max-ticks budget).
+            if max_ticks > 0 {
+                break;
+            }
+            if !quiet && !drained_said {
+                eprintln!(
+                    "serve: all sessions done after {} ticks; still serving \
+                     (SIGINT to stop)",
+                    fleet.ticks()
+                );
+                drained_said = true;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    // Graceful shutdown: stop answering scrapes, then write the final
+    // artifacts — the status document plus the span timeline and metrics
+    // snapshot — into the run directory.
+    server.shutdown();
+    let runner = runner_for(&cfg, args);
+    let arts = runner.artifacts("serve")?;
+    let status_path =
+        arts.write_json("status.json", &serve_status_doc(&fleet, start.elapsed()))?;
+    if let Some(rec) = fleet.take_recorder() {
+        let (trace_path, prom_path) = dmlmc::obs::TraceSink::new(&arts).write(&rec)?;
+        eprintln!("wrote {} and {}", trace_path.display(), prom_path.display());
+    }
+    eprintln!(
+        "serve: shut down after {} ticks; wrote {}",
+        fleet.ticks(),
+        status_path.display()
+    );
     Ok(())
 }
 
@@ -797,6 +1090,7 @@ fn main() -> ExitCode {
         "parallel-sweep" => cmd_parallel_sweep(&args),
         "exec-bench" => cmd_exec_bench(&args),
         "trace" => cmd_trace(&args),
+        "serve" => cmd_serve(&args),
         "fleet-sweep" => cmd_fleet_sweep(&args),
         "hotpath-bench" => cmd_hotpath_bench(&args),
         "scenarios" => cmd_scenarios(),

@@ -185,6 +185,13 @@ impl RunArtifacts {
         Ok(path)
     }
 
+    /// Write a JSON document (newline-terminated) into the run dir —
+    /// non-bench JSON artifacts like `repro serve`'s final `status.json`
+    /// (no top-level alias; see [`Self::write_bench_json`] for that).
+    pub fn write_json(&self, file: &str, doc: &Json) -> std::io::Result<std::path::PathBuf> {
+        self.write_text(file, &format!("{doc}\n"))
+    }
+
     /// Write a bench document as `<stem>.json` in the run dir AND at the
     /// historical top-level alias `./<stem>.json` (what `make bench-*`
     /// and the CI schema checks read). Returns the canonical (run-dir)
@@ -388,6 +395,17 @@ mod tests {
         let j = arts.append_run_jsonl(&curve(), None).unwrap();
         assert_eq!(j, arts.path("runs.jsonl"));
         assert!(Json::parse(fs::read_to_string(&j).unwrap().trim()).is_ok());
+        // plain json: run-dir only, newline-terminated, parseable
+        let s = arts
+            .write_json("status.json", &obj(vec![("ticks", Json::Num(4.0))]))
+            .unwrap();
+        assert_eq!(s, arts.path("status.json"));
+        let text = fs::read_to_string(&s).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(
+            Json::parse(text.trim()).unwrap().get("ticks").unwrap().as_usize(),
+            Some(4)
+        );
         // bench json: canonical copy in the run dir, alias at the
         // historical top-level path, identical bytes
         let doc = obj(vec![("bench", Json::Str("unit".into()))]);

@@ -1,0 +1,263 @@
+//! Estimator-statistics telemetry: live per-level statistics of the
+//! (delayed) MLMC gradient estimator, the data feed for the adaptive
+//! MLMC open item (sample allocation from *measured* variance/cost
+//! instead of offline theory — the allocations in arXiv:1912.11900 and
+//! the multilevel-learning construction in arXiv:2102.08734 both need
+//! exactly these inputs).
+//!
+//! [`EstimatorStats`] is owned by every [`Trainer`](crate::coordinator::Trainer)
+//! (always on — a handful of Welford updates per refresh, no
+//! allocation) and fed from `apply_level_results`, the one funnel both
+//! solo steps and fleet ticks run through. Per level `l` it tracks:
+//!
+//! * **gradient-difference variance** — a [`Welford`] accumulator over
+//!   the per-refresh observations `‖∇Δ_l‖²` (squared L2 norm of the
+//!   chunk-averaged level-difference gradient). Its population variance
+//!   is the `dmlmc_level_variance` gauge; its mean estimates the decay
+//!   Assumption 2 postulates and adaptive allocation consumes.
+//! * **measured cost** — a [`Welford`] over per-task busy seconds at
+//!   that level (fed post-dispatch from [`TaskStat`](crate::exec::TaskStat)
+//!   timings, so it reflects wall-clock, not the model).
+//! * **staleness / refresh age** — `now - τ_l` from the refresh steps
+//!   recorded here (identical to `GradientCache::staleness` by
+//!   construction: both see every refresh).
+//! * **sample / refresh counts** — cumulative samples and refreshes.
+//!
+//! [`EstimatorStats::publish`] writes everything as labeled gauges
+//! (`level="l"`, plus `session="<id>"` when the fleet attributes a
+//! session) into a [`Registry`] under a caller-held write guard, so a
+//! concurrent `/metrics` scrape sees a consistent snapshot.
+
+use crate::metrics::welford::Welford;
+
+use super::metrics::Registry;
+
+/// Per-level accumulators (see module docs for definitions).
+#[derive(Debug, Clone, Default)]
+pub struct LevelStats {
+    /// Welford over per-refresh `‖∇Δ_l‖²` observations.
+    pub value_norm2: Welford,
+    /// Welford over per-task measured busy seconds at this level.
+    pub cost_seconds: Welford,
+    /// Cumulative samples drawn at this level.
+    pub samples_total: u64,
+    /// Refreshes (cache installs) of this level.
+    pub refreshes_total: u64,
+    /// Step of the most recent refresh (τ_l).
+    pub last_refresh_step: u64,
+}
+
+/// A rendered snapshot of one level's statistics, for the
+/// `/sessions/<id>` serving surface and tests.
+#[derive(Debug, Clone)]
+pub struct LevelSnapshot {
+    pub level: usize,
+    pub refreshes_total: u64,
+    pub samples_total: u64,
+    /// Population variance of the `‖∇Δ_l‖²` observations.
+    pub variance: f64,
+    /// Mean of the `‖∇Δ_l‖²` observations.
+    pub mean_norm2: f64,
+    /// Mean measured busy seconds per task at this level (0 until a
+    /// pooled dispatch reports timings).
+    pub cost_mean_s: f64,
+    /// `now - τ_l` at snapshot time.
+    pub staleness: u64,
+    pub last_refresh_step: u64,
+}
+
+/// Live per-level statistics of the (delayed) MLMC estimator.
+#[derive(Debug, Clone)]
+pub struct EstimatorStats {
+    levels: Vec<LevelStats>,
+}
+
+impl EstimatorStats {
+    /// Stats over levels `0..n_levels` (`lmax + 1`).
+    pub fn new(n_levels: usize) -> Self {
+        EstimatorStats {
+            levels: vec![LevelStats::default(); n_levels],
+        }
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn level(&self, l: usize) -> &LevelStats {
+        &self.levels[l]
+    }
+
+    /// Record one refresh of level `level` at step `step`: `grad` is the
+    /// chunk-averaged level-difference gradient the cache installs,
+    /// `n_samples` the samples that produced it.
+    pub fn record_refresh(&mut self, level: usize, step: u64, n_samples: usize, grad: &[f32]) {
+        let norm2: f64 = grad.iter().map(|&g| g as f64 * g as f64).sum();
+        let s = &mut self.levels[level];
+        s.value_norm2.push(norm2);
+        s.samples_total += n_samples as u64;
+        s.refreshes_total += 1;
+        s.last_refresh_step = step;
+    }
+
+    /// Record one task's measured busy seconds at `level` (fed from the
+    /// dispatch report; levels beyond the layout are ignored — a naive
+    /// session's finest-grid tasks carry no level-difference meaning).
+    pub fn record_cost(&mut self, level: usize, busy_seconds: f64) {
+        if let Some(s) = self.levels.get_mut(level) {
+            s.cost_seconds.push(busy_seconds);
+        }
+    }
+
+    /// Staleness of `level` at `now_step` (0 before any refresh).
+    pub fn staleness(&self, level: usize, now_step: u64) -> u64 {
+        let s = &self.levels[level];
+        if s.refreshes_total == 0 {
+            0
+        } else {
+            now_step.saturating_sub(s.last_refresh_step)
+        }
+    }
+
+    /// Render every level at `now_step`.
+    pub fn snapshot(&self, now_step: u64) -> Vec<LevelSnapshot> {
+        (0..self.levels.len())
+            .map(|l| {
+                let s = &self.levels[l];
+                LevelSnapshot {
+                    level: l,
+                    refreshes_total: s.refreshes_total,
+                    samples_total: s.samples_total,
+                    variance: s.value_norm2.variance(),
+                    mean_norm2: s.value_norm2.mean(),
+                    cost_mean_s: s.cost_seconds.mean(),
+                    staleness: self.staleness(l, now_step),
+                    last_refresh_step: s.last_refresh_step,
+                }
+            })
+            .collect()
+    }
+
+    /// Publish every level as labeled gauges into `m` (idempotent:
+    /// gauges are set, never incremented, so republishing each step is
+    /// safe). `session` adds a `session="<id>"` label to every series —
+    /// how the fleet keeps N sessions' statistics apart in one registry.
+    pub fn publish(&self, m: &mut Registry, session: Option<&str>, now_step: u64) {
+        m.describe(
+            "dmlmc_level_variance",
+            "Population variance of per-refresh squared gradient-difference norms per level.",
+        );
+        m.describe(
+            "dmlmc_level_grad_norm2_mean",
+            "Mean per-refresh squared gradient-difference norm per level.",
+        );
+        m.describe(
+            "dmlmc_level_cost_seconds_mean",
+            "Mean measured busy seconds per task per level.",
+        );
+        m.describe("dmlmc_level_samples_total", "Cumulative samples per level.");
+        m.describe(
+            "dmlmc_level_refreshes_total",
+            "Cumulative cache refreshes per level.",
+        );
+        m.describe(
+            "dmlmc_level_staleness_steps",
+            "Steps since the level's gradient component was refreshed (tau_l age).",
+        );
+        for snap in self.snapshot(now_step) {
+            let level = snap.level.to_string();
+            let mut labels: Vec<(&'static str, &str)> = vec![("level", &level)];
+            if let Some(sid) = session {
+                labels.push(("session", sid));
+            }
+            m.set_gauge_with("dmlmc_level_variance", &labels, snap.variance);
+            m.set_gauge_with("dmlmc_level_grad_norm2_mean", &labels, snap.mean_norm2);
+            m.set_gauge_with("dmlmc_level_cost_seconds_mean", &labels, snap.cost_mean_s);
+            m.set_gauge_with(
+                "dmlmc_level_samples_total",
+                &labels,
+                snap.samples_total as f64,
+            );
+            m.set_gauge_with(
+                "dmlmc_level_refreshes_total",
+                &labels,
+                snap.refreshes_total as f64,
+            );
+            m.set_gauge_with(
+                "dmlmc_level_staleness_steps",
+                &labels,
+                snap.staleness as f64,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_gauges_match_direct_computation() {
+        let mut est = EstimatorStats::new(2);
+        let grads = [vec![1.0f32, 2.0], vec![0.5, 0.5], vec![2.0, 0.0]];
+        for (i, g) in grads.iter().enumerate() {
+            est.record_refresh(0, i as u64, 8, g);
+        }
+        let mut direct = Welford::new();
+        for g in &grads {
+            direct.push(g.iter().map(|&x| x as f64 * x as f64).sum());
+        }
+        let s = est.level(0);
+        assert_eq!(s.refreshes_total, 3);
+        assert_eq!(s.samples_total, 24);
+        assert_eq!(s.value_norm2.mean(), direct.mean());
+        assert_eq!(s.value_norm2.variance(), direct.variance());
+        // level 1 never refreshed
+        assert_eq!(est.level(1).refreshes_total, 0);
+        assert_eq!(est.staleness(1, 10), 0);
+        assert_eq!(est.staleness(0, 10), 8);
+    }
+
+    #[test]
+    fn publish_writes_labeled_gauges_with_and_without_session() {
+        let mut est = EstimatorStats::new(1);
+        est.record_refresh(0, 3, 16, &[3.0, 4.0]); // norm2 = 25
+        est.record_cost(0, 0.5);
+        est.record_cost(0, 1.5);
+        let mut m = Registry::new();
+        est.publish(&mut m, None, 5);
+        assert_eq!(m.gauge_with("dmlmc_level_variance", &[("level", "0")]), Some(0.0));
+        assert_eq!(
+            m.gauge_with("dmlmc_level_grad_norm2_mean", &[("level", "0")]),
+            Some(25.0)
+        );
+        assert_eq!(
+            m.gauge_with("dmlmc_level_cost_seconds_mean", &[("level", "0")]),
+            Some(1.0)
+        );
+        assert_eq!(
+            m.gauge_with("dmlmc_level_staleness_steps", &[("level", "0")]),
+            Some(2.0)
+        );
+        est.publish(&mut m, Some("7"), 5);
+        assert_eq!(
+            m.gauge_with(
+                "dmlmc_level_samples_total",
+                &[("level", "0"), ("session", "7")]
+            ),
+            Some(16.0)
+        );
+        let text = m.render_prometheus();
+        assert!(text.contains("# HELP dmlmc_level_variance "));
+        assert!(text.contains("dmlmc_level_variance{level=\"0\"} 0"));
+        assert!(text.contains("dmlmc_level_variance{level=\"0\",session=\"7\"} 0"));
+    }
+
+    #[test]
+    fn cost_ignores_levels_outside_the_layout() {
+        let mut est = EstimatorStats::new(2);
+        est.record_cost(5, 1.0); // naive finest-grid task on a wider lmax
+        assert_eq!(est.level(0).cost_seconds.count(), 0);
+        assert_eq!(est.level(1).cost_seconds.count(), 0);
+    }
+}

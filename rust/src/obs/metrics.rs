@@ -1,7 +1,14 @@
 //! The metrics registry: named counters, gauges and histograms with a
-//! Prometheus text exposition — the scrape surface a future daemon mode
-//! (`repro serve`) will expose over HTTP; today it is dumped per run as
+//! Prometheus text exposition — the scrape surface `repro serve` exposes
+//! over HTTP ([`super::serve`]) and which every traced run dumps as
 //! `metrics.prom` next to `trace.json`.
+//!
+//! Every family supports **labeled series**: the unlabeled API
+//! (`inc`/`set_gauge`/`observe`) writes the empty-label series, and the
+//! `*_with` variants address a series by `(key, value)` label pairs
+//! (sorted internally, so label order never matters). Label values are
+//! escaped per the Prometheus text format (`\\`, `\"`, `\n`), and
+//! [`Registry::describe`] attaches `# HELP` text to a family.
 //!
 //! Histogram summaries (p50/p95/max) use the same nearest-rank
 //! [`percentile`](crate::exec::stats::percentile) definition as the
@@ -43,15 +50,70 @@ impl Histogram {
     }
 }
 
-/// Named counters / gauges / histograms. Metric names follow Prometheus
-/// conventions (`dmlmc_tasks_dispatched_total`,
-/// `dmlmc_step_makespan_seconds`); the registry itself is
-/// convention-free.
+/// A series address within a family: sorted `(label key, label value)`
+/// pairs. Empty = the unlabeled series.
+type LabelSet = Vec<(&'static str, String)>;
+
+fn label_set(labels: &[(&'static str, &str)]) -> LabelSet {
+    let mut set: LabelSet = labels.iter().map(|&(k, v)| (k, v.to_string())).collect();
+    set.sort();
+    set
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote and line-feed become `\\`, `\"` and `\n`.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` text: backslash and line-feed only (quotes are legal).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}` for a non-empty label set (empty string otherwise),
+/// with an optional extra label appended (used for summary quantiles).
+fn render_labels(labels: &LabelSet, extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label_value(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Named counters / gauges / histograms, each a family of labeled
+/// series. Metric names follow Prometheus conventions
+/// (`dmlmc_tasks_dispatched_total`, `dmlmc_step_makespan_seconds`); the
+/// registry itself is convention-free.
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
-    counters: BTreeMap<&'static str, u64>,
-    gauges: BTreeMap<&'static str, f64>,
-    histograms: BTreeMap<&'static str, Histogram>,
+    counters: BTreeMap<&'static str, BTreeMap<LabelSet, u64>>,
+    gauges: BTreeMap<&'static str, BTreeMap<LabelSet, f64>>,
+    histograms: BTreeMap<&'static str, BTreeMap<LabelSet, Histogram>>,
+    help: BTreeMap<&'static str, &'static str>,
 }
 
 impl Registry {
@@ -59,55 +121,133 @@ impl Registry {
         Registry::default()
     }
 
+    /// Attach `# HELP` text to a family (rendered before its `# TYPE`).
+    pub fn describe(&mut self, name: &'static str, help: &'static str) {
+        self.help.insert(name, help);
+    }
+
     /// Add `by` to the named counter (created at 0 on first touch).
     pub fn inc(&mut self, name: &'static str, by: u64) {
-        *self.counters.entry(name).or_insert(0) += by;
+        self.inc_with(name, &[], by);
+    }
+
+    /// Add `by` to the labeled counter series.
+    pub fn inc_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], by: u64) {
+        *self
+            .counters
+            .entry(name)
+            .or_default()
+            .entry(label_set(labels))
+            .or_insert(0) += by;
     }
 
     /// Set the named gauge to `v` (last write wins).
     pub fn set_gauge(&mut self, name: &'static str, v: f64) {
-        self.gauges.insert(name, v);
+        self.set_gauge_with(name, &[], v);
+    }
+
+    /// Set the labeled gauge series to `v` (last write wins).
+    pub fn set_gauge_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        self.gauges
+            .entry(name)
+            .or_default()
+            .insert(label_set(labels), v);
     }
 
     /// Record one observation into the named histogram.
     pub fn observe(&mut self, name: &'static str, v: f64) {
-        self.histograms.entry(name).or_default().observe(v);
+        self.observe_with(name, &[], v);
     }
 
-    /// Current counter value (0 if never incremented).
+    /// Record one observation into the labeled histogram series.
+    pub fn observe_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        self.histograms
+            .entry(name)
+            .or_default()
+            .entry(label_set(labels))
+            .or_default()
+            .observe(v);
+    }
+
+    /// Current unlabeled counter value (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.get(name).copied().unwrap_or(0)
+        self.counter_with(name, &[])
+    }
+
+    /// Current labeled counter value (0 if never incremented).
+    pub fn counter_with(&self, name: &str, labels: &[(&'static str, &str)]) -> u64 {
+        self.counters
+            .get(name)
+            .and_then(|f| f.get(&label_set(labels)))
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.gauges.get(name).copied()
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&'static str, &str)]) -> Option<f64> {
+        self.gauges
+            .get(name)
+            .and_then(|f| f.get(&label_set(labels)))
+            .copied()
     }
 
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
-        self.histograms.get(name)
+        self.histogram_with(name, &[])
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&'static str, &str)],
+    ) -> Option<&Histogram> {
+        self.histograms.get(name).and_then(|f| f.get(&label_set(labels)))
+    }
+
+    fn header(&self, out: &mut String, name: &str, kind: &str) {
+        if let Some(help) = self.help.get(name) {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(help));
+        }
+        let _ = writeln!(out, "# TYPE {name} {kind}");
     }
 
     /// Prometheus text exposition (format version 0.0.4): counters and
     /// gauges verbatim, histograms as `summary` families with
-    /// p50/p95/max quantiles plus `_sum`/`_count`. Keys render in
-    /// BTreeMap order, so the dump is deterministic.
+    /// p50/p95/max quantiles plus `_sum`/`_count`. Families carry
+    /// `# HELP` when described; labeled series render sorted label
+    /// pairs with escaped values. Everything iterates in BTreeMap
+    /// order, so the dump is deterministic.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, v) in &self.counters {
-            let _ = writeln!(out, "# TYPE {name} counter");
-            let _ = writeln!(out, "{name} {v}");
+        for (name, series) in &self.counters {
+            self.header(&mut out, name, "counter");
+            for (labels, v) in series {
+                let _ = writeln!(out, "{name}{} {v}", render_labels(labels, None));
+            }
         }
-        for (name, v) in &self.gauges {
-            let _ = writeln!(out, "# TYPE {name} gauge");
-            let _ = writeln!(out, "{name} {v}");
+        for (name, series) in &self.gauges {
+            self.header(&mut out, name, "gauge");
+            for (labels, v) in series {
+                let _ = writeln!(out, "{name}{} {v}", render_labels(labels, None));
+            }
         }
-        for (name, h) in &self.histograms {
-            let _ = writeln!(out, "# TYPE {name} summary");
-            let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {}", h.quantile(0.5));
-            let _ = writeln!(out, "{name}{{quantile=\"0.95\"}} {}", h.quantile(0.95));
-            let _ = writeln!(out, "{name}{{quantile=\"1\"}} {}", h.max());
-            let _ = writeln!(out, "{name}_sum {}", h.sum());
-            let _ = writeln!(out, "{name}_count {}", h.count());
+        for (name, series) in &self.histograms {
+            self.header(&mut out, name, "summary");
+            for (labels, h) in series {
+                for (q, v) in [
+                    ("0.5", h.quantile(0.5)),
+                    ("0.95", h.quantile(0.95)),
+                    ("1", h.max()),
+                ] {
+                    let lbl = render_labels(labels, Some(("quantile", q)));
+                    let _ = writeln!(out, "{name}{lbl} {v}");
+                }
+                let lbl = render_labels(labels, None);
+                let _ = writeln!(out, "{name}_sum{lbl} {}", h.sum());
+                let _ = writeln!(out, "{name}_count{lbl} {}", h.count());
+            }
         }
         out
     }
@@ -150,11 +290,73 @@ mod tests {
     }
 
     #[test]
+    fn labeled_series_are_independent_and_order_insensitive() {
+        let mut r = Registry::new();
+        r.inc_with("dmlmc_level_samples_total", &[("level", "0")], 8);
+        r.inc_with("dmlmc_level_samples_total", &[("level", "1")], 2);
+        r.set_gauge_with(
+            "dmlmc_level_variance",
+            &[("session", "0"), ("level", "1")],
+            0.5,
+        );
+        assert_eq!(
+            r.counter_with("dmlmc_level_samples_total", &[("level", "0")]),
+            8
+        );
+        assert_eq!(
+            r.counter_with("dmlmc_level_samples_total", &[("level", "1")]),
+            2
+        );
+        // unlabeled series is distinct from labeled ones
+        assert_eq!(r.counter("dmlmc_level_samples_total"), 0);
+        // label order does not matter on lookup
+        assert_eq!(
+            r.gauge_with("dmlmc_level_variance", &[("level", "1"), ("session", "0")]),
+            Some(0.5)
+        );
+        let text = r.render_prometheus();
+        assert!(text.contains("dmlmc_level_samples_total{level=\"0\"} 8"));
+        assert!(text.contains("dmlmc_level_variance{level=\"1\",session=\"0\"} 0.5"));
+    }
+
+    #[test]
+    fn help_lines_precede_type_lines() {
+        let mut r = Registry::new();
+        r.describe("dmlmc_steps_total", "SGD steps completed.");
+        r.inc("dmlmc_steps_total", 2);
+        let text = r.render_prometheus();
+        let help = text.find("# HELP dmlmc_steps_total SGD steps completed.");
+        let typ = text.find("# TYPE dmlmc_steps_total counter");
+        assert!(help.is_some() && typ.is_some());
+        assert!(help.unwrap() < typ.unwrap());
+    }
+
+    #[test]
+    fn hostile_label_values_are_escaped() {
+        let mut r = Registry::new();
+        let hostile = "a\\b\"c\nd";
+        r.set_gauge_with("fleet_session_loss", &[("name", hostile)], 1.25);
+        r.describe("fleet_session_loss", "loss with\nnewline and back\\slash");
+        let text = r.render_prometheus();
+        assert!(
+            text.contains("fleet_session_loss{name=\"a\\\\b\\\"c\\nd\"} 1.25"),
+            "unescaped label value in: {text}"
+        );
+        assert!(text.contains("# HELP fleet_session_loss loss with\\nnewline and back\\\\slash"));
+        // no raw newline may survive inside any single exposition line
+        for line in text.lines() {
+            assert!(!line.contains('\u{0}'));
+            assert!(line.starts_with('#') || !line.trim_start().is_empty());
+        }
+    }
+
+    #[test]
     fn prometheus_exposition_covers_every_family() {
         let mut r = Registry::new();
         r.inc("dmlmc_steps_total", 2);
         r.set_gauge("dmlmc_pool_workers", 4.0);
         r.observe("dmlmc_step_makespan_seconds", 0.25);
+        r.observe_with("dmlmc_task_busy_seconds", &[("level", "2")], 0.125);
         let text = r.render_prometheus();
         assert!(text.contains("# TYPE dmlmc_steps_total counter"));
         assert!(text.contains("dmlmc_steps_total 2"));
@@ -163,6 +365,8 @@ mod tests {
         assert!(text.contains("# TYPE dmlmc_step_makespan_seconds summary"));
         assert!(text.contains("dmlmc_step_makespan_seconds{quantile=\"0.5\"} 0.25"));
         assert!(text.contains("dmlmc_step_makespan_seconds_count 1"));
+        assert!(text.contains("dmlmc_task_busy_seconds{level=\"2\",quantile=\"0.5\"} 0.125"));
+        assert!(text.contains("dmlmc_task_busy_seconds_sum{level=\"2\"} 0.125"));
         // every line is `# ...` or `name[{labels}] value`
         for line in text.lines() {
             assert!(

@@ -14,15 +14,27 @@
 //!   All offsets are monotonic from the run epoch, so traces are
 //!   comparable across runs.
 //! * **Metrics** ([`Registry`]) — named counters / gauges / histograms
-//!   (tasks dispatched, steps ticked, sessions admitted/rejected,
-//!   makespan and overhead distributions) with a Prometheus text
-//!   exposition — the scrape surface for the future daemon mode.
+//!   with labeled series (tasks dispatched, steps ticked, sessions
+//!   admitted/rejected, makespan and overhead distributions, span-ring
+//!   drop counts) with a Prometheus text exposition, shared across
+//!   threads through [`SharedRegistry`] — the live scrape surface of
+//!   `repro serve`.
+//! * **Estimator statistics** ([`EstimatorStats`]) — per-level Welford
+//!   gauges for gradient-difference variance and measured cost, DMLMC
+//!   staleness / refresh-age, and sample counts, recorded from
+//!   `apply_level_results` in the trainer and attributed per session in
+//!   the fleet — the data feed for adaptive MLMC allocation.
 //! * **Export** ([`Recorder`], [`TraceSink`]) — the recorder ingests
 //!   [`StepExecReport`](crate::exec::StepExecReport)s coordinator-side
 //!   (the worker hot path records nothing it didn't already); the sink
 //!   drains it into a run directory as `trace.json` (Chrome trace-event
 //!   JSON, loadable in Perfetto / `chrome://tracing`) and
 //!   `metrics.prom`.
+//! * **Serving** ([`MetricsServer`]) — a dependency-free
+//!   `std::net::TcpListener` HTTP/1.1 endpoint exposing `GET /metrics`
+//!   (the identical Prometheus renderer), `GET /status` (fleet-level
+//!   JSON) and `GET /sessions/<id>` (per-session JSON), run by the
+//!   `repro serve` subcommand.
 //!
 //! Tracing is **off by default**: enable with `--trace` (or
 //! `[observability] trace = true`), and see `repro trace` for the
@@ -30,10 +42,14 @@
 //! enabling tracing never changes a gradient (pinned bitwise in
 //! `tests/obs_trace.rs`).
 
+pub mod estimator;
 pub mod metrics;
+pub mod serve;
 pub mod span;
 pub mod trace;
 
+pub use estimator::{EstimatorStats, LevelSnapshot, LevelStats};
 pub use metrics::{Histogram, Registry};
+pub use serve::{MetricsServer, ServeState};
 pub use span::{Span, SpanRing, Track};
-pub use trace::{GroupMeta, Recorder, TraceSink, DEFAULT_RING_CAPACITY};
+pub use trace::{GroupMeta, Recorder, SharedRegistry, TraceSink, DEFAULT_RING_CAPACITY};

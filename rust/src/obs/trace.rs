@@ -15,6 +15,7 @@
 //! why `repro trace` can assert a tight traced-vs-untraced makespan
 //! bound.
 
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
 
 use crate::exec::{StepExecReport, TaskStat};
@@ -23,6 +24,35 @@ use crate::util::json::{obj, Json};
 
 use super::metrics::Registry;
 use super::span::{Span, SpanRing, Track};
+
+/// A thread-safe, shareable handle to a metrics [`Registry`].
+///
+/// The recorder owns one and mutates it through short-lived write
+/// guards; [`Recorder::shared_metrics`] hands out clones so a scrape
+/// thread ([`super::serve::MetricsServer`]) can render the exposition
+/// concurrently with training. Lock poisoning is recovered (a panicked
+/// writer never takes the scrape surface down with it).
+#[derive(Debug, Clone, Default)]
+pub struct SharedRegistry(Arc<RwLock<Registry>>);
+
+impl SharedRegistry {
+    pub fn new() -> Self {
+        SharedRegistry::default()
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, Registry> {
+        self.0.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, Registry> {
+        self.0.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Render the Prometheus text exposition under a read guard.
+    pub fn render_prometheus(&self) -> String {
+        self.read().render_prometheus()
+    }
+}
 
 /// Default per-track ring capacity: enough for every span of any bench
 /// or CI run; long daemon-style runs wrap and count drops instead of
@@ -46,7 +76,7 @@ pub struct Recorder {
     epoch: Instant,
     worker_rings: Vec<SpanRing>,
     coord_ring: SpanRing,
-    registry: Registry,
+    registry: SharedRegistry,
 }
 
 impl Recorder {
@@ -55,12 +85,35 @@ impl Recorder {
     }
 
     pub fn with_capacity(workers: usize, cap: usize) -> Self {
-        Recorder {
+        let registry = SharedRegistry::new();
+        {
+            let mut m = registry.write();
+            m.describe("dmlmc_dispatches_total", "Pool dispatches executed.");
+            m.describe(
+                "dmlmc_tasks_dispatched_total",
+                "Chunk tasks executed across all dispatches.",
+            );
+            m.describe(
+                "dmlmc_step_makespan_seconds",
+                "Measured wall-clock makespan per dispatch.",
+            );
+            m.describe(
+                "dmlmc_dispatch_overhead_seconds",
+                "Dispatch makespan minus max worker busy time.",
+            );
+            m.describe(
+                "obs_spans_dropped_total",
+                "Spans evicted from bounded trace rings (per track and total).",
+            );
+        }
+        let mut rec = Recorder {
             epoch: Instant::now(),
             worker_rings: (0..workers).map(|_| SpanRing::new(cap)).collect(),
             coord_ring: SpanRing::new(cap),
-            registry: Registry::new(),
-        }
+            registry,
+        };
+        rec.publish_drop_gauges(); // families exist (at 0) from the first scrape
+        rec
     }
 
     /// Offset of "now" from the run epoch — capture one before a phase
@@ -73,12 +126,23 @@ impl Recorder {
         self.worker_rings.len()
     }
 
-    pub fn metrics(&self) -> &Registry {
-        &self.registry
+    /// Read access to the metrics registry. Returns a read guard
+    /// (derefs to [`Registry`]); rebind it to a local before borrowing
+    /// out of it (`let m = rec.metrics(); let h = m.histogram(..)`).
+    pub fn metrics(&self) -> RwLockReadGuard<'_, Registry> {
+        self.registry.read()
     }
 
-    pub fn metrics_mut(&mut self) -> &mut Registry {
-        &mut self.registry
+    /// Write access to the metrics registry (short-lived write guard).
+    pub fn metrics_mut(&mut self) -> RwLockWriteGuard<'_, Registry> {
+        self.registry.write()
+    }
+
+    /// A shareable handle to the registry for concurrent scraping —
+    /// clone it into the HTTP server thread ([`super::serve`]); the
+    /// recorder keeps publishing through the same handle.
+    pub fn shared_metrics(&self) -> SharedRegistry {
+        self.registry.clone()
     }
 
     /// Record a coordinator-track span that started at `start` and ends
@@ -109,6 +173,33 @@ impl Recorder {
             dur,
             args,
         });
+        if self.coord_ring.dropped() > 0 {
+            self.publish_drop_gauges();
+        }
+    }
+
+    /// Publish ring-eviction counts as `obs_spans_dropped_total` gauges
+    /// (one per track plus the unlabeled total), so silently truncated
+    /// traces are visible in every scrape and in `metrics.prom`.
+    fn publish_drop_gauges(&mut self) {
+        let coord = self.coord_ring.dropped();
+        let per_worker: Vec<usize> = self.worker_rings.iter().map(|r| r.dropped()).collect();
+        let total = coord + per_worker.iter().sum::<usize>();
+        let mut m = self.registry.write();
+        m.set_gauge("obs_spans_dropped_total", total as f64);
+        m.set_gauge_with(
+            "obs_spans_dropped_total",
+            &[("track", "coordinator")],
+            coord as f64,
+        );
+        for (w, dropped) in per_worker.iter().enumerate() {
+            let track = format!("worker-{w}");
+            m.set_gauge_with(
+                "obs_spans_dropped_total",
+                &[("track", &track)],
+                *dropped as f64,
+            );
+        }
     }
 
     /// Ingest one dispatch: a `dispatch` span on the coordinator track
@@ -128,15 +219,16 @@ impl Recorder {
         start: Duration,
         groups: &[GroupMeta],
     ) {
-        self.registry.inc("dmlmc_dispatches_total", 1);
-        self.registry
-            .inc("dmlmc_tasks_dispatched_total", report.n_tasks as u64);
-        self.registry
-            .observe("dmlmc_step_makespan_seconds", report.makespan.as_secs_f64());
-        self.registry.observe(
-            "dmlmc_dispatch_overhead_seconds",
-            report.dispatch_overhead().as_secs_f64(),
-        );
+        {
+            let mut m = self.registry.write();
+            m.inc("dmlmc_dispatches_total", 1);
+            m.inc("dmlmc_tasks_dispatched_total", report.n_tasks as u64);
+            m.observe("dmlmc_step_makespan_seconds", report.makespan.as_secs_f64());
+            m.observe(
+                "dmlmc_dispatch_overhead_seconds",
+                report.dispatch_overhead().as_secs_f64(),
+            );
+        }
         self.record_span(
             "dispatch",
             start,
@@ -159,6 +251,7 @@ impl Recorder {
             }
             self.worker_rings[t.worker].push(span);
         }
+        self.publish_drop_gauges();
     }
 
     fn task_span(
@@ -372,9 +465,51 @@ mod tests {
         // counters + histograms filled
         assert_eq!(rec.metrics().counter("dmlmc_dispatches_total"), 1);
         assert_eq!(rec.metrics().counter("dmlmc_tasks_dispatched_total"), 3);
-        let h = rec.metrics().histogram("dmlmc_step_makespan_seconds").unwrap();
+        let m = rec.metrics();
+        let h = m.histogram("dmlmc_step_makespan_seconds").unwrap();
         assert_eq!(h.count(), 1);
         assert!((h.max() - 0.025).abs() < 1e-12);
+        // drop gauges exist at 0 from the very first scrape
+        assert_eq!(m.gauge("obs_spans_dropped_total"), Some(0.0));
+        assert_eq!(
+            m.gauge_with("obs_spans_dropped_total", &[("track", "worker-1")]),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn ring_overflow_surfaces_in_drop_gauges_and_exposition() {
+        let mut rec = Recorder::with_capacity(1, 2);
+        for _ in 0..3 {
+            rec.ingest_dispatch(&report(), Duration::ZERO, &groups());
+        }
+        // worker 0 saw 6 task spans into a 2-slot ring -> 4 drops
+        assert!(rec.dropped_total() > 0);
+        let shared = rec.shared_metrics();
+        let m = shared.read();
+        assert_eq!(
+            m.gauge("obs_spans_dropped_total"),
+            Some(rec.dropped_total() as f64)
+        );
+        assert_eq!(
+            m.gauge_with("obs_spans_dropped_total", &[("track", "worker-0")]),
+            Some(rec.worker_spans(0).dropped() as f64)
+        );
+        let text = m.render_prometheus();
+        assert!(text.contains("obs_spans_dropped_total{track=\"worker-0\"}"));
+    }
+
+    #[test]
+    fn shared_registry_serves_reads_across_threads() {
+        let mut rec = Recorder::new(2);
+        rec.ingest_dispatch(&report(), Duration::ZERO, &groups());
+        let shared = rec.shared_metrics();
+        let t = std::thread::spawn(move || shared.render_prometheus());
+        let text = t.join().unwrap();
+        assert!(text.contains("dmlmc_tasks_dispatched_total 3"));
+        // the recorder keeps publishing through the same handle
+        rec.metrics_mut().inc("dmlmc_dispatches_total", 1);
+        assert_eq!(rec.metrics().counter("dmlmc_dispatches_total"), 2);
     }
 
     #[test]

@@ -165,6 +165,36 @@
 //! repro train --method dmlmc --trace
 //! repro trace --workers 2 --steps 24 --repeats 2
 //! ```
+//!
+//! `repro trace` additionally prices **scraping under load**: a third
+//! run per repeat serves its live registry over HTTP and is polled
+//! continuously while training; the scraped trajectory must stay
+//! bit-identical and its makespan within a bounded factor of untraced
+//! (`scrape_overhead_ratio` in `BENCH_obs.json`).
+//!
+//! # Live serving (`repro serve`)
+//!
+//! `repro serve` keeps a traced serving fleet resident and exposes it
+//! over a dependency-free HTTP/1.1 server
+//! ([`crate::obs::MetricsServer`]) for Prometheus-style collectors:
+//! `GET /metrics` (text exposition, identical renderer to
+//! `metrics.prom` — estimator gauges like `dmlmc_level_variance` per
+//! `level`/`session`, fleet gauges, span-drop counters), `GET /status`
+//! (fleet JSON: ticks, active/pending/done sessions, pool utilization)
+//! and `GET /sessions/<id>` (per-session JSON: step, last loss,
+//! per-level layout + estimator statistics). The port comes from
+//! `--port` or `[observability] serve_port` (0 = ephemeral, printed on
+//! startup); the session roster from `[serve]` (`sessions` trainers
+//! seeded `seed0 + i` — see `configs/serve.toml`). The loop ticks the
+//! fleet until SIGINT (or `--max-ticks`, handy for smoke tests), then
+//! shuts down gracefully, writing `status.json` / `trace.json` /
+//! `metrics.prom` into the run directory. Examples:
+//!
+//! ```text
+//! repro serve --config configs/serve.toml
+//! repro serve --port 9184 --sessions 2 --steps 256
+//! repro serve --max-ticks 64 --port 0   # self-terminating smoke
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;
