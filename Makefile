@@ -12,7 +12,7 @@
 ARTIFACTS_DIR := rust/artifacts
 
 .PHONY: artifacts build test fmt clippy bench bench-parallel bench-exec \
-	bench-fleet bench-hotpath trace serve-smoke clean
+	bench-fleet bench-hotpath bench-adaptive trace serve-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -53,6 +53,15 @@ bench-fleet:
 # `repro hotpath-bench --help`).
 bench-hotpath:
 	cd rust && cargo run --release --bin repro -- hotpath-bench --quiet
+
+# Fixed vs adaptive allocation ablation: the same DMLMC training with
+# the offline-theory constants and with the telemetry-driven policy,
+# compared on wall clock to a shared target loss and measured parallel
+# cost per step; emits rust/BENCH_adaptive.json (see
+# `repro adaptive-sweep --help`).
+bench-adaptive:
+	cd rust && cargo run --release --bin repro -- adaptive-sweep \
+		--config ../configs/adaptive.toml --quiet
 
 # Overhead-bounded tracing bench: the same DMLMC training traced and
 # untraced (bit-identical parameters asserted), exporting trace.json

@@ -186,6 +186,44 @@ impl Default for ServeConfig {
     }
 }
 
+/// Adaptive allocation settings ([`crate::policy`]). Off by default —
+/// with `enabled = false` the trainer runs the offline-theory
+/// [`FixedPolicy`](crate::policy::FixedPolicy) and trajectories are
+/// bit-identical to every release before the policy layer existed
+/// (pinned in `tests/policy_regression.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Route allocation through [`crate::policy::AdaptivePolicy`]
+    /// (`--adaptive` on the CLI, `[adaptive] enabled = true` in TOML).
+    pub enabled: bool,
+    /// Re-observe the estimator telemetry every this many steps
+    /// (`--adapt-every`). Decisions between observations are frozen.
+    pub adapt_every: usize,
+    /// A level's measured variance/cost enters the decision only after
+    /// this many refreshes; before that the offline-theory value holds.
+    pub min_refreshes: u64,
+    /// Relative-change dead band: a level's sample count or refresh
+    /// period only moves when the recomputed value differs from the
+    /// current one by more than this fraction. Damps gauge noise so the
+    /// decision stream is a deterministic function of the telemetry.
+    pub hysteresis: f64,
+    /// Hard clamp on any adapted refresh period (steps). Guarantees no
+    /// level starves regardless of what the variance gauges report.
+    pub max_period: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: false,
+            adapt_every: 16,
+            min_refreshes: 2,
+            hysteresis: 0.25,
+            max_period: 1024,
+        }
+    }
+}
+
 /// Runtime / IO settings.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
@@ -214,6 +252,7 @@ pub struct ExperimentConfig {
     pub execution: ExecutionConfig,
     pub observability: ObsConfig,
     pub serve: ServeConfig,
+    pub adaptive: AdaptiveConfig,
     /// Scenario registry key (`scenario.name` in TOML, `--scenario` on
     /// the CLI). The default `"bs-call"` is the seed behavior; anything
     /// else requires the native backend.
@@ -230,6 +269,7 @@ impl Default for ExperimentConfig {
             execution: ExecutionConfig::default(),
             observability: ObsConfig::default(),
             serve: ServeConfig::default(),
+            adaptive: AdaptiveConfig::default(),
             scenario: DEFAULT_SCENARIO.to_string(),
         }
     }
@@ -390,6 +430,23 @@ impl ExperimentConfig {
             cfg.serve.seed0 = v as u64;
         }
 
+        // [adaptive]
+        if let Some(v) = doc.get("adaptive.enabled").and_then(|v| v.as_bool()) {
+            cfg.adaptive.enabled = v;
+        }
+        if let Some(v) = getu("adaptive.adapt_every") {
+            cfg.adaptive.adapt_every = v;
+        }
+        if let Some(v) = getu("adaptive.min_refreshes") {
+            cfg.adaptive.min_refreshes = v as u64;
+        }
+        if let Some(v) = getf("adaptive.hysteresis") {
+            cfg.adaptive.hysteresis = v;
+        }
+        if let Some(v) = getu("adaptive.max_period") {
+            cfg.adaptive.max_period = v as u64;
+        }
+
         // [runtime]
         if let Some(s) = gets("runtime.backend") {
             cfg.runtime.backend = Backend::parse(s)
@@ -468,6 +525,18 @@ impl ExperimentConfig {
         if self.train.clip_norm < 0.0 {
             return Err("clip_norm must be non-negative (0 disables)".into());
         }
+        if self.adaptive.adapt_every == 0 {
+            return Err("adaptive.adapt_every must be positive".into());
+        }
+        if !(0.0..1.0).contains(&self.adaptive.hysteresis) {
+            return Err(format!(
+                "adaptive.hysteresis must be in [0, 1) (got {})",
+                self.adaptive.hysteresis
+            ));
+        }
+        if self.adaptive.max_period == 0 {
+            return Err("adaptive.max_period must be positive".into());
+        }
         scenarios::build_scenario_or_err(&self.scenario, &self.problem)
             .map_err(|e| e.to_string())?;
         Ok(())
@@ -504,6 +573,11 @@ const KNOWN_KEYS: &[&str] = &[
     "observability.serve_port",
     "serve.sessions",
     "serve.seed0",
+    "adaptive.enabled",
+    "adaptive.adapt_every",
+    "adaptive.min_refreshes",
+    "adaptive.hysteresis",
+    "adaptive.max_period",
     "runtime.backend",
     "runtime.artifacts_dir",
     "runtime.out_dir",
@@ -720,6 +794,35 @@ backend = "native"
         );
         assert!(ExperimentConfig::from_toml("[serve]\nsessions = 0").is_err());
         assert!(ExperimentConfig::from_toml("[serve]\nseedz = 1").is_err());
+    }
+
+    #[test]
+    fn adaptive_settings_parse_and_validate() {
+        let cfg = ExperimentConfig::default();
+        assert!(!cfg.adaptive.enabled);
+        assert_eq!(cfg.adaptive.adapt_every, 16);
+        assert_eq!(cfg.adaptive.min_refreshes, 2);
+        assert_eq!(cfg.adaptive.hysteresis, 0.25);
+        assert_eq!(cfg.adaptive.max_period, 1024);
+
+        let cfg = ExperimentConfig::from_toml(
+            "[adaptive]\nenabled = true\nadapt_every = 8\n\
+             min_refreshes = 3\nhysteresis = 0.1\nmax_period = 64",
+        )
+        .unwrap();
+        assert!(cfg.adaptive.enabled);
+        assert_eq!(cfg.adaptive.adapt_every, 8);
+        assert_eq!(cfg.adaptive.min_refreshes, 3);
+        assert_eq!(cfg.adaptive.hysteresis, 0.1);
+        assert_eq!(cfg.adaptive.max_period, 64);
+
+        assert!(ExperimentConfig::from_toml("[adaptive]\nadapt_every = 0").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[adaptive]\nhysteresis = 1.5").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[adaptive]\nmax_period = 0").is_err());
+        // typo'd key still rejected
+        assert!(ExperimentConfig::from_toml("[adaptive]\nenable = true").is_err());
     }
 
     #[test]

@@ -21,6 +21,29 @@ pub struct GradientCache {
     slots: Vec<Option<Slot>>,
 }
 
+/// Assembly was attempted while one or more level slots had never been
+/// refreshed — the estimator `Σ_l ∇Δ_l` would silently drop those
+/// levels' contributions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AssembleError {
+    /// Levels whose slot was never populated.
+    pub missing_levels: Vec<usize>,
+}
+
+impl std::fmt::Display for AssembleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cache has unpopulated levels {:?}: every level must be \
+             refreshed once (the schedule refreshes all levels at t = 0) \
+             before the delayed estimator can be assembled",
+            self.missing_levels
+        )
+    }
+}
+
+impl std::error::Error for AssembleError {}
+
 impl GradientCache {
     pub fn new(lmax: usize, dim: usize) -> Self {
         GradientCache {
@@ -66,10 +89,19 @@ impl GradientCache {
     }
 
     /// Assemble the delayed MLMC estimator from the cached components:
-    /// `(Σ_l Δloss_l, Σ_l ∇Δ_l)`. Panics if any level is missing (the
-    /// trainer refreshes all levels at `t = 0` before ever assembling).
-    pub fn assemble(&self) -> (f64, Vec<f32>) {
-        assert!(self.is_complete(), "cache has unpopulated levels");
+    /// `(Σ_l Δloss_l, Σ_l ∇Δ_l)`, or a typed [`AssembleError`] naming
+    /// every level whose slot was never refreshed.
+    pub fn try_assemble(&self) -> Result<(f64, Vec<f32>), AssembleError> {
+        let missing_levels: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(l, _)| l)
+            .collect();
+        if !missing_levels.is_empty() {
+            return Err(AssembleError { missing_levels });
+        }
         let mut grad = vec![0.0f32; self.dim];
         let mut loss = 0.0;
         for slot in self.slots.iter().flatten() {
@@ -78,7 +110,17 @@ impl GradientCache {
                 *g += s;
             }
         }
-        (loss, grad)
+        Ok((loss, grad))
+    }
+
+    /// Panicking form of [`GradientCache::try_assemble`] for callers that
+    /// have already guaranteed completeness (the trainer refreshes all
+    /// levels at `t = 0` before ever assembling).
+    pub fn assemble(&self) -> (f64, Vec<f32>) {
+        match self.try_assemble() {
+            Ok(out) => out,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Max staleness across levels (diagnostics / metrics).
@@ -135,6 +177,26 @@ mod tests {
     #[should_panic(expected = "unpopulated")]
     fn assemble_incomplete_panics() {
         GradientCache::new(1, 1).assemble();
+    }
+
+    #[test]
+    fn try_assemble_names_exactly_the_missing_levels() {
+        let mut c = GradientCache::new(3, 2);
+        c.update(0, 0, 1.0, vec![1.0, 1.0]);
+        c.update(2, 0, 2.0, vec![2.0, 2.0]);
+        let err = c.try_assemble().unwrap_err();
+        assert_eq!(err.missing_levels, vec![1, 3]);
+        let msg = err.to_string();
+        assert!(msg.contains("unpopulated"), "{msg}");
+        assert!(msg.contains("[1, 3]"), "{msg}");
+        // the error type is a real std error
+        let _: &dyn std::error::Error = &err;
+        // filling the gaps turns the same cache assemblable
+        c.update(1, 0, 0.0, vec![0.0, 0.0]);
+        c.update(3, 0, 0.0, vec![0.0, 0.0]);
+        let (loss, grad) = c.try_assemble().unwrap();
+        assert_eq!(loss, 3.0);
+        assert_eq!(grad, vec![3.0, 3.0]);
     }
 
     #[test]

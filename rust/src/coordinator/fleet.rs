@@ -71,7 +71,7 @@ use super::trainer::{Trainer, TrainerBuilder};
 use crate::exec::{ChunkTask, ExecStats, StepExecReport, WorkerPool};
 use crate::hedging::Problem;
 use crate::metrics::{CurvePoint, LearningCurve};
-use crate::obs::{GroupMeta, LevelSnapshot, Recorder};
+use crate::obs::{estimator, GroupMeta, LevelSnapshot, Recorder};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::SharedBackend;
 
@@ -451,11 +451,15 @@ impl FleetCoordinator {
         // level job / None for naive) — routes measured per-task cost
         // back to the owning session's estimator statistics.
         let mut group_owner: Vec<(usize, Option<usize>)> = Vec::new();
-        for (idx, s) in self.sessions.iter().enumerate() {
+        for (idx, s) in self.sessions.iter_mut().enumerate() {
             if s.state != SessionState::Running {
                 continue;
             }
             let t = s.t;
+            // Re-observe the session's policy at the same point of the
+            // step a solo trainer would (before job planning), so fleet
+            // adaptation applies from this tick's dispatch onward.
+            s.trainer.maybe_adapt(t);
             let params: Arc<[f32]> = Arc::from(s.trainer.params.as_slice());
             let problem = *s.backend.problem();
             let base = ctxs.len();
@@ -660,6 +664,12 @@ impl FleetCoordinator {
                     s.trainer
                         .estimator()
                         .publish(&mut m, Some(&sid), s.t.saturating_sub(1));
+                    estimator::publish_decision(
+                        &mut m,
+                        Some(&sid),
+                        &s.trainer.decision().allocation.n_per_level,
+                        s.trainer.schedule_periods(),
+                    );
                 }
             }
             rec.record(
@@ -739,7 +749,6 @@ mod tests {
         let mut cfg = ExperimentConfig::smoke();
         cfg.train.steps = 4;
         cfg.train.eval_every = 2;
-        cfg.mlmc.n_effective = 64;
         cfg
     }
 
@@ -897,6 +906,55 @@ mod tests {
             assert_eq!(p.loss, q.loss);
             assert_eq!(p.grad_norm, q.grad_norm);
         }
+    }
+
+    #[test]
+    fn adaptive_session_publishes_decision_gauges_and_stays_finite() {
+        let mut cfg = cfg();
+        cfg.train.steps = 8;
+        cfg.train.eval_every = 4;
+        cfg.adaptive.enabled = true;
+        cfg.adaptive.adapt_every = 2;
+        let mut fleet = FleetCoordinator::new(2);
+        fleet.enable_tracing();
+        let id = fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc).seed(1))
+            .unwrap();
+        while fleet.poll(id).is_some_and(|s| !s.is_done()) {
+            fleet.tick().unwrap();
+        }
+        // decisions applied at tick boundaries keep the session healthy
+        let detail = fleet.session_detail(id).unwrap();
+        assert!(detail.chunks_per_level.iter().sum::<usize>() > 0);
+        let rec = fleet.take_recorder().unwrap();
+        let text = rec.metrics().render_prometheus();
+        assert!(
+            text.contains("dmlmc_alloc_n{level=\"0\",session=\"0\"}"),
+            "allocation gauge missing:\n{text}"
+        );
+        assert!(
+            text.contains("dmlmc_refresh_period{level=\"0\",session=\"0\"} 1"),
+            "period gauge missing:\n{text}"
+        );
+        let runs = fleet.drain().unwrap();
+        assert!(runs[0].curve.points.iter().all(|p| p.loss.is_finite()));
+    }
+
+    #[test]
+    fn fixed_policy_fleet_ticks_never_adapt() {
+        let cfg = cfg();
+        let mut fleet = FleetCoordinator::new(2);
+        let id = fleet
+            .submit("a", TrainerBuilder::new(&cfg).method(Method::Dmlmc))
+            .unwrap();
+        while fleet.poll(id).is_some_and(|s| !s.is_done()) {
+            fleet.tick().unwrap();
+        }
+        let layouts: Vec<usize> =
+            fleet.session_detail(id).unwrap().chunks_per_level;
+        let solo = Trainer::from_config(&cfg, Method::Dmlmc, 0).unwrap();
+        assert_eq!(layouts, solo.chunks_per_level().to_vec());
+        fleet.drain().unwrap();
     }
 
     #[test]

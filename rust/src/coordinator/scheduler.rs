@@ -27,6 +27,25 @@ impl DelayedSchedule {
         DelayedSchedule::new(lmax, 0.0)
     }
 
+    /// Build from explicit per-level periods (one per level `0..=lmax`,
+    /// each clamped to `>= 1`; level 0 is forced to period 1 so it stays
+    /// due every step). This is the [`crate::policy`] entry point: an
+    /// adaptive policy hands back measured periods instead of the
+    /// `⌊2^{dl}⌋` theory curve. `d` is kept purely as a diagnostic label
+    /// and is reported as the exponent that matches `periods[1]` (or 0
+    /// for a single-level / every-step schedule).
+    pub fn with_periods(periods: Vec<u64>) -> Self {
+        assert!(!periods.is_empty(), "need at least level 0");
+        let mut periods: Vec<u64> = periods.iter().map(|&p| p.max(1)).collect();
+        periods[0] = 1;
+        let d = if periods.len() > 1 {
+            (periods[1] as f64).log2()
+        } else {
+            0.0
+        };
+        DelayedSchedule { periods, d }
+    }
+
     pub fn lmax(&self) -> usize {
         self.periods.len() - 1
     }
@@ -34,6 +53,12 @@ impl DelayedSchedule {
     /// `⌊2^{dl}⌋` (clamped to >= 1).
     pub fn period(&self, level: usize) -> u64 {
         self.periods[level]
+    }
+
+    /// All per-level periods (what [`crate::policy`] decisions compare
+    /// and the gauges publish).
+    pub fn periods(&self) -> &[u64] {
+        &self.periods
     }
 
     /// Does step `t` refresh level `level`?
@@ -127,6 +152,73 @@ mod tests {
         let s = DelayedSchedule::new(6, 1.0);
         assert_eq!(s.refresh_rate(0), 1.0);
         assert_eq!(s.refresh_rate(6), 1.0 / 64.0);
+    }
+
+    #[test]
+    fn with_periods_clamps_and_forces_level0() {
+        let s = DelayedSchedule::with_periods(vec![7, 0, 3]);
+        assert_eq!(
+            (0..=2).map(|l| s.period(l)).collect::<Vec<_>>(),
+            vec![1, 1, 3]
+        );
+        assert_eq!(s.lmax(), 2);
+        for t in 0..100 {
+            assert!(s.is_due(t, 0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "level 0")]
+    fn with_periods_rejects_empty() {
+        DelayedSchedule::with_periods(vec![]);
+    }
+
+    /// Mid-run reconfiguration: replacing the schedule at an arbitrary
+    /// step `t` must keep `tau`/`is_due` consistent — `tau <= t`,
+    /// staleness below the *new* period, level 0 still due every step,
+    /// and every level due again within one new period of the swap (no
+    /// level starves). Property-style over fractional `d` and arbitrary
+    /// period replacements.
+    #[test]
+    fn reconfiguration_keeps_tau_and_is_due_consistent() {
+        let ds = [0.3, 0.5, 1.0, 1.3, 1.7];
+        let replacements: [&[u64]; 4] = [
+            &[1, 1, 2, 3, 5, 8, 13],
+            &[1, 4, 4, 4, 4, 4, 4],
+            &[9, 2, 2, 64, 1, 1, 7], // level-0 entry is overridden to 1
+            &[1, 1, 1, 1, 1, 1, 1],
+        ];
+        for &d in &ds {
+            let old = DelayedSchedule::new(6, d);
+            for new_periods in replacements {
+                let new = DelayedSchedule::with_periods(new_periods.to_vec());
+                // swap at a spread of steps, including ones where high
+                // levels are mid-period under the old schedule
+                for swap_t in [0u64, 1, 3, 17, 64, 100] {
+                    for l in 0..=new.lmax() {
+                        let p = new.period(l);
+                        // every level comes due within one new period
+                        let next_due = (swap_t..swap_t + p)
+                            .find(|&t| new.is_due(t, l));
+                        assert!(
+                            next_due.is_some(),
+                            "level {l} starves after swap at {swap_t}"
+                        );
+                        for t in swap_t..swap_t + 2 * p {
+                            let tau = new.tau(t, l);
+                            assert!(tau <= t);
+                            assert!(t - tau < p, "staleness must be < period");
+                            assert_eq!(tau % p, 0);
+                            assert_eq!(new.is_due(t, l), tau == t);
+                        }
+                    }
+                    // level 0 is always due under any replacement
+                    assert!(new.is_due(swap_t, 0));
+                    // old and new schedules agree on the invariant shape
+                    assert!(old.tau(swap_t, 0) == swap_t);
+                }
+            }
+        }
     }
 
     #[test]

@@ -26,10 +26,10 @@ use crate::engine;
 use crate::exec::{ChunkTask, ExecStats, SpawnMode, WorkerPool};
 use crate::metrics::{CurvePoint, LearningCurve};
 use crate::mlmc::estimator::{grad_norm, ChunkAccumulator};
-use crate::mlmc::LevelAllocation;
-use crate::obs::{EstimatorStats, GroupMeta, Recorder};
+use crate::obs::{estimator, EstimatorStats, GroupMeta, Recorder};
 use crate::optim::{self, Optimizer};
 use crate::parallel::{CostModel, StepCost};
+use crate::policy::{AllocationDecision, AllocationPolicy};
 use crate::rng::{brownian::Purpose, BrownianSource};
 use crate::runtime::{GradBackend, NativeBackend, SharedBackend, XlaRuntime};
 
@@ -65,6 +65,20 @@ pub struct Trainer {
     pub method: Method,
     pub seed: u64,
     backend: BackendHandle,
+    /// The allocation policy every level/sample/delay decision comes
+    /// from ([`crate::policy`]; `Arc`-shared so fleet sessions can hold
+    /// one policy). The trainer itself never reads an allocation
+    /// constant from the config.
+    policy: Arc<dyn AllocationPolicy>,
+    /// The decision currently in force. `chunks_per_level`,
+    /// `naive_chunks` and (for DMLMC) `schedule` are pure derivations of
+    /// it, re-derived whenever [`Self::maybe_adapt`] adopts a new one.
+    decision: AllocationDecision,
+    /// Re-observe the policy every this many steps (0 = never — the
+    /// fixed-policy default).
+    adapt_every: u64,
+    /// Decisions adopted so far (excludes held/no-change observations).
+    adaptations: u64,
     schedule: DelayedSchedule,
     cache: GradientCache,
     /// Chunks (not samples) to run per level refresh.
@@ -120,6 +134,7 @@ pub struct TrainerBuilder {
     method: Method,
     seed: u64,
     backend: Option<Box<dyn GradBackend>>,
+    policy: Option<Arc<dyn AllocationPolicy>>,
     local_pool: bool,
 }
 
@@ -131,6 +146,7 @@ impl TrainerBuilder {
             method: Method::Dmlmc,
             seed: 0,
             backend: None,
+            policy: None,
             local_pool: true,
         }
     }
@@ -193,6 +209,27 @@ impl TrainerBuilder {
         self
     }
 
+    /// Inject an explicit allocation policy instead of deriving one from
+    /// the config (`[adaptive]` → [`crate::policy::from_config`]).
+    pub fn policy(mut self, policy: Arc<dyn AllocationPolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Route allocation through the adaptive policy (equivalent to
+    /// `--adaptive` / `[adaptive] enabled = true`).
+    pub fn adaptive(mut self, enabled: bool) -> Self {
+        self.cfg.adaptive.enabled = enabled;
+        self
+    }
+
+    /// Re-observe cadence of the adaptive policy in steps (equivalent to
+    /// `[adaptive] adapt_every`; only meaningful with `adaptive(true)`).
+    pub fn adapt_every(mut self, steps: usize) -> Self {
+        self.cfg.adaptive.adapt_every = steps;
+        self
+    }
+
     /// Arbitrary config tweak — escape hatch for knobs without a named
     /// setter (learning rate, eval cadence, `n_effective`, ...).
     pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
@@ -220,7 +257,7 @@ impl TrainerBuilder {
     /// optimizer/scenario, a non-default scenario pinned to the XLA
     /// backend, or an engine/backend parameter-count mismatch.
     pub fn build(self) -> Result<Trainer> {
-        let TrainerBuilder { cfg, method, seed, backend, local_pool } = self;
+        let TrainerBuilder { cfg, method, seed, backend, policy, local_pool } = self;
         cfg.validate().map_err(|e| anyhow!(e))?;
         let backend: Box<dyn GradBackend> = match backend {
             Some(b) => b,
@@ -263,24 +300,25 @@ impl TrainerBuilder {
         let problem = *backend.as_dyn().problem();
         let lmax = problem.lmax;
 
-        // Per-level sample allocation, rounded up to backend chunk sizes.
-        let alloc =
-            LevelAllocation::paper(lmax, cfg.mlmc.n_effective, cfg.mlmc.b, cfg.mlmc.c);
+        // Every level/sample/delay decision comes from the policy layer;
+        // the executable chunk layout is a pure derivation of its output.
+        let policy = policy.unwrap_or_else(|| crate::policy::from_config(&cfg));
+        let decision = policy.initial(lmax);
         let chunk_sizes: Vec<usize> =
             (0..=lmax).map(|l| backend.as_dyn().grad_chunk(l)).collect();
-        let rounded = alloc.round_to_chunks(&chunk_sizes);
-        let chunks_per_level: Vec<usize> = (0..=lmax)
-            .map(|l| rounded.n(l) / chunk_sizes[l])
-            .collect();
-        let naive_chunks = cfg
-            .mlmc
-            .n_effective
-            .div_ceil(backend.as_dyn().naive_chunk())
-            .max(1);
+        let (chunks_per_level, naive_chunks) =
+            layout_from(&decision, &chunk_sizes, backend.as_dyn().naive_chunk());
 
         let schedule = match method {
-            Method::Dmlmc => DelayedSchedule::new(lmax, cfg.mlmc.d),
+            // Algorithm 1 runs the policy's delayed schedule; the
+            // baselines refresh every level every step regardless.
+            Method::Dmlmc => decision.schedule.clone(),
             _ => DelayedSchedule::every_step(lmax),
+        };
+        let adapt_every = if cfg.adaptive.enabled {
+            cfg.adaptive.adapt_every as u64
+        } else {
+            0
         };
         let optimizer = optim::by_name(&cfg.train.optimizer, cfg.train.lr)
             .ok_or_else(|| anyhow!("unknown optimizer `{}`", cfg.train.optimizer))?;
@@ -335,6 +373,24 @@ impl TrainerBuilder {
     }
 }
 
+/// Derive the executable chunk layout from a policy decision: per-level
+/// chunk counts (the allocation rounded up to the backend's chunk sizes)
+/// and the chunks of a naive finest-grid refresh. Pure function of
+/// (decision, backend geometry) — re-run whenever a new decision is
+/// adopted, so the layout can never drift from the decision in force.
+fn layout_from(
+    decision: &AllocationDecision,
+    chunk_sizes: &[usize],
+    naive_chunk: usize,
+) -> (Vec<usize>, usize) {
+    let rounded = decision.allocation.round_to_chunks(chunk_sizes);
+    let chunks_per_level: Vec<usize> = (0..chunk_sizes.len())
+        .map(|l| rounded.n(l) / chunk_sizes[l])
+        .collect();
+    let naive_chunks = decision.n_effective.div_ceil(naive_chunk).max(1);
+    (chunks_per_level, naive_chunks)
+}
+
 impl Trainer {
     /// Build the backend from the config (`xla` loads artifacts,
     /// `native` runs the pure-rust engine under the configured scenario).
@@ -379,7 +435,12 @@ impl Trainer {
     /// updates cache, cost accounting and parameters. The fleet drives
     /// the same apply half after its own multiplexed dispatch, so solo
     /// and fleet execution share one numeric path by construction.
+    ///
+    /// On the adaptation cadence the policy is re-observed *before* the
+    /// step's jobs are planned ([`Self::maybe_adapt`]), so a new
+    /// decision takes effect from this step's dispatch onward.
     pub fn step(&mut self, t: u64) -> Result<(StepCost, f64)> {
+        self.maybe_adapt(t);
         let step_start = self.recorder.as_ref().map(|r| r.now());
         match self.method {
             Method::Naive => {
@@ -451,9 +512,46 @@ impl Trainer {
                 let mut m = rec.metrics_mut();
                 m.inc("dmlmc_steps_total", 1);
                 self.estimator.publish(&mut m, None, t);
+                estimator::publish_decision(
+                    &mut m,
+                    None,
+                    &self.decision.allocation.n_per_level,
+                    self.schedule.periods(),
+                );
             }
             rec.record("step", start, vec![("step", t as f64)]);
         }
+    }
+
+    /// Re-observe the policy on the adaptation cadence and, when it
+    /// returns a materially different decision, adopt it: re-derive the
+    /// chunk layout and (for DMLMC) swap in the new delayed schedule.
+    /// No-op when the cadence is 0 (fixed policy, the default) and at
+    /// `t = 0`, where the initial decision is already in force. Called
+    /// at the top of the solo [`Self::step`] and by the fleet right
+    /// before it plans a session's jobs — the same point of the step —
+    /// so solo and fleet adaptive trajectories coincide.
+    pub(crate) fn maybe_adapt(&mut self, t: u64) {
+        if self.adapt_every == 0 || t == 0 || t % self.adapt_every != 0 {
+            return;
+        }
+        let snap = self.estimator.observe(t);
+        let next = self.policy.observe(&snap, &self.decision);
+        if next.same_as(&self.decision) {
+            return;
+        }
+        let lmax = self.backend.as_dyn().problem().lmax;
+        let chunk_sizes: Vec<usize> =
+            (0..=lmax).map(|l| self.backend.as_dyn().grad_chunk(l)).collect();
+        let (chunks_per_level, naive_chunks) =
+            layout_from(&next, &chunk_sizes, self.backend.as_dyn().naive_chunk());
+        self.chunks_per_level = chunks_per_level;
+        self.naive_chunks = naive_chunks;
+        if self.method == Method::Dmlmc {
+            self.schedule = next.schedule.clone();
+        }
+        self.decision = next;
+        self.adaptations += 1;
     }
 
     /// Apply half of a MLMC/DMLMC step: account cost from the level
@@ -667,6 +765,12 @@ impl Trainer {
         self.naive_chunks
     }
 
+    /// Per-level refresh periods in force — the decision's schedule for
+    /// DMLMC, the every-step schedule for the baselines.
+    pub fn schedule_periods(&self) -> &[u64] {
+        self.schedule.periods()
+    }
+
     /// Measured execution telemetry (per-step makespans, per-worker busy
     /// time, utilization) — `None` when the backend dispatches
     /// sequentially (no pool).
@@ -690,6 +794,23 @@ impl Trainer {
     /// cost from its multiplexed dispatch report here.
     pub(crate) fn estimator_mut(&mut self) -> &mut EstimatorStats {
         &mut self.estimator
+    }
+
+    /// The allocation decision currently in force (the policy's output;
+    /// chunk layout and DMLMC schedule are derived from it).
+    pub fn decision(&self) -> &AllocationDecision {
+        &self.decision
+    }
+
+    /// Display name of the allocation policy (`"fixed"` / `"adaptive"`).
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Decisions adopted by [`Self::maybe_adapt`] so far (held /
+    /// no-change observations don't count).
+    pub fn adaptations(&self) -> u64 {
+        self.adaptations
     }
 
     /// The span recorder — `Some` only when tracing is enabled.
@@ -775,7 +896,6 @@ mod tests {
         let mut cfg = ExperimentConfig::smoke();
         cfg.train.steps = 8;
         cfg.train.eval_every = 4;
-        cfg.mlmc.n_effective = 64;
         cfg
     }
 
@@ -1195,6 +1315,106 @@ mod tests {
             .enumerate()
             .map(|(l, &ch)| ch * tr.backend().grad_chunk(l))
             .sum();
-        assert!(total >= tr.cfg.mlmc.n_effective);
+        assert!(total >= tr.decision().n_effective);
+    }
+
+    #[test]
+    fn default_policy_is_fixed_and_never_adapts() {
+        let mut tr = trainer(Method::Dmlmc);
+        assert_eq!(tr.policy_name(), "fixed");
+        tr.run().unwrap();
+        assert_eq!(tr.adaptations(), 0);
+    }
+
+    #[test]
+    fn injected_fixed_policy_matches_the_default_path_bitwise() {
+        let cfg = smoke_cfg();
+        let mut a = Trainer::from_config(&cfg, Method::Dmlmc, 2).unwrap();
+        let mut b = TrainerBuilder::new(&cfg)
+            .method(Method::Dmlmc)
+            .seed(2)
+            .policy(Arc::new(crate::policy::FixedPolicy::from_config(&cfg)))
+            .build()
+            .unwrap();
+        let ca = a.run().unwrap();
+        let cb = b.run().unwrap();
+        for (pa, pb) in ca.points.iter().zip(&cb.points) {
+            assert_eq!(pa.loss, pb.loss);
+            assert_eq!(pa.grad_norm, pb.grad_norm);
+        }
+        assert_eq!(a.params, b.params);
+    }
+
+    #[test]
+    fn builder_adaptive_knobs_land_in_config() {
+        let tr = TrainerBuilder::new(&smoke_cfg())
+            .adaptive(true)
+            .adapt_every(4)
+            .build()
+            .unwrap();
+        assert!(tr.cfg.adaptive.enabled);
+        assert_eq!(tr.cfg.adaptive.adapt_every, 4);
+        assert_eq!(tr.policy_name(), "adaptive");
+    }
+
+    #[test]
+    fn adaptive_run_is_deterministic_without_wall_clock_costs() {
+        // Sequential dispatch records no measured task costs, so the
+        // adaptive policy sees model-fed telemetry only and the whole
+        // trajectory — including adopted decisions — is reproducible.
+        let run = || {
+            let mut cfg = smoke_cfg();
+            cfg.train.steps = 16;
+            cfg.train.eval_every = 8;
+            let mut tr = TrainerBuilder::new(&cfg)
+                .method(Method::Dmlmc)
+                .seed(1)
+                .adaptive(true)
+                .adapt_every(4)
+                .without_local_pool()
+                .build()
+                .unwrap();
+            let curve = tr.run().unwrap();
+            let decision = tr.decision().clone();
+            (curve, tr.params.clone(), tr.adaptations(), decision)
+        };
+        let (ca, pa, na, da) = run();
+        let (cb, pb, nb, db) = run();
+        assert_eq!(pa, pb, "adaptive trajectory must be reproducible");
+        assert_eq!(na, nb);
+        assert!(da.same_as(&db));
+        for (a, b) in ca.points.iter().zip(&cb.points) {
+            assert_eq!(a.loss, b.loss);
+        }
+        // the decision invariants hold whatever the policy adopted
+        assert_eq!(da.schedule.period(0), 1);
+        assert!(da.allocation.n_per_level.iter().all(|&n| n >= 1));
+        assert_eq!(da.n_effective, 64);
+    }
+
+    #[test]
+    fn adaptive_layout_tracks_the_adopted_decision() {
+        let mut cfg = smoke_cfg();
+        cfg.train.steps = 16;
+        let mut tr = TrainerBuilder::new(&cfg)
+            .method(Method::Dmlmc)
+            .adaptive(true)
+            .adapt_every(4)
+            .without_local_pool()
+            .build()
+            .unwrap();
+        for t in 0..16 {
+            tr.step(t).unwrap();
+            // layout is always the pure derivation of the decision
+            let chunk_sizes: Vec<usize> = (0..=tr.cfg.problem.lmax)
+                .map(|l| tr.backend().grad_chunk(l))
+                .collect();
+            let rounded = tr.decision().allocation.round_to_chunks(&chunk_sizes);
+            for (l, &ch) in tr.chunks_per_level().iter().enumerate() {
+                assert_eq!(ch * chunk_sizes[l], rounded.n(l), "level {l}");
+            }
+            // DMLMC schedule mirrors the decision's schedule
+            assert_eq!(tr.schedule.periods(), tr.decision().schedule.periods());
+        }
     }
 }

@@ -157,6 +157,35 @@ pub struct FleetCell {
     pub mean_step_makespan_s: f64,
 }
 
+/// One mode row of the fixed-vs-adaptive allocation ablation
+/// (`repro adaptive-sweep`): the same DMLMC problem trained once under
+/// the offline-theory [`crate::policy::FixedPolicy`] and once under the
+/// telemetry-fed [`crate::policy::AdaptivePolicy`], compared on
+/// wall-clock-to-target-loss and measured parallel cost per step.
+#[derive(Debug, Clone)]
+pub struct AdaptiveCell {
+    /// `"fixed"` or `"adaptive"`.
+    pub mode: String,
+    pub steps: usize,
+    /// Final held-out loss of this mode's run.
+    pub final_loss: f64,
+    /// The shared target: the WORSE of the two final losses, so both
+    /// modes reach it by construction and the wall-clock comparison is
+    /// apples-to-apples.
+    pub target_loss: f64,
+    /// Wall-clock seconds from the first step to the first eval point at
+    /// or below `target_loss`.
+    pub wall_clock_to_target_s: f64,
+    /// Mean model parallel cost (depth) per step — the paper's
+    /// per-iteration parallel complexity, as the run actually scheduled
+    /// it.
+    pub mean_parallel_cost: f64,
+    /// Mean measured per-step makespan (seconds) on the pool.
+    pub mean_step_makespan_s: f64,
+    /// Decisions the policy adopted over the run (0 for fixed).
+    pub adaptations: u64,
+}
+
 /// Output of the overhead-bounded tracing benchmark (`repro trace`):
 /// the same DMLMC training run with tracing off and on, plus the shape
 /// of the exported trace. Wall-clock fields are seconds.
@@ -936,6 +965,90 @@ impl ExperimentRunner {
         Ok(cells)
     }
 
+    // -- Adaptive sweep: fixed vs telemetry-fed allocation ----------------
+
+    /// The fixed-vs-adaptive allocation ablation (`BENCH_adaptive.json`):
+    /// train the same DMLMC problem once under the frozen offline-theory
+    /// policy and once under the adaptive policy (`[adaptive]` cadence
+    /// from the runner's config), recording wall-clock at every eval
+    /// point. The shared target loss is the worse of the two final
+    /// losses, so both rows report a finite wall-clock-to-target and the
+    /// column compares like for like.
+    pub fn adaptive_sweep(&self) -> Result<Vec<AdaptiveCell>> {
+        struct ModeRun {
+            /// (elapsed seconds, held-out loss) at each eval point.
+            evals: Vec<(f64, f64)>,
+            mean_parallel_cost: f64,
+            mean_step_makespan_s: f64,
+            adaptations: u64,
+        }
+        let mut c = self.cfg.clone();
+        c.runtime.backend = Backend::Native;
+        let steps = c.train.steps;
+        anyhow::ensure!(steps > 0, "need at least one training step");
+        let run = |adaptive: bool| -> Result<ModeRun> {
+            let mut tr = TrainerBuilder::new(&c)
+                .method(Method::Dmlmc)
+                .seed(0)
+                .adaptive(adaptive)
+                .build()?;
+            let t0 = Instant::now();
+            let mut evals = Vec::new();
+            for t in 0..steps as u64 {
+                tr.step(t)?;
+                let next = t + 1;
+                if next % c.train.eval_every as u64 == 0 || next == steps as u64
+                {
+                    evals.push((t0.elapsed().as_secs_f64(), tr.eval_loss()?));
+                }
+            }
+            Ok(ModeRun {
+                evals,
+                mean_parallel_cost: tr.cumulative_cost().depth / steps as f64,
+                mean_step_makespan_s: tr
+                    .exec_stats()
+                    .expect("native backend always pools")
+                    .mean_makespan(),
+                adaptations: tr.adaptations(),
+            })
+        };
+        let fixed = run(false)?;
+        let adaptive = run(true)?;
+        let final_of =
+            |m: &ModeRun| m.evals.last().map(|e| e.1).unwrap_or(f64::NAN);
+        let target_loss = final_of(&fixed).max(final_of(&adaptive));
+        let cell = |mode: &str, m: &ModeRun| AdaptiveCell {
+            mode: mode.to_string(),
+            steps,
+            final_loss: final_of(m),
+            target_loss,
+            wall_clock_to_target_s: m
+                .evals
+                .iter()
+                .find(|e| e.1 <= target_loss)
+                .map(|e| e.0)
+                .unwrap_or(f64::NAN),
+            mean_parallel_cost: m.mean_parallel_cost,
+            mean_step_makespan_s: m.mean_step_makespan_s,
+            adaptations: m.adaptations,
+        };
+        let cells = vec![cell("fixed", &fixed), cell("adaptive", &adaptive)];
+        if !self.quiet {
+            for r in &cells {
+                eprintln!(
+                    "adaptive_sweep: {:<8} loss {:.4}  to-target {:.4} s  \
+                     par/step {:.1}  ({} adaptations)",
+                    r.mode,
+                    r.final_loss,
+                    r.wall_clock_to_target_s,
+                    r.mean_parallel_cost,
+                    r.adaptations
+                );
+            }
+        }
+        Ok(cells)
+    }
+
     // -- Trace bench: traced-vs-untraced overhead + trace export ----------
 
     /// Run the same DMLMC training `repeats` times with tracing off and
@@ -1302,6 +1415,32 @@ impl ExperimentRunner {
         out
     }
 
+    /// Render the fixed-vs-adaptive ablation as text (CLI
+    /// `repro adaptive-sweep`). Wall-clock columns are seconds.
+    pub fn render_adaptive_table(cells: &[AdaptiveCell]) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<10} {:>6} {:>12} {:>12} {:>14} {:>14} {:>12} {:>8}\n",
+            "mode", "steps", "final loss", "target", "to-target s",
+            "par cost/step", "mksp s/step", "adapts"
+        ));
+        for c in cells {
+            out.push_str(&format!(
+                "{:<10} {:>6} {:>12.4} {:>12.4} {:>14.6} {:>14.2} {:>12.6} \
+                 {:>8}\n",
+                c.mode,
+                c.steps,
+                c.final_loss,
+                c.target_loss,
+                c.wall_clock_to_target_s,
+                c.mean_parallel_cost,
+                c.mean_step_makespan_s,
+                c.adaptations
+            ));
+        }
+        out
+    }
+
     /// Render the fleet sweep as text (CLI `repro fleet-sweep`).
     pub fn render_fleet_table(cells: &[FleetCell]) -> String {
         let mut out = String::new();
@@ -1631,6 +1770,40 @@ scoped / resident overhead ratio: 6.00x
         assert!(r.fleet_sweep(&[1], &[0], &sc, 4).is_err());
         assert!(r.fleet_sweep(&[1], &[1], &[], 4).is_err());
         assert!(r.fleet_sweep(&[1], &[1], &sc, 0).is_err());
+    }
+
+    #[test]
+    fn adaptive_sweep_compares_both_modes_against_one_target() {
+        let mut c = cfg();
+        c.train.steps = 12;
+        c.train.eval_every = 4;
+        c.adaptive.adapt_every = 4;
+        let rows = ExperimentRunner::new(&c)
+            .quiet(true)
+            .adaptive_sweep()
+            .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].mode, "fixed");
+        assert_eq!(rows[1].mode, "adaptive");
+        assert_eq!(rows[0].target_loss, rows[1].target_loss);
+        assert_eq!(rows[0].adaptations, 0, "fixed never adapts");
+        for r in &rows {
+            assert_eq!(r.steps, 12);
+            assert!(r.final_loss.is_finite(), "{}", r.mode);
+            // the target is the worse final loss, so BOTH modes reach it
+            assert!(
+                r.wall_clock_to_target_s.is_finite(),
+                "{}: never reached the shared target",
+                r.mode
+            );
+            assert!(r.mean_parallel_cost > 0.0);
+            assert!(r.mean_step_makespan_s >= 0.0);
+        }
+        let txt = ExperimentRunner::render_adaptive_table(&rows);
+        assert!(txt.contains("fixed"));
+        assert!(txt.contains("adaptive"));
+        assert!(txt.contains("to-target s"));
+        assert!(txt.lines().count() >= 3);
     }
 
     #[test]

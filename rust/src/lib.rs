@@ -201,6 +201,38 @@
 //! kill -INT %1   # graceful: final artifacts land in the run dir
 //! ```
 //!
+//! ## Adaptive allocation
+//!
+//! Every level/sample/delay decision lives in one layer ([`policy`]):
+//! the [`policy::AllocationPolicy`] trait maps an estimator-telemetry
+//! snapshot ([`obs::EstimatorSnapshot`]) to an
+//! [`policy::AllocationDecision`] — per-level sample counts
+//! ([`mlmc::LevelAllocation`]), the delayed-refresh schedule
+//! ([`coordinator::DelayedSchedule`]) and the effective batch size. The
+//! trainer derives its chunk layout from the decision and never reads an
+//! allocation constant from the config directly (a CI deny-grep pins
+//! this). Two implementations ship:
+//!
+//! * [`policy::FixedPolicy`] (default) — the paper's offline-theory
+//!   constants, bit-identical to every pre-policy release (pinned by
+//!   `tests/policy_regression.rs`).
+//! * [`policy::AdaptivePolicy`] — re-solves the Giles allocation
+//!   `N_l ∝ sqrt(V̂_l / Ĉ_l)` and the refresh periods from the live
+//!   per-level variance/cost gauges on a configurable cadence, with
+//!   per-level hysteresis and clamps so the decision stream is a
+//!   deterministic function of the telemetry stream.
+//!
+//! Enable with `--adaptive` (or `[adaptive] enabled = true` in TOML;
+//! `adapt_every`, `min_refreshes`, `hysteresis`, `max_period` tune the
+//! cadence and damping — see `configs/adaptive.toml`). Fleet sessions
+//! re-observe independently at tick boundaries, so each adapts to its
+//! own problem. The active decision is scrape-visible during
+//! `repro serve` as the `dmlmc_alloc_n{level="l"}` /
+//! `dmlmc_refresh_period{level="l"}` gauges, and `repro adaptive-sweep`
+//! (`make bench-adaptive`) measures the fixed-vs-adaptive ablation
+//! (wall-clock to target loss, per-step parallel cost) into
+//! `BENCH_adaptive.json`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -235,6 +267,7 @@ pub mod mlmc;
 pub mod obs;
 pub mod optim;
 pub mod parallel;
+pub mod policy;
 pub mod rng;
 pub mod runtime;
 pub mod scenarios;
@@ -245,4 +278,5 @@ pub use config::ExperimentConfig;
 pub use coordinator::{FleetCoordinator, Method, Trainer, TrainerBuilder};
 pub use experiments::ExperimentRunner;
 pub use metrics::RunArtifacts;
+pub use policy::{AdaptivePolicy, AllocationDecision, AllocationPolicy, FixedPolicy};
 pub use scenarios::Scenario;

@@ -67,6 +67,13 @@ fn root_command() -> Command {
                  (execution.pin_cores; sched_setaffinity on Linux, no-op \
                  elsewhere; best-effort and bit-identical results)",
             ))
+            .opt(Opt::switch(
+                "adaptive",
+                "route level/sample/delay decisions through the adaptive \
+                 allocation policy (adaptive.enabled; per-level sample \
+                 counts and refresh periods re-derived from live estimator \
+                 telemetry every adaptive.adapt_every steps)",
+            ))
             .opt(Opt::switch("quiet", "suppress progress output"))
     };
     Command::new("repro", "Delayed MLMC for SGD — paper reproduction driver")
@@ -212,6 +219,15 @@ fn root_command() -> Command {
                 "512",
             )),
         ))
+        .subcommand(common(Command::new(
+            "adaptive-sweep",
+            "fixed vs adaptive allocation ablation: the same DMLMC \
+             training once with the offline-theory constants and once \
+             with the telemetry-driven policy, compared on wall clock to \
+             a shared target loss and measured parallel cost per step \
+             (emits BENCH_adaptive.json; defaults to 32 steps unless \
+             --steps is given)",
+        )))
         .subcommand(Command::new(
             "scenarios",
             "list the registered scenario keys",
@@ -313,6 +329,9 @@ fn load_config_with(args: &Args, workers_list_ok: bool) -> Result<ExperimentConf
     }
     if args.flag("pin-cores") {
         cfg.execution.pin_cores = true;
+    }
+    if args.flag("adaptive") {
+        cfg.adaptive.enabled = true;
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
     Ok(cfg)
@@ -1048,6 +1067,53 @@ fn cmd_hotpath_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_adaptive_sweep(args: &Args) -> Result<()> {
+    use dmlmc::util::json::{obj, Json};
+    let mut cfg = load_config(args)?;
+    // Like parallel-sweep: a short ablation horizon by default.
+    if args.get("steps").is_none() && !toml_pins_steps(args) {
+        cfg.train.steps = 32;
+    }
+    let runner = runner_for(&cfg, args);
+    let rows = runner.adaptive_sweep()?;
+    println!("{}", ExperimentRunner::render_adaptive_table(&rows));
+
+    let cells: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("mode", Json::Str(r.mode.clone())),
+                ("steps", Json::Num(r.steps as f64)),
+                ("final_loss", Json::Num(r.final_loss)),
+                ("target_loss", Json::Num(r.target_loss)),
+                (
+                    "wall_clock_to_target_s",
+                    Json::Num(r.wall_clock_to_target_s),
+                ),
+                ("mean_parallel_cost", Json::Num(r.mean_parallel_cost)),
+                (
+                    "mean_step_makespan_s",
+                    Json::Num(r.mean_step_makespan_s),
+                ),
+                ("adaptations", Json::Num(r.adaptations as f64)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::Str("adaptive-sweep".to_string())),
+        ("scenario", Json::Str(cfg.scenario.clone())),
+        ("n_effective", Json::Num(cfg.mlmc.n_effective as f64)),
+        ("steps", Json::Num(cfg.train.steps as f64)),
+        ("adapt_every", Json::Num(cfg.adaptive.adapt_every as f64)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    let path = runner
+        .artifacts("adaptive-sweep")?
+        .write_bench_json("BENCH_adaptive", &doc)?;
+    eprintln!("wrote {} (+ ./BENCH_adaptive.json)", path.display());
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     use dmlmc::runtime::Manifest;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -1093,6 +1159,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "fleet-sweep" => cmd_fleet_sweep(&args),
         "hotpath-bench" => cmd_hotpath_bench(&args),
+        "adaptive-sweep" => cmd_adaptive_sweep(&args),
         "scenarios" => cmd_scenarios(),
         "info" => cmd_info(&args),
         _ => {

@@ -18,11 +18,26 @@ impl LevelAllocation {
     /// The paper's allocation for effective batch size `n`, variance decay
     /// `b` and cost growth `c` (requires `b > c` for the `O(1/N)` rate).
     pub fn paper(lmax: usize, n: usize, b: f64, c: f64) -> Self {
-        assert!(n > 0, "effective batch size must be positive");
         let weights: Vec<f64> = (0..=lmax)
             .map(|l| 2f64.powf(-(b + c) * l as f64 / 2.0))
             .collect();
+        LevelAllocation::from_weights(&weights, n)
+    }
+
+    /// Normalise arbitrary non-negative per-level weights against the
+    /// effective batch size `n`: `N_l = ceil(w_l / Σw * N)`, clamped to
+    /// `>= 1`. [`LevelAllocation::paper`] is the special case
+    /// `w_l = 2^{-(b+c)l/2}`; [`crate::policy::AdaptivePolicy`] feeds in
+    /// the Giles weights `sqrt(V̂_l / Ĉ_l)` measured from live telemetry.
+    pub fn from_weights(weights: &[f64], n: usize) -> Self {
+        assert!(n > 0, "effective batch size must be positive");
+        assert!(!weights.is_empty(), "need at least level 0");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "weights must be finite and non-negative"
+        );
         let z: f64 = weights.iter().sum();
+        assert!(z > 0.0, "at least one weight must be positive");
         let n_per_level = weights
             .iter()
             .map(|w| ((w / z) * n as f64).ceil().max(1.0) as usize)
@@ -144,5 +159,30 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_budget_panics() {
         LevelAllocation::paper(3, 0, 1.8, 1.0);
+    }
+
+    #[test]
+    fn from_weights_normalizes_and_clamps() {
+        let a = LevelAllocation::from_weights(&[3.0, 1.0, 0.0], 100);
+        assert_eq!(a.n_per_level, vec![75, 25, 1]);
+        // paper() is the geometric-weights special case, bit for bit
+        let weights: Vec<f64> =
+            (0..=6).map(|l| 2f64.powf(-2.8 * l as f64 / 2.0)).collect();
+        assert_eq!(
+            LevelAllocation::from_weights(&weights, 1024),
+            LevelAllocation::paper(6, 1024, 1.8, 1.0)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn from_weights_rejects_nan() {
+        LevelAllocation::from_weights(&[1.0, f64::NAN], 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one weight")]
+    fn from_weights_rejects_all_zero() {
+        LevelAllocation::from_weights(&[0.0, 0.0], 10);
     }
 }

@@ -5,6 +5,8 @@
 //! exponent by least-squares on `log2`: if `y_l ≈ A 2^{-r l}` then
 //! `log2 y_l` is affine in `l` with slope `-r`.
 
+use crate::metrics::Welford;
+
 /// Mean/std series over levels, as plotted in Figure 1.
 #[derive(Debug, Clone, Default)]
 pub struct DecaySeries {
@@ -14,15 +16,18 @@ pub struct DecaySeries {
 
 impl DecaySeries {
     /// Aggregate raw per-snapshot samples: `samples[l]` holds the values
-    /// observed at level `l` across optimization snapshots.
+    /// observed at level `l` across optimization snapshots. Uses the ONE
+    /// shared streaming accumulator ([`Welford`]) — the same one behind
+    /// the live estimator gauges — rather than a private two-pass copy.
     pub fn from_samples(samples: &[Vec<f64>]) -> DecaySeries {
         let per_level = samples
             .iter()
             .map(|vals| {
-                let n = vals.len().max(1) as f64;
-                let mean = vals.iter().sum::<f64>() / n;
-                let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
-                (mean, var.sqrt())
+                let mut w = Welford::new();
+                for &v in vals {
+                    w.push(v);
+                }
+                (w.mean(), w.std())
             })
             .collect();
         DecaySeries { per_level }
@@ -115,6 +120,23 @@ mod tests {
         assert_eq!(s.per_level[0], (4.0, 0.0));
         assert_eq!(s.per_level[1].0, 2.0);
         assert!(s.per_level[1].1 > 0.9);
+    }
+
+    #[test]
+    fn series_pins_the_shared_welford_values_bitwise() {
+        // Regression pin for the accumulator dedup: the series must
+        // produce EXACTLY what the shared Welford produces (the same
+        // accumulator behind the estimator gauges), bit for bit.
+        let samples = vec![vec![2.0, 4.0, 6.0], vec![1.5, -0.25, 3.0], vec![]];
+        let s = DecaySeries::from_samples(&samples);
+        assert_eq!(s.per_level[0], (4.0, (8.0f64 / 3.0).sqrt()));
+        let mut w = crate::metrics::Welford::new();
+        for &v in &samples[1] {
+            w.push(v);
+        }
+        assert_eq!(s.per_level[1], (w.mean(), w.std()));
+        // empty level: zero-count accumulator, (0, 0) exactly
+        assert_eq!(s.per_level[2], (0.0, 0.0));
     }
 
     #[test]

@@ -66,6 +66,23 @@ pub struct LevelSnapshot {
     pub last_refresh_step: u64,
 }
 
+/// A consistent all-levels view of the estimator telemetry at one step —
+/// the input type of [`crate::policy::AllocationPolicy::observe`]. Cheap
+/// to build (one [`LevelSnapshot`] per level, no locking) and owning, so
+/// a policy can be evaluated without borrowing the live accumulators.
+#[derive(Debug, Clone)]
+pub struct EstimatorSnapshot {
+    /// Step the snapshot was taken at (staleness is relative to it).
+    pub now_step: u64,
+    pub levels: Vec<LevelSnapshot>,
+}
+
+impl EstimatorSnapshot {
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+}
+
 /// Live per-level statistics of the (delayed) MLMC estimator.
 #[derive(Debug, Clone)]
 pub struct EstimatorStats {
@@ -138,6 +155,15 @@ impl EstimatorStats {
             .collect()
     }
 
+    /// Owning snapshot of every level at `now_step` — what the
+    /// allocation policies observe.
+    pub fn observe(&self, now_step: u64) -> EstimatorSnapshot {
+        EstimatorSnapshot {
+            now_step,
+            levels: self.snapshot(now_step),
+        }
+    }
+
     /// Publish every level as labeled gauges into `m` (idempotent:
     /// gauges are set, never incremented, so republishing each step is
     /// safe). `session` adds a `session="<id>"` label to every series —
@@ -188,6 +214,39 @@ impl EstimatorStats {
                 &labels,
                 snap.staleness as f64,
             );
+        }
+    }
+}
+
+/// Publish the active allocation decision as labeled gauges:
+/// `dmlmc_alloc_n{level}` (per-level sample count) and
+/// `dmlmc_refresh_period{level}` (delayed-refresh period in steps).
+/// Takes plain slices so the [`crate::policy`] decision types stay out
+/// of the observability layer; `session` attributes the series in a
+/// fleet registry exactly like [`EstimatorStats::publish`].
+pub fn publish_decision(
+    m: &mut Registry,
+    session: Option<&str>,
+    n_per_level: &[usize],
+    periods: &[u64],
+) {
+    m.describe(
+        "dmlmc_alloc_n",
+        "Active per-level sample allocation N_l (policy decision).",
+    );
+    m.describe(
+        "dmlmc_refresh_period",
+        "Active delayed-refresh period in steps per level (policy decision).",
+    );
+    for (l, &nl) in n_per_level.iter().enumerate() {
+        let level = l.to_string();
+        let mut labels: Vec<(&'static str, &str)> = vec![("level", &level)];
+        if let Some(sid) = session {
+            labels.push(("session", sid));
+        }
+        m.set_gauge_with("dmlmc_alloc_n", &labels, nl as f64);
+        if let Some(&p) = periods.get(l) {
+            m.set_gauge_with("dmlmc_refresh_period", &labels, p as f64);
         }
     }
 }
@@ -251,6 +310,38 @@ mod tests {
         assert!(text.contains("# HELP dmlmc_level_variance "));
         assert!(text.contains("dmlmc_level_variance{level=\"0\"} 0"));
         assert!(text.contains("dmlmc_level_variance{level=\"0\",session=\"7\"} 0"));
+    }
+
+    #[test]
+    fn observe_wraps_the_per_level_snapshot() {
+        let mut est = EstimatorStats::new(3);
+        est.record_refresh(1, 4, 8, &[1.0, 0.0]);
+        let snap = est.observe(6);
+        assert_eq!(snap.now_step, 6);
+        assert_eq!(snap.n_levels(), 3);
+        assert_eq!(snap.levels[1].refreshes_total, 1);
+        assert_eq!(snap.levels[1].staleness, 2);
+        assert_eq!(snap.levels[0].refreshes_total, 0);
+    }
+
+    #[test]
+    fn publish_decision_writes_alloc_and_period_gauges() {
+        let mut m = Registry::new();
+        publish_decision(&mut m, None, &[40, 16, 6], &[1, 2, 4]);
+        assert_eq!(m.gauge_with("dmlmc_alloc_n", &[("level", "0")]), Some(40.0));
+        assert_eq!(m.gauge_with("dmlmc_alloc_n", &[("level", "2")]), Some(6.0));
+        assert_eq!(
+            m.gauge_with("dmlmc_refresh_period", &[("level", "2")]),
+            Some(4.0)
+        );
+        publish_decision(&mut m, Some("3"), &[10], &[1]);
+        assert_eq!(
+            m.gauge_with("dmlmc_alloc_n", &[("level", "0"), ("session", "3")]),
+            Some(10.0)
+        );
+        let text = m.render_prometheus();
+        assert!(text.contains("# HELP dmlmc_alloc_n "));
+        assert!(text.contains("dmlmc_refresh_period{level=\"1\"} 2"));
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //!   gauges for gradient-difference variance and measured cost, DMLMC
 //!   staleness / refresh-age, and sample counts, recorded from
 //!   `apply_level_results` in the trainer and attributed per session in
-//!   the fleet — the data feed for adaptive MLMC allocation.
+//!   the fleet. [`EstimatorStats::observe`] renders an owning
+//!   [`EstimatorSnapshot`] — the input of the [`crate::policy`]
+//!   allocation policies — and [`estimator::publish_decision`] makes
+//!   every policy decision scrape-visible as the `dmlmc_alloc_n` /
+//!   `dmlmc_refresh_period` gauges.
 //! * **Export** ([`Recorder`], [`TraceSink`]) — the recorder ingests
 //!   [`StepExecReport`](crate::exec::StepExecReport)s coordinator-side
 //!   (the worker hot path records nothing it didn't already); the sink
@@ -48,7 +52,7 @@ pub mod serve;
 pub mod span;
 pub mod trace;
 
-pub use estimator::{EstimatorStats, LevelSnapshot, LevelStats};
+pub use estimator::{EstimatorSnapshot, EstimatorStats, LevelSnapshot, LevelStats};
 pub use metrics::{Histogram, Registry};
 pub use serve::{MetricsServer, ServeState};
 pub use span::{Span, SpanRing, Track};

@@ -1,0 +1,274 @@
+//! The measured-telemetry policy: Giles-style allocation from live
+//! variance/cost gauges.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::DelayedSchedule;
+use crate::mlmc::LevelAllocation;
+use crate::obs::{EstimatorSnapshot, LevelSnapshot};
+
+use super::{AllocationDecision, AllocationPolicy, FixedPolicy};
+
+/// Recomputes the allocation from measured statistics, falling back to
+/// the offline theory per level until that level has seen enough
+/// refreshes:
+///
+/// * **Samples** — the variance-minimising `N_l ∝ sqrt(V̂_l / Ĉ_l)`
+///   (Giles; arXiv:1912.11900 for the SGD setting), where `V̂_l` is the
+///   mean per-refresh `‖∇Δ_l‖²` gauge and `Ĉ_l` the mean measured task
+///   seconds (falling back to the `2^{cl}` cost model while no pooled
+///   timing exists). Normalised against the *same* effective batch size
+///   `N`, so adaptation redistributes the budget rather than growing it.
+/// * **Periods** — the delay that matches the measured decay:
+///   `p_l = round(sqrt(V̂_0 / V̂_l))`, the empirical analog of the
+///   theory's `2^{dl}` under `V_l = M·2^{-bl}` with `d = b/2`; clamped
+///   to `[1, max_period]` with level 0 forced due every step.
+///
+/// Both are wrapped in a per-level relative dead band (`hysteresis`), so
+/// a value only moves when the recomputed target leaves the band around
+/// the current decision. The policy is stateless — given the same
+/// snapshot and the same current decision it always returns the same
+/// decision, which keeps adaptive runs deterministic and
+/// worker-count-invariant at the trajectory level wherever the underlying
+/// telemetry is (model-fed costs are; wall-clock timings are consumed
+/// only through the dead band, see `tests/policy_regression.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptivePolicy {
+    /// The offline-theory fallback (also provides the initial decision).
+    pub fallback: FixedPolicy,
+    /// Gate: a level's measured statistics participate only after this
+    /// many refreshes.
+    pub min_refreshes: u64,
+    /// Relative dead band on per-level sample counts and periods.
+    pub hysteresis: f64,
+    /// Upper clamp on any adapted refresh period (steps).
+    pub max_period: u64,
+}
+
+impl AdaptivePolicy {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        AdaptivePolicy {
+            fallback: FixedPolicy::from_config(cfg),
+            min_refreshes: cfg.adaptive.min_refreshes,
+            hysteresis: cfg.adaptive.hysteresis,
+            max_period: cfg.adaptive.max_period,
+        }
+    }
+
+    /// Measured variance proxy for level `l`, if trustworthy.
+    fn v_hat(&self, s: &LevelSnapshot) -> Option<f64> {
+        if s.refreshes_total >= self.min_refreshes
+            && s.mean_norm2.is_finite()
+            && s.mean_norm2 > 0.0
+        {
+            Some(s.mean_norm2)
+        } else {
+            None
+        }
+    }
+
+    /// Measured cost for level `l`, falling back to the `2^{cl}` model.
+    fn c_hat(&self, s: &LevelSnapshot) -> f64 {
+        if s.cost_mean_s.is_finite() && s.cost_mean_s > 0.0 {
+            s.cost_mean_s
+        } else {
+            2f64.powf(self.fallback.c * s.level as f64)
+        }
+    }
+
+    /// Is `target` outside the relative dead band around `current`?
+    fn leaves_band(&self, current: u64, target: u64) -> bool {
+        let cur = current.max(1) as f64;
+        (target as f64 - cur).abs() / cur > self.hysteresis
+    }
+}
+
+impl AllocationPolicy for AdaptivePolicy {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn initial(&self, lmax: usize) -> AllocationDecision {
+        self.fallback.initial(lmax)
+    }
+
+    fn observe(
+        &self,
+        snap: &EstimatorSnapshot,
+        current: &AllocationDecision,
+    ) -> AllocationDecision {
+        let lmax = current.lmax();
+        let levels: Vec<&LevelSnapshot> = (0..=lmax)
+            .filter_map(|l| snap.levels.get(l))
+            .collect();
+        if levels.len() != lmax + 1 {
+            return current.clone(); // snapshot layout mismatch: hold
+        }
+
+        // Giles weights sqrt(V_l / C_l), theory fallback per level.
+        let weights: Vec<f64> = levels
+            .iter()
+            .map(|s| match self.v_hat(s) {
+                Some(v) => (v / self.c_hat(s)).sqrt(),
+                None => 2f64
+                    .powf(-(self.fallback.b + self.fallback.c) * s.level as f64 / 2.0),
+            })
+            .collect();
+        let target = LevelAllocation::from_weights(&weights, current.n_effective);
+        let n_per_level: Vec<usize> = (0..=lmax)
+            .map(|l| {
+                let cur = current.allocation.n(l);
+                if self.leaves_band(cur as u64, target.n(l) as u64) {
+                    target.n(l)
+                } else {
+                    cur
+                }
+            })
+            .collect();
+
+        // Periods from the measured decay: sqrt(V_0 / V_l), held at the
+        // current value while either endpoint lacks data.
+        let v0 = self.v_hat(levels[0]);
+        let periods: Vec<u64> = (0..=lmax)
+            .map(|l| {
+                let cur = current.schedule.period(l);
+                let target = match (v0, self.v_hat(levels[l])) {
+                    (Some(v0), Some(vl)) => {
+                        ((v0 / vl).sqrt().round() as u64).clamp(1, self.max_period)
+                    }
+                    _ => cur,
+                };
+                if self.leaves_band(cur, target) {
+                    target
+                } else {
+                    cur
+                }
+            })
+            .collect();
+
+        AllocationDecision {
+            allocation: LevelAllocation { n_per_level },
+            schedule: DelayedSchedule::with_periods(periods),
+            n_effective: current.n_effective,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs::EstimatorStats;
+
+    use super::*;
+
+    fn policy() -> AdaptivePolicy {
+        AdaptivePolicy {
+            fallback: FixedPolicy {
+                b: 1.8,
+                c: 1.0,
+                d: 1.0,
+                n_effective: 64,
+            },
+            min_refreshes: 2,
+            hysteresis: 0.25,
+            max_period: 64,
+        }
+    }
+
+    /// Telemetry with exact geometric norm decay: level l sees constant
+    /// `‖∇Δ_l‖² = 4^{-l}` (so V̂_0/V̂_l = 4^l and the measured period
+    /// target is 2^l) and model costs only.
+    fn geometric_telemetry(lmax: usize, refreshes: u64) -> EstimatorStats {
+        let mut est = EstimatorStats::new(lmax + 1);
+        for l in 0..=lmax {
+            let norm = 0.5f32.powi(l as i32); // norm2 = 4^{-l}
+            for step in 0..refreshes {
+                est.record_refresh(l, step, 8, &[norm]);
+            }
+        }
+        est
+    }
+
+    #[test]
+    fn initial_is_the_theory_decision() {
+        let p = policy();
+        let dec = p.initial(4);
+        assert_eq!(dec.allocation, LevelAllocation::paper(4, 64, 1.8, 1.0));
+        assert_eq!(dec.schedule.periods(), DelayedSchedule::new(4, 1.0).periods());
+    }
+
+    #[test]
+    fn insufficient_refreshes_hold_the_current_decision() {
+        let p = policy();
+        let dec = p.initial(4);
+        let est = geometric_telemetry(4, 1); // below min_refreshes = 2
+        let out = p.observe(&est.observe(1), &dec);
+        assert!(out.same_as(&dec));
+    }
+
+    #[test]
+    fn measured_decay_sets_periods_and_reallocates() {
+        let p = policy();
+        let dec = p.initial(4);
+        let est = geometric_telemetry(4, 4);
+        let out = p.observe(&est.observe(4), &dec);
+        // period target sqrt(4^l) = 2^l matches theory d = 1 exactly, so
+        // the schedule holds inside the dead band
+        assert_eq!(out.schedule.periods(), dec.schedule.periods());
+        // allocation follows sqrt(V/C) = sqrt(4^{-l} / 2^{l}); steeper
+        // than the theory's 2^{-1.4 l}, so level 0 gains budget
+        assert!(out.allocation.n(0) >= dec.allocation.n(0));
+        assert!(out.allocation.n_per_level.iter().all(|&n| n >= 1));
+        // the budget is redistributed, not changed
+        assert_eq!(out.n_effective, dec.n_effective);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_given_the_telemetry() {
+        let p = policy();
+        let dec = p.initial(4);
+        let est = geometric_telemetry(4, 4);
+        let a = p.observe(&est.observe(4), &dec);
+        let b = p.observe(&est.observe(4), &dec);
+        assert!(a.same_as(&b));
+    }
+
+    #[test]
+    fn hysteresis_damps_small_moves() {
+        let mut p = policy();
+        p.hysteresis = 0.9; // wide band: nothing short of 90% moves
+        let dec = p.initial(4);
+        let est = geometric_telemetry(4, 4);
+        let out = p.observe(&est.observe(4), &dec);
+        // period targets match theory; allocation moves are < 90% at
+        // every level under this telemetry, so the decision holds whole
+        assert_eq!(out.schedule.periods(), dec.schedule.periods());
+    }
+
+    #[test]
+    fn periods_clamp_and_level0_stays_due() {
+        let mut p = policy();
+        p.max_period = 8;
+        let dec = p.initial(6);
+        // brutal decay: V_0/V_l explodes, targets want huge periods
+        let mut est = EstimatorStats::new(7);
+        for l in 0..=6usize {
+            let norm = if l == 0 { 1.0f32 } else { 1e-4 };
+            for step in 0..4u64 {
+                est.record_refresh(l, step, 8, &[norm]);
+            }
+        }
+        let out = p.observe(&est.observe(4), &dec);
+        assert_eq!(out.schedule.period(0), 1);
+        for l in 1..=6 {
+            assert!(out.schedule.period(l) <= 8, "level {l} period clamped");
+        }
+    }
+
+    #[test]
+    fn layout_mismatch_holds_the_decision() {
+        let p = policy();
+        let dec = p.initial(6);
+        let est = EstimatorStats::new(3); // narrower than the decision
+        let out = p.observe(&est.observe(0), &dec);
+        assert!(out.same_as(&dec));
+    }
+}

@@ -1,0 +1,121 @@
+//! The offline-theory policy: the paper's constants, frozen.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::DelayedSchedule;
+use crate::mlmc::LevelAllocation;
+use crate::obs::EstimatorSnapshot;
+
+use super::{AllocationDecision, AllocationPolicy};
+
+/// Reproduces the pre-policy-layer behavior bit-identically: the
+/// allocation is [`LevelAllocation::paper`]`(lmax, n_effective, b, c)`
+/// and the schedule [`DelayedSchedule::new`]`(lmax, d)` — the exact
+/// constructor calls (same arguments, same float operations) the trainer
+/// used to make inline — and [`AllocationPolicy::observe`] is the
+/// identity, so no amount of telemetry ever moves a decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedPolicy {
+    /// Variance-decay exponent (Assumption 2).
+    pub b: f64,
+    /// Cost-growth exponent (Assumption 1).
+    pub c: f64,
+    /// Delay exponent of Algorithm 1.
+    pub d: f64,
+    /// Effective batch size `N`.
+    pub n_effective: usize,
+}
+
+impl FixedPolicy {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        FixedPolicy {
+            b: cfg.mlmc.b,
+            c: cfg.mlmc.c,
+            d: cfg.mlmc.d,
+            n_effective: cfg.mlmc.n_effective,
+        }
+    }
+}
+
+impl AllocationPolicy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn initial(&self, lmax: usize) -> AllocationDecision {
+        AllocationDecision {
+            allocation: LevelAllocation::paper(lmax, self.n_effective, self.b, self.c),
+            schedule: DelayedSchedule::new(lmax, self.d),
+            n_effective: self.n_effective,
+        }
+    }
+
+    fn observe(
+        &self,
+        _snap: &EstimatorSnapshot,
+        current: &AllocationDecision,
+    ) -> AllocationDecision {
+        current.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs::EstimatorStats;
+
+    use super::*;
+
+    fn paper_policy() -> FixedPolicy {
+        FixedPolicy {
+            b: 1.8,
+            c: 1.0,
+            d: 1.0,
+            n_effective: 1024,
+        }
+    }
+
+    #[test]
+    fn initial_matches_the_direct_constructors_bitwise() {
+        let p = paper_policy();
+        let dec = p.initial(6);
+        assert_eq!(dec.allocation, LevelAllocation::paper(6, 1024, 1.8, 1.0));
+        assert_eq!(
+            dec.schedule.periods(),
+            DelayedSchedule::new(6, 1.0).periods()
+        );
+        assert_eq!(dec.n_effective, 1024);
+    }
+
+    #[test]
+    fn observe_is_the_identity() {
+        let p = paper_policy();
+        let dec = p.initial(6);
+        // a telemetry stream that would move any adaptive policy
+        let mut est = EstimatorStats::new(7);
+        for l in 0..7 {
+            for step in 0..4u64 {
+                est.record_refresh(l, step, 8, &[100.0 * (l as f32 + 1.0)]);
+                est.record_cost(l, 1e-3 * (l as f64 + 1.0));
+            }
+        }
+        let out = p.observe(&est.observe(4), &dec);
+        assert!(out.same_as(&dec));
+    }
+
+    #[test]
+    fn from_config_copies_the_mlmc_constants() {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.mlmc.b = 2.0;
+        cfg.mlmc.d = 1.5;
+        cfg.mlmc.n_effective = 256;
+        let p = FixedPolicy::from_config(&cfg);
+        assert_eq!(
+            p,
+            FixedPolicy {
+                b: 2.0,
+                c: 1.0,
+                d: 1.5,
+                n_effective: 256
+            }
+        );
+    }
+}

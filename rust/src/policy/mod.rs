@@ -1,0 +1,142 @@
+//! Allocation policies: every level/sample/delay decision in one layer.
+//!
+//! The paper fixes the per-level sample counts `N_l` and the delayed
+//! refresh periods `⌊2^{dl}⌋` offline from the Assumption-1/2 exponents
+//! (§2). The MLMC-SGD allocation analysis in arXiv:1912.11900 and the
+//! multilevel-learning construction in arXiv:2102.08734 show the optimal
+//! allocation is a function of *measured* per-level variance and cost —
+//! exactly what [`crate::obs::EstimatorStats`] tracks live. This module
+//! closes that loop behind one trait so the trainer and fleet never own
+//! allocation constants themselves:
+//!
+//! * [`AllocationPolicy`] — `observe(&EstimatorSnapshot, &current) ->
+//!   AllocationDecision`. Policies are stateless (`Arc`-shareable across
+//!   fleet sessions); any hysteresis state lives in the caller-held
+//!   current decision, so the decision stream is a deterministic
+//!   function of the telemetry stream.
+//! * [`FixedPolicy`] — reproduces the offline-theory constants
+//!   bit-identically (it calls the same [`LevelAllocation::paper`] /
+//!   [`DelayedSchedule::new`] constructors with the same arguments the
+//!   trainer used to call directly; `observe` is the identity). Pinned
+//!   against pre-refactor goldens in `tests/policy_regression.rs`.
+//! * [`AdaptivePolicy`] — recomputes the Giles-style allocation
+//!   `N_l ∝ sqrt(V̂_l / Ĉ_l)` and the refresh periods from live
+//!   variance/cost gauges, with per-level hysteresis and clamps
+//!   (`[adaptive]` in TOML, `--adaptive` on the CLI).
+//!
+//! The active decision is scrape-visible: the trainer republishes it as
+//! the `dmlmc_alloc_n{level}` / `dmlmc_refresh_period{level}` gauges
+//! ([`crate::obs::estimator::publish_decision`]) next to the estimator
+//! telemetry it was derived from.
+
+pub mod adaptive;
+pub mod fixed;
+
+pub use adaptive::AdaptivePolicy;
+pub use fixed::FixedPolicy;
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::DelayedSchedule;
+use crate::mlmc::LevelAllocation;
+use crate::obs::EstimatorSnapshot;
+
+/// The complete output of an allocation policy: per-level sample counts,
+/// the delayed-refresh schedule, and the effective batch size the naive
+/// baseline shards. Everything downstream (chunk layout, job planning)
+/// is derived from this value — the trainer never reads an allocation
+/// constant from [`ExperimentConfig`] directly.
+#[derive(Debug, Clone)]
+pub struct AllocationDecision {
+    pub allocation: LevelAllocation,
+    pub schedule: DelayedSchedule,
+    /// Effective batch size `N` (the naive baseline's budget; adaptive
+    /// reallocation redistributes it across levels, never changes it).
+    pub n_effective: usize,
+}
+
+impl AllocationDecision {
+    pub fn lmax(&self) -> usize {
+        self.allocation.lmax()
+    }
+
+    /// Decision equality on the integer outputs that drive execution
+    /// (sample counts, periods, batch size) — the change detector for
+    /// re-deriving the chunk layout and republishing gauges.
+    pub fn same_as(&self, other: &AllocationDecision) -> bool {
+        self.allocation == other.allocation
+            && self.schedule.periods() == other.schedule.periods()
+            && self.n_effective == other.n_effective
+    }
+}
+
+/// A level/sample/delay decision procedure fed by estimator telemetry.
+///
+/// Implementations are shared immutably (`Arc<dyn AllocationPolicy>`)
+/// between the trainer, the fleet coordinator (which re-observes each
+/// session independently at tick boundaries) and tests.
+pub trait AllocationPolicy: Send + Sync + std::fmt::Debug {
+    /// Short label for benches and gauges (`"fixed"`, `"adaptive"`).
+    fn name(&self) -> &'static str;
+
+    /// The decision before any telemetry exists (build time, `t = 0`).
+    fn initial(&self, lmax: usize) -> AllocationDecision;
+
+    /// Re-evaluate against a telemetry snapshot. `current` is the
+    /// decision in force; policies return it unchanged (cloned) when the
+    /// telemetry does not justify a move, which is also how hysteresis
+    /// composes: the dead band is relative to `current`, so identical
+    /// telemetry streams always produce identical decision streams.
+    fn observe(
+        &self,
+        snap: &EstimatorSnapshot,
+        current: &AllocationDecision,
+    ) -> AllocationDecision;
+}
+
+/// The policy a config asks for: [`AdaptivePolicy`] when
+/// `[adaptive] enabled = true`, [`FixedPolicy`] otherwise. This is the
+/// single place allocation constants leave [`ExperimentConfig`].
+pub fn from_config(cfg: &ExperimentConfig) -> Arc<dyn AllocationPolicy> {
+    if cfg.adaptive.enabled {
+        Arc::new(AdaptivePolicy::from_config(cfg))
+    } else {
+        Arc::new(FixedPolicy::from_config(cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_dispatches_on_the_adaptive_flag() {
+        let mut cfg = ExperimentConfig::smoke();
+        assert_eq!(from_config(&cfg).name(), "fixed");
+        cfg.adaptive.enabled = true;
+        assert_eq!(from_config(&cfg).name(), "adaptive");
+    }
+
+    #[test]
+    fn same_as_compares_integer_outputs() {
+        let p = FixedPolicy {
+            b: 1.8,
+            c: 1.0,
+            d: 1.0,
+            n_effective: 64,
+        };
+        let a = p.initial(3);
+        let b = p.initial(3);
+        assert!(a.same_as(&b));
+        let mut c = a.clone();
+        c.allocation.n_per_level[1] += 1;
+        assert!(!a.same_as(&c));
+        let mut d = a.clone();
+        d.schedule = DelayedSchedule::with_periods(vec![1, 3, 4, 8]);
+        assert!(!a.same_as(&d));
+        let mut e = a.clone();
+        e.n_effective = 65;
+        assert!(!a.same_as(&e));
+    }
+}

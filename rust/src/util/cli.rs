@@ -195,6 +195,37 @@
 //! repro serve --port 9184 --sessions 2 --steps 256
 //! repro serve --max-ticks 64 --port 0   # self-terminating smoke
 //! ```
+//!
+//! # Adaptive allocation (`--adaptive`, `repro adaptive-sweep`)
+//!
+//! Every training/experiment subcommand accepts `--adaptive` (TOML:
+//! `[adaptive] enabled = true` — see `configs/adaptive.toml`): instead
+//! of holding the offline-theory constants for the whole run, the
+//! trainer routes its level/sample/delay decisions through the policy
+//! layer ([`crate::policy::AllocationPolicy`]). The default
+//! [`crate::policy::FixedPolicy`] reproduces the paper constants
+//! bit-identically (pinned by test); the
+//! [`crate::policy::AdaptivePolicy`] re-derives per-level sample counts
+//! (Giles-style `n_l ∝ sqrt(V_l / C_l)`) and refresh periods from the
+//! live estimator telemetry every `adaptive.adapt_every` steps, with a
+//! relative dead band (`hysteresis`) and hard clamps (`max_period`,
+//! `min_refreshes`) so sparse or noisy gauges cannot whipsaw the
+//! layout. Decisions are a pure function of the telemetry stream;
+//! without pooled wall-clock cost samples (sequential dispatch) an
+//! adaptive run is fully deterministic. Adopted decisions are
+//! scrape-visible as `dmlmc_alloc_n` / `dmlmc_refresh_period` gauges
+//! per `level` (and `session` under `repro serve`).
+//!
+//! `repro adaptive-sweep` (`make bench-adaptive`) is the ablation: the
+//! same DMLMC training once fixed and once adaptive, compared on wall
+//! clock to a shared target loss (the worse of the two finals) and on
+//! measured parallel cost per step, written to `BENCH_adaptive.json`.
+//! Examples:
+//!
+//! ```text
+//! repro train --method dmlmc --adaptive
+//! repro adaptive-sweep --steps 32 --config configs/adaptive.toml
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -164,6 +164,29 @@ fn scraped_variance_gauges_match_directly_computed_welford() {
             "level {l} samples"
         );
     }
+    // The adopted allocation decision is scrape-visible alongside the
+    // estimator gauges: per-level sample counts and refresh periods.
+    // Under the default FixedPolicy they equal the shadow solo run's.
+    assert!(exposition.contains("# TYPE dmlmc_alloc_n gauge"), "{exposition}");
+    assert!(
+        exposition.contains("# TYPE dmlmc_refresh_period gauge"),
+        "{exposition}"
+    );
+    for l in 0..n_levels {
+        let alloc = format!("dmlmc_alloc_n{{level=\"{l}\",session=\"{sid}\"}}");
+        assert_eq!(
+            series_value(exposition, &alloc),
+            Some(shadow.decision().allocation.n(l) as f64),
+            "level {l} alloc gauge"
+        );
+        let period = format!("dmlmc_refresh_period{{level=\"{l}\",session=\"{sid}\"}}");
+        assert_eq!(
+            series_value(exposition, &period),
+            Some(shadow.schedule_periods()[l] as f64),
+            "level {l} period gauge"
+        );
+    }
+
     // The deep snapshot the `/sessions/<id>` doc is built from agrees too.
     for snap in &detail.levels {
         assert_eq!(snap.variance, direct[snap.level].variance());

@@ -1,0 +1,213 @@
+//! Regression pins for the allocation-policy refactor: the policy layer
+//! must reproduce the pre-refactor offline-theory behavior
+//! bit-identically. Analytic goldens pin the constructor outputs
+//! (allocation vectors and refresh periods as exact integers), and
+//! end-to-end runs pin that routing the trainer through an explicit
+//! [`FixedPolicy`] changes nothing about the trajectory. The adaptive
+//! path is pinned on its determinism contract: without pooled
+//! wall-clock cost samples the decision stream is a pure function of
+//! the telemetry stream, so identical runs stay bitwise identical.
+
+use std::sync::Arc;
+
+use dmlmc::config::ExperimentConfig;
+use dmlmc::coordinator::{DelayedSchedule, Method, Trainer, TrainerBuilder};
+use dmlmc::mlmc::LevelAllocation;
+use dmlmc::obs::EstimatorStats;
+use dmlmc::policy::{from_config, AllocationPolicy, FixedPolicy};
+
+fn smoke_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.train.steps = 10;
+    cfg.train.eval_every = 5;
+    cfg
+}
+
+/// Analytic goldens for the paper allocation
+/// `N_l = ceil(2^{-(b+c)l/2} / Z * N).max(1)`, worked out by hand — if
+/// any float op inside the constructor changes, these integers move.
+#[test]
+fn paper_allocation_matches_hand_computed_goldens() {
+    let cases: &[(usize, usize, f64, f64, &[usize])] = &[
+        (6, 1024, 1.8, 1.0, &[637, 242, 92, 35, 14, 5, 2]),
+        (6, 64, 1.8, 1.0, &[40, 16, 6, 3, 1, 1, 1]),
+        (4, 256, 1.8, 1.0, &[161, 61, 24, 9, 4]),
+        (6, 1024, 2.0, 1.0, &[663, 235, 83, 30, 11, 4, 2]),
+        (3, 32, 1.8, 1.0, &[21, 8, 3, 2]),
+    ];
+    for &(lmax, n, b, c, want) in cases {
+        let a = LevelAllocation::paper(lmax, n, b, c);
+        assert_eq!(
+            a.n_per_level, want,
+            "paper({lmax}, {n}, {b}, {c})"
+        );
+    }
+    let w = LevelAllocation::from_weights(&[3.0, 1.0, 0.0], 100);
+    assert_eq!(w.n_per_level, vec![75, 25, 1]);
+}
+
+/// Analytic goldens for the delayed-refresh periods `⌊2^{dl}⌋.max(1)`.
+#[test]
+fn delayed_schedule_matches_hand_computed_goldens() {
+    let cases: &[(f64, &[u64])] = &[
+        (0.5, &[1, 1, 2, 2, 4, 5, 8]),
+        (1.0, &[1, 2, 4, 8, 16, 32, 64]),
+        (1.5, &[1, 2, 8, 22, 64, 181, 512]),
+    ];
+    for &(d, want) in cases {
+        assert_eq!(DelayedSchedule::new(6, d).periods(), want, "d = {d}");
+    }
+}
+
+/// [`FixedPolicy::initial`] makes the exact constructor calls the
+/// trainer used to make inline, over a grid of configs.
+#[test]
+fn fixed_policy_initial_equals_direct_constructors_over_a_grid() {
+    for &(b, d, n) in &[
+        (1.8, 1.0, 1024usize),
+        (1.8, 0.5, 64),
+        (2.0, 1.5, 256),
+        (1.9, 1.0, 32),
+    ] {
+        for lmax in [3usize, 4, 6] {
+            let mut cfg = ExperimentConfig::smoke();
+            cfg.mlmc.b = b;
+            cfg.mlmc.d = d;
+            cfg.mlmc.n_effective = n;
+            let dec = FixedPolicy::from_config(&cfg).initial(lmax);
+            assert_eq!(
+                dec.allocation,
+                LevelAllocation::paper(lmax, n, b, cfg.mlmc.c),
+                "b={b} d={d} n={n} lmax={lmax}"
+            );
+            assert_eq!(
+                dec.schedule.periods(),
+                DelayedSchedule::new(lmax, d).periods(),
+                "b={b} d={d} n={n} lmax={lmax}"
+            );
+            assert_eq!(dec.n_effective, n);
+        }
+    }
+}
+
+/// No amount of telemetry moves a fixed decision — `observe` is the
+/// identity even under a stream that would reallocate any adaptive
+/// policy (steep variance growth, inverted costs).
+#[test]
+fn fixed_policy_ignores_heavy_telemetry() {
+    let cfg = smoke_cfg();
+    let policy = FixedPolicy::from_config(&cfg);
+    let dec = policy.initial(cfg.problem.lmax);
+    let mut est = EstimatorStats::new(cfg.problem.lmax + 1);
+    for l in 0..=cfg.problem.lmax {
+        for step in 0..32u64 {
+            est.record_refresh(l, step, 16, &[1000.0 * (l as f32 + 1.0)]);
+            est.record_cost(l, 1e-3 / (l as f64 + 1.0));
+        }
+    }
+    let out = policy.observe(&est.observe(32), &dec);
+    assert!(out.same_as(&dec));
+    assert_eq!(out.allocation, dec.allocation);
+}
+
+/// End-to-end bit-identity: the default build (policy from config), an
+/// explicitly injected [`FixedPolicy`] and the pre-refactor entry point
+/// [`Trainer::from_config`] all produce the same trajectory, losses and
+/// layout, bit for bit, for every method.
+#[test]
+fn explicit_fixed_policy_runs_bit_identical_to_default() {
+    let cfg = smoke_cfg();
+    for method in Method::all() {
+        let mut legacy = Trainer::from_config(&cfg, method, 3).unwrap();
+        let legacy_curve = legacy.run().unwrap();
+
+        let mut injected = TrainerBuilder::new(&cfg)
+            .method(method)
+            .seed(3)
+            .policy(Arc::new(FixedPolicy::from_config(&cfg)))
+            .build()
+            .unwrap();
+        let injected_curve = injected.run().unwrap();
+
+        assert_eq!(injected.policy_name(), "fixed");
+        assert_eq!(injected.adaptations(), 0, "fixed never adapts");
+        assert_eq!(legacy.chunks_per_level(), injected.chunks_per_level());
+        assert_eq!(legacy.schedule_periods(), injected.schedule_periods());
+        for (a, b) in legacy_curve.points.iter().zip(&injected_curve.points) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{method:?} loss drifted at step {}",
+                a.step
+            );
+        }
+        for (a, b) in legacy.params.iter().zip(&injected.params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method:?} params drifted");
+        }
+    }
+}
+
+/// The config-driven dispatch agrees with the injected policy: an
+/// `[adaptive] enabled = false` config routes through `FixedPolicy`.
+#[test]
+fn config_dispatch_defaults_to_fixed() {
+    let cfg = smoke_cfg();
+    assert!(!cfg.adaptive.enabled);
+    let policy = from_config(&cfg);
+    assert_eq!(policy.name(), "fixed");
+    let dec = policy.initial(cfg.problem.lmax);
+    assert_eq!(
+        dec.allocation,
+        LevelAllocation::paper(
+            cfg.problem.lmax,
+            cfg.mlmc.n_effective,
+            cfg.mlmc.b,
+            cfg.mlmc.c
+        )
+    );
+}
+
+/// Determinism contract of the adaptive path: with sequential dispatch
+/// (no pooled wall-clock cost samples) the decision stream is a pure
+/// function of the telemetry stream, so two identical runs — losses,
+/// parameters, adopted decision, adaptation count — stay bitwise equal.
+#[test]
+fn adaptive_runs_without_pool_are_bitwise_reproducible() {
+    let mut cfg = smoke_cfg();
+    cfg.train.steps = 16;
+    cfg.adaptive.enabled = true;
+    cfg.adaptive.adapt_every = 4;
+    cfg.adaptive.min_refreshes = 1;
+    let run = || {
+        let mut tr = TrainerBuilder::new(&cfg)
+            .method(Method::Dmlmc)
+            .seed(7)
+            .without_local_pool()
+            .build()
+            .unwrap();
+        let curve = tr.run().unwrap();
+        (curve, tr)
+    };
+    let (curve_a, tr_a) = run();
+    let (curve_b, tr_b) = run();
+    assert_eq!(tr_a.policy_name(), "adaptive");
+    assert_eq!(tr_a.adaptations(), tr_b.adaptations());
+    assert_eq!(
+        tr_a.decision().allocation.n_per_level,
+        tr_b.decision().allocation.n_per_level
+    );
+    assert_eq!(tr_a.schedule_periods(), tr_b.schedule_periods());
+    for (a, b) in curve_a.points.iter().zip(&curve_b.points) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+    }
+    for (a, b) in tr_a.params.iter().zip(&tr_b.params) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // Whatever the policy adopted still satisfies the hard invariants:
+    // level 0 refreshes every step, every level keeps >= 1 sample, and
+    // the effective batch size is conserved.
+    assert_eq!(tr_a.schedule_periods()[0], 1);
+    assert!(tr_a.decision().allocation.n_per_level.iter().all(|&n| n >= 1));
+    assert_eq!(tr_a.decision().n_effective, cfg.mlmc.n_effective);
+}
